@@ -1,0 +1,48 @@
+//! Bench: substrate numerics — matmul, softmax, eigen, RNG — the pieces
+//! every analysis figure is built from (§Perf L3 profile anchors).
+
+use lln::bench::Bench;
+use lln::rng::Pcg64;
+use lln::tensor::Mat;
+
+fn main() {
+    let mut rng = Pcg64::seed(0);
+    let mut b = Bench::new();
+
+    println!("== tensor substrate ==");
+    for n in [128usize, 256, 512] {
+        let a = Mat::gaussian(n, n, 1.0, &mut rng);
+        let c = Mat::gaussian(n, n, 1.0, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        b.run(&format!("matmul {n}x{n}"), flops, || a.matmul(&c));
+        b.run(&format!("matmul_t {n}x{n}"), flops, || a.matmul_t(&c));
+    }
+    let mut p = Mat::gaussian(512, 512, 1.0, &mut rng);
+    b.run("softmax_rows 512x512", 512.0 * 512.0, || {
+        let mut q = p.clone();
+        q.softmax_rows();
+        q
+    });
+    p.softmax_rows();
+
+    println!("\n== eigen / stats ==");
+    b.run("spectral_gap 512", 1.0, || lln::linalg::spectral_gap(&p, 400, 1e-8));
+    b.run("entropy 512", 1.0, || lln::stats::attention_entropy(&p));
+
+    println!("\n== rng ==");
+    let mut r2 = Pcg64::seed(1);
+    b.run("gauss x100k", 1e5, || {
+        let mut acc = 0.0f64;
+        for _ in 0..100_000 {
+            acc += r2.gauss();
+        }
+        acc
+    });
+    b.run("zipf x100k", 1e5, || {
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            acc += r2.zipf(8192, 1.1);
+        }
+        acc
+    });
+}

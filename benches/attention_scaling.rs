@@ -1,0 +1,43 @@
+//! Bench: paper Table 2 — time per attention forward vs sequence length,
+//! through the AOT PJRT kernels.  `cargo bench --bench attention_scaling`.
+
+use lln::bench::Bench;
+use lln::rng::Pcg64;
+use lln::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
+
+fn main() {
+    let dir = artifacts_dir(None);
+    if !artifacts_available(&dir) {
+        println!("artifacts not built — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut engine = Engine::new(&dir).expect("engine");
+    let mut rng = Pcg64::seed(0);
+    let d = 64usize;
+    let mut b = Bench::new();
+
+    println!("== Table 2 bench: AOT attention kernels (PJRT CPU, d={d}) ==");
+    for method in ["softmax", "lln", "lln_diag", "elu", "performer", "nystrom"] {
+        for n in [256usize, 1024, 4096, 8192, 16384] {
+            let name = format!("attn_{method}_n{n}");
+            if engine.manifest().artifact(&name).is_err() {
+                println!("{name:<40} --- (not exported: paper's OOM regime)");
+                continue;
+            }
+            let mk = |rng: &mut Pcg64| HostTensor::F32 {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            };
+            let q = mk(&mut rng);
+            let k = mk(&mut rng);
+            let v = mk(&mut rng);
+            let inputs: Vec<HostTensor> = if method.starts_with("lln") {
+                vec![q, k, v, HostTensor::scalar_f32(2.2), HostTensor::scalar_f32(2.2)]
+            } else {
+                vec![q, k, v]
+            };
+            engine.execute(&name, &inputs).expect("warm"); // compile outside timing
+            b.run(&name, n as f64, || engine.execute(&name, &inputs).unwrap());
+        }
+    }
+}

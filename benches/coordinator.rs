@@ -1,0 +1,53 @@
+//! Bench: coordinator substrate hot paths (no PJRT) + the end-to-end
+//! serving loop when artifacts exist.
+
+use std::time::Duration;
+
+use lln::bench::Bench;
+use lln::config::ServeConfig;
+use lln::coordinator::{batcher::plan_batches, Coordinator};
+use lln::data::tasks::{GlueGen, GlueTask};
+use lln::runtime::{artifacts_available, artifacts_dir};
+use lln::util::pool::Channel;
+
+fn main() {
+    let mut b = Bench::new();
+
+    println!("== coordinator substrates ==");
+    b.run("plan_batches(1000, 8)", 1000.0, || plan_batches(1000, 8));
+    let ch: Channel<u64> = Channel::bounded(1024);
+    b.run("channel send+recv x1000", 1000.0, || {
+        for i in 0..1000u64 {
+            ch.send(i).unwrap();
+        }
+        for _ in 0..1000 {
+            ch.recv().unwrap();
+        }
+    });
+    b.run("channel drain_up_to(64) x1000", 1000.0, || {
+        for i in 0..1000u64 {
+            ch.send(i).unwrap();
+        }
+        let mut got = 0;
+        while got < 1000 {
+            got += ch.drain_up_to(64).len();
+        }
+    });
+
+    let dir = artifacts_dir(None);
+    if !artifacts_available(&dir) {
+        println!("artifacts not built — skipping end-to-end serving bench");
+        return;
+    }
+    println!("\n== end-to-end serving (lln_diag encoder) ==");
+    let coord = Coordinator::start(ServeConfig::default(), &dir).expect("coordinator");
+    coord.infer(vec![lln::data::special::CLS; 64]).unwrap(); // warm n128
+    let mut gen = GlueGen::new(GlueTask::Sst2, 4096, 120, 1);
+    b.run("serve 32-request burst (n=128)", 32.0, || {
+        let rxs: Vec<_> = (0..32).map(|_| coord.submit(gen.example().0).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+    });
+    coord.shutdown();
+}

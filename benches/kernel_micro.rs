@@ -1,0 +1,41 @@
+//! Bench: native Rust attention kernels (the analysis hot path) across
+//! methods and sequence lengths — tracks the §Perf L3-native numbers.
+
+use lln::attention as att;
+use lln::bench::Bench;
+use lln::rng::Pcg64;
+use lln::tensor::Mat;
+
+fn main() {
+    let d = 64usize;
+    let mut rng = Pcg64::seed(1);
+    let mut b = Bench::new();
+
+    println!("== native attention kernels (d={d}) ==");
+    for n in [256usize, 1024, 4096] {
+        let q = Mat::gaussian(n, d, 1.0, &mut rng);
+        let k = Mat::gaussian(n, d, 1.0, &mut rng);
+        let v = Mat::gaussian(n, d, 1.0, &mut rng);
+        b.run(&format!("native softmax n={n}"), n as f64, || att::softmax_attention(&q, &k, &v));
+        b.run(&format!("native lln n={n}"), n as f64, || att::lln_attention(&q, &k, &v, 2.2, 2.2));
+        b.run(&format!("native lln_diag n={n}"), n as f64, || {
+            att::lln_diag_attention(&q, &k, &v, 2.2, 2.2, 64)
+        });
+        b.run(&format!("native elu n={n}"), n as f64, || att::elu_attention(&q, &k, &v));
+        if n <= 1024 {
+            b.run(&format!("native nystrom n={n}"), n as f64, || {
+                att::nystrom_attention(&q, &k, &v, 32)
+            });
+        }
+    }
+
+    println!("\n== analysis instruments (N x N stochastic matrices) ==");
+    for n in [128usize, 256] {
+        let q = Mat::gaussian(n, d, 1.0, &mut rng);
+        let k = Mat::gaussian(n, d, 1.0, &mut rng);
+        let p = att::softmax_attention_matrix(&q, &k);
+        b.run(&format!("entropy n={n}"), 1.0, || lln::stats::attention_entropy(&p));
+        b.run(&format!("spectral_gap n={n}"), 1.0, || lln::linalg::spectral_gap(&p, 400, 1e-8));
+        b.run(&format!("log_variance n={n}"), 1.0, || lln::stats::log_variance(&p, 1e-30));
+    }
+}

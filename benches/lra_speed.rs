@@ -1,0 +1,51 @@
+//! Bench: paper Table 4 — per-step training time of each method on the
+//! LRA-lite configuration (N=512), through the AOT train steps.
+
+use lln::bench::Bench;
+use lln::data::lra::{LraGen, LraTask};
+use lln::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
+use lln::training::TrainDriver;
+
+fn main() {
+    let dir = artifacts_dir(None);
+    if !artifacts_available(&dir) {
+        println!("artifacts not built — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut engine = Engine::new(&dir).expect("engine");
+    let mut b = Bench::new();
+    b.time_budget_secs = 6.0;
+
+    println!("== Table 4 bench: LRA-lite train step (B=4, N=512) ==");
+    for method in ["softmax", "lln_diag", "performer", "nystrom"] {
+        let artifact = format!("train_lra_{method}");
+        let mut driver = TrainDriver::new(&engine, &dir, &artifact).expect("driver");
+        let mut gen = LraGen::new(LraTask::Text, 512, 1);
+        // warm (compile)
+        let batch = gen.batch(4);
+        driver
+            .step(
+                &mut engine,
+                1e-3,
+                &[
+                    HostTensor::I32 { shape: vec![4, 512], data: batch.tokens },
+                    HostTensor::I32 { shape: vec![4], data: batch.labels },
+                ],
+            )
+            .expect("warm step");
+        b.run(&format!("lra train step [{method}]"), 4.0 * 512.0, || {
+            let batch = gen.batch(4);
+            driver
+                .step(
+                    &mut engine,
+                    1e-3,
+                    &[
+                        HostTensor::I32 { shape: vec![4, 512], data: batch.tokens },
+                        HostTensor::I32 { shape: vec![4], data: batch.labels },
+                    ],
+                )
+                .unwrap()
+        });
+    }
+    println!("\npaper shape (Table 4): softmax slowest; LLN+Diag fastest accurate method.");
+}

@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root: the build-time
+modules live under python/ (imported as `compile.*`)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

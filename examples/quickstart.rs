@@ -1,0 +1,66 @@
+//! Quickstart: load an AOT LLN-attention kernel, execute it through the
+//! PJRT runtime, cross-check against the native Rust implementation, and
+//! demo moment matching.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use lln::attention::{self, MomentMatcher};
+use lln::rng::Pcg64;
+use lln::runtime::{artifacts_dir, Engine, HostTensor};
+use lln::tensor::Mat;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir(None);
+    println!("loading artifacts from {} ...", dir.display());
+    let mut engine = Engine::new(&dir)?;
+
+    // 1. Moment matching (paper eq. 10): derive alpha/beta from live stats.
+    let mm = MomentMatcher { a: engine.manifest().mm_a, b: engine.manifest().mm_b };
+    let (sigma_q, sigma_k) = (1.1f64, 0.9f64);
+    let (alpha, beta) = mm.alpha_beta(sigma_q, sigma_k);
+    println!(
+        "moment matching: sigma_q={sigma_q} sigma_k={sigma_k} -> alpha={alpha:.3} beta={beta:.3}"
+    );
+
+    // 2. Run the AOT Pallas LLN kernel on random Gaussian inputs.
+    let (n, d) = (256usize, 64usize);
+    let mut rng = Pcg64::seed(0);
+    let q = Mat::gaussian(n, d, sigma_q as f32, &mut rng);
+    let k = Mat::gaussian(n, d, sigma_k as f32, &mut rng);
+    let v = Mat::gaussian(n, d, 1.0, &mut rng);
+    let outs = engine.execute(
+        "attn_lln_n256",
+        &[
+            HostTensor::from_mat(&q),
+            HostTensor::from_mat(&k),
+            HostTensor::from_mat(&v),
+            HostTensor::scalar_f32(alpha),
+            HostTensor::scalar_f32(beta),
+        ],
+    )?;
+    let kernel_out = outs[0].to_mat()?;
+
+    // 3. Cross-check against the native implementation.
+    let native = attention::lln_attention(&q, &k, &v, alpha, beta);
+    let err = kernel_out.max_abs_diff(&native);
+    println!("PJRT kernel vs native Rust: max |diff| = {err:.2e}");
+    assert!(err < 2e-3);
+
+    // 4. Show that the LLN matrix's concentration matches softmax's.
+    let p_lln = attention::lln_attention_matrix(&q, &k, alpha, beta);
+    let p_sm = attention::softmax_attention_matrix(&q, &k);
+    println!(
+        "entropy:      lln={:.3} bits   softmax={:.3} bits",
+        lln::stats::attention_entropy(&p_lln),
+        lln::stats::attention_entropy(&p_sm),
+    );
+    println!(
+        "spectral gap: lln={:.3}        softmax={:.3}",
+        lln::linalg::spectral_gap(&p_lln, 400, 1e-8).gap,
+        lln::linalg::spectral_gap(&p_sm, 400, 1e-8).gap,
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Serving demo: start the coordinator (router + dynamic batcher +
+//! PJRT workers) with LLN+Diag encoders and drive mixed-length traffic.
+//!
+//!     make artifacts && cargo run --release --example serve -- [requests]
+
+use anyhow::Result;
+
+use lln::config::ServeConfig;
+use lln::coordinator::Coordinator;
+use lln::data::tasks::{GlueGen, GlueTask};
+use lln::rng::Pcg64;
+use lln::runtime::artifacts_dir;
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+    let dir = artifacts_dir(None);
+    let cfg = ServeConfig::default();
+    println!(
+        "starting coordinator: method={} buckets={:?} max_batch={} queue={}",
+        cfg.method, cfg.buckets, cfg.max_batch, cfg.queue_capacity
+    );
+    let coord = Coordinator::start(cfg, &dir)?;
+    // Warm both buckets (first call compiles the executables).
+    coord.infer(vec![lln::data::special::CLS; 64])?;
+    coord.infer(vec![lln::data::special::CLS; 300])?;
+    println!("warmed up; sending {requests} requests (70% short / 30% long)...");
+
+    let mut short = GlueGen::new(GlueTask::Sst2, 512, 120, 1);
+    let mut long = GlueGen::new(GlueTask::Qnli, 512, 480, 2);
+    let mut rng = Pcg64::seed(0);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            let tokens = if rng.f64() < 0.3 { long.example().0 } else { short.example().0 };
+            coord.submit(tokens)
+        })
+        .collect::<Result<_>>()?;
+    let mut ok = 0usize;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        if resp.result.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats_arc = coord.stats();
+    let st = stats_arc.lock().unwrap();
+    println!("\ncompleted {ok}/{requests} in {wall:.2}s  ({:.1} req/s)", ok as f64 / wall);
+    println!(
+        "latency p50 {:.1} ms  p95 {:.1} ms   mean batch {:.2}   rejected {}",
+        st.p50_latency(),
+        st.p95_latency(),
+        st.mean_batch_size(),
+        st.rejected
+    );
+    drop(st);
+    coord.shutdown();
+    println!("serve demo OK");
+    Ok(())
+}

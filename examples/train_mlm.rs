@@ -1,0 +1,66 @@
+//! End-to-end validation driver (DESIGN.md deliverable): pretrain the
+//! RoBERTa-lite MLM model with BOTH softmax and LLN attention on the
+//! synthetic corpus, through all three layers (Rust driver -> AOT HLO ->
+//! Pallas-lowered kernels), and report the fig-8-style loss comparison.
+//!
+//!     make artifacts && cargo run --release --example train_mlm -- [steps]
+//!
+//! The run is recorded in EXPERIMENTS.md §Fig8.
+
+use anyhow::Result;
+
+use lln::config::TrainConfig;
+use lln::experiments::pretrain::pretrain;
+use lln::runtime::{artifacts_dir, Engine};
+use lln::training::metrics::sparkline;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let dir = artifacts_dir(None);
+    let mut engine = Engine::new(&dir)?;
+    let cfg = TrainConfig {
+        lr: 5e-4,
+        warmup: steps / 10,
+        eval_every: (steps / 6).max(1),
+        log_every: (steps / 10).max(1),
+        ..Default::default()
+    };
+
+    println!("== end-to-end MLM pretraining ({steps} steps, small model, B=8 N=128) ==");
+    let mut results = Vec::new();
+    for method in ["softmax", "lln"] {
+        println!("\n--- {method} ---");
+        let out = std::path::Path::new("runs").join(format!("train_mlm_{method}.jsonl"));
+        let r = pretrain(&mut engine, &dir, method, "mlm", steps, &cfg, Some(&out))?;
+        println!("   metrics -> {}", out.display());
+        results.push(r);
+    }
+
+    println!("\n== fig 8 analog: training loss ==");
+    for r in &results {
+        let series: Vec<f64> = r.log.history.iter().map(|x| x.loss as f64).collect();
+        println!(
+            "{:>8} {}  {:.3} -> {:.3}",
+            r.method,
+            sparkline(&series, 56),
+            series.first().unwrap(),
+            series.last().unwrap()
+        );
+    }
+    println!("\n== held-out eval loss ==");
+    for r in &results {
+        let pts: Vec<String> =
+            r.eval_losses.iter().map(|(s, l)| format!("{s}:{l:.3}")).collect();
+        println!("{:>8}  {}", r.method, pts.join("  "));
+    }
+    let sm = results[0].eval_losses.last().unwrap().1;
+    let ll = results[1].eval_losses.last().unwrap().1;
+    println!("\nfinal eval loss: softmax {sm:.3} vs lln {ll:.3} (paper: curves track closely)");
+    for r in &results {
+        if let Some((_, a0)) = r.alpha_series.first() {
+            let an = r.alpha_series.last().unwrap().1;
+            println!("fig 9 ({}): alpha {a0:.2} -> {an:.2} over training", r.method);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time Python: JAX model + Pallas kernels + AOT export.
+
+Never imported at runtime — the Rust binary consumes artifacts/ only.
+"""

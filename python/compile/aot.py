@@ -1,0 +1,456 @@
+"""AOT exporter: lowers every executable the Rust runtime needs to HLO
+*text* plus a JSON manifest, and dumps initial parameters as raw f32/i32
+binaries.
+
+Interchange is HLO text (NOT serialized HloModuleProto): jax >= 0.5
+emits 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact sets (--sets to select; default all):
+  micro  — single-head attention kernels across sequence lengths
+           (Table 2 scaling, quickstart)
+  tiny   — tiny-model train/eval steps for integration tests
+  glue   — Table 1 classification train/eval steps (6 methods)
+  lra    — Tables 4/5 LRA-lite train/eval steps (N=512)
+  vit    — Table 3 ViT-lite train/eval steps (patch mode)
+  mlm    — fig 8/9 pretraining train/eval steps ("small" model)
+  probe  — fig 1 attention-matrix probe executables
+  serve  — serving-path encoder forwards (batcher bucket shapes)
+
+Python runs ONCE: `make artifacts` is incremental (skips artifacts whose
+file already exists unless --force).
+
+Everything an executable needs to be called from Rust is in
+manifest.json: flat input order/shapes/dtypes, output order, the
+canonical parameter order, moment-matching constants, and model configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from . import moment_matching as mm
+from .kernels import autodiff as att
+from .kernels import ref
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(x) -> str:
+    return I32 if np.issubdtype(np.asarray(x).dtype, np.integer) else F32
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    file: str
+    inputs: list          # [{name, shape, dtype}]
+    outputs: list         # [{name, shape, dtype}]
+    meta: dict
+
+
+class Exporter:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.artifacts: list[Artifact] = []
+        self.models: dict[str, dict] = {}
+        self.mm_a, self.mm_b = self._mm_constants()
+        os.makedirs(out_dir, exist_ok=True)
+
+    # -- moment matching constants (cached on disk; fit is stochastic) ------
+    def _mm_constants(self):
+        cache = os.path.join(self.out_dir, "mm_constants.json")
+        if os.path.exists(cache):
+            d = json.load(open(cache))
+            return d["a"], d["b"]
+        print("[aot] fitting moment-matching constants (a, b)...", flush=True)
+        a, b = mm.fit_broad_constants()
+        os.makedirs(self.out_dir, exist_ok=True)
+        json.dump({"a": a, "b": b}, open(cache, "w"))
+        return a, b
+
+    # -- core: lower fn at example args and record manifest entry -----------
+    def export(self, name, fn, in_specs, in_names, out_names, meta=None):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        if os.path.exists(path) and not self.force:
+            # Still need shapes for the manifest: recompute via eval_shape.
+            out_shapes = jax.eval_shape(fn, *in_specs)
+            self._record(name, fname, in_specs, in_names, out_names, out_shapes, meta)
+            print(f"[aot] {name}: exists, manifest only", flush=True)
+            return
+        t0 = time.time()
+        # keep_unused=True: the compiled signature must match the manifest
+        # exactly even when an executable doesn't touch some parameter
+        # (e.g. mlm.bias in a classification eval) — the Rust runtime
+        # always feeds the full canonical parameter set.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        self._record(name, fname, in_specs, in_names, out_names, out_shapes, meta)
+        print(f"[aot] {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s", flush=True)
+
+    def _record(self, name, fname, in_specs, in_names, out_names, out_shapes, meta):
+        flat_in = jax.tree_util.tree_leaves(in_specs)
+        flat_out = jax.tree_util.tree_leaves(out_shapes)
+        assert len(flat_in) == len(in_names), f"{name}: {len(flat_in)} inputs vs {len(in_names)} names"
+        assert len(flat_out) == len(out_names), f"{name}: {len(flat_out)} outputs vs {len(out_names)} names"
+        ins = [
+            {"name": nm, "shape": list(s.shape), "dtype": I32 if s.dtype == jnp.int32 else F32}
+            for nm, s in zip(in_names, flat_in)
+        ]
+        outs = [
+            {"name": nm, "shape": list(s.shape), "dtype": I32 if s.dtype == jnp.int32 else F32}
+            for nm, s in zip(out_names, flat_out)
+        ]
+        self.artifacts.append(Artifact(name, fname, ins, outs, meta or {}))
+
+    # -- parameter binaries --------------------------------------------------
+    def export_params(self, tag: str, cfg: M.ModelConfig, seed=0, patch_dim=None):
+        params = M.init_params(cfg, seed=seed, patch_dim=patch_dim)
+        order = M.param_order(params)
+        fname = f"params_{tag}.bin"
+        path = os.path.join(self.out_dir, fname)
+        if not (os.path.exists(path) and not self.force):
+            with open(path, "wb") as f:
+                for k in order:
+                    f.write(np.ascontiguousarray(params[k]).tobytes())
+        self.models[tag] = {
+            "config": {k: v for k, v in dataclasses.asdict(cfg).items()},
+            "patch_dim": patch_dim,
+            "params_file": fname,
+            "param_order": order,
+            "param_shapes": {k: list(params[k].shape) for k in order},
+        }
+        return params, order
+
+    def finish(self):
+        """Write manifest.json, merging with any existing manifest so a
+        partial `--sets` run never drops previously-exported entries."""
+        path = os.path.join(self.out_dir, "manifest.json")
+        models = dict(self.models)
+        arts = {a.name: dataclasses.asdict(a) for a in self.artifacts}
+        if os.path.exists(path):
+            old = json.load(open(path))
+            for tag, m in old.get("models", {}).items():
+                models.setdefault(tag, m)
+            for a in old.get("artifacts", []):
+                arts.setdefault(a["name"], a)
+        manifest = {
+            "mm_a": self.mm_a,
+            "mm_b": self.mm_b,
+            "models": models,
+            "artifacts": sorted(arts.values(), key=lambda a: a["name"]),
+        }
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"[aot] manifest: {len(arts)} artifacts, {len(models)} models")
+
+
+# ---------------------------------------------------------------------------
+# Artifact set builders
+# ---------------------------------------------------------------------------
+
+MICRO_D = 64
+# Paper Table 2 sweeps 512..16384; SA capped at 4096 (the paper's OOM
+# analog: quadratic interpret-mode cost, documented in EXPERIMENTS.md).
+MICRO_NS_LINEAR = (256, 1024, 4096, 8192, 16384)
+MICRO_NS_QUAD = (256, 1024, 4096)
+
+
+def build_micro(ex: Exporter):
+    d = MICRO_D
+    for n in MICRO_NS_QUAD:
+        qkv = [spec((n, d)) for _ in range(3)]
+        ex.export(
+            f"attn_softmax_n{n}",
+            lambda q, k, v: (att.softmax_attention(q, k, v),),
+            qkv, ["q", "k", "v"], ["out"], {"method": "softmax", "n": n, "d": d},
+        )
+    for n in MICRO_NS_LINEAR:
+        qkv = [spec((n, d)) for _ in range(3)]
+        ab = [spec(()), spec(())]
+        # Perf (EXPERIMENTS.md §Perf L1): interpret-mode cost is dominated
+        # by per-grid-step overhead, so linear-kernel chunk sizes scale
+        # with N (math-equivalent — the kernel reduces over chunks).
+        # On TPU the same knob trades VMEM residency for DMA count.
+        blk = 1024 if n >= 4096 else 128
+        ex.export(
+            f"attn_lln_n{n}",
+            lambda q, k, v, a, b: (att.lln_attention(q, k, v, a, b, block_q=blk, block_k=blk),),
+            qkv + ab, ["q", "k", "v", "alpha", "beta"], ["out"],
+            {"method": "lln", "n": n, "d": d},
+        )
+        ex.export(
+            f"attn_lln_diag_n{n}",
+            lambda q, k, v, a, b: (
+                att.lln_diag_attention(q, k, v, a, b, 64, block_q=blk, block_k=blk),
+            ),
+            qkv + ab, ["q", "k", "v", "alpha", "beta"], ["out"],
+            {"method": "lln_diag", "n": n, "d": d},
+        )
+        ex.export(
+            f"attn_elu_n{n}",
+            lambda q, k, v: (att.elu_attention(q, k, v, block_q=blk, block_k=blk),),
+            qkv, ["q", "k", "v"], ["out"], {"method": "elu", "n": n, "d": d},
+        )
+        proj = jnp.asarray(np.random.default_rng(0).normal(size=(d, d)), jnp.float32)
+        ex.export(
+            f"attn_performer_n{n}",
+            lambda q, k, v: (ref.performer_attention(q, k, v, proj),),
+            qkv, ["q", "k", "v"], ["out"], {"method": "performer", "n": n, "d": d},
+        )
+        ex.export(
+            f"attn_nystrom_n{n}",
+            lambda q, k, v: (ref.nystrom_attention(q, k, v, 32),),
+            qkv, ["q", "k", "v"], ["out"], {"method": "nystrom", "n": n, "d": d},
+        )
+
+
+def _train_io_names(order, extra_in, extra_out):
+    ins = (
+        [f"p:{k}" for k in order]
+        + [f"m:{k}" for k in order]
+        + [f"v:{k}" for k in order]
+        + ["t", "lr"]
+        + extra_in
+    )
+    outs = (
+        [f"p:{k}" for k in order]
+        + [f"m:{k}" for k in order]
+        + [f"v:{k}" for k in order]
+        + ["loss", "grad_norm", "layer_stats"]
+        + extra_out
+    )
+    return ins, outs
+
+
+def _export_train_cls(ex, name_prefix, tag, cfg, batch, seqlen):
+    params, order = ex.export_params(tag, cfg)
+    pspecs = {k: spec(params[k].shape) for k in order}
+    base = [pspecs, pspecs, pspecs, spec(()), spec(())]
+    tok = spec((batch, seqlen), jnp.int32)
+    lab = spec((batch,), jnp.int32)
+    ins, outs = _train_io_names(order, ["tokens", "labels"], [])
+    ex.export(
+        f"{name_prefix}",
+        lambda p, m, v, t, lr, tokens, labels: T.train_step_cls(p, m, v, t, lr, tokens, labels, cfg),
+        base + [tok, lab], ins, outs,
+        {"model": tag, "kind": "train_cls", "batch": batch, "seqlen": seqlen},
+    )
+    ex.export(
+        f"{name_prefix.replace('train', 'eval')}",
+        lambda p, tokens: T.eval_cls(p, tokens, cfg),
+        [pspecs, tok], [f"p:{k}" for k in order] + ["tokens"], ["logits"],
+        {"model": tag, "kind": "eval_cls", "batch": batch, "seqlen": seqlen},
+    )
+
+
+def build_glue(ex: Exporter):
+    """Table 1: six methods on the GLUE-like synthetic suite."""
+    for method in ("softmax", "lln", "lln_diag", "elu", "performer", "nystrom"):
+        cfg = M.make_config(
+            "tiny", vocab_size=512, d_model=128, n_heads=4, n_layers=3, d_ff=512,
+            max_len=128, num_classes=4, attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b,
+        )
+        _export_train_cls(ex, f"train_glue_{method}", f"glue_{method}", cfg, batch=16, seqlen=128)
+
+
+def build_lra(ex: Exporter):
+    """Tables 4/5: LRA-lite at N=512 (byte-level vocab)."""
+    for method in ("softmax", "lln_diag", "performer", "nystrom"):
+        cfg = M.make_config(
+            "tiny", vocab_size=260, d_model=128, n_heads=4, n_layers=2, d_ff=512,
+            max_len=512, num_classes=10, attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b,
+        )
+        _export_train_cls(ex, f"train_lra_{method}", f"lra_{method}", cfg, batch=4, seqlen=512)
+
+
+def build_vit(ex: Exporter):
+    """Table 3: ViT-lite on 32x32x3 images as 64 patches of dim 48."""
+    patch_dim, patches = 48, 64
+    for method in ("softmax", "lln_diag", "linformer"):
+        cfg = M.make_config(
+            "tiny", vocab_size=32, d_model=128, n_heads=4, n_layers=4, d_ff=512,
+            max_len=patches, num_classes=2, attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b,
+            diag_block=16,
+        )
+        tag = f"vit_{method}"
+        params, order = ex.export_params(tag, cfg, patch_dim=patch_dim)
+        pspecs = {k: spec(params[k].shape) for k in order}
+        base = [pspecs, pspecs, pspecs, spec(()), spec(())]
+        px = spec((16, patches, patch_dim))
+        lab = spec((16,), jnp.int32)
+        ins, outs = _train_io_names(order, ["patches", "labels"], [])
+        ex.export(
+            f"train_vit_{method}",
+            lambda p, m, v, t, lr, patches_, labels: T.train_step_vit(p, m, v, t, lr, patches_, labels, cfg),
+            base + [px, lab], ins, outs,
+            {"model": tag, "kind": "train_vit", "batch": 16, "seqlen": patches},
+        )
+        ex.export(
+            f"eval_vit_{method}",
+            lambda p, patches_: T.eval_vit(p, patches_, cfg),
+            [pspecs, px], [f"p:{k}" for k in order] + ["patches"], ["logits"],
+            {"model": tag, "kind": "eval_vit", "batch": 16, "seqlen": patches},
+        )
+
+
+def _export_train_mlm(ex, name, tag, cfg, batch, seqlen):
+    params, order = ex.export_params(tag, cfg)
+    pspecs = {k: spec(params[k].shape) for k in order}
+    base = [pspecs, pspecs, pspecs, spec(()), spec(())]
+    tok = spec((batch, seqlen), jnp.int32)
+    lab = spec((batch, seqlen), jnp.int32)
+    w = spec((batch, seqlen))
+    ins, outs = _train_io_names(order, ["tokens", "labels", "weights"], [])
+    ex.export(
+        name,
+        lambda p, m, v, t, lr, tokens, labels, weights: T.train_step_mlm(
+            p, m, v, t, lr, tokens, labels, weights, cfg
+        ),
+        base + [tok, lab, w], ins, outs,
+        {"model": tag, "kind": "train_mlm", "batch": batch, "seqlen": seqlen},
+    )
+    ex.export(
+        name.replace("train", "eval"),
+        lambda p, tokens, labels, weights: T.eval_mlm(p, tokens, labels, weights, cfg),
+        [pspecs, tok, lab, w],
+        [f"p:{k}" for k in order] + ["tokens", "labels", "weights"], ["loss"],
+        {"model": tag, "kind": "eval_mlm", "batch": batch, "seqlen": seqlen},
+    )
+
+
+def build_tiny(ex: Exporter):
+    """Integration-test models: fast to compile, fast to run."""
+    for method in ("softmax", "lln", "lln_diag", "elu"):
+        cfg = M.make_config("tiny", attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b)
+        _export_train_mlm(ex, f"train_tinymlm_{method}", f"tinymlm_{method}", cfg, batch=4, seqlen=128)
+
+
+def build_mlm(ex: Exporter):
+    """Fig 8/9: the end-to-end pretraining model ("small": ~5M params)."""
+    for method in ("softmax", "lln", "lln_diag"):
+        cfg = M.make_config("small", max_len=128, attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b)
+        _export_train_mlm(ex, f"train_mlm_{method}", f"mlm_{method}", cfg, batch=8, seqlen=128)
+
+
+def build_probe(ex: Exporter):
+    """Fig 1: per-layer attention matrices + stats on the MLM models."""
+    for method in ("softmax", "lln"):
+        tag = f"mlm_{method}"
+        cfg = M.make_config("small", max_len=128, attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b)
+        if tag not in ex.models:
+            ex.export_params(tag, cfg)
+        order = ex.models[tag]["param_order"]
+        shapes = ex.models[tag]["param_shapes"]
+        pspecs = {k: spec(tuple(shapes[k])) for k in order}
+        tok = spec((2, 128), jnp.int32)
+        ex.export(
+            f"probe_{method}",
+            lambda p, tokens: M.attention_probe(p, tokens, cfg),
+            [pspecs, tok], [f"p:{k}" for k in order] + ["tokens"],
+            ["attn_matrices", "layer_stats"],
+            {"model": tag, "kind": "probe", "batch": 2, "seqlen": 128},
+        )
+
+
+def build_fig10(ex: Exporter):
+    """Fig 10 ablation: fixed alpha = beta grid on the SST2-like task."""
+    for alpha in (0.5, 1.0, 2.0, 3.0, 4.0):
+        tag_a = str(alpha).replace(".", "p")
+        cfg = M.make_config(
+            "tiny", vocab_size=512, d_model=128, n_heads=4, n_layers=3, d_ff=512,
+            max_len=128, num_classes=4, attn="lln", mm_a=ex.mm_a, mm_b=ex.mm_b,
+            fixed_alpha=alpha, fixed_beta=alpha,
+        )
+        _export_train_cls(
+            ex, f"train_fig10_a{tag_a}", f"fig10_a{tag_a}", cfg, batch=16, seqlen=128
+        )
+
+
+def build_serve(ex: Exporter):
+    """Serving-path forwards at the batcher's bucket shapes."""
+    for method in ("softmax", "lln_diag"):
+        tag = f"glue_{method}"
+        cfg = M.make_config(
+            "tiny", vocab_size=512, d_model=128, n_heads=4, n_layers=3, d_ff=512,
+            max_len=512, num_classes=4, attn=method, mm_a=ex.mm_a, mm_b=ex.mm_b,
+        )
+        stag = f"serve_{method}"
+        params, order = ex.export_params(stag, cfg)
+        pspecs = {k: spec(params[k].shape) for k in order}
+        for batch in (1, 8):
+            for n in (128, 512):
+                tok = spec((batch, n), jnp.int32)
+                ex.export(
+                    f"serve_{method}_b{batch}_n{n}",
+                    lambda p, tokens: T.eval_cls(p, tokens, cfg),
+                    [pspecs, tok], [f"p:{k}" for k in order] + ["tokens"], ["logits"],
+                    {"model": stag, "kind": "serve", "batch": batch, "seqlen": n},
+                )
+
+
+SETS = {
+    "micro": build_micro,
+    "tiny": build_tiny,
+    "glue": build_glue,
+    "lra": build_lra,
+    "vit": build_vit,
+    "mlm": build_mlm,
+    "probe": build_probe,
+    "fig10": build_fig10,
+    "serve": build_serve,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sets", default=",".join(SETS), help="comma-separated artifact sets")
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out, force=args.force)
+    for s in args.sets.split(","):
+        s = s.strip()
+        if not s:
+            continue
+        if s not in SETS:
+            print(f"unknown set {s!r}; known: {list(SETS)}", file=sys.stderr)
+            sys.exit(2)
+        print(f"[aot] === building set {s} ===", flush=True)
+        SETS[s](ex)
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

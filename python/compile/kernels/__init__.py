@@ -1,0 +1,14 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+`ref` holds the pure-jnp oracles every kernel is validated against
+(pytest + hypothesis in python/tests/).
+"""
+
+from . import ref  # noqa: F401
+from .blockdiag import blockdiag_attention_pallas, lln_diag_attention_pallas  # noqa: F401
+from .flash_softmax import softmax_attention_pallas  # noqa: F401
+from .linear_attn import (  # noqa: F401
+    elu_attention_pallas,
+    linear_attention_pallas,
+    lln_attention_pallas,
+)

@@ -1,0 +1,503 @@
+"""Differentiable Pallas attention: custom_vjp with hand-derived backward
+kernels.
+
+`pallas_call` has no general reverse-mode rule (and naive linearization
+of accumulator-style kernels is silently wrong), so every attention
+primitive used inside the AOT train step gets an analytic VJP whose
+forward AND backward are Pallas kernels.
+
+Backward math
+-------------
+Linear attention (num = Pq KV, den = Pq z + eps, out = num/den):
+    h_i   = g_i / den_i                      (N, d)
+    s_i   = (g_i . out_i) / den_i            (N,)
+    dPq   = h KV^T - s (x) z                 (N, d)
+    dKV   = Pq^T h                           (d, d)
+    dz    = -Pq^T s                          (d,)
+    dV    = Pk dKV
+    dPk   = V dKV^T + 1 (x) dz
+    feature-map chain rule:
+      lln: dq = dPq * Pq * alpha, dalpha = sum(dPq * Pq * q)  (clamp mask)
+      elu: dx = dPx * elu'(x)
+
+Flash softmax (p_ij = exp(s_ij - m_i) / l_i):
+    D_i  = g_i . out_i
+    ds   = p * (g V^T - D)
+    dq   = scale * ds K;  dk = scale * ds^T Q;  dv = p^T g
+
+dq accumulates over the K axis and dk/dv over the Q axis, so they are
+two separate kernels with transposed grids — each accumulator varies
+only along its innermost grid axis (the TPU-valid revisit pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EXP_CLAMP
+
+DEFAULT_BLOCK = 128
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Shared feature-map helpers (value and derivative)
+# ---------------------------------------------------------------------------
+
+def _phi(x, scale, feature_map):
+    if feature_map == "lln":
+        return jnp.exp(jnp.clip(scale * x, -EXP_CLAMP, EXP_CLAMP))
+    if feature_map == "elu":
+        return jax.nn.elu(x) + 1.0
+    raise ValueError(f"unknown feature map {feature_map!r}")
+
+
+def _dphi_dx(x, scale, phi_x, feature_map):
+    """d phi(x) / d x given phi(x) (saves an exp)."""
+    if feature_map == "lln":
+        active = (jnp.abs(scale * x) < EXP_CLAMP).astype(phi_x.dtype)
+        return scale * phi_x * active
+    if feature_map == "elu":
+        return jnp.where(x > 0, 1.0, phi_x)  # elu' = 1 (x>0) else e^x = phi
+    raise ValueError(feature_map)
+
+
+# ---------------------------------------------------------------------------
+# Linear attention forward (keeps den as a residual for the VJP)
+# ---------------------------------------------------------------------------
+
+def _kv_fwd_kernel(k_ref, v_ref, beta_ref, kv_ref, z_ref, *, feature_map):
+    pk = _phi(k_ref[...], beta_ref[0, 0], feature_map)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        kv_ref[...] = jnp.zeros_like(kv_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    kv_ref[...] += pk.T @ v_ref[...]
+    z_ref[...] += jnp.sum(pk, axis=0, keepdims=True)
+
+
+def _out_fwd_kernel(q_ref, alpha_ref, kv_ref, z_ref, o_ref, den_ref, *, feature_map, eps):
+    pq = _phi(q_ref[...], alpha_ref[0, 0], feature_map)
+    den = pq @ z_ref[...].T + eps                            # (bq, 1)
+    o_ref[...] = (pq @ kv_ref[...]) / den
+    den_ref[...] = den
+
+
+def _linear_fwd(q, k, v, alpha, beta, feature_map, block_q, block_k, eps, interpret):
+    n, d = q.shape
+    bq, bk = min(block_q, n), min(block_k, n)
+    a2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    b2 = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+
+    kv, z = pl.pallas_call(
+        functools.partial(_kv_fwd_kernel, feature_map=feature_map),
+        grid=(n // bk,),
+        in_specs=[
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k, v, b2)
+
+    out, den = pl.pallas_call(
+        functools.partial(_out_fwd_kernel, feature_map=feature_map, eps=eps),
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, a2, kv, z)
+    return out, den, kv, z
+
+
+# ---------------------------------------------------------------------------
+# Linear attention backward kernels
+# ---------------------------------------------------------------------------
+
+def _q_bwd_kernel(
+    q_ref, g_ref, out_ref, den_ref, alpha_ref, kv_ref, z_ref,
+    dq_ref, dkv_ref, dz_ref, dalpha_ref, *, feature_map,
+):
+    """Grid over Q chunks: emits dq per chunk, accumulates dKV, dz, dalpha."""
+    alpha = alpha_ref[0, 0]
+    q = q_ref[...]
+    pq = _phi(q, alpha, feature_map)                 # (bq, d)
+    g = g_ref[...]
+    den = den_ref[...]                               # (bq, 1)
+    h = g / den                                      # (bq, d)
+    s = jnp.sum(g * out_ref[...], axis=-1, keepdims=True) / den  # (bq, 1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dkv_ref[...] = jnp.zeros_like(dkv_ref)
+        dz_ref[...] = jnp.zeros_like(dz_ref)
+        dalpha_ref[...] = jnp.zeros_like(dalpha_ref)
+
+    dpq = h @ kv_ref[...].T - s * z_ref[...]         # (bq, d)
+    dq_ref[...] = dpq * _dphi_dx(q, alpha, pq, feature_map)
+    if feature_map == "lln":
+        active = (jnp.abs(alpha * q) < EXP_CLAMP).astype(pq.dtype)
+        dalpha_ref[...] += jnp.sum(dpq * pq * q * active).reshape(1, 1)
+    dkv_ref[...] += pq.T @ h
+    dz_ref[...] += -(s.T @ pq)                       # (1, d)
+
+
+def _k_bwd_kernel(
+    k_ref, v_ref, beta_ref, dkv_ref, dz_ref, dk_ref, dv_ref, dbeta_ref, *, feature_map,
+):
+    """Grid over K/V chunks: emits dk, dv per chunk, accumulates dbeta."""
+    beta = beta_ref[0, 0]
+    k = k_ref[...]
+    pk = _phi(k, beta, feature_map)                  # (bk, d)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dbeta_ref[...] = jnp.zeros_like(dbeta_ref)
+
+    dpk = v_ref[...] @ dkv_ref[...].T + dz_ref[...]  # (bk, d), dz broadcasts
+    dk_ref[...] = dpk * _dphi_dx(k, beta, pk, feature_map)
+    if feature_map == "lln":
+        active = (jnp.abs(beta * k) < EXP_CLAMP).astype(pk.dtype)
+        dbeta_ref[...] += jnp.sum(dpk * pk * k * active).reshape(1, 1)
+    dv_ref[...] = pk @ dkv_ref[...]
+
+
+def _linear_bwd(feature_map, block_q, block_k, eps, interpret, res, g):
+    q, k, v, alpha, beta, out, den, kv, z = res
+    n, d = q.shape
+    bq, bk = min(block_q, n), min(block_k, n)
+    a2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    b2 = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+
+    dq, dkv, dz, dalpha = pl.pallas_call(
+        functools.partial(_q_bwd_kernel, feature_map=feature_map),
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),   # q
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),   # g
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),   # out
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),   # den
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),    # alpha
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # kv
+            pl.BlockSpec((1, d), lambda i: (0, 0)),    # z
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),   # dq
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # dkv
+            pl.BlockSpec((1, d), lambda i: (0, 0)),    # dz
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),    # dalpha
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, g, out, den, a2, kv, z)
+
+    dk, dv, dbeta = pl.pallas_call(
+        functools.partial(_k_bwd_kernel, feature_map=feature_map),
+        grid=(n // bk,),
+        in_specs=[
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),   # k
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),   # v
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),    # beta
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # dkv
+            pl.BlockSpec((1, d), lambda i: (0, 0)),    # dz
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),   # dk
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),   # dv
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),    # dbeta
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k, v, b2, dkv, dz)
+
+    return dq, dk, dv, dalpha.reshape(()), dbeta.reshape(())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def linear_attention(
+    q, k, v, alpha, beta,
+    feature_map="lln", block_q=DEFAULT_BLOCK, block_k=DEFAULT_BLOCK,
+    eps=1e-6, interpret=True,
+):
+    """Differentiable chunked linear attention (one head, (N, d) inputs)."""
+    out, _, _, _ = _linear_fwd(q, k, v, alpha, beta, feature_map, block_q, block_k, eps, interpret)
+    return out
+
+
+def _linear_vjp_fwd(q, k, v, alpha, beta, feature_map, block_q, block_k, eps, interpret):
+    out, den, kv, z = _linear_fwd(q, k, v, alpha, beta, feature_map, block_q, block_k, eps, interpret)
+    return out, (q, k, v, alpha, beta, out, den, kv, z)
+
+
+def _linear_vjp_bwd(feature_map, block_q, block_k, eps, interpret, res, g):
+    return _linear_bwd(feature_map, block_q, block_k, eps, interpret, res, g)
+
+
+linear_attention.defvjp(_linear_vjp_fwd, _linear_vjp_bwd)
+
+
+def lln_attention(q, k, v, alpha, beta, **kw):
+    return linear_attention(q, k, v, alpha, beta, "lln", **kw)
+
+
+def elu_attention(q, k, v, **kw):
+    one = jnp.ones((), jnp.float32)
+    return linear_attention(q, k, v, one, one, "elu", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Flash softmax forward
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = (q_ref[...] @ k_ref[...].T) * scale
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * corr + p @ v_ref[...]
+    m_ref[...] = m_cur
+
+
+def _flash_fwd(q, k, v, block_q, block_k, interpret):
+    n, d = q.shape
+    bq, bk = min(block_q, n), min(block_k, n)
+    scale = 1.0 / (d ** 0.5)
+    acc, m, l = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, scale=scale),
+        grid=(n // bq, n // bk),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return acc / l, m, l
+
+
+# ---------------------------------------------------------------------------
+# Flash softmax backward (two kernels, transposed grids)
+# ---------------------------------------------------------------------------
+
+def _flash_dq_kernel(q_ref, k_ref, v_ref, g_ref, m_ref, l_ref, dd_ref, dq_ref, *, scale):
+    """Grid (i, j), j innermost: dq_i accumulates over K blocks."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    s = (q_ref[...] @ k_ref[...].T) * scale                  # (bq, bk)
+    p = jnp.exp(s - m_ref[...]) / l_ref[...]
+    gv = g_ref[...] @ v_ref[...].T                           # (bq, bk)
+    ds = p * (gv - dd_ref[...])
+    dq_ref[...] += (ds @ k_ref[...]) * scale
+
+
+def _flash_dkv_kernel(q_ref, k_ref, v_ref, g_ref, m_ref, l_ref, dd_ref, dk_ref, dv_ref, *, scale):
+    """Grid (j, i), i innermost: dk_j / dv_j accumulate over Q blocks."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    s = (q_ref[...] @ k_ref[...].T) * scale                  # (bq, bk)
+    p = jnp.exp(s - m_ref[...]) / l_ref[...]
+    dv_ref[...] += p.T @ g_ref[...]
+    gv = g_ref[...] @ v_ref[...].T                           # (bq, bk)
+    ds = p * (gv - dd_ref[...])
+    dk_ref[...] += (ds.T @ q_ref[...]) * scale
+
+
+def _flash_bwd(block_q, block_k, interpret, res, g):
+    q, k, v, out, m, l = res
+    n, d = q.shape
+    bq, bk = min(block_q, n), min(block_k, n)
+    scale = 1.0 / (d ** 0.5)
+    dd = jnp.sum(g * out, axis=-1, keepdims=True)            # (n, 1)
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_dq_kernel, scale=scale),
+        grid=(n // bq, n // bk),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),      # q
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),      # k
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),      # v
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),      # g
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),      # m
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),      # l
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),      # dd
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, g, m, l, dd)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_dkv_kernel, scale=scale),
+        grid=(n // bk, n // bq),                             # j outer, i inner
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda j, i: (i, 0)),      # q
+            pl.BlockSpec((bk, d), lambda j, i: (j, 0)),      # k
+            pl.BlockSpec((bk, d), lambda j, i: (j, 0)),      # v
+            pl.BlockSpec((bq, d), lambda j, i: (i, 0)),      # g
+            pl.BlockSpec((bq, 1), lambda j, i: (i, 0)),      # m
+            pl.BlockSpec((bq, 1), lambda j, i: (i, 0)),      # l
+            pl.BlockSpec((bq, 1), lambda j, i: (i, 0)),      # dd
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bk, d), lambda j, i: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, g, m, l, dd)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def softmax_attention(q, k, v, block_q=DEFAULT_BLOCK, block_k=DEFAULT_BLOCK, interpret=True):
+    """Differentiable flash softmax attention (one head, (N, d) inputs)."""
+    out, _, _ = _flash_fwd(q, k, v, block_q, block_k, interpret)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, block_q, block_k, interpret):
+    out, m, l = _flash_fwd(q, k, v, block_q, block_k, interpret)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_vjp_bwd(block_q, block_k, interpret, res, g):
+    return _flash_bwd(block_q, block_k, interpret, res, g)
+
+
+softmax_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal softmax (self-contained per block — single bwd kernel)
+# ---------------------------------------------------------------------------
+
+def _diag_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    s = (q_ref[...] @ k_ref[...].T) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = p @ v_ref[...]
+
+
+def _diag_bwd_kernel(q_ref, k_ref, v_ref, g_ref, dq_ref, dk_ref, dv_ref, *, scale):
+    s = (q_ref[...] @ k_ref[...].T) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    g = g_ref[...]
+    dv_ref[...] = p.T @ g
+    dp = g @ v_ref[...].T                                    # (b, b)
+    ds = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+    dq_ref[...] = (ds @ k_ref[...]) * scale
+    dk_ref[...] = (ds.T @ q_ref[...]) * scale
+
+
+def _diag_specs(block, d):
+    return [pl.BlockSpec((block, d), lambda i: (i, 0)) for _ in range(3)]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def blockdiag_attention(q, k, v, block_size=64, interpret=True):
+    """Differentiable block-diagonal softmax attention."""
+    n, d = q.shape
+    block = min(block_size, n)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_diag_fwd_kernel, scale=scale),
+        grid=(n // block,),
+        in_specs=_diag_specs(block, d),
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _diag_vjp_fwd(q, k, v, block_size, interpret):
+    return blockdiag_attention(q, k, v, block_size, interpret), (q, k, v)
+
+
+def _diag_vjp_bwd(block_size, interpret, res, g):
+    q, k, v = res
+    n, d = q.shape
+    block = min(block_size, n)
+    scale = 1.0 / (d ** 0.5)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_diag_bwd_kernel, scale=scale),
+        grid=(n // block,),
+        in_specs=_diag_specs(block, d) + [pl.BlockSpec((block, d), lambda i: (i, 0))],
+        out_specs=_diag_specs(block, d),
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.float32)] * 3,
+        interpret=interpret,
+    )(q, k, v, g)
+    return dq, dk, dv
+
+
+blockdiag_attention.defvjp(_diag_vjp_fwd, _diag_vjp_bwd)
+
+
+def lln_diag_attention(q, k, v, alpha, beta, block_size=64, **kw):
+    """Differentiable LLN+Diag (paper sec 4.2): mean of both paths."""
+    long_range = lln_attention(q, k, v, alpha, beta, **kw)
+    short_range = blockdiag_attention(q, k, v, block_size)
+    return 0.5 * (long_range + short_range)

@@ -1,0 +1,55 @@
+"""Pallas kernel: block-diagonal softmax attention (paper sec. 4.2).
+
+Each grid step handles one diagonal block: softmax over a
+(block, block) score tile only — the short-range half of LLN+Diag.
+O(N * block) compute and memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 64
+
+
+def _diag_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    s = (q_ref[...] @ k_ref[...].T) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = p @ v_ref[...]
+
+
+def blockdiag_attention_pallas(q, k, v, *, block_size=DEFAULT_BLOCK, interpret=True):
+    """Block-diagonal softmax attention over one head: q, k, v are (N, d)."""
+    n, d = q.shape
+    block_size = min(block_size, n)
+    if n % block_size:
+        raise ValueError(f"N={n} must be divisible by block_size={block_size}")
+    scale = 1.0 / (d ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_diag_kernel, scale=scale),
+        grid=(n // block_size,),
+        in_specs=[
+            pl.BlockSpec((block_size, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_size, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_size, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_size, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def lln_diag_attention_pallas(q, k, v, alpha, beta, *, block_size=DEFAULT_BLOCK, **kw):
+    """LLN+Diag: average of the linear long-range and block-diag short-range paths."""
+    from .linear_attn import lln_attention_pallas
+
+    long_range = lln_attention_pallas(q, k, v, alpha, beta, **kw)
+    short_range = blockdiag_attention_pallas(q, k, v, block_size=block_size)
+    return 0.5 * (long_range + short_range)

@@ -1,0 +1,80 @@
+"""Pallas kernel: blocked (flash-style) softmax attention baseline.
+
+Online-softmax over K/V chunks: grid is (q_blocks, k_blocks) with the
+k axis innermost and sequential; the running max / normalizer / output
+accumulator are carried in re-visited output blocks (constant index map
+over the k axis), which interpret mode executes with the same
+sequential-grid semantics as a TPU VMEM scratch.
+
+The final `out / l` normalization happens outside the kernel — it keeps
+the kernel single-purpose and XLA fuses the divide anyway.
+
+This is the *quadratic-time, linear-memory* baseline: nothing N x N is
+materialized, but the grid still has q_blocks * k_blocks steps, so
+compute remains O(N^2) — exactly the SA column of paper Table 2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, nk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = (q_ref[...] @ k_ref[...].T) * scale                    # (bq, bk)
+    m_prev = m_ref[...]                                        # (bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                                     # (bq, bk)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * corr + p @ v_ref[...]
+    m_ref[...] = m_cur
+
+
+def softmax_attention_pallas(
+    q, k, v, *, block_q=DEFAULT_BLOCK, block_k=DEFAULT_BLOCK, interpret=True
+):
+    """Flash-style softmax attention over one head: q, k, v are (N, d)."""
+    n, d = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    if n % block_q or n % block_k:
+        raise ValueError(f"N={n} must be divisible by block sizes ({block_q}, {block_k})")
+    nq, nk = n // block_q, n // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    out, _m, l = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, nk=nk),
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out / l

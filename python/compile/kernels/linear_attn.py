@@ -1,0 +1,138 @@
+"""Pallas kernel: chunked linearized attention (the paper's hot path).
+
+Computes  out = Phi(Q) (Phi(K)^T V) / (Phi(Q) sum_j Phi(K)_j)  in two
+grid phases, never materializing the N x N matrix:
+
+  phase A (reduce over K/V chunks):  KV[d, d] += Phi(K_blk)^T V_blk
+                                      z[1, d]  += sum_rows Phi(K_blk)
+  phase B (map over Q chunks):       out_blk = Phi(Q_blk) KV / (Phi(Q_blk) z^T)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the KV accumulator and z
+normalizer live in VMEM across sequential grid steps while K/V chunks
+stream HBM->VMEM via BlockSpec; both contractions are (block, d) x (d, d)
+MXU matmuls.  Block sizes are multiples of 128 where the sequence allows.
+
+Feature maps:
+  * "lln":  Phi_Q(q) = e^{alpha q},  Phi_K(k) = e^{beta k}   (paper eq. 8)
+  * "elu":  Phi(x) = elu(x) + 1                              (baseline)
+
+alpha/beta enter as (1, 1) f32 tensors so the AOT train step can derive
+them from live batch statistics (moment matching) inside the same HLO.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness is what we validate here, TPU perf is modeled
+in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EXP_CLAMP
+
+DEFAULT_BLOCK = 128
+
+
+def _phi(x, scale, feature_map):
+    if feature_map == "lln":
+        return jnp.exp(jnp.clip(scale * x, -EXP_CLAMP, EXP_CLAMP))
+    if feature_map == "elu":
+        return jax.nn.elu(x) + 1.0
+    raise ValueError(f"unknown feature map {feature_map!r}")
+
+
+def _kv_kernel(k_ref, v_ref, beta_ref, kv_ref, z_ref, *, feature_map):
+    """Phase A: accumulate Phi(K)^T V and the normalizer row-sum."""
+    pk = _phi(k_ref[...], beta_ref[0, 0], feature_map)     # (bk, d)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        kv_ref[...] = jnp.zeros_like(kv_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    kv_ref[...] += pk.T @ v_ref[...]
+    z_ref[...] += jnp.sum(pk, axis=0, keepdims=True)
+
+
+def _out_kernel(q_ref, alpha_ref, kv_ref, z_ref, o_ref, *, feature_map, eps):
+    """Phase B: contract Phi(Q) chunks against the accumulated state."""
+    pq = _phi(q_ref[...], alpha_ref[0, 0], feature_map)    # (bq, d)
+    num = pq @ kv_ref[...]                                  # (bq, d)
+    den = pq @ z_ref[...].T                                 # (bq, 1)
+    o_ref[...] = num / (den + eps)
+
+
+def linear_attention_pallas(
+    q,
+    k,
+    v,
+    alpha,
+    beta,
+    *,
+    feature_map="lln",
+    block_q=DEFAULT_BLOCK,
+    block_k=DEFAULT_BLOCK,
+    eps=1e-6,
+    interpret=True,
+):
+    """Chunked linear attention over one head: q, k, v are (N, d).
+
+    alpha/beta: () or (1, 1) f32 scalars (ignored by the elu map).
+    N must divide by the block sizes (model.py pads).
+    """
+    n, d = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    if n % block_q or n % block_k:
+        raise ValueError(f"N={n} must be divisible by block sizes ({block_q}, {block_k})")
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    beta = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+
+    kv, z = pl.pallas_call(
+        functools.partial(_kv_kernel, feature_map=feature_map),
+        grid=(n // block_k,),
+        in_specs=[
+            pl.BlockSpec((block_k, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k, v, beta)
+
+    out = pl.pallas_call(
+        functools.partial(_out_kernel, feature_map=feature_map, eps=eps),
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, alpha, kv, z)
+    return out
+
+
+def lln_attention_pallas(q, k, v, alpha, beta, **kw):
+    """Paper eq. 8 as a Pallas kernel."""
+    return linear_attention_pallas(q, k, v, alpha, beta, feature_map="lln", **kw)
+
+
+def elu_attention_pallas(q, k, v, **kw):
+    """ELU linear-attention baseline through the same kernel."""
+    one = jnp.ones((), jnp.float32)
+    return linear_attention_pallas(q, k, v, one, one, feature_map="elu", **kw)

@@ -1,0 +1,214 @@
+"""Pure-jnp reference oracles for every attention mechanism in the repo.
+
+These are the ground truth the Pallas kernels (and the Rust native
+implementations) are validated against.  Everything here is O(N^2) and
+materializes full attention matrices — clarity over efficiency.
+
+Shapes follow the paper's notation: q, k, v are (N, d) single-head
+slices; batched/multi-head wrappers live in model.py and vmap over
+these.  All math is f32.
+
+Numerics: the LLN feature maps exponentiate raw activations, so both the
+oracle and the kernels clamp the exponent to +/-EXP_CLAMP before `exp`.
+The paper's implementations manage the same blow-up via FP16 loss
+scaling (App. A.8.4); a hard clamp is the precision-agnostic equivalent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Keep exp() finite in f32 for any realistic activation scale.
+EXP_CLAMP = 30.0
+
+
+def _clamped_exp(x):
+    return jnp.exp(jnp.clip(x, -EXP_CLAMP, EXP_CLAMP))
+
+
+# ---------------------------------------------------------------------------
+# Softmax attention (paper eq. 1-2)
+# ---------------------------------------------------------------------------
+
+def softmax_attention(q, k, v):
+    """Standard scaled-dot-product attention, one head.
+
+    P_ij = softmax_j(q_i . k_j / sqrt(d));  out_i = sum_j P_ij v_j.
+    """
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def softmax_attention_matrix(q, k):
+    """The full N x N stochastic matrix P^(SM) (analysis instrument)."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    return jax.nn.softmax(scores, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Generic linearized attention (paper eq. 4): out = Phi(Q) (Phi(K)^T V) / Z
+# ---------------------------------------------------------------------------
+
+def linear_attention(phi_q, phi_k, v, eps=1e-6):
+    """Linear attention given pre-computed feature maps, (N, m) each.
+
+    Computed in the O(N m d) associativity order so the oracle exercises
+    the same contraction the kernels implement.
+    """
+    kv = phi_k.T @ v                     # (m, d)
+    z = jnp.sum(phi_k, axis=0)           # (m,)
+    num = phi_q @ kv                     # (N, d)
+    den = phi_q @ z                      # (N,)
+    return num / (den[:, None] + eps)
+
+
+def linear_attention_matrix(phi_q, phi_k, eps=1e-6):
+    """Explicit N x N stochastic matrix of a linearized attention."""
+    scores = phi_q @ phi_k.T             # (N, N), all entries >= 0
+    return scores / (jnp.sum(scores, axis=-1, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# LLN attention (paper eq. 8-9): Phi_Q(q) = e^{alpha q}, Phi_K(k) = e^{beta k}
+# ---------------------------------------------------------------------------
+
+def lln_feature_q(q, alpha):
+    return _clamped_exp(alpha * q)
+
+
+def lln_feature_k(k, beta):
+    return _clamped_exp(beta * k)
+
+
+def lln_attention(q, k, v, alpha, beta):
+    """Linear Log-Normal attention, one head (paper eq. 8)."""
+    return linear_attention(lln_feature_q(q, alpha), lln_feature_k(k, beta), v)
+
+
+def lln_attention_matrix(q, k, alpha, beta):
+    return linear_attention_matrix(lln_feature_q(q, alpha), lln_feature_k(k, beta))
+
+
+# ---------------------------------------------------------------------------
+# ELU linear attention (Katharopoulos et al. 2020): phi(x) = elu(x) + 1
+# ---------------------------------------------------------------------------
+
+def elu_feature(x):
+    return jax.nn.elu(x) + 1.0
+
+
+def elu_attention(q, k, v):
+    return linear_attention(elu_feature(q), elu_feature(k), v)
+
+
+def elu_attention_matrix(q, k):
+    return linear_attention_matrix(elu_feature(q), elu_feature(k))
+
+
+# ---------------------------------------------------------------------------
+# ReLU / quadratic kernels (fig. 2 comparisons)
+# ---------------------------------------------------------------------------
+
+def relu_attention_matrix(q, k):
+    return linear_attention_matrix(jax.nn.relu(q), jax.nn.relu(k))
+
+
+def quadratic_attention_matrix(q, k):
+    """kappa(q, k) = (q . k)^2 via the explicit (non-linearized) route."""
+    scores = (q @ k.T) ** 2
+    return scores / (jnp.sum(scores, axis=-1, keepdims=True) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Performer / FAVOR+ (Choromanski et al. 2020), positive random features
+# ---------------------------------------------------------------------------
+
+def performer_features(x, proj, scale):
+    """Positive softmax-kernel random features: exp(w^T x - |x|^2 / 2).
+
+    proj: (d, m) random Gaussian projection (fixed at trace time).
+    scale: 1/sqrt(m) normalization.
+    """
+    d = x.shape[-1]
+    x = x / jnp.float32(d) ** 0.25
+    u = x @ proj                                   # (N, m)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    return scale * _clamped_exp(u - sq)
+
+
+def performer_attention(q, k, v, proj):
+    m = proj.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(m))
+    return linear_attention(
+        performer_features(q, proj, scale), performer_features(k, proj, scale), v
+    )
+
+
+def performer_attention_matrix(q, k, proj):
+    m = proj.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(m))
+    return linear_attention_matrix(
+        performer_features(q, proj, scale), performer_features(k, proj, scale)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Nystromformer (Xiong et al. 2021), segment-mean landmarks
+# ---------------------------------------------------------------------------
+
+def _newton_schulz_pinv(a, iters=12):
+    """Iterative Moore-Penrose pseudo-inverse of a small (m, m) matrix."""
+    # Initialization from the Nystromformer paper (sec 3.2).
+    z = a.T / (jnp.max(jnp.sum(jnp.abs(a), axis=0)) * jnp.max(jnp.sum(jnp.abs(a), axis=1)))
+    ident = jnp.eye(a.shape[0], dtype=a.dtype)
+
+    def body(_, z):
+        az = a @ z
+        return z @ (13.0 * ident - az @ (15.0 * ident - az @ (7.0 * ident - az))) / 4.0
+
+    return jax.lax.fori_loop(0, iters, body, z)
+
+
+def nystrom_attention(q, k, v, num_landmarks=32):
+    """Nystrom approximation of softmax attention with mean-pooled landmarks."""
+    n, d = q.shape
+    m = num_landmarks
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q_l = q.reshape(m, n // m, d).mean(axis=1)     # (m, d) landmarks
+    k_l = k.reshape(m, n // m, d).mean(axis=1)
+    f = jax.nn.softmax(q @ k_l.T * scale, axis=-1)        # (n, m)
+    a = jax.nn.softmax(q_l @ k_l.T * scale, axis=-1)      # (m, m)
+    b = jax.nn.softmax(q_l @ k.T * scale, axis=-1)        # (m, n)
+    return f @ (_newton_schulz_pinv(a) @ (b @ v))
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal softmax attention (sec. 4.2 / Qin et al. 2022b)
+# ---------------------------------------------------------------------------
+
+def blockdiag_attention(q, k, v, block_size):
+    """Softmax attention restricted to diagonal blocks of size `block_size`."""
+    n, d = q.shape
+    assert n % block_size == 0, "sequence length must be divisible by block size"
+    nb = n // block_size
+    qb = q.reshape(nb, block_size, d)
+    kb = k.reshape(nb, block_size, d)
+    vb = v.reshape(nb, block_size, d)
+    scores = jnp.einsum("bqd,bkd->bqk", qb, kb) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, vb)
+    return out.reshape(n, d)
+
+
+# ---------------------------------------------------------------------------
+# LLN + Diag (sec. 4.2): average of LLN and block-diagonal outputs
+# ---------------------------------------------------------------------------
+
+def lln_diag_attention(q, k, v, alpha, beta, block_size):
+    long_range = lln_attention(q, k, v, alpha, beta)
+    short_range = blockdiag_attention(q, k, v, block_size)
+    return 0.5 * (long_range + short_range)

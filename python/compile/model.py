@@ -1,0 +1,378 @@
+"""L2 — RoBERTa-lite encoder in JAX with pluggable attention.
+
+Pure-functional: parameters are a flat `dict[str, jnp.ndarray]` with a
+canonical (sorted-key) ordering that the AOT manifest records and the
+Rust runtime reproduces.  The encoder body calls the differentiable
+Pallas kernels from `kernels.autodiff` for the methods the paper
+implements at kernel level (softmax / lln / lln_diag / elu / blockdiag);
+the comparison baselines (performer / nystrom / linformer) use the jnp
+references — they are baselines, not the contribution.
+
+For `attn = "lln"` / `"lln_diag"`, alpha and beta are derived *inside
+the graph* from live per-layer query/key standard deviations via the
+moment-matching constants (a, b) baked into the config — this is what
+makes fig. 9 (alpha/beta evolving during training) reproducible with
+Python off the hot path.
+
+The same encoder body serves:
+  * token mode   (MLM pretraining, GLUE-like classification, LRA-lite)
+  * patch mode   (`forward_patches` — ViT-lite for Table 3)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import autodiff as att
+from .kernels import ref
+from . import moment_matching as mm
+
+ATTENTION_METHODS = (
+    "softmax",      # Pallas flash baseline
+    "lln",          # Pallas, paper eq. 8 + moment matching
+    "lln_diag",     # Pallas, paper sec. 4.2
+    "elu",          # Pallas, Katharopoulos et al.
+    "blockdiag",    # Pallas, diagonal-only SA
+    "performer",    # jnp baseline (kernel class)
+    "nystrom",      # jnp baseline (low-rank class)
+    "linformer",    # jnp baseline (projection class)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + attention configuration (baked into HLO)."""
+
+    vocab_size: int = 8192
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 1024
+    max_len: int = 512
+    num_classes: int = 4
+    attn: str = "softmax"
+    # LLN moment-matching constants (fit offline by moment_matching.py).
+    mm_a: float = 0.21
+    mm_b: float = -1.08
+    # Fixed alpha/beta override (fig. 10 ablation); None = moment matching.
+    fixed_alpha: float | None = None
+    fixed_beta: float | None = None
+    diag_block: int = 64
+    performer_features: int = 64
+    nystrom_landmarks: int = 32
+    linformer_k: int = 64
+    # Pallas block sizes for the chunked kernels.
+    block_q: int = 128
+    block_k: int = 128
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Named presets; "base" mirrors RoBERTa-base for config-completeness
+# (not AOT-exported by default — compile time).
+PRESETS: Dict[str, dict] = {
+    "tiny": dict(vocab_size=512, d_model=64, n_heads=2, n_layers=2, d_ff=128, max_len=128),
+    "small": dict(vocab_size=8192, d_model=256, n_heads=4, n_layers=4, d_ff=1024, max_len=512),
+    "medium": dict(vocab_size=16384, d_model=512, n_heads=8, n_layers=8, d_ff=2048, max_len=512),
+    "base": dict(vocab_size=32768, d_model=768, n_heads=12, n_layers=12, d_ff=3072, max_len=512),
+}
+
+
+def make_config(size: str = "small", **overrides) -> ModelConfig:
+    kw = dict(PRESETS[size])
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (canonical flat dict)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0, patch_dim: int | None = None) -> Dict[str, np.ndarray]:
+    """Initialize all parameters as numpy arrays keyed by canonical names.
+
+    patch_dim: when set, adds the ViT patch-embedding matrix (token table
+    stays — unused in patch mode but keeps one param schema per config).
+    """
+    rng = np.random.default_rng(seed)
+    d, dff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    std = 0.02
+
+    def norm(*shape):
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+    p: Dict[str, np.ndarray] = {
+        "emb.tok": norm(v, d),
+        "emb.pos": _sinusoidal(cfg.max_len, d),
+        "final_ln.g": np.ones(d, np.float32),
+        "final_ln.b": np.zeros(d, np.float32),
+        "mlm.bias": np.zeros(v, np.float32),
+        "cls.w": norm(d, cfg.num_classes),
+        "cls.b": np.zeros(cfg.num_classes, np.float32),
+    }
+    if patch_dim is not None:
+        p["emb.patch"] = norm(patch_dim, d)
+    for i in range(cfg.n_layers):
+        pre = f"layer_{i:02d}."
+        p[pre + "ln1.g"] = np.ones(d, np.float32)
+        p[pre + "ln1.b"] = np.zeros(d, np.float32)
+        p[pre + "wq"] = norm(d, d)
+        p[pre + "bq"] = np.zeros(d, np.float32)
+        p[pre + "wk"] = norm(d, d)
+        p[pre + "bk"] = np.zeros(d, np.float32)
+        p[pre + "wv"] = norm(d, d)
+        p[pre + "bv"] = np.zeros(d, np.float32)
+        p[pre + "wo"] = norm(d, d)
+        p[pre + "bo"] = np.zeros(d, np.float32)
+        p[pre + "ln2.g"] = np.ones(d, np.float32)
+        p[pre + "ln2.b"] = np.zeros(d, np.float32)
+        p[pre + "w1"] = norm(d, dff)
+        p[pre + "b1"] = np.zeros(dff, np.float32)
+        p[pre + "w2"] = norm(dff, d)
+        p[pre + "b2"] = np.zeros(d, np.float32)
+        if cfg.attn == "performer":
+            # Fixed (non-trainable by convention, but stored) random projection.
+            p[pre + "performer_proj"] = rng.normal(
+                0.0, 1.0, size=(cfg.d_head, cfg.performer_features)
+            ).astype(np.float32)
+        if cfg.attn == "linformer":
+            p[pre + "linformer_e"] = norm(cfg.max_len, cfg.linformer_k)
+            p[pre + "linformer_f"] = norm(cfg.max_len, cfg.linformer_k)
+    return p
+
+
+def _sinusoidal(n: int, d: int, scale: float = 0.05) -> np.ndarray:
+    """Sinusoidal position table scaled to the token-embedding init scale.
+
+    Unit-amplitude sinusoids would dominate std-0.02 token embeddings by
+    ~50x, drowning content in position and stalling classification
+    training (verified empirically: SST2-like accuracy 0.56 -> 0.97 after
+    rescaling).  The table is a trainable parameter either way.
+    """
+    pos = np.arange(n)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    out = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return (scale * out).astype(np.float32)
+
+
+def param_order(params: Dict[str, np.ndarray]) -> List[str]:
+    """The canonical flattening order shared with the Rust runtime."""
+    return sorted(params.keys())
+
+
+# ---------------------------------------------------------------------------
+# Encoder forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    b, n, d = x.shape
+    return x.reshape(b, n, n_heads, d // n_heads).transpose(0, 2, 1, 3)  # (B,H,N,dh)
+
+
+def _merge_heads(x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _lln_alpha_beta(q, k, cfg: ModelConfig):
+    """Per-layer alpha/beta from live stats (or the fixed override)."""
+    if cfg.fixed_alpha is not None:
+        return jnp.float32(cfg.fixed_alpha), jnp.float32(cfg.fixed_beta)
+    sigma_q = jnp.std(q) + 1e-6
+    sigma_k = jnp.std(k) + 1e-6
+    return mm.alpha_beta(sigma_q, sigma_k, cfg.mm_a, cfg.mm_b)
+
+
+def _attention(q, k, v, cfg: ModelConfig, layer_params, prefix):
+    """Dispatch one layer's multi-head attention.  q/k/v: (B, H, N, dh).
+
+    Returns (context (B,H,N,dh), stats dict of scalars for probes).
+    """
+    bq, bk = cfg.block_q, cfg.block_k
+    stats = {}
+
+    def over_heads(fn):
+        return jax.vmap(jax.vmap(fn))(q, k, v)
+
+    if cfg.attn == "softmax":
+        ctx = over_heads(lambda a, b, c: att.softmax_attention(a, b, c, bq, bk))
+    elif cfg.attn in ("lln", "lln_diag"):
+        alpha, beta = _lln_alpha_beta(q, k, cfg)
+        stats["alpha"] = alpha
+        stats["beta"] = beta
+        stats["sigma_q"] = jnp.std(q)
+        stats["sigma_k"] = jnp.std(k)
+        if cfg.attn == "lln":
+            fn = lambda a, b, c: att.lln_attention(a, b, c, alpha, beta, block_q=bq, block_k=bk)
+        else:
+            fn = lambda a, b, c: att.lln_diag_attention(
+                a, b, c, alpha, beta, cfg.diag_block, block_q=bq, block_k=bk
+            )
+        ctx = over_heads(fn)
+    elif cfg.attn == "elu":
+        ctx = over_heads(lambda a, b, c: att.elu_attention(a, b, c, block_q=bq, block_k=bk))
+    elif cfg.attn == "blockdiag":
+        ctx = over_heads(lambda a, b, c: att.blockdiag_attention(a, b, c, cfg.diag_block))
+    elif cfg.attn == "performer":
+        proj = layer_params[prefix + "performer_proj"]
+        ctx = over_heads(lambda a, b, c: ref.performer_attention(a, b, c, proj))
+    elif cfg.attn == "nystrom":
+        ctx = over_heads(lambda a, b, c: ref.nystrom_attention(a, b, c, cfg.nystrom_landmarks))
+    elif cfg.attn == "linformer":
+        n = q.shape[2]
+        e = layer_params[prefix + "linformer_e"][:n]
+        f = layer_params[prefix + "linformer_f"][:n]
+
+        def linformer_head(qh, kh, vh):
+            kp = e.T @ kh  # (k, dh)
+            vp = f.T @ vh
+            return ref.softmax_attention(qh, kp, vp)
+
+        ctx = over_heads(linformer_head)
+    else:
+        raise ValueError(f"unknown attention {cfg.attn!r}")
+    return ctx, stats
+
+
+def encode(params, h, cfg: ModelConfig):
+    """Shared encoder body on pre-embedded inputs h: (B, N, D).
+
+    Returns (hidden, per-layer stats list).
+    """
+    all_stats = []
+    for i in range(cfg.n_layers):
+        pre = f"layer_{i:02d}."
+        x = _layer_norm(h, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        q = _split_heads(x @ params[pre + "wq"] + params[pre + "bq"], cfg.n_heads)
+        k = _split_heads(x @ params[pre + "wk"] + params[pre + "bk"], cfg.n_heads)
+        v = _split_heads(x @ params[pre + "wv"] + params[pre + "bv"], cfg.n_heads)
+        ctx, stats = _attention(q, k, v, cfg, params, pre)
+        h = h + _merge_heads(ctx) @ params[pre + "wo"] + params[pre + "bo"]
+        y = _layer_norm(h, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        h = h + jax.nn.gelu(y @ params[pre + "w1"] + params[pre + "b1"]) @ params[pre + "w2"] + params[pre + "b2"]
+        all_stats.append(stats)
+    h = _layer_norm(h, params["final_ln.g"], params["final_ln.b"])
+    return h, all_stats
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    n = tokens.shape[1]
+    return params["emb.tok"][tokens] + params["emb.pos"][:n][None, :, :]
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Token mode: tokens (B, N) int32 -> (hidden (B,N,D), stats)."""
+    return encode(params, embed_tokens(params, tokens, cfg), cfg)
+
+
+def forward_patches(params, patches, cfg: ModelConfig):
+    """Patch mode (ViT-lite): patches (B, P, patch_dim) f32."""
+    n = patches.shape[1]
+    h = patches @ params["emb.patch"] + params["emb.pos"][:n][None, :, :]
+    return encode(params, h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Heads and losses
+# ---------------------------------------------------------------------------
+
+def mlm_logits(params, hidden):
+    """Tied-embedding MLM head: (B, N, D) -> (B, N, V)."""
+    return hidden @ params["emb.tok"].T + params["mlm.bias"]
+
+
+def cls_logits(params, hidden):
+    """Mean-pooled classification head: (B, N, D) -> (B, C)."""
+    pooled = jnp.mean(hidden, axis=1)
+    return pooled @ params["cls.w"] + params["cls.b"]
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def mlm_loss(params, tokens, labels, weights, cfg: ModelConfig):
+    """Masked-LM loss.  tokens already contain [MASK]; weights select positions."""
+    hidden, stats = forward(params, tokens, cfg)
+    per_tok = _xent(mlm_logits(params, hidden), labels)
+    loss = jnp.sum(per_tok * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    return loss, stats
+
+
+def cls_loss(params, tokens, labels, cfg: ModelConfig):
+    hidden, stats = forward(params, tokens, cfg)
+    logits = cls_logits(params, hidden)
+    return jnp.mean(_xent(logits, labels)), (stats, logits)
+
+
+def vit_loss(params, patches, labels, cfg: ModelConfig):
+    hidden, stats = forward_patches(params, patches, cfg)
+    logits = cls_logits(params, hidden)
+    return jnp.mean(_xent(logits, labels)), (stats, logits)
+
+
+def stack_layer_stats(all_stats, cfg: ModelConfig):
+    """(L, 4) tensor of [alpha, beta, sigma_q, sigma_k] per layer (zeros if n/a)."""
+    rows = []
+    for s in all_stats:
+        rows.append(
+            jnp.stack(
+                [
+                    s.get("alpha", jnp.float32(0.0)),
+                    s.get("beta", jnp.float32(0.0)),
+                    s.get("sigma_q", jnp.float32(0.0)),
+                    s.get("sigma_k", jnp.float32(0.0)),
+                ]
+            )
+        )
+    return jnp.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Analysis probe (fig. 1): per-layer attention matrices + input stats
+# ---------------------------------------------------------------------------
+
+def attention_probe(params, tokens, cfg: ModelConfig):
+    """Returns (P (L, N, N): head-0 attention of batch element 0 per layer,
+    layer_stats (L, 4)).
+
+    For LLN methods P is the explicit LLN stochastic matrix (eq. 9) so the
+    entropy/spectral-gap instruments measure the *actual* mechanism.
+    """
+    h = embed_tokens(params, tokens, cfg)
+    mats = []
+    all_stats = []
+    for i in range(cfg.n_layers):
+        pre = f"layer_{i:02d}."
+        x = _layer_norm(h, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        q = _split_heads(x @ params[pre + "wq"] + params[pre + "bq"], cfg.n_heads)
+        k = _split_heads(x @ params[pre + "wk"] + params[pre + "bk"], cfg.n_heads)
+        v = _split_heads(x @ params[pre + "wv"] + params[pre + "bv"], cfg.n_heads)
+        q0, k0 = q[0, 0], k[0, 0]
+        if cfg.attn in ("lln", "lln_diag"):
+            alpha, beta = _lln_alpha_beta(q, k, cfg)
+            mats.append(ref.lln_attention_matrix(q0, k0, alpha, beta))
+        else:
+            mats.append(ref.softmax_attention_matrix(q0, k0))
+        ctx, stats = _attention(q, k, v, cfg, params, pre)
+        all_stats.append(stats)
+        h = h + _merge_heads(ctx) @ params[pre + "wo"] + params[pre + "bo"]
+        y = _layer_norm(h, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        h = h + jax.nn.gelu(y @ params[pre + "w1"] + params[pre + "b1"]) @ params[pre + "w2"] + params[pre + "b2"]
+    return jnp.stack(mats), stack_layer_stats(all_stats, cfg)

@@ -1,0 +1,97 @@
+"""L2 — AOT-able train/eval steps: Adam fully inside the jitted graph.
+
+The Rust training driver owns three flat buffer sets (params, adam_m,
+adam_v) in the canonical `model.param_order` order, plus two scalars
+(t — the Adam step count, lr — from the Rust-side schedule).  One call
+to the exported executable advances everything by one step and returns
+the new state, the loss, the global gradient norm (the paper's FP16
+loss-scale telemetry proxy, figs. 8b/10b) and the per-layer
+[alpha, beta, sigma_q, sigma_k] stats tensor (fig. 9).
+
+Keeping the optimizer inside the graph means the hot path is exactly one
+PJRT execute per step, with all state device-resident (`execute_b`).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.98
+ADAM_EPS = 1e-6
+WEIGHT_DECAY = 0.01
+
+
+def adam_update(params, grads, m, v, t, lr):
+    """One decoupled-weight-decay Adam step over flat dicts."""
+    b1t = 1.0 - jnp.power(ADAM_B1, t)
+    b2t = 1.0 - jnp.power(ADAM_B2, t)
+    new_p, new_m, new_v = {}, {}, {}
+    for key in params:
+        g = grads[key]
+        mk = ADAM_B1 * m[key] + (1.0 - ADAM_B1) * g
+        vk = ADAM_B2 * v[key] + (1.0 - ADAM_B2) * jnp.square(g)
+        update = (mk / b1t) / (jnp.sqrt(vk / b2t) + ADAM_EPS)
+        new_p[key] = params[key] - lr * (update + WEIGHT_DECAY * params[key])
+        new_m[key] = mk
+        new_v[key] = vk
+    return new_p, new_m, new_v
+
+
+def global_grad_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+
+
+def _finish(params, m, v, t, lr, loss, grads, stats, cfg):
+    gnorm = global_grad_norm(grads)
+    new_p, new_m, new_v = adam_update(params, grads, m, v, t, lr)
+    return new_p, new_m, new_v, loss, gnorm, M.stack_layer_stats(stats, cfg)
+
+
+def train_step_mlm(params, m, v, t, lr, tokens, labels, weights, cfg: M.ModelConfig):
+    """tokens/labels (B,N) i32, weights (B,N) f32 -> new state + telemetry."""
+    (loss, stats), grads = jax.value_and_grad(
+        lambda p: M.mlm_loss(p, tokens, labels, weights, cfg), has_aux=True
+    )(params)
+    return _finish(params, m, v, t, lr, loss, grads, stats, cfg)
+
+
+def train_step_cls(params, m, v, t, lr, tokens, labels, cfg: M.ModelConfig):
+    (loss, (stats, _logits)), grads = jax.value_and_grad(
+        lambda p: M.cls_loss(p, tokens, labels, cfg), has_aux=True
+    )(params)
+    return _finish(params, m, v, t, lr, loss, grads, stats, cfg)
+
+
+def train_step_vit(params, m, v, t, lr, patches, labels, cfg: M.ModelConfig):
+    (loss, (stats, _logits)), grads = jax.value_and_grad(
+        lambda p: M.vit_loss(p, patches, labels, cfg), has_aux=True
+    )(params)
+    return _finish(params, m, v, t, lr, loss, grads, stats, cfg)
+
+
+# --- Eval-side functions (forward only) ------------------------------------
+
+def eval_mlm(params, tokens, labels, weights, cfg: M.ModelConfig):
+    loss, _ = M.mlm_loss(params, tokens, labels, weights, cfg)
+    return (loss,)
+
+
+def eval_cls(params, tokens, cfg: M.ModelConfig):
+    hidden, _ = M.forward(params, tokens, cfg)
+    return (M.cls_logits(params, hidden),)
+
+
+def eval_vit(params, patches, cfg: M.ModelConfig):
+    hidden, _ = M.forward_patches(params, patches, cfg)
+    return (M.cls_logits(params, hidden),)
+
+
+def init_opt_state(params: Dict) -> tuple[Dict, Dict]:
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in params.items()}

@@ -1,0 +1,98 @@
+"""AOT manifest integrity: what Rust will rely on must hold.
+
+These tests run against artifacts/ when present (CI path: `make test`
+builds artifacts first); they skip gracefully otherwise.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.load(open(MANIFEST))
+
+
+def test_every_artifact_file_exists(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["name"]
+        assert os.path.getsize(path) > 100, a["name"]
+
+
+def test_hlo_text_parses_as_hlo_module(manifest):
+    """Spot-check the interchange format: must be HLO text, not proto."""
+    a = manifest["artifacts"][0]
+    head = open(os.path.join(ART, a["file"])).read(200)
+    assert head.startswith("HloModule"), head[:50]
+
+
+def test_param_binaries_match_schema(manifest):
+    for tag, m in manifest["models"].items():
+        path = os.path.join(ART, m["params_file"])
+        assert os.path.exists(path), tag
+        expect = sum(int(np.prod(m["param_shapes"][k])) for k in m["param_order"]) * 4
+        assert os.path.getsize(path) == expect, (tag, os.path.getsize(path), expect)
+
+
+def test_param_order_is_sorted(manifest):
+    for tag, m in manifest["models"].items():
+        assert m["param_order"] == sorted(m["param_order"]), tag
+
+
+def test_train_artifacts_have_state_in_out_symmetry(manifest):
+    """Train steps must output exactly the params/m/v they take in."""
+    for a in manifest["artifacts"]:
+        if not a["name"].startswith("train_"):
+            continue
+        in_state = [x["name"] for x in a["inputs"] if x["name"][:2] in ("p:", "m:", "v:")]
+        out_state = [x["name"] for x in a["outputs"] if x["name"][:2] in ("p:", "m:", "v:")]
+        assert in_state == out_state, a["name"]
+        in_shapes = {x["name"]: x["shape"] for x in a["inputs"]}
+        for x in a["outputs"]:
+            if x["name"] in in_shapes:
+                assert x["shape"] == in_shapes[x["name"]], (a["name"], x["name"])
+
+
+def test_train_artifacts_emit_telemetry(manifest):
+    for a in manifest["artifacts"]:
+        if not a["name"].startswith("train_"):
+            continue
+        out_names = [x["name"] for x in a["outputs"]]
+        for needed in ("loss", "grad_norm", "layer_stats"):
+            assert needed in out_names, (a["name"], needed)
+
+
+def test_micro_kernels_cover_scaling_grid(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    for n in (256, 1024, 4096, 8192, 16384):
+        assert f"attn_lln_n{n}" in names
+        assert f"attn_lln_diag_n{n}" in names
+    for n in (256, 1024, 4096):
+        assert f"attn_softmax_n{n}" in names
+    # The paper's OOM analog: no quadratic softmax beyond 4096.
+    assert "attn_softmax_n8192" not in names
+
+
+def test_mm_constants_recorded(manifest):
+    assert manifest["mm_a"] > 0
+    assert np.isfinite(manifest["mm_b"])
+
+
+def test_dtypes_are_expected(manifest):
+    for a in manifest["artifacts"]:
+        for x in a["inputs"] + a["outputs"]:
+            assert x["dtype"] in ("f32", "i32"), (a["name"], x)
+        tok = [x for x in a["inputs"] if x["name"] == "tokens"]
+        if tok:
+            assert tok[0]["dtype"] == "i32"

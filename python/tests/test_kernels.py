@@ -1,0 +1,212 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes, block sizes, and input scales; assert_allclose
+against ref.py is THE core correctness signal for the compute layer.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import autodiff as ad
+from compile.kernels.linear_attn import linear_attention_pallas
+from compile.kernels.flash_softmax import softmax_attention_pallas
+from compile.kernels.blockdiag import blockdiag_attention_pallas
+
+RTOL, ATOL = 2e-4, 2e-5
+GRAD_RTOL, GRAD_ATOL = 7e-3, 5e-5
+
+
+def make_qkv(seed, n, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return tuple(
+        jnp.asarray(rng.normal(0.0, scale, size=(n, d)), jnp.float32) for _ in range(3)
+    )
+
+
+# -- shape/scale sweeps -------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.sampled_from([64, 128, 256, 512]),     # n
+    st.sampled_from([16, 32, 64]),            # d
+    st.integers(0, 2**31 - 1),                # seed
+    st.floats(0.3, 1.8),                      # input scale
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_lln_kernel_matches_ref(args):
+    n, d, seed, scale = args
+    q, k, v = make_qkv(seed, n, d, scale)
+    a, b = jnp.float32(0.9), jnp.float32(1.1)
+    got = linear_attention_pallas(q, k, v, a, b, feature_map="lln", block_q=64, block_k=64)
+    want = ref.lln_attention(q, k, v, a, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_flash_softmax_matches_ref(args):
+    n, d, seed, scale = args
+    q, k, v = make_qkv(seed, n, d, scale)
+    got = softmax_attention_pallas(q, k, v, block_q=64, block_k=64)
+    want = ref.softmax_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape_strategy, st.sampled_from([16, 32, 64]))
+def test_blockdiag_matches_ref(args, block):
+    n, d, seed, scale = args
+    q, k, v = make_qkv(seed, n, d, scale)
+    got = blockdiag_attention_pallas(q, k, v, block_size=block)
+    want = ref.blockdiag_attention(q, k, v, block)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape_strategy)
+def test_elu_kernel_matches_ref(args):
+    n, d, seed, scale = args
+    q, k, v = make_qkv(seed, n, d, scale)
+    got = linear_attention_pallas(
+        q, k, v, jnp.float32(1), jnp.float32(1), feature_map="elu", block_q=64, block_k=64
+    )
+    want = ref.elu_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# -- block-size invariance ----------------------------------------------------
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (32, 128), (128, 32), (256, 256)])
+def test_lln_block_size_invariance(bq, bk):
+    q, k, v = make_qkv(3, 256, 32)
+    a = b = jnp.float32(0.8)
+    base = ref.lln_attention(q, k, v, a, b)
+    got = linear_attention_pallas(q, k, v, a, b, feature_map="lln", block_q=bq, block_k=bk)
+    np.testing.assert_allclose(got, base, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (32, 128), (128, 32)])
+def test_flash_block_size_invariance(bq, bk):
+    q, k, v = make_qkv(4, 256, 32)
+    base = ref.softmax_attention(q, k, v)
+    got = softmax_attention_pallas(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(got, base, rtol=RTOL, atol=ATOL)
+
+
+def test_bad_block_size_raises():
+    q, k, v = make_qkv(0, 100, 16)
+    with pytest.raises(ValueError):
+        linear_attention_pallas(q, k, v, 1.0, 1.0, block_q=64, block_k=64)
+    with pytest.raises(ValueError):
+        softmax_attention_pallas(q, k, v, block_q=64)
+
+
+# -- numerics edge cases ------------------------------------------------------
+
+def test_lln_large_scale_stays_finite():
+    """EXP_CLAMP keeps the kernel finite for extreme alpha/sigma."""
+    q, k, v = make_qkv(5, 128, 32, scale=8.0)
+    out = linear_attention_pallas(q, k, v, jnp.float32(4.0), jnp.float32(4.0))
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_flash_softmax_large_scores_match_ref():
+    q, k, v = make_qkv(6, 128, 32, scale=4.0)
+    got = softmax_attention_pallas(q, k, v)
+    want = ref.softmax_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Output of softmax attention lies in the convex hull of V rows."""
+    q, k, v = make_qkv(7, 64, 16)
+    out = softmax_attention_pallas(q, k, v)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-4
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-4
+
+
+# -- VJP correctness ----------------------------------------------------------
+
+def _check_grads(f_pallas, f_ref, args, argnums):
+    gp = jax.grad(lambda *a: jnp.sum(jnp.sin(f_pallas(*a))), argnums)(*args)
+    gr = jax.grad(lambda *a: jnp.sum(jnp.sin(f_ref(*a))), argnums)(*args)
+    for x, y in zip(gp, gr):
+        np.testing.assert_allclose(x, y, rtol=GRAD_RTOL, atol=GRAD_ATOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128]), st.sampled_from([16, 32]))
+def test_lln_vjp_matches_ref(seed, n, d):
+    q, k, v = make_qkv(seed, n, d)
+    a, b = jnp.float32(0.7), jnp.float32(1.2)
+    _check_grads(
+        lambda q, k, v, a, b: ad.lln_attention(q, k, v, a, b, block_q=64, block_k=64),
+        ref.lln_attention,
+        (q, k, v, a, b),
+        (0, 1, 2, 3, 4),
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128]), st.sampled_from([16, 32]))
+def test_flash_vjp_matches_ref(seed, n, d):
+    q, k, v = make_qkv(seed, n, d)
+    _check_grads(
+        lambda q, k, v: ad.softmax_attention(q, k, v, 64, 64),
+        ref.softmax_attention,
+        (q, k, v),
+        (0, 1, 2),
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_blockdiag_vjp_matches_ref(seed):
+    q, k, v = make_qkv(seed, 128, 32)
+    _check_grads(
+        lambda q, k, v: ad.blockdiag_attention(q, k, v, 32),
+        lambda q, k, v: ref.blockdiag_attention(q, k, v, 32),
+        (q, k, v),
+        (0, 1, 2),
+    )
+
+
+def test_elu_vjp_matches_ref():
+    q, k, v = make_qkv(11, 128, 32)
+    _check_grads(
+        lambda q, k, v: ad.elu_attention(q, k, v, block_q=64, block_k=64),
+        ref.elu_attention,
+        (q, k, v),
+        (0, 1, 2),
+    )
+
+
+def test_lln_diag_vjp_matches_ref():
+    q, k, v = make_qkv(12, 128, 32)
+    a, b = jnp.float32(0.7), jnp.float32(1.2)
+    _check_grads(
+        lambda q, k, v: ad.lln_diag_attention(q, k, v, a, b, 32, block_q=64, block_k=64),
+        lambda q, k, v: ref.lln_diag_attention(q, k, v, a, b, 32),
+        (q, k, v),
+        (0, 1, 2),
+    )
+
+
+def test_vjp_under_vmap():
+    """Multi-head usage: grads must survive vmap over a head axis."""
+    q, k, v = make_qkv(13, 64, 16)
+    qh, kh, vh = (jnp.stack([x, 0.5 * x]) for x in (q, k, v))
+    a = b = jnp.float32(0.8)
+
+    def total(att_fn, qh):
+        return jnp.sum(jnp.sin(jax.vmap(lambda q, k, v: att_fn(q, k, v))(qh, kh, vh)))
+
+    gp = jax.grad(lambda qh: total(lambda q, k, v: ad.lln_attention(q, k, v, a, b), qh))(qh)
+    gr = jax.grad(lambda qh: total(lambda q, k, v: ref.lln_attention(q, k, v, a, b), qh))(qh)
+    np.testing.assert_allclose(gp, gr, rtol=GRAD_RTOL, atol=GRAD_ATOL)

@@ -1,0 +1,143 @@
+"""L2 model: shapes, attention-method dispatch, loss behavior, and the
+probe outputs the Rust analysis layer consumes.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+def tiny_cfg(attn="softmax", **kw):
+    return M.make_config("tiny", attn=attn, num_classes=4, **kw)
+
+
+def make_inputs(cfg, batch=2, n=128, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, n)), jnp.int32)
+    return tokens
+
+
+@pytest.mark.parametrize("method", M.ATTENTION_METHODS)
+def test_forward_shapes_all_methods(method):
+    cfg = tiny_cfg(method)
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+    tokens = make_inputs(cfg)
+    hidden, stats = M.forward(params, tokens, cfg)
+    assert hidden.shape == (2, 128, cfg.d_model)
+    assert len(stats) == cfg.n_layers
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+
+
+@pytest.mark.parametrize("method", ["softmax", "lln", "lln_diag"])
+def test_heads_and_losses(method):
+    cfg = tiny_cfg(method)
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+    tokens = make_inputs(cfg)
+    labels = tokens
+    weights = jnp.ones_like(tokens, jnp.float32)
+    loss, _ = M.mlm_loss(params, tokens, labels, weights, cfg)
+    assert float(loss) > 0 and np.isfinite(float(loss))
+    # Random init ~ uniform predictions: loss near log(V).
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+    closs, _ = M.cls_loss(params, tokens, jnp.zeros((2,), jnp.int32), cfg)
+    assert abs(float(closs) - np.log(cfg.num_classes)) < 0.5
+
+
+def test_patch_mode_forward():
+    cfg = tiny_cfg("lln_diag", max_len=64, diag_block=16)
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, patch_dim=48).items()}
+    patches = jnp.asarray(np.random.default_rng(0).normal(size=(2, 64, 48)), jnp.float32)
+    hidden, _ = M.forward_patches(params, patches, cfg)
+    assert hidden.shape == (2, 64, cfg.d_model)
+
+
+def test_lln_stats_emitted():
+    cfg = tiny_cfg("lln")
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+    _, stats = M.forward(params, make_inputs(cfg), cfg)
+    tensor = M.stack_layer_stats(stats, cfg)
+    assert tensor.shape == (cfg.n_layers, 4)
+    alphas = np.asarray(tensor[:, 0])
+    assert np.all(alphas > 0), "moment matching must produce positive alpha"
+
+
+def test_fixed_alpha_beta_override():
+    cfg = tiny_cfg("lln", fixed_alpha=2.0, fixed_beta=2.0)
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+    _, stats = M.forward(params, make_inputs(cfg), cfg)
+    tensor = M.stack_layer_stats(stats, cfg)
+    np.testing.assert_allclose(np.asarray(tensor[:, :2]), 2.0)
+
+
+def test_param_order_is_deterministic():
+    cfg = tiny_cfg()
+    p1 = M.init_params(cfg, seed=0)
+    p2 = M.init_params(cfg, seed=1)
+    assert M.param_order(p1) == M.param_order(p2)
+    assert M.param_order(p1) == sorted(p1.keys())
+
+
+def test_probe_outputs_stochastic_matrices():
+    for method in ("softmax", "lln"):
+        cfg = tiny_cfg(method)
+        params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+        mats, stats = M.attention_probe(params, make_inputs(cfg), cfg)
+        assert mats.shape == (cfg.n_layers, 128, 128)
+        rows = np.asarray(jnp.sum(mats, axis=-1))
+        np.testing.assert_allclose(rows, 1.0, atol=2e-3)
+        assert stats.shape == (cfg.n_layers, 4)
+
+
+def test_train_step_decreases_loss():
+    cfg = tiny_cfg("lln_diag")
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+    m, v = T.init_opt_state(params)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 128)), jnp.int32)
+    labels = tokens
+    weights = jnp.ones((4, 128), jnp.float32)
+    step = jax.jit(
+        lambda p, m, v, t: T.train_step_mlm(
+            p, m, v, t, jnp.float32(5e-3), tokens, labels, weights, cfg
+        )
+    )
+    losses = []
+    t = 1.0
+    for _ in range(8):
+        params, m, v, loss, gnorm, stats = step(params, m, v, jnp.float32(t))
+        losses.append(float(loss))
+        assert np.isfinite(float(gnorm))
+        t += 1.0
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_train_step_cls_runs_all_exported_methods():
+    for method in ("softmax", "lln", "elu", "performer", "nystrom"):
+        cfg = tiny_cfg(method)
+        params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+        m, v = T.init_opt_state(params)
+        tokens = make_inputs(cfg)
+        labels = jnp.asarray([0, 1], jnp.int32)
+        out = T.train_step_cls(params, m, v, jnp.float32(1), jnp.float32(1e-3), tokens, labels, cfg)
+        assert np.isfinite(float(out[3]))
+
+
+def test_grad_norm_grows_with_alpha():
+    """Fig 10b mechanism: larger fixed alpha/beta => larger gradients."""
+    norms = {}
+    for alpha in (1.0, 4.0):
+        cfg = tiny_cfg("lln", fixed_alpha=alpha, fixed_beta=alpha)
+        params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+        m, v = T.init_opt_state(params)
+        rng = np.random.default_rng(1)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 128)), jnp.int32)
+        out = T.train_step_mlm(
+            params, m, v, jnp.float32(1), jnp.float32(1e-3),
+            tokens, tokens, jnp.ones((2, 128), jnp.float32), cfg,
+        )
+        norms[alpha] = float(out[4])
+    assert norms[4.0] > norms[1.0]

@@ -1,0 +1,103 @@
+//! Attention-concentration sweeps (paper fig. 2): entropy and spectral
+//! gap of each kernel's stochastic matrix as functions of the input
+//! spread (equivalently the inverse temperature).
+
+use crate::attention::{attention_matrix, MomentMatcher, Method};
+use crate::linalg::spectral_gap;
+use crate::rng::Pcg64;
+use crate::stats::attention_entropy;
+use crate::tensor::Mat;
+
+/// One point on a fig. 2 curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ConcentrationPoint {
+    /// Input std of q and k for this probe.
+    pub sigma: f64,
+    /// Implicit SA temperature 1/sigma^2 at this probe (sigma_q = sigma_k).
+    pub temperature: f64,
+    pub entropy: f64,
+    pub spectral_gap: f64,
+}
+
+/// Sweep entropy + spectral gap for one method across input spreads.
+///
+/// `matched`: apply moment matching when the method is LLN (fig. 2
+/// contrasts matched vs. unmatched).
+pub fn concentration_profile(
+    method: Method,
+    sigmas: &[f64],
+    n: usize,
+    d: usize,
+    matched: Option<&MomentMatcher>,
+    seed: u64,
+) -> Vec<ConcentrationPoint> {
+    let mut out = Vec::with_capacity(sigmas.len());
+    for (i, &sigma) in sigmas.iter().enumerate() {
+        let mut rng = Pcg64::new(seed, i as u64);
+        let q = Mat::gaussian(n, d, sigma as f32, &mut rng);
+        let k = Mat::gaussian(n, d, sigma as f32, &mut rng);
+        let (alpha, beta) = match (method, matched) {
+            (Method::Lln | Method::LlnDiag, Some(mm)) => mm.alpha_beta(sigma, sigma),
+            _ => (1.0, 1.0),
+        };
+        let p = attention_matrix(method, &q, &k, alpha, beta);
+        out.push(ConcentrationPoint {
+            sigma,
+            temperature: 1.0 / (sigma * sigma).max(1e-12),
+            entropy: attention_entropy(&p),
+            spectral_gap: spectral_gap(&p, 400, 1e-8).gap,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIGMAS: [f64; 4] = [0.4, 0.8, 1.2, 1.6];
+
+    #[test]
+    fn softmax_entropy_decreases_with_sigma() {
+        // Thm 3.2: entropy increases with temperature; temperature falls
+        // as input spread grows, so entropy must fall along this sweep.
+        let pts = concentration_profile(Method::Softmax, &SIGMAS, 96, 64, None, 1);
+        for w in pts.windows(2) {
+            assert!(w[1].entropy < w[0].entropy, "{pts:?}");
+        }
+    }
+
+    #[test]
+    fn matched_lln_tracks_softmax_entropy() {
+        let mm = MomentMatcher::from_artifacts(std::path::Path::new("artifacts"))
+            .unwrap_or(MomentMatcher { a: 0.21, b: -1.08 });
+        let sm = concentration_profile(Method::Softmax, &SIGMAS, 96, 64, None, 2);
+        let lln = concentration_profile(Method::Lln, &SIGMAS, 96, 64, Some(&mm), 2);
+        let un = concentration_profile(Method::Lln, &SIGMAS, 96, 64, None, 2);
+        // Mean absolute entropy deviation: matched must beat unmatched.
+        let dev = |a: &[ConcentrationPoint], b: &[ConcentrationPoint]| {
+            a.iter().zip(b).map(|(x, y)| (x.entropy - y.entropy).abs()).sum::<f64>() / a.len() as f64
+        };
+        assert!(dev(&lln, &sm) < dev(&un, &sm), "matched {} unmatched {}", dev(&lln, &sm), dev(&un, &sm));
+    }
+
+    #[test]
+    fn relu_kernel_insensitive_to_temperature() {
+        // Fig 2's point: scale-invariant kernels barely react to sigma.
+        let pts = concentration_profile(Method::Relu, &SIGMAS, 96, 64, None, 3);
+        let spread = pts.iter().map(|p| p.entropy).fold(f64::MIN, f64::max)
+            - pts.iter().map(|p| p.entropy).fold(f64::MAX, f64::min);
+        let sm = concentration_profile(Method::Softmax, &SIGMAS, 96, 64, None, 3);
+        let sm_spread = sm.iter().map(|p| p.entropy).fold(f64::MIN, f64::max)
+            - sm.iter().map(|p| p.entropy).fold(f64::MAX, f64::min);
+        assert!(spread < 0.4 * sm_spread, "relu {spread} vs sm {sm_spread}");
+    }
+
+    #[test]
+    fn gap_and_entropy_move_together_for_softmax() {
+        let pts = concentration_profile(Method::Softmax, &SIGMAS, 96, 64, None, 4);
+        for w in pts.windows(2) {
+            assert!(w[1].spectral_gap <= w[0].spectral_gap + 0.05, "{pts:?}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Fenton (1960) log-normal-sum study (paper fig. 6 / Prop 4.1 proof).
+//!
+//! Validates the two regimes the proof leans on:
+//!   moderate sigma^2:  var(log sum) ~ ln[(e^{s2} - 1)/d + 1]   (Fenton)
+//!   broad sigma^2:     var(log sum) grows ~linearly in s2       (Romeo)
+
+use crate::rng::Pcg64;
+use crate::stats;
+
+/// Fenton's moderate-regime prediction for the log-variance of a sum of
+/// `d` iid zero-mean log-normals with log-variance `s2`.
+pub fn fenton_sigma2(s2: f64, d: usize) -> f64 {
+    (((s2.exp() - 1.0) / d as f64) + 1.0).ln()
+}
+
+/// Empirical var(log sum_d exp(N(0, s2))) over `trials` Monte-Carlo draws.
+pub fn lognormal_sum_variance(s2: f64, d: usize, trials: usize, seed: u64) -> f64 {
+    let sigma = s2.sqrt();
+    let mut rng = Pcg64::seed(seed);
+    let mut logs = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let mut sum = 0.0f64;
+        for _ in 0..d {
+            sum += (sigma * rng.gauss()).exp();
+        }
+        logs.push(sum.ln());
+    }
+    let mu = logs.iter().sum::<f64>() / logs.len() as f64;
+    logs.iter().map(|&x| (x - mu) * (x - mu)).sum::<f64>() / logs.len() as f64
+}
+
+/// One row of the fig. 6 output.
+#[derive(Clone, Copy, Debug)]
+pub struct FentonPoint {
+    pub s2: f64,
+    pub measured: f64,
+    pub fenton_theory: f64,
+}
+
+/// Sweep the moderate regime (fig. 6a).
+pub fn moderate_sweep(d: usize, trials: usize, seed: u64) -> Vec<FentonPoint> {
+    [0.2, 0.4, 0.6, 0.8, 1.0, 1.2]
+        .iter()
+        .map(|&s2| FentonPoint {
+            s2,
+            measured: lognormal_sum_variance(s2, d, trials, seed),
+            fenton_theory: fenton_sigma2(s2, d),
+        })
+        .collect()
+}
+
+/// Sweep the broad regime (fig. 6b) — returns (s2, measured) pairs plus
+/// the linear-fit slope/intercept/r^2 over them.
+pub fn broad_sweep(d: usize, trials: usize, seed: u64) -> (Vec<(f64, f64)>, (f64, f64, f64)) {
+    let s2s: Vec<f64> = (0..9).map(|i| 4.0 + 2.0 * i as f64).collect();
+    let pts: Vec<(f64, f64)> = s2s
+        .iter()
+        .map(|&s2| (s2, lognormal_sum_variance(s2, d, trials, seed)))
+        .collect();
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let fit = stats::linear_fit(&xs, &ys);
+    (pts, fit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fenton_theory_matches_measurement_in_moderate_regime() {
+        // Paper fig. 6a: dashed theory lines align with empirical points.
+        for p in moderate_sweep(64, 4000, 1) {
+            let rel = (p.measured - p.fenton_theory).abs() / p.fenton_theory.max(1e-9);
+            assert!(rel < 0.25, "{p:?} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn broad_regime_grows_linearly() {
+        // Paper fig. 6b: linear growth with good r^2.
+        let (_pts, (slope, _b, r2)) = broad_sweep(64, 3000, 2);
+        assert!(slope > 0.0);
+        assert!(r2 > 0.98, "r2={r2}");
+    }
+
+    #[test]
+    fn sum_variance_shrinks_with_more_terms() {
+        // Averaging effect: more log-normal terms concentrate the sum.
+        let few = lognormal_sum_variance(1.0, 8, 4000, 3);
+        let many = lognormal_sum_variance(1.0, 256, 4000, 3);
+        assert!(many < few, "few={few} many={many}");
+    }
+}

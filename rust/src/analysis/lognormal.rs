@@ -1,0 +1,126 @@
+//! Log-normality of the attention matrix (paper Prop 3.1 / figs. 5, 7).
+
+use crate::attention::kernels::{lln_attention_matrix, softmax_attention_matrix};
+use crate::rng::Pcg64;
+use crate::stats::{self, Histogram};
+use crate::tensor::Mat;
+
+/// Comparison of measured vs theoretical log-normal parameters of P^(SM).
+#[derive(Clone, Copy, Debug)]
+pub struct LogNormalCheck {
+    pub sigma_q: f64,
+    pub sigma_k: f64,
+    /// Theoretical sigma^2_sm = sigma_q^2 sigma_k^2 (+ C_cross ~ 0 here).
+    pub theory_sigma2: f64,
+    pub measured_sigma2: f64,
+    /// Theoretical mu = -ln N - sigma^2/2 (Prop 3.1).
+    pub theory_mu: f64,
+    pub measured_mu: f64,
+}
+
+/// Fig 5a: measure SA's log-mean/log-variance against Prop 3.1 theory.
+pub fn sa_lognormal_check(sigma_q: f64, sigma_k: f64, n: usize, d: usize, seed: u64) -> LogNormalCheck {
+    let mut rng = Pcg64::seed(seed);
+    let q = Mat::gaussian(n, d, sigma_q as f32, &mut rng);
+    let k = Mat::gaussian(n, d, sigma_k as f32, &mut rng);
+    let p = softmax_attention_matrix(&q, &k);
+    let s2 = sigma_q * sigma_q * sigma_k * sigma_k;
+    LogNormalCheck {
+        sigma_q,
+        sigma_k,
+        theory_sigma2: s2,
+        measured_sigma2: stats::log_variance(&p, 1e-30),
+        theory_mu: -(n as f64).ln() - 0.5 * s2,
+        measured_mu: stats::log_mean(&p, 1e-30),
+    }
+}
+
+/// Fig 7: log-domain histograms of SA vs LLN (matched and unmatched),
+/// plus KS distances between the log-entry samples.
+pub struct HistogramStudy {
+    pub sa: Histogram,
+    pub lln_matched: Histogram,
+    pub lln_unmatched: Histogram,
+    pub ks_matched: f64,
+    pub ks_unmatched: f64,
+}
+
+pub fn histogram_study(
+    sigma: f64,
+    n: usize,
+    d: usize,
+    bins: usize,
+    mm: &crate::attention::MomentMatcher,
+    seed: u64,
+) -> HistogramStudy {
+    let mut rng = Pcg64::seed(seed);
+    let q = Mat::gaussian(n, d, sigma as f32, &mut rng);
+    let k = Mat::gaussian(n, d, sigma as f32, &mut rng);
+    let p_sa = softmax_attention_matrix(&q, &k);
+    let (alpha, beta) = mm.alpha_beta(sigma, sigma);
+    let p_m = lln_attention_matrix(&q, &k, alpha, beta);
+    let p_u = lln_attention_matrix(&q, &k, 1.0, 1.0);
+
+    let logs = |p: &Mat| -> Vec<f32> {
+        p.data().iter().map(|&x| (x.max(1e-30)).ln()).collect()
+    };
+    let (la, lm, lu) = (logs(&p_sa), logs(&p_m), logs(&p_u));
+    let lo = la.iter().chain(&lm).chain(&lu).cloned().fold(f32::MAX, f32::min) as f64;
+    let hi = la.iter().chain(&lm).chain(&lu).cloned().fold(f32::MIN, f32::max) as f64 + 1e-6;
+
+    let mk = |xs: &[f32]| {
+        let mut h = Histogram::new(lo, hi, bins);
+        h.add_all(xs.iter().map(|&x| x as f64));
+        h
+    };
+    HistogramStudy {
+        sa: mk(&la),
+        lln_matched: mk(&lm),
+        lln_unmatched: mk(&lu),
+        ks_matched: stats::ks_distance(&la, &lm),
+        ks_unmatched: stats::ks_distance(&la, &lu),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::MomentMatcher;
+
+    #[test]
+    fn prop_3_1_variance_matches() {
+        for (sq, sk) in [(0.8, 0.8), (1.0, 1.2), (1.4, 1.4)] {
+            let c = sa_lognormal_check(sq, sk, 256, 64, 5);
+            let rel = (c.measured_sigma2 - c.theory_sigma2).abs() / c.theory_sigma2;
+            assert!(rel < 0.3, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn prop_3_1_mean_tracks_theory() {
+        let c = sa_lognormal_check(1.0, 1.0, 256, 64, 6);
+        // mu = -ln N - s2/2; allow the Fenton correction slack.
+        assert!((c.measured_mu - c.theory_mu).abs() < 1.0, "{c:?}");
+    }
+
+    #[test]
+    fn matched_histogram_closer_than_unmatched() {
+        let mm = MomentMatcher::from_artifacts(std::path::Path::new("artifacts"))
+            .unwrap_or(MomentMatcher { a: 0.21, b: -1.08 });
+        let study = histogram_study(1.2, 192, 64, 50, &mm, 7);
+        assert!(
+            study.ks_matched < study.ks_unmatched,
+            "matched KS {} vs unmatched {}",
+            study.ks_matched,
+            study.ks_unmatched
+        );
+    }
+
+    #[test]
+    fn histograms_cover_all_entries() {
+        let mm = MomentMatcher { a: 0.21, b: -1.08 };
+        let study = histogram_study(1.0, 96, 32, 40, &mm, 8);
+        assert_eq!(study.sa.total as usize, 96 * 96);
+        assert_eq!(study.lln_matched.total as usize, 96 * 96);
+    }
+}

@@ -1,0 +1,122 @@
+//! The paper's §3 analysis instruments, composed into reusable probes:
+//! temperature, attention concentration (entropy + spectral gap),
+//! log-normal distribution checks, and the Fenton-approximation study.
+
+pub mod concentration;
+pub mod fenton;
+pub mod lognormal;
+
+pub use concentration::{concentration_profile, ConcentrationPoint};
+pub use fenton::{fenton_sigma2, lognormal_sum_variance, FentonPoint};
+pub use lognormal::{sa_lognormal_check, LogNormalCheck};
+
+use crate::tensor::{vec_ops, Mat};
+
+/// Implicit softmax temperature (paper eq. 5):
+/// tau = 1 / sqrt(sigma_q^2 sigma_k^2 + C_cross).
+/// C_cross is estimated per Goodman (1960) from elementwise samples.
+pub fn temperature(q: &Mat, k: &Mat) -> f64 {
+    let sq2 = vec_ops::variance(q.data());
+    let sk2 = vec_ops::variance(k.data());
+    let c_cross = cross_covariance(q, k);
+    1.0 / (sq2 * sk2 + c_cross).max(1e-12).sqrt()
+}
+
+/// Cov(q^2, k^2) - Cov(q, k)^2 over aligned elements (zero for
+/// independent inputs; nonzero as training correlates Q and K).
+pub fn cross_covariance(q: &Mat, k: &Mat) -> f64 {
+    let n = q.data().len().min(k.data().len());
+    let qd = &q.data()[..n];
+    let kd = &k.data()[..n];
+    let mq = vec_ops::mean(qd);
+    let mk = vec_ops::mean(kd);
+    let mq2 = qd.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / n as f64;
+    let mk2 = kd.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / n as f64;
+    let mut cov_qk = 0.0f64;
+    let mut cov_q2k2 = 0.0f64;
+    for i in 0..n {
+        let (qi, ki) = (qd[i] as f64, kd[i] as f64);
+        cov_qk += (qi - mq) * (ki - mk);
+        cov_q2k2 += (qi * qi - mq2) * (ki * ki - mk2);
+    }
+    cov_qk /= n as f64;
+    cov_q2k2 /= n as f64;
+    cov_q2k2 - cov_qk * cov_qk
+}
+
+/// Per-layer training-dynamics record (fig. 1 rows).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerDynamics {
+    pub layer: usize,
+    pub temperature: f64,
+    pub entropy: f64,
+    pub spectral_gap: f64,
+}
+
+/// Analyze a stack of per-layer stochastic matrices (from the probe
+/// artifact) given the matching sigma stats.
+pub fn layer_dynamics(matrices: &[Mat], sigmas: &[(f64, f64)]) -> Vec<LayerDynamics> {
+    matrices
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let (sq, sk) = sigmas.get(i).copied().unwrap_or((1.0, 1.0));
+            LayerDynamics {
+                layer: i,
+                temperature: 1.0 / (sq * sq * sk * sk).max(1e-12).sqrt(),
+                entropy: crate::stats::attention_entropy(p),
+                spectral_gap: crate::linalg::spectral_gap(p, 600, 1e-9).gap,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn temperature_decreases_with_input_scale() {
+        let mut rng = Pcg64::seed(1);
+        let q1 = Mat::gaussian(64, 32, 0.5, &mut rng);
+        let k1 = Mat::gaussian(64, 32, 0.5, &mut rng);
+        let q2 = Mat::gaussian(64, 32, 2.0, &mut rng);
+        let k2 = Mat::gaussian(64, 32, 2.0, &mut rng);
+        assert!(temperature(&q1, &k1) > temperature(&q2, &k2));
+    }
+
+    #[test]
+    fn cross_covariance_near_zero_for_independent() {
+        let mut rng = Pcg64::seed(2);
+        let q = Mat::gaussian(128, 64, 1.0, &mut rng);
+        let k = Mat::gaussian(128, 64, 1.0, &mut rng);
+        assert!(cross_covariance(&q, &k).abs() < 0.15);
+    }
+
+    #[test]
+    fn cross_covariance_positive_for_correlated() {
+        let mut rng = Pcg64::seed(3);
+        let q = Mat::gaussian(128, 64, 1.0, &mut rng);
+        let k = q.map(|x| x * 0.9); // strongly correlated
+        assert!(cross_covariance(&q, &k) > 0.1);
+    }
+
+    #[test]
+    fn layer_dynamics_shapes() {
+        let mut rng = Pcg64::seed(4);
+        let mats: Vec<Mat> = (0..3)
+            .map(|_| {
+                let mut p = Mat::gaussian(32, 32, 1.0, &mut rng);
+                p.softmax_rows();
+                p
+            })
+            .collect();
+        let dyns = layer_dynamics(&mats, &[(1.0, 1.0), (1.2, 1.0), (0.8, 0.9)]);
+        assert_eq!(dyns.len(), 3);
+        for d in dyns {
+            assert!(d.entropy > 0.0 && d.entropy <= 5.0 + 1e-9);
+            assert!(d.spectral_gap >= 0.0 && d.spectral_gap <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! The attention kernels themselves: outputs (O(N) formulations where the
+//! method allows) and explicit stochastic matrices (for analysis).
+//!
+//! Numerics mirror python/compile/kernels/ref.py exactly: same clamping,
+//! same eps, same landmark/feature constructions — integration tests
+//! assert closeness against the PJRT-executed artifacts.
+
+use super::EXP_CLAMP;
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+
+const EPS: f32 = 1e-6;
+
+#[inline]
+fn clamped_exp(x: f32) -> f32 {
+    x.clamp(-EXP_CLAMP, EXP_CLAMP).exp()
+}
+
+// ---------------------------------------------------------------------------
+// Softmax attention (paper eq. 1)
+// ---------------------------------------------------------------------------
+
+/// Full softmax attention output; O(N^2) time and memory.
+pub fn softmax_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    softmax_attention_matrix(q, k).matmul(v)
+}
+
+/// The stochastic matrix P^(SM) (paper eq. 6).
+pub fn softmax_attention_matrix(q: &Mat, k: &Mat) -> Mat {
+    let d = q.cols();
+    let mut scores = q.matmul_t(k);
+    let scale = 1.0 / (d as f32).sqrt();
+    scores.map_inplace(|x| x * scale);
+    scores.softmax_rows();
+    scores
+}
+
+// ---------------------------------------------------------------------------
+// Generic linearized attention (paper eq. 4)
+// ---------------------------------------------------------------------------
+
+/// O(N m d) linear attention from explicit feature maps.
+pub fn linear_attention(phi_q: &Mat, phi_k: &Mat, v: &Mat) -> Mat {
+    let kv = phi_k.transpose().matmul(v); // (m, dv)
+    let z = phi_k.col_sums(); // (m,)
+    let num = phi_q.matmul(&kv); // (n, dv)
+    let den = phi_q.matvec(&z); // (n,)
+    let mut out = num;
+    for i in 0..out.rows() {
+        let inv = 1.0 / (den[i] + EPS);
+        for x in out.row_mut(i) {
+            *x *= inv;
+        }
+    }
+    out
+}
+
+/// Explicit N x N stochastic matrix of a linearized attention.
+pub fn linear_attention_matrix(phi_q: &Mat, phi_k: &Mat) -> Mat {
+    let mut p = phi_q.matmul_t(phi_k);
+    p.normalize_rows(EPS);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// LLN attention (paper eq. 8-9)
+// ---------------------------------------------------------------------------
+
+pub fn lln_features(x: &Mat, scale: f32) -> Mat {
+    x.map(|v| clamped_exp(scale * v))
+}
+
+pub fn lln_attention(q: &Mat, k: &Mat, v: &Mat, alpha: f32, beta: f32) -> Mat {
+    linear_attention(&lln_features(q, alpha), &lln_features(k, beta), v)
+}
+
+pub fn lln_attention_matrix(q: &Mat, k: &Mat, alpha: f32, beta: f32) -> Mat {
+    linear_attention_matrix(&lln_features(q, alpha), &lln_features(k, beta))
+}
+
+// ---------------------------------------------------------------------------
+// ELU / ReLU / quadratic kernels
+// ---------------------------------------------------------------------------
+
+pub fn elu_features(x: &Mat) -> Mat {
+    x.map(|v| if v > 0.0 { v + 1.0 } else { v.exp() })
+}
+
+pub fn elu_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    linear_attention(&elu_features(q), &elu_features(k), v)
+}
+
+pub fn elu_attention_matrix(q: &Mat, k: &Mat) -> Mat {
+    linear_attention_matrix(&elu_features(q), &elu_features(k))
+}
+
+pub fn relu_attention_matrix(q: &Mat, k: &Mat) -> Mat {
+    let f = |m: &Mat| m.map(|v| v.max(0.0));
+    linear_attention_matrix(&f(q), &f(k))
+}
+
+/// kappa(q, k) = (q . k)^2 — the fig. 2 "quadratic kernel" comparator.
+pub fn quadratic_attention_matrix(q: &Mat, k: &Mat) -> Mat {
+    let mut p = q.matmul_t(k);
+    p.map_inplace(|x| x * x);
+    p.normalize_rows(EPS);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Performer (FAVOR+ positive features)
+// ---------------------------------------------------------------------------
+
+/// Deterministic Gaussian projection for Performer features.
+pub fn performer_projection(d: usize, m: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed(seed);
+    Mat::gaussian(d, m, 1.0, &mut rng)
+}
+
+pub fn performer_features(x: &Mat, proj: &Mat) -> Mat {
+    let d = x.cols();
+    let m = proj.cols();
+    let scale = 1.0 / (m as f32).sqrt();
+    let dscale = 1.0 / (d as f32).powf(0.25);
+    let xs = x.scale(dscale);
+    let u = xs.matmul(proj); // (n, m)
+    let mut out = Mat::zeros(x.rows(), m);
+    for i in 0..x.rows() {
+        let sq: f32 = xs.row(i).iter().map(|&a| a * a).sum::<f32>() * 0.5;
+        for j in 0..m {
+            out.set(i, j, scale * clamped_exp(u.get(i, j) - sq));
+        }
+    }
+    out
+}
+
+pub fn performer_attention(q: &Mat, k: &Mat, v: &Mat, proj: &Mat) -> Mat {
+    linear_attention(&performer_features(q, proj), &performer_features(k, proj), v)
+}
+
+pub fn performer_attention_matrix(q: &Mat, k: &Mat, proj: &Mat) -> Mat {
+    linear_attention_matrix(&performer_features(q, proj), &performer_features(k, proj))
+}
+
+// ---------------------------------------------------------------------------
+// Nystromformer (segment-mean landmarks + Newton-Schulz pinv)
+// ---------------------------------------------------------------------------
+
+fn segment_means(x: &Mat, m: usize) -> Mat {
+    let n = x.rows();
+    let seg = n / m;
+    let mut out = Mat::zeros(m, x.cols());
+    for s in 0..m {
+        for i in s * seg..(s + 1) * seg {
+            for (o, &val) in out.row_mut(s).iter_mut().zip(x.row(i)) {
+                *o += val;
+            }
+        }
+        let inv = 1.0 / seg as f32;
+        for o in out.row_mut(s) {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+fn softmax_scores(a: &Mat, b: &Mat, scale: f32) -> Mat {
+    let mut s = a.matmul_t(b);
+    s.map_inplace(|x| x * scale);
+    s.softmax_rows();
+    s
+}
+
+/// Newton–Schulz iterative pseudo-inverse (matches ref.py, 12 iters).
+pub fn newton_schulz_pinv(a: &Mat, iters: usize) -> Mat {
+    let n = a.rows();
+    let max_col: f32 = (0..n)
+        .map(|j| (0..n).map(|i| a.get(i, j).abs()).sum::<f32>())
+        .fold(0.0, f32::max);
+    let max_row: f32 = (0..n).map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>()).fold(0.0, f32::max);
+    let mut z = a.transpose().scale(1.0 / (max_col * max_row).max(1e-12));
+    let ident = Mat::eye(n);
+    for _ in 0..iters {
+        let az = a.matmul(&z);
+        // z <- z (13 I - az (15 I - az (7 I - az))) / 4
+        let t1 = ident.scale(7.0).sub(&az);
+        let t2 = ident.scale(15.0).sub(&az.matmul(&t1));
+        let t3 = ident.scale(13.0).sub(&az.matmul(&t2));
+        z = z.matmul(&t3).scale(0.25);
+    }
+    z
+}
+
+pub fn nystrom_attention(q: &Mat, k: &Mat, v: &Mat, landmarks: usize) -> Mat {
+    let n = q.rows();
+    let m = landmarks.min(n);
+    assert!(n % m == 0, "N must divide landmark count");
+    let d = q.cols();
+    let scale = 1.0 / (d as f32).sqrt();
+    let q_l = segment_means(q, m);
+    let k_l = segment_means(k, m);
+    let f = softmax_scores(q, &k_l, scale); // (n, m)
+    let a = softmax_scores(&q_l, &k_l, scale); // (m, m)
+    let b = softmax_scores(&q_l, k, scale); // (m, n)
+    f.matmul(&newton_schulz_pinv(&a, 12).matmul(&b.matmul(v)))
+}
+
+// ---------------------------------------------------------------------------
+// Block-diagonal + LLN+Diag (paper sec. 4.2)
+// ---------------------------------------------------------------------------
+
+pub fn blockdiag_attention(q: &Mat, k: &Mat, v: &Mat, block: usize) -> Mat {
+    let (n, d) = q.shape();
+    assert!(n % block == 0, "N must divide block size");
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(n, v.cols());
+    for b0 in (0..n).step_by(block) {
+        // scores over the diagonal tile only
+        let mut s = Mat::zeros(block, block);
+        for i in 0..block {
+            for j in 0..block {
+                let mut acc = 0.0f32;
+                for t in 0..d {
+                    acc += q.get(b0 + i, t) * k.get(b0 + j, t);
+                }
+                s.set(i, j, acc * scale);
+            }
+        }
+        s.softmax_rows();
+        for i in 0..block {
+            for j in 0..block {
+                let p = s.get(i, j);
+                for t in 0..v.cols() {
+                    let cur = out.get(b0 + i, t);
+                    out.set(b0 + i, t, cur + p * v.get(b0 + j, t));
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn lln_diag_attention(q: &Mat, k: &Mat, v: &Mat, alpha: f32, beta: f32, block: usize) -> Mat {
+    let long = lln_attention(q, k, v, alpha, beta);
+    let short = blockdiag_attention(q, k, v, block);
+    let mut out = long;
+    for (o, s) in out.data_mut().iter_mut().zip(short.data()) {
+        *o = 0.5 * (*o + s);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Linformer (projection baseline)
+// ---------------------------------------------------------------------------
+
+pub fn linformer_attention(q: &Mat, k: &Mat, v: &Mat, e: &Mat, f: &Mat) -> Mat {
+    // e, f: (n, kproj); project keys/values along the sequence axis.
+    let kp = e.transpose().matmul(k); // (kproj, d)
+    let vp = f.transpose().matmul(v); // (kproj, dv)
+    softmax_attention(q, &kp, &vp)
+}
+
+/// Dispatch: stochastic matrix for any method (fig. 2 sweeps).
+pub fn attention_matrix(
+    method: super::Method,
+    q: &Mat,
+    k: &Mat,
+    alpha: f32,
+    beta: f32,
+) -> Mat {
+    use super::Method::*;
+    match method {
+        Softmax => softmax_attention_matrix(q, k),
+        Lln | LlnDiag => lln_attention_matrix(q, k, alpha, beta),
+        Elu => elu_attention_matrix(q, k),
+        Relu => relu_attention_matrix(q, k),
+        Quadratic => quadratic_attention_matrix(q, k),
+        Performer => {
+            let proj = performer_projection(q.cols(), q.cols(), 7);
+            performer_attention_matrix(q, k, &proj)
+        }
+        Nystrom | BlockDiag | Linformer => {
+            panic!("no dense stochastic-matrix form for {method:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::gaussian_qkv;
+    use crate::rng::Pcg64;
+
+    fn probe(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg64::seed(seed);
+        gaussian_qkv(n, d, 1.0, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn softmax_matrix_is_stochastic() {
+        let (q, k, _) = probe(64, 32, 1);
+        assert!(softmax_attention_matrix(&q, &k).is_stochastic(1e-4));
+    }
+
+    #[test]
+    fn lln_matrix_is_stochastic() {
+        let (q, k, _) = probe(64, 32, 2);
+        assert!(lln_attention_matrix(&q, &k, 2.0, 2.0).is_stochastic(1e-4));
+    }
+
+    #[test]
+    fn linear_attention_matches_explicit_matrix_route() {
+        let (q, k, v) = probe(64, 16, 3);
+        let pq = lln_features(&q, 1.5);
+        let pk = lln_features(&k, 1.5);
+        let fast = linear_attention(&pq, &pk, &v);
+        let slow = linear_attention_matrix(&pq, &pk).matmul(&v);
+        assert!(fast.max_abs_diff(&slow) < 1e-3, "{}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn softmax_output_in_value_hull() {
+        let (q, k, v) = probe(48, 16, 4);
+        let out = softmax_attention(&q, &k, &v);
+        let vmax = v.data().iter().cloned().fold(f32::MIN, f32::max);
+        let vmin = v.data().iter().cloned().fold(f32::MAX, f32::min);
+        assert!(out.data().iter().all(|&x| x <= vmax + 1e-4 && x >= vmin - 1e-4));
+    }
+
+    #[test]
+    fn blockdiag_matches_softmax_when_block_is_full() {
+        let (q, k, v) = probe(32, 16, 5);
+        let full = softmax_attention(&q, &k, &v);
+        let blocked = blockdiag_attention(&q, &k, &v, 32);
+        assert!(full.max_abs_diff(&blocked) < 1e-4);
+    }
+
+    #[test]
+    fn blockdiag_blocks_are_independent() {
+        // Perturbing tokens in block 1 must not change block 0's output.
+        let (q, k, v) = probe(64, 16, 6);
+        let base = blockdiag_attention(&q, &k, &v, 32);
+        let mut k2 = k.clone();
+        for j in 32..64 {
+            for t in 0..16 {
+                k2.set(j, t, 9.9);
+            }
+        }
+        let pert = blockdiag_attention(&q, &k2, &v, 32);
+        for i in 0..32 {
+            for t in 0..16 {
+                assert!((base.get(i, t) - pert.get(i, t)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn newton_schulz_inverts_well_conditioned() {
+        let mut rng = Pcg64::seed(7);
+        // Diagonally-dominant stochastic-ish matrix: well-conditioned.
+        let mut a = Mat::gaussian(16, 16, 0.05, &mut rng);
+        for i in 0..16 {
+            let v = a.get(i, i);
+            a.set(i, i, v + 1.0);
+        }
+        let inv = newton_schulz_pinv(&a, 18);
+        let prod = a.matmul(&inv);
+        let err = prod.max_abs_diff(&Mat::eye(16));
+        assert!(err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn nystrom_close_to_softmax_on_smooth_inputs() {
+        // With low-rank-ish structure, Nystrom approximates SA decently.
+        let mut rng = Pcg64::seed(8);
+        let (q, k, v) = gaussian_qkv(64, 16, 0.3, 0.3, &mut rng);
+        let exact = softmax_attention(&q, &k, &v);
+        let approx = nystrom_attention(&q, &k, &v, 16);
+        let denom = exact.data().iter().map(|x| x.abs()).fold(0.0, f32::max);
+        assert!(exact.max_abs_diff(&approx) / denom < 0.35);
+    }
+
+    #[test]
+    fn performer_approximates_softmax_rowdist() {
+        // Performer's matrix should correlate with SA's on mild inputs.
+        let mut rng = Pcg64::seed(9);
+        let (q, k, _) = gaussian_qkv(48, 32, 0.5, 0.5, &mut rng);
+        let proj = performer_projection(32, 128, 11);
+        let pf = performer_attention_matrix(&q, &k, &proj);
+        assert!(pf.is_stochastic(1e-3));
+    }
+
+    #[test]
+    fn lln_diag_is_average_of_parts() {
+        let (q, k, v) = probe(64, 16, 10);
+        let combo = lln_diag_attention(&q, &k, &v, 2.0, 2.0, 32);
+        let a = lln_attention(&q, &k, &v, 2.0, 2.0);
+        let b = blockdiag_attention(&q, &k, &v, 32);
+        for i in 0..combo.data().len() {
+            let want = 0.5 * (a.data()[i] + b.data()[i]);
+            assert!((combo.data()[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn linformer_reduces_context_length() {
+        let (q, k, v) = probe(64, 16, 11);
+        let mut rng = Pcg64::seed(12);
+        let e = Mat::gaussian(64, 8, 0.1, &mut rng);
+        let f = Mat::gaussian(64, 8, 0.1, &mut rng);
+        let out = linformer_attention(&q, &k, &v, &e, &f);
+        assert_eq!(out.shape(), (64, 16));
+        assert!(out.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn clamped_exp_is_finite_at_extremes() {
+        assert!(clamped_exp(1e6).is_finite());
+        assert!(clamped_exp(-1e6) > 0.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Native (pure-Rust) implementations of every attention mechanism the
+//! paper compares — mirrors `python/compile/kernels/ref.py` numerically.
+//!
+//! These power the statistical figures (entropy / spectral gap /
+//! histograms run over thousands of sampled matrices — far cheaper here
+//! than through PJRT), serve as CPU baselines, and cross-check the AOT
+//! kernels in integration tests.
+
+pub mod kernels;
+pub mod moment_matching;
+
+pub use kernels::*;
+pub use moment_matching::MomentMatcher;
+
+use crate::tensor::Mat;
+
+/// Matches ref.py's EXP_CLAMP: keeps exp() finite in f32.
+pub const EXP_CLAMP: f32 = 30.0;
+
+/// Every attention method in the repo (paper Table 1/2 comparisons).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Softmax,
+    Lln,
+    LlnDiag,
+    Elu,
+    Relu,
+    Quadratic,
+    Performer,
+    Nystrom,
+    BlockDiag,
+    Linformer,
+}
+
+impl Method {
+    pub const ALL: [Method; 10] = [
+        Method::Softmax,
+        Method::Lln,
+        Method::LlnDiag,
+        Method::Elu,
+        Method::Relu,
+        Method::Quadratic,
+        Method::Performer,
+        Method::Nystrom,
+        Method::BlockDiag,
+        Method::Linformer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Softmax => "softmax",
+            Method::Lln => "lln",
+            Method::LlnDiag => "lln_diag",
+            Method::Elu => "elu",
+            Method::Relu => "relu",
+            Method::Quadratic => "quadratic",
+            Method::Performer => "performer",
+            Method::Nystrom => "nystrom",
+            Method::BlockDiag => "blockdiag",
+            Method::Linformer => "linformer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Memory/compute complexity class in sequence length.
+    pub fn is_linear(&self) -> bool {
+        !matches!(self, Method::Softmax | Method::Quadratic)
+    }
+}
+
+/// Analytic memory model (bytes) for a single attention head's forward
+/// pass — the Table 2 "Memory" column, parameterized like the paper.
+/// `n` sequence length, `d` head dim, f32 everywhere.
+pub fn memory_model_bytes(method: Method, n: usize, d: usize) -> usize {
+    let f = 4; // f32
+    let io = 3 * n * d * f + n * d * f; // q, k, v, out
+    match method {
+        // Full N x N attention matrix is materialized for backward.
+        Method::Softmax | Method::Quadratic => io + n * n * f,
+        // Feature maps + (d x d) accumulator + normalizer.
+        Method::Lln | Method::Elu | Method::Relu => io + 2 * n * d * f + d * d * f + d * f,
+        // LLN + the block-diagonal tile stack (n/b blocks of b x b).
+        Method::LlnDiag => {
+            let b = 64.min(n);
+            io + 2 * n * d * f + d * d * f + d * f + (n / b.max(1)) * b * b * f
+        }
+        Method::BlockDiag => {
+            let b = 64.min(n);
+            io + (n / b.max(1)) * b * b * f
+        }
+        // m features / landmarks / projected length.
+        Method::Performer => io + 2 * n * d * f + d * d * f,
+        Method::Nystrom => {
+            let m = 32.min(n);
+            io + 2 * n * m * f + m * m * f
+        }
+        Method::Linformer => {
+            let k = 64.min(n);
+            io + 2 * k * d * f + n * k * f
+        }
+    }
+}
+
+/// Sample Gaussian q, k (and optionally v) with given stds — the probe
+/// inputs used throughout §3/§4 analysis.
+pub fn gaussian_qkv(
+    n: usize,
+    d: usize,
+    sigma_q: f32,
+    sigma_k: f32,
+    rng: &mut crate::rng::Pcg64,
+) -> (Mat, Mat, Mat) {
+    (
+        Mat::gaussian(n, d, sigma_q, rng),
+        Mat::gaussian(n, d, sigma_k, rng),
+        Mat::gaussian(n, d, 1.0, rng),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_round_trip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn memory_model_quadratic_vs_linear() {
+        let d = 64;
+        // Quadratic methods blow up 16x when N quadruples; linear ~4x.
+        let sm_1k = memory_model_bytes(Method::Softmax, 1024, d) as f64;
+        let sm_4k = memory_model_bytes(Method::Softmax, 4096, d) as f64;
+        assert!(sm_4k / sm_1k > 10.0);
+        let lln_1k = memory_model_bytes(Method::Lln, 1024, d) as f64;
+        let lln_4k = memory_model_bytes(Method::Lln, 4096, d) as f64;
+        assert!(lln_4k / lln_1k < 5.0);
+    }
+
+    #[test]
+    fn linear_classification() {
+        assert!(!Method::Softmax.is_linear());
+        assert!(Method::Lln.is_linear());
+        assert!(Method::LlnDiag.is_linear());
+    }
+}

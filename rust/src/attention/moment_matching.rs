@@ -1,0 +1,140 @@
+//! Rust-native moment matching (paper App. A.7) — mirrors
+//! `python/compile/moment_matching.py`.
+//!
+//! The Python side fits (a, b) once at AOT time and bakes them into the
+//! train-step HLO; this native implementation exists so the analysis
+//! experiments (figs. 2/5/7) can sweep matching live, and so the fit
+//! itself is covered by Rust tests against the same math.
+
+use super::kernels::{lln_attention_matrix, softmax_attention_matrix};
+use crate::rng::Pcg64;
+use crate::stats;
+use crate::tensor::Mat;
+
+/// Fitted broad-regime model sigma^2_lln = a * s~^2 + b, plus derivation
+/// of (alpha, beta) from live input stds (paper eq. 10).
+#[derive(Clone, Copy, Debug)]
+pub struct MomentMatcher {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl MomentMatcher {
+    /// Fit over the broad regime (see python module docstring for why
+    /// the grid starts at s~^2 = 8 for d = 64).
+    pub fn fit(n: usize, d: usize, seeds: &[u64]) -> Self {
+        let grid: Vec<f64> = (0..11).map(|i| 8.0 + 2.0 * i as f64).collect();
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &s2 in &grid {
+            for &seed in seeds {
+                xs.push(s2);
+                ys.push(measure_lln_log_variance(s2, n, d, seed));
+            }
+        }
+        let (a, b, _r2) = stats::linear_fit(&xs, &ys);
+        Self { a, b }
+    }
+
+    /// Load the constants the AOT pipeline fitted (keeps Rust and the
+    /// baked HLO consistent); `artifacts/mm_constants.json`.
+    pub fn from_artifacts(dir: &std::path::Path) -> Option<Self> {
+        let text = std::fs::read_to_string(dir.join("mm_constants.json")).ok()?;
+        let v = crate::util::json::Json::parse(&text).ok()?;
+        Some(Self { a: v.get("a")?.as_f64()?, b: v.get("b")?.as_f64()? })
+    }
+
+    /// Paper eq. 10.
+    pub fn alpha_beta(&self, sigma_q: f64, sigma_k: f64) -> (f32, f32) {
+        let s2_sm = sigma_q * sigma_q * sigma_k * sigma_k;
+        let s2_tilde = ((s2_sm - self.b) / self.a).max(1e-4);
+        let s_tilde = s2_tilde.sqrt();
+        let inv_sqrt2 = std::f64::consts::FRAC_1_SQRT_2;
+        (
+            (s_tilde * inv_sqrt2 / sigma_q.max(1e-6)) as f32,
+            (s_tilde * inv_sqrt2 / sigma_k.max(1e-6)) as f32,
+        )
+    }
+}
+
+/// var(log P_lln) for Gaussian probes at a given s~^2 with alpha=beta=1.
+pub fn measure_lln_log_variance(s2_tilde: f64, n: usize, d: usize, seed: u64) -> f64 {
+    let sigma = (s2_tilde / 2.0).sqrt() as f32;
+    let mut rng = Pcg64::seed(seed);
+    let q = Mat::gaussian(n, d, sigma, &mut rng);
+    let k = Mat::gaussian(n, d, sigma, &mut rng);
+    stats::log_variance(&lln_attention_matrix(&q, &k, 1.0, 1.0), 1e-30)
+}
+
+/// var(log P_sm) for Gaussian probes (theory: sigma_q^2 sigma_k^2).
+pub fn measure_sm_log_variance(sigma_q: f32, sigma_k: f32, n: usize, d: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::seed(seed);
+    let q = Mat::gaussian(n, d, sigma_q, &mut rng);
+    let k = Mat::gaussian(n, d, sigma_k, &mut rng);
+    stats::log_variance(&softmax_attention_matrix(&q, &k), 1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fitted() -> MomentMatcher {
+        // Prefer the AOT constants (fast, consistent with HLO); fall back
+        // to a fresh small fit when artifacts are absent.
+        MomentMatcher::from_artifacts(std::path::Path::new("artifacts"))
+            .unwrap_or_else(|| MomentMatcher::fit(192, 64, &[0, 1]))
+    }
+
+    #[test]
+    fn fit_slope_positive() {
+        let mm = fitted();
+        assert!(mm.a > 0.0, "{mm:?}");
+    }
+
+    #[test]
+    fn sm_log_variance_matches_theory() {
+        let v = measure_sm_log_variance(1.2, 1.2, 384, 64, 3);
+        let theory = 1.2f64.powi(4); // (sigma_q * sigma_k)^2
+        assert!((v - theory).abs() / theory < 0.25, "v={v} theory={theory}");
+    }
+
+    #[test]
+    fn matched_alpha_beta_near_paper_range() {
+        let mm = fitted();
+        let (a, b) = mm.alpha_beta(1.0, 1.0);
+        assert!(a > 1.5 && a < 3.0, "alpha {a}");
+        assert!((a - b).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matching_aligns_log_variance() {
+        let mm = fitted();
+        let (alpha, beta) = mm.alpha_beta(1.2, 1.2);
+        let mut rng = Pcg64::seed(21);
+        let q = Mat::gaussian(256, 64, 1.2, &mut rng);
+        let k = Mat::gaussian(256, 64, 1.2, &mut rng);
+        let v_lln = stats::log_variance(&lln_attention_matrix(&q, &k, alpha, beta), 1e-30);
+        let v_sm = stats::log_variance(&softmax_attention_matrix(&q, &k), 1e-30);
+        let rel = (v_lln - v_sm).abs() / v_sm;
+        assert!(rel < 0.35, "lln={v_lln} sm={v_sm} rel={rel}");
+    }
+
+    #[test]
+    fn unmatched_variance_is_far_too_small() {
+        let mut rng = Pcg64::seed(22);
+        let q = Mat::gaussian(256, 64, 1.2, &mut rng);
+        let k = Mat::gaussian(256, 64, 1.2, &mut rng);
+        let naive = stats::log_variance(&lln_attention_matrix(&q, &k, 1.0, 1.0), 1e-30);
+        let sm = stats::log_variance(&softmax_attention_matrix(&q, &k), 1e-30);
+        assert!(naive < 0.25 * sm, "naive={naive} sm={sm}");
+    }
+
+    #[test]
+    fn alpha_scales_inversely_with_sigma_q() {
+        let mm = fitted();
+        let (a1, _) = mm.alpha_beta(1.0, 1.44);
+        let (a2, _) = mm.alpha_beta(1.2, 1.2);
+        let ratio = a1 as f64 / a2 as f64;
+        assert!((ratio - 1.2).abs() < 1e-3, "{ratio}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro/macro benchmark harness (criterion substitute).
+//!
+//! Warmup, timed iterations with per-iteration samples, mean / p50 / p95
+//! and throughput reporting.  The `benches/*.rs` targets (built with
+//! `harness = false`) compose these into the paper's tables.
+
+use std::time::Instant;
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// Optional work units per iteration (tokens, requests...) for throughput.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn percentile(&self, q: f64) -> f64 {
+        crate::stats::percentile(&self.samples, q)
+    }
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / self.samples.len() as f64).sqrt()
+    }
+    pub fn throughput(&self) -> f64 {
+        self.units_per_iter / self.mean()
+    }
+
+    pub fn report_line(&self) -> String {
+        let m = self.mean();
+        let unit = if m < 1e-3 {
+            format!("{:8.1} us", m * 1e6)
+        } else if m < 1.0 {
+            format!("{:8.2} ms", m * 1e3)
+        } else {
+            format!("{:8.3} s ", m)
+        };
+        let tp = if self.units_per_iter > 0.0 {
+            format!("  {:10.0} units/s", self.throughput())
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<40} {}  p50 {:8.2} ms  p95 {:8.2} ms  (n={}){}",
+            self.name,
+            unit,
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.samples.len(),
+            tp
+        )
+    }
+}
+
+/// Benchmark runner with time-budgeted sampling.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub time_budget_secs: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 2, min_iters: 5, max_iters: 200, time_budget_secs: 3.0, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, max_iters: 30, time_budget_secs: 1.0, results: Vec::new() }
+    }
+
+    /// Time `f`, preventing dead-code elimination via the returned value.
+    pub fn run<T>(&mut self, name: &str, units_per_iter: f64, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let budget_start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && budget_start.elapsed().as_secs_f64() < self.time_budget_secs)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult { name: name.to_string(), samples, units_per_iter });
+        let r = self.results.last().unwrap();
+        println!("{}", r.report_line());
+        r
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper kept local so the
+/// harness compiles on stable if the hint ever changes).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 5, max_iters: 10, time_budget_secs: 0.2, results: vec![] };
+        let r = b.run("noop", 1.0, || 42u64).clone();
+        assert!(r.samples.len() >= 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.percentile(50.0) <= r.percentile(95.0) + 1e-12);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 1, max_iters: 3, time_budget_secs: 100.0, results: vec![] };
+        let r = b.run("capped", 0.0, || ()).clone();
+        assert!(r.samples.len() <= 3);
+    }
+}

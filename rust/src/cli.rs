@@ -1,0 +1,240 @@
+//! Command-line parsing substrate (clap substitute).
+//!
+//! Subcommand + `--flag value` / `--flag=value` / boolean `--flag` model,
+//! with typed accessors, defaults, and generated help text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Declared flag (for help + validation).
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// A parsed invocation: subcommand, flags, and positional args.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError(format!("--{name} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some(""))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str, default: &str) -> Vec<String> {
+        self.get_or(name, default)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+}
+
+/// A subcommand declaration.
+#[derive(Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// Top-level CLI: named subcommands with flag validation + help.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" || argv[0] == "-h" {
+            return Err(CliError(self.help()));
+        }
+        let cmd_name = argv[0].clone();
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError(format!("unknown command {cmd_name:?}\n\n{}", self.help())))?;
+
+        let mut args = Args { command: cmd_name, ..Default::default() };
+        // Apply defaults first.
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                args.flags.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.command_help(cmd)));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = cmd
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name} for {}\n\n{}", cmd.name, self.command_help(cmd))))?;
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if spec.takes_value {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError(format!("--{name} expects a value")))?
+                } else {
+                    String::new()
+                };
+                args.flags.insert(name, val);
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun `{} <command> --help` for command flags.\n", self.bin));
+        s
+    }
+
+    fn command_help(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.bin, cmd.name, cmd.about);
+        for f in &cmd.flags {
+            let d = f.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+}
+
+/// Shorthand for building flag specs.
+pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, help, default, takes_value: true }
+}
+
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, default: None, takes_value: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "lln",
+            about: "test",
+            commands: vec![Command {
+                name: "train",
+                about: "train a model",
+                flags: vec![
+                    flag("steps", "number of steps", Some("100")),
+                    flag("method", "attention method", Some("lln")),
+                    switch("verbose", "chatty"),
+                ],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&sv(&["train"])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get("method"), Some("lln"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = cli().parse(&sv(&["train", "--steps=5", "--method", "softmax"])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 5);
+        assert_eq!(a.get("method"), Some("softmax"));
+    }
+
+    #[test]
+    fn boolean_switch() {
+        let a = cli().parse(&sv(&["train", "--verbose"])).unwrap();
+        assert!(a.get_bool("verbose"));
+        let b = cli().parse(&sv(&["train"])).unwrap();
+        assert!(!b.get_bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cli().parse(&sv(&["train", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(cli().parse(&sv(&["fly"])).is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = cli().parse(&sv(&["train", "--steps", "abc"])).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let mut c = cli();
+        c.commands[0].flags.push(flag("methods", "list", Some("a,b")));
+        let a = c.parse(&sv(&["train", "--methods", "x, y ,z"])).unwrap();
+        assert_eq!(a.get_list("methods", ""), vec!["x", "y", "z"]);
+    }
+}

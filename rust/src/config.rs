@@ -1,0 +1,343 @@
+//! Configuration system: a TOML-subset parser + the typed configs for the
+//! launcher (serde+toml substitute).
+//!
+//! Supported TOML subset: `[section]` and `[section.sub]` headers,
+//! `key = value` with string/int/float/bool/array values, `#` comments.
+//! Env-var overrides use `LLN_<SECTION>_<KEY>=value`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+/// A TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` table.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigTable {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl ConfigTable {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError(format!("line {}: malformed section header", lineno + 1)));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(ConfigError(format!("line {}: empty section name", lineno + 1)));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            entries.insert(full, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("reading {}: {e}", path.display())))?;
+        let mut t = Self::parse(&text)?;
+        t.apply_env_overrides();
+        Ok(t)
+    }
+
+    /// `LLN_TRAIN_STEPS=500` overrides `train.steps`.
+    pub fn apply_env_overrides(&mut self) {
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("LLN_") {
+                let key = rest.to_lowercase().replacen('_', ".", 1);
+                if self.entries.contains_key(&key) {
+                    if let Ok(val) = parse_value(&v, 0) {
+                        self.entries.insert(key, val);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_i64).map(|x| x as usize).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ConfigError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(ConfigError(format!("line {lineno}: empty value")));
+    }
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare word: accept as string (common for method names).
+    Ok(Value::Str(s.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Typed launcher configs
+// ---------------------------------------------------------------------------
+
+/// Training-run configuration (the `lln train` launcher).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifact: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            artifact: "train_tinymlm_lln_diag".into(),
+            steps: 200,
+            lr: 5e-4,
+            warmup: 20,
+            seed: 0,
+            log_every: 10,
+            eval_every: 50,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_table(t: &ConfigTable) -> Self {
+        let d = Self::default();
+        Self {
+            artifact: t.str_or("train.artifact", &d.artifact),
+            steps: t.usize_or("train.steps", d.steps),
+            lr: t.f64_or("train.lr", d.lr),
+            warmup: t.usize_or("train.warmup", d.warmup),
+            seed: t.usize_or("train.seed", d.seed as usize) as u64,
+            log_every: t.usize_or("train.log_every", d.log_every),
+            eval_every: t.usize_or("train.eval_every", d.eval_every),
+            out_dir: t.str_or("train.out_dir", &d.out_dir),
+        }
+    }
+
+    /// Linear warmup then inverse-sqrt decay (the RoBERTa schedule shape).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.warmup > 0 && step < self.warmup {
+            self.lr * (step + 1) as f64 / self.warmup as f64
+        } else {
+            self.lr * ((self.warmup.max(1) as f64) / (step + 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Serving configuration (the `lln serve` coordinator).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub method: String,
+    pub queue_capacity: usize,
+    pub max_batch: usize,
+    pub batch_timeout_ms: u64,
+    pub workers: usize,
+    pub buckets: Vec<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            method: "lln_diag".into(),
+            queue_capacity: 256,
+            max_batch: 8,
+            batch_timeout_ms: 5,
+            workers: 2,
+            buckets: vec![128, 512],
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_table(t: &ConfigTable) -> Self {
+        let d = Self::default();
+        let buckets = match t.get("serve.buckets") {
+            Some(Value::Array(xs)) => xs.iter().filter_map(|v| v.as_i64()).map(|x| x as usize).collect(),
+            _ => d.buckets.clone(),
+        };
+        Self {
+            method: t.str_or("serve.method", &d.method),
+            queue_capacity: t.usize_or("serve.queue_capacity", d.queue_capacity),
+            max_batch: t.usize_or("serve.max_batch", d.max_batch),
+            batch_timeout_ms: t.usize_or("serve.batch_timeout_ms", d.batch_timeout_ms as usize) as u64,
+            workers: t.usize_or("serve.workers", d.workers),
+            buckets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+[train]
+steps = 500
+lr = 0.0003          # inline comment
+artifact = "train_mlm_lln"
+verbose = true
+
+[serve]
+buckets = [128, 512]
+method = lln_diag
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = ConfigTable::parse(SAMPLE).unwrap();
+        assert_eq!(t.usize_or("train.steps", 0), 500);
+        assert!((t.f64_or("train.lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert_eq!(t.str_or("train.artifact", ""), "train_mlm_lln");
+        assert!(t.bool_or("train.verbose", false));
+        assert_eq!(t.str_or("serve.method", ""), "lln_diag");
+        match t.get("serve.buckets").unwrap() {
+            Value::Array(xs) => assert_eq!(xs.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_configs_from_table() {
+        let t = ConfigTable::parse(SAMPLE).unwrap();
+        let tc = TrainConfig::from_table(&t);
+        assert_eq!(tc.steps, 500);
+        let sc = ServeConfig::from_table(&t);
+        assert_eq!(sc.buckets, vec![128, 512]);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let tc = TrainConfig { warmup: 10, lr: 1.0, ..Default::default() };
+        assert!(tc.lr_at(0) < tc.lr_at(9));
+        assert!((tc.lr_at(9) - 1.0).abs() < 1e-9);
+        assert!(tc.lr_at(40) < tc.lr_at(10));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(ConfigTable::parse("[unclosed").is_err());
+        assert!(ConfigTable::parse("keywithoutvalue").is_err());
+        assert!(ConfigTable::parse("[s]\n= 3").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = ConfigTable::parse("[a]\nx = \"v#1\"").unwrap();
+        assert_eq!(t.str_or("a.x", ""), "v#1");
+    }
+}

@@ -1,0 +1,90 @@
+//! Pure batch-planning logic — separated from the threaded server so the
+//! coordinator's core invariants are property-testable without PJRT.
+
+/// A planned batch over request indices (into the arrival order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Indices of requests in this batch, in arrival order.
+    pub members: Vec<usize>,
+    /// Executable batch capacity chosen (1 or max_batch today).
+    pub capacity: usize,
+}
+
+/// Plan batches over a FIFO queue snapshot.
+///
+/// Invariants (property-tested below):
+///   * every request appears in exactly one batch;
+///   * arrival order is preserved within and across batches;
+///   * no batch exceeds `max_batch`;
+///   * capacity is the smallest available executable size >= |members|
+///     (available sizes: 1 and `max_batch`).
+pub fn plan_batches(n_requests: usize, max_batch: usize) -> Vec<BatchPlan> {
+    assert!(max_batch >= 1);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n_requests {
+        let take = (n_requests - i).min(max_batch);
+        let capacity = if take == 1 { 1 } else { max_batch };
+        out.push(BatchPlan { members: (i..i + take).collect(), capacity });
+        i += take;
+    }
+    out
+}
+
+/// Decide whether the batcher should fire now or keep waiting.
+///
+/// Fire when the queue can fill a batch, or when the oldest waiter has
+/// exceeded the timeout (latency bound), or on shutdown drain.
+pub fn should_fire(queued: usize, max_batch: usize, oldest_wait_ms: f64, timeout_ms: f64, draining: bool) -> bool {
+    if queued == 0 {
+        return false;
+    }
+    queued >= max_batch || oldest_wait_ms >= timeout_ms || draining
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, prop_assert};
+
+    #[test]
+    fn plan_batches_invariants() {
+        check(256, |g| {
+            let n = g.usize_in(0, 100);
+            let max_batch = g.usize_in(1, 16);
+            let plans = plan_batches(n, max_batch);
+            // coverage: exactly once, in order
+            let flat: Vec<usize> = plans.iter().flat_map(|p| p.members.clone()).collect();
+            prop_assert(flat == (0..n).collect::<Vec<_>>(), format!("coverage broken: {flat:?}"))?;
+            for p in &plans {
+                prop_assert(!p.members.is_empty(), "empty batch")?;
+                prop_assert(p.members.len() <= max_batch, "batch exceeds max")?;
+                prop_assert(
+                    p.capacity >= p.members.len(),
+                    format!("capacity {} < members {}", p.capacity, p.members.len()),
+                )?;
+                prop_assert(
+                    p.capacity == 1 || p.capacity == max_batch,
+                    "capacity must be an available executable size",
+                )?;
+                if p.members.len() == 1 {
+                    prop_assert(p.capacity == 1, "single request should ride the b1 executable")?;
+                }
+            }
+            // all but the last batch are full
+            for p in plans.iter().rev().skip(1) {
+                prop_assert(p.members.len() == max_batch, "non-final batch not full")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fire_logic() {
+        assert!(!should_fire(0, 8, 1e9, 5.0, true), "never fire empty");
+        assert!(should_fire(8, 8, 0.0, 5.0, false), "full batch fires");
+        assert!(should_fire(3, 8, 6.0, 5.0, false), "timeout fires");
+        assert!(!should_fire(3, 8, 1.0, 5.0, false), "partial+young waits");
+        assert!(should_fire(1, 8, 0.0, 5.0, true), "drain flushes");
+    }
+}

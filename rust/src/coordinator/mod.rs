@@ -1,0 +1,98 @@
+//! L3 serving coordinator: request router, sequence-length-bucketed
+//! dynamic batcher, and a PJRT worker pool (vLLM-router-shaped, scaled
+//! to the encoder-serving workload this paper implies).
+//!
+//! Dataflow:
+//!   submit() -> admission queue (bounded; Full = backpressure/reject)
+//!     -> router assigns a seq-len bucket (pad-up to {128, 512})
+//!     -> per-bucket batcher drains up to max_batch or waits batch_timeout
+//!     -> worker thread (own PJRT [`Engine`]) executes serve_<m>_b{B}_n{N}
+//!     -> per-request logits returned through its response channel.
+//!
+//! PJRT handles never cross threads (the xla crate types are !Send);
+//! workers own engines, queues move plain vectors.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{plan_batches, BatchPlan};
+pub use server::{Coordinator, ServeStats};
+
+use crate::data::special;
+
+/// A classification request: tokens in, logits out.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued_at: std::time::Instant,
+    pub resp: std::sync::mpsc::Sender<Response>,
+}
+
+/// The reply for one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// Wall time from admission to completion.
+    pub latency_ms: f64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Pick the smallest bucket that fits `len`; None if it exceeds all.
+pub fn pick_bucket(buckets: &[usize], len: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= len).min()
+}
+
+/// Pad a token sequence to the bucket length with PAD.
+pub fn pad_to_bucket(tokens: &[i32], bucket: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(bucket);
+    out.extend_from_slice(&tokens[..tokens.len().min(bucket)]);
+    while out.len() < bucket {
+        out.push(special::PAD);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [128, 512];
+        assert_eq!(pick_bucket(&buckets, 1), Some(128));
+        assert_eq!(pick_bucket(&buckets, 128), Some(128));
+        assert_eq!(pick_bucket(&buckets, 129), Some(512));
+        assert_eq!(pick_bucket(&buckets, 512), Some(512));
+        assert_eq!(pick_bucket(&buckets, 513), None);
+    }
+
+    #[test]
+    fn padding() {
+        let p = pad_to_bucket(&[5, 6, 7], 8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..3], &[5, 6, 7]);
+        assert!(p[3..].iter().all(|&t| t == special::PAD));
+    }
+
+    #[test]
+    fn bucket_properties() {
+        crate::testkit::check(128, |g| {
+            let buckets = [64usize, 128, 512];
+            let len = g.usize_in(1, 600);
+            match pick_bucket(&buckets, len) {
+                Some(b) => {
+                    crate::testkit::prop_assert(b >= len, format!("bucket {b} < len {len}"))?;
+                    // minimality: no smaller bucket fits
+                    crate::testkit::prop_assert(
+                        buckets.iter().all(|&x| x >= b || x < len),
+                        "bucket not minimal",
+                    )
+                }
+                None => crate::testkit::prop_assert(len > 512, "refused a fitting length"),
+            }
+        });
+    }
+}

@@ -1,0 +1,335 @@
+//! The threaded serving coordinator.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use super::batcher::{plan_batches, should_fire};
+use super::{pad_to_bucket, pick_bucket, Request, Response};
+use crate::config::ServeConfig;
+use crate::runtime::{Engine, HostTensor, ParamStore};
+use crate::util::pool::{Channel, SendError};
+
+/// Rolling serving metrics (shared across workers).
+#[derive(Default)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub latencies_ms: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ServeStats {
+    pub fn p50_latency(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            0.0
+        } else {
+            crate::stats::percentile(&self.latencies_ms, 50.0)
+        }
+    }
+    pub fn p95_latency(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            0.0
+        } else {
+            crate::stats::percentile(&self.latencies_ms, 95.0)
+        }
+    }
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+}
+
+/// The running coordinator: submit requests, read stats, shut down.
+pub struct Coordinator {
+    cfg: ServeConfig,
+    queues: Vec<(usize, Channel<Request>)>, // (bucket_len, queue)
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+    next_id: AtomicU64,
+    draining: Arc<AtomicBool>,
+    started_at: Instant,
+}
+
+impl Coordinator {
+    /// Spawn one worker per bucket (each owns a PJRT engine and the
+    /// executables + resident params for that bucket).
+    pub fn start(cfg: ServeConfig, artifacts: &std::path::Path) -> Result<Self> {
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let draining = Arc::new(AtomicBool::new(false));
+        let mut queues = Vec::new();
+        let mut workers = Vec::new();
+        for &bucket in &cfg.buckets {
+            let q: Channel<Request> = Channel::bounded(cfg.queue_capacity);
+            queues.push((bucket, q.clone()));
+            let cfgc = cfg.clone();
+            let dir = artifacts.to_path_buf();
+            let statsc = Arc::clone(&stats);
+            let drainc = Arc::clone(&draining);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lln-worker-n{bucket}"))
+                    .spawn(move || {
+                        if let Err(e) = worker_loop(cfgc, dir, bucket, q, statsc, drainc) {
+                            eprintln!("worker n{bucket} died: {e:#}");
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(Self {
+            cfg,
+            queues,
+            workers,
+            stats,
+            next_id: AtomicU64::new(1),
+            draining,
+            started_at: Instant::now(),
+        })
+    }
+
+    /// Submit a request; returns the response receiver.  Errors on
+    /// over-length input or queue-full backpressure.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
+        let bucket = pick_bucket(&self.cfg.buckets, tokens.len())
+            .ok_or_else(|| anyhow!("sequence length {} exceeds all buckets", tokens.len()))?;
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens,
+            enqueued_at: Instant::now(),
+            resp: tx,
+        };
+        let queue = &self.queues.iter().find(|(b, _)| *b == bucket).unwrap().1;
+        match queue.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(SendError::Full(_)) => {
+                self.stats.lock().unwrap().rejected += 1;
+                bail!("backpressure: bucket n{bucket} queue full")
+            }
+            Err(SendError::Closed(_)) => bail!("coordinator shutting down"),
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        let rx = self.submit(tokens)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped response"))
+    }
+
+    pub fn stats(&self) -> Arc<Mutex<ServeStats>> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started_at.elapsed().as_secs_f64()
+    }
+
+    /// Drain queues and join workers.
+    pub fn shutdown(mut self) {
+        self.draining.store(true, Ordering::SeqCst);
+        for (_, q) in &self.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+/// Per-bucket worker: owns an Engine, resident param literals, and both
+/// batch-size executables; loops batching until the queue closes.
+fn worker_loop(
+    cfg: ServeConfig,
+    dir: std::path::PathBuf,
+    bucket: usize,
+    queue: Channel<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+    draining: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut engine = Engine::new(&dir)?;
+    let exe_b1 = format!("serve_{}_b1_n{}", cfg.method, bucket);
+    let exe_bn = format!("serve_{}_b{}_n{}", cfg.method, cfg.max_batch, bucket);
+    engine.warmup(&[&exe_b1, &exe_bn])?;
+
+    // Resident parameters: built once, reused for every call.
+    let model_tag = engine.manifest().artifact(&exe_b1)?.meta.get("model").cloned()
+        .ok_or_else(|| anyhow!("{exe_b1}: missing model meta"))?;
+    let model = engine.manifest().model(&model_tag)?.clone();
+    let params = ParamStore::load_initial(&dir, &model)?;
+    let param_lits: Vec<Literal> = params.to_literals()?;
+    let num_classes: usize = {
+        let spec = engine.manifest().artifact(&exe_b1)?;
+        *spec.outputs[0].shape.last().unwrap_or(&4)
+    };
+
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // Top up the pending set.
+        let drain = draining.load(Ordering::SeqCst);
+        if pending.len() < cfg.max_batch {
+            match queue.recv_timeout(Duration::from_millis(cfg.batch_timeout_ms.max(1))) {
+                Ok(Some(req)) => {
+                    pending.push(req);
+                    // opportunistically grab whatever else is queued
+                    pending.extend(queue.drain_up_to(cfg.max_batch - pending.len()));
+                }
+                Ok(None) => {}
+                Err(_) if pending.is_empty() => return Ok(()), // closed + drained
+                Err(_) => {}
+            }
+        }
+        let oldest_ms = pending
+            .first()
+            .map(|r| r.enqueued_at.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        if !should_fire(pending.len(), cfg.max_batch, oldest_ms, cfg.batch_timeout_ms as f64, drain) {
+            continue;
+        }
+        for plan in plan_batches(pending.len(), cfg.max_batch) {
+            let batch: Vec<Request> = plan.members.iter().map(|_| pending.remove(0)).collect();
+            let exe = if plan.capacity == 1 { &exe_b1 } else { &exe_bn };
+            run_batch(&mut engine, exe, plan.capacity, bucket, num_classes, &param_lits, batch, &stats);
+        }
+        pending.clear();
+    }
+}
+
+/// Execute one padded batch and fan results back out.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    engine: &mut Engine,
+    exe: &str,
+    capacity: usize,
+    bucket: usize,
+    num_classes: usize,
+    param_lits: &[Literal],
+    batch: Vec<Request>,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let real = batch.len();
+    let mut tokens = Vec::with_capacity(capacity * bucket);
+    for r in &batch {
+        tokens.extend(pad_to_bucket(&r.tokens, bucket));
+    }
+    // Pad phantom rows up to the executable's static batch.
+    tokens.resize(capacity * bucket, crate::data::special::PAD);
+
+    let result: Result<Vec<Vec<f32>>> = (|| {
+        let tok_lit = HostTensor::I32 { shape: vec![capacity, bucket], data: tokens }.to_literal()?;
+        let mut args: Vec<&Literal> = param_lits.iter().collect();
+        args.push(&tok_lit);
+        let outs = engine.execute_literals(exe, &args)?;
+        let logits = outs[0].to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((0..real)
+            .map(|i| logits[i * num_classes..(i + 1) * num_classes].to_vec())
+            .collect())
+    })();
+
+    let mut st = stats.lock().unwrap();
+    st.batch_sizes.push(real);
+    match result {
+        Ok(rows) => {
+            for (r, row) in batch.into_iter().zip(rows) {
+                let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                st.completed += 1;
+                st.latencies_ms.push(latency_ms);
+                r.resp
+                    .send(Response { id: r.id, result: Ok(row), latency_ms, batch_size: real })
+                    .ok();
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in batch {
+                let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                st.errors += 1;
+                r.resp
+                    .send(Response {
+                        id: r.id,
+                        result: Err(msg.clone()),
+                        latency_ms,
+                        batch_size: real,
+                    })
+                    .ok();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{special, tasks::GlueGen, GlueTask};
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    fn coordinator() -> Option<Coordinator> {
+        let dir = artifacts_dir(None);
+        if !artifacts_available(&dir) {
+            return None;
+        }
+        let cfg = ServeConfig {
+            method: "lln_diag".into(),
+            queue_capacity: 64,
+            max_batch: 8,
+            batch_timeout_ms: 3,
+            workers: 1,
+            buckets: vec![128, 512],
+        };
+        Some(Coordinator::start(cfg, &dir).unwrap())
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let Some(c) = coordinator() else { return };
+        let mut gen = GlueGen::new(GlueTask::Sst2, 512, 128, 1);
+        let (tokens, _) = gen.example();
+        let resp = c.infer(tokens).unwrap();
+        let logits = resp.result.unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        c.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_burst_with_batching() {
+        let Some(c) = coordinator() else { return };
+        let mut gen = GlueGen::new(GlueTask::Qqp, 512, 128, 2);
+        let rxs: Vec<_> = (0..24).map(|_| c.submit(gen.example().0).unwrap()).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok(), "{:?}", resp.result);
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.completed, 24);
+        assert!(st.mean_batch_size() > 1.0, "burst should batch: {}", st.mean_batch_size());
+        drop(st);
+        c.shutdown();
+    }
+
+    #[test]
+    fn routes_long_sequences_to_big_bucket() {
+        let Some(c) = coordinator() else { return };
+        let tokens = vec![special::CLS; 300]; // > 128, <= 512
+        let resp = c.infer(tokens).unwrap();
+        assert!(resp.result.is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn rejects_over_length() {
+        let Some(c) = coordinator() else { return };
+        let err = c.submit(vec![special::CLS; 1000]).unwrap_err();
+        assert!(format!("{err}").contains("exceeds"));
+        c.shutdown();
+    }
+}

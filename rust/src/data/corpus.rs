@@ -1,0 +1,251 @@
+//! Synthetic pretraining corpus + MLM masking (WikiText-103 stand-in).
+//!
+//! Token stream = order-1 Markov chain with Zipf-distributed marginals:
+//! each token's successor is drawn from a per-token sparse transition
+//! table (deterministic pseudo-grammar) with probability `coherence`,
+//! else from the global Zipf unigram.  The chain gives MLM something
+//! real to learn (bigram structure drops loss well below the unigram
+//! entropy floor), while Zipf marginals match natural-text statistics.
+
+use super::special;
+use crate::rng::Pcg64;
+
+/// Word-level tokenizer over the synthetic vocabulary: the "text" form
+/// is `w<id>` words — round-trips exactly (stands in for BPE).
+pub struct Tokenizer {
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size > special::FIRST_CONTENT as usize);
+        Self { vocab_size }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| match w {
+                "[PAD]" => special::PAD,
+                "[MASK]" => special::MASK,
+                "[CLS]" => special::CLS,
+                "[SEP]" => special::SEP,
+                w => w
+                    .strip_prefix('w')
+                    .and_then(|n| n.parse::<i32>().ok())
+                    .filter(|&t| (t as usize) < self.vocab_size)
+                    .unwrap_or(special::PAD),
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| match t {
+                special::PAD => "[PAD]".to_string(),
+                special::MASK => "[MASK]".to_string(),
+                special::CLS => "[CLS]".to_string(),
+                special::SEP => "[SEP]".to_string(),
+                t => format!("w{t}"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// One MLM training batch in the exact layout the AOT train step takes.
+#[derive(Clone, Debug)]
+pub struct MlmBatch {
+    pub batch: usize,
+    pub seqlen: usize,
+    /// Masked input tokens, row-major (B, N).
+    pub tokens: Vec<i32>,
+    /// Original tokens (prediction targets).
+    pub labels: Vec<i32>,
+    /// 1.0 at positions that count toward the loss.
+    pub weights: Vec<f32>,
+}
+
+/// Synthetic Markov/Zipf corpus.
+pub struct Corpus {
+    pub vocab_size: usize,
+    /// Probability of following the grammar vs. the unigram.
+    pub coherence: f64,
+    /// Zipf exponent of the unigram.
+    pub zipf_s: f64,
+    rng: Pcg64,
+}
+
+impl Corpus {
+    pub fn new(vocab_size: usize, seed: u64) -> Self {
+        Self { vocab_size, coherence: 0.75, zipf_s: 1.1, rng: Pcg64::new(seed, 0xC0E9) }
+    }
+
+    fn content_range(&self) -> u64 {
+        (self.vocab_size as i32 - special::FIRST_CONTENT) as u64
+    }
+
+    fn zipf_token(&mut self) -> i32 {
+        special::FIRST_CONTENT + self.rng.zipf(self.content_range(), self.zipf_s) as i32
+    }
+
+    /// Deterministic sparse "grammar": each token has 4 plausible
+    /// successors derived by hashing; the chain mostly walks these.
+    fn grammar_successor(&mut self, prev: i32) -> i32 {
+        let slot = self.rng.below(4);
+        let h = (prev as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(slot.wrapping_mul(0xBF58476D1CE4E5B9));
+        special::FIRST_CONTENT + (h % self.content_range()) as i32
+    }
+
+    /// Sample a fresh sequence of exactly `n` tokens.
+    pub fn sequence(&mut self, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        let mut prev = self.zipf_token();
+        out.push(prev);
+        for _ in 1..n {
+            let tok = if self.rng.f64() < self.coherence {
+                self.grammar_successor(prev)
+            } else {
+                self.zipf_token()
+            };
+            out.push(tok);
+            prev = tok;
+        }
+        out
+    }
+
+    /// RoBERTa-style MLM masking: `mask_prob` of positions are targets;
+    /// of those 80% -> [MASK], 10% -> random token, 10% -> unchanged.
+    pub fn mlm_batch(&mut self, batch: usize, seqlen: usize, mask_prob: f64) -> MlmBatch {
+        let mut tokens = Vec::with_capacity(batch * seqlen);
+        let mut labels = Vec::with_capacity(batch * seqlen);
+        let mut weights = vec![0f32; batch * seqlen];
+        for b in 0..batch {
+            let seq = self.sequence(seqlen);
+            for (i, &orig) in seq.iter().enumerate() {
+                labels.push(orig);
+                let idx = b * seqlen + i;
+                if self.rng.f64() < mask_prob {
+                    weights[idx] = 1.0;
+                    let r = self.rng.f64();
+                    let tok = if r < 0.8 {
+                        special::MASK
+                    } else if r < 0.9 {
+                        self.zipf_token()
+                    } else {
+                        orig
+                    };
+                    tokens.push(tok);
+                } else {
+                    tokens.push(orig);
+                }
+            }
+        }
+        // Guarantee at least one target per batch (degenerate-draw guard).
+        if weights.iter().all(|&w| w == 0.0) {
+            weights[0] = 1.0;
+            tokens[0] = special::MASK;
+        }
+        MlmBatch { batch, seqlen, tokens, labels, weights }
+    }
+
+    /// Unigram entropy floor (bits) of the Zipf marginal — the loss a
+    /// context-blind predictor converges to; used as a sanity line in
+    /// the fig. 8 report.
+    pub fn unigram_entropy_bits(&self) -> f64 {
+        let v = self.content_range() as usize;
+        let weights: Vec<f64> = (1..=v).map(|r| 1.0 / (r as f64).powf(self.zipf_s)).collect();
+        let z: f64 = weights.iter().sum();
+        -weights.iter().map(|w| (w / z) * (w / z).log2()).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_round_trip() {
+        let tk = Tokenizer::new(512);
+        let toks = vec![special::CLS, 17, 300, special::SEP, special::MASK, 4];
+        assert_eq!(tk.encode(&tk.decode(&toks)), toks);
+    }
+
+    #[test]
+    fn sequences_are_in_vocab() {
+        let mut c = Corpus::new(512, 1);
+        let seq = c.sequence(256);
+        assert_eq!(seq.len(), 256);
+        assert!(seq.iter().all(|&t| t >= special::FIRST_CONTENT && (t as usize) < 512));
+    }
+
+    #[test]
+    fn corpus_has_bigram_structure() {
+        // Successors of a fixed token should concentrate on few values.
+        let mut c = Corpus::new(512, 2);
+        let mut successors = std::collections::HashMap::new();
+        let mut prev_target = false;
+        let target = {
+            let seq = c.sequence(10_000);
+            seq[0]
+        };
+        let seq = c.sequence(200_000);
+        for w in seq.windows(2) {
+            if w[0] == target {
+                *successors.entry(w[1]).or_insert(0usize) += 1;
+                prev_target = true;
+            }
+        }
+        assert!(prev_target, "target token never appeared");
+        let total: usize = successors.values().sum();
+        let mut counts: Vec<usize> = successors.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top4: usize = counts.iter().take(4).sum();
+        assert!(
+            top4 as f64 / total as f64 > 0.5,
+            "no grammar concentration: top4={top4} total={total}"
+        );
+    }
+
+    #[test]
+    fn mlm_batch_masks_roughly_right_fraction() {
+        let mut c = Corpus::new(512, 3);
+        let b = c.mlm_batch(8, 128, 0.15);
+        let frac = b.weights.iter().sum::<f32>() as f64 / b.weights.len() as f64;
+        assert!((frac - 0.15).abs() < 0.05, "{frac}");
+        assert_eq!(b.tokens.len(), 8 * 128);
+        assert_eq!(b.labels.len(), 8 * 128);
+    }
+
+    #[test]
+    fn mlm_labels_preserve_originals() {
+        let mut c = Corpus::new(512, 4);
+        let b = c.mlm_batch(2, 64, 0.15);
+        for i in 0..b.tokens.len() {
+            if b.weights[i] == 0.0 {
+                assert_eq!(b.tokens[i], b.labels[i], "unmasked positions unchanged");
+            }
+            assert!(b.labels[i] >= special::FIRST_CONTENT);
+        }
+        // Masked positions mostly carry [MASK].
+        let masked: Vec<usize> = (0..b.tokens.len()).filter(|&i| b.weights[i] == 1.0).collect();
+        let n_mask_tok = masked.iter().filter(|&&i| b.tokens[i] == special::MASK).count();
+        assert!(n_mask_tok as f64 / masked.len() as f64 > 0.6);
+    }
+
+    #[test]
+    fn unigram_entropy_is_reasonable() {
+        let c = Corpus::new(8192, 5);
+        let h = c.unigram_entropy_bits();
+        assert!(h > 6.0 && h < 13.0, "{h}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Corpus::new(512, 7);
+        let mut b = Corpus::new(512, 7);
+        assert_eq!(a.sequence(64), b.sequence(64));
+    }
+}

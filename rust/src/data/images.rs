@@ -1,0 +1,151 @@
+//! Synthetic image dataset for the ViT-lite experiment (Table 3's
+//! Dogs-vs-Cats stand-in): 32x32x3 oriented-texture classification.
+//!
+//! Class 0 = horizontal stripe field, class 1 = vertical, with random
+//! frequency, phase, color balance, and additive noise — deciding the
+//! class needs integration over many patches (global attention), which
+//! is exactly what the paper's ViT experiment exercises.
+
+use crate::rng::Pcg64;
+
+pub const IMG_SIDE: usize = 32;
+pub const PATCH: usize = 4;
+pub const PATCHES: usize = (IMG_SIDE / PATCH) * (IMG_SIDE / PATCH); // 64
+pub const PATCH_DIM: usize = PATCH * PATCH * 3; // 48
+
+/// One ViT batch in the AOT train-step layout: patches (B, P, patch_dim).
+#[derive(Clone, Debug)]
+pub struct VitBatch {
+    pub batch: usize,
+    pub patches: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+pub struct ImageGen {
+    rng: Pcg64,
+    pub noise: f32,
+}
+
+impl ImageGen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg64::new(seed, 0x1489), noise: 0.35 }
+    }
+
+    /// Render one image as (pixels rgb [0,1], label).
+    pub fn image(&mut self) -> (Vec<f32>, i32) {
+        let label = self.rng.below(2) as i32;
+        let freq = 2.0 + self.rng.f64() * 4.0;
+        let phase = self.rng.f64() * std::f64::consts::TAU;
+        let tint = [
+            0.8 + 0.2 * self.rng.f64(),
+            0.8 + 0.2 * self.rng.f64(),
+            0.8 + 0.2 * self.rng.f64(),
+        ];
+        let mut px = Vec::with_capacity(IMG_SIDE * IMG_SIDE * 3);
+        for y in 0..IMG_SIDE {
+            for x in 0..IMG_SIDE {
+                let coord = if label == 0 { y as f64 } else { x as f64 };
+                let wave =
+                    0.5 + 0.5 * (coord / IMG_SIDE as f64 * freq * std::f64::consts::TAU + phase).sin();
+                for c in 0..3 {
+                    let noise = (self.rng.f64() - 0.5) * self.noise as f64;
+                    px.push(((wave * tint[c] + noise).clamp(0.0, 1.0)) as f32);
+                }
+            }
+        }
+        (px, label)
+    }
+
+    /// Non-overlapping PATCH x PATCH patchification -> (P, PATCH_DIM).
+    pub fn patchify(pixels: &[f32]) -> Vec<f32> {
+        let per_row = IMG_SIDE / PATCH;
+        let mut out = Vec::with_capacity(PATCHES * PATCH_DIM);
+        for p in 0..PATCHES {
+            let (py, px_) = (p / per_row, p % per_row);
+            for dy in 0..PATCH {
+                for dx in 0..PATCH {
+                    let y = py * PATCH + dy;
+                    let x = px_ * PATCH + dx;
+                    let base = (y * IMG_SIDE + x) * 3;
+                    out.extend_from_slice(&pixels[base..base + 3]);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn batch(&mut self, batch: usize) -> VitBatch {
+        let mut patches = Vec::with_capacity(batch * PATCHES * PATCH_DIM);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (px, l) = self.image();
+            patches.extend(Self::patchify(&px));
+            labels.push(l);
+        }
+        VitBatch { batch, patches, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_consistent() {
+        let mut g = ImageGen::new(1);
+        let (px, l) = g.image();
+        assert_eq!(px.len(), IMG_SIDE * IMG_SIDE * 3);
+        assert!(l == 0 || l == 1);
+        let p = ImageGen::patchify(&px);
+        assert_eq!(p.len(), PATCHES * PATCH_DIM);
+        let b = g.batch(4);
+        assert_eq!(b.patches.len(), 4 * PATCHES * PATCH_DIM);
+        assert_eq!(b.labels.len(), 4);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let mut g = ImageGen::new(2);
+        let (px, _) = g.image();
+        assert!(px.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn orientation_signal_present() {
+        // Horizontal stripes: row-wise variance of row means is high,
+        // column means nearly constant; vertical is the transpose.
+        let mut g = ImageGen::new(3);
+        for _ in 0..10 {
+            let (px, l) = g.image();
+            let lum =
+                |y: usize, x: usize| (px[(y * IMG_SIDE + x) * 3] + px[(y * IMG_SIDE + x) * 3 + 1]) / 2.0;
+            let row_means: Vec<f64> = (0..IMG_SIDE)
+                .map(|y| (0..IMG_SIDE).map(|x| lum(y, x) as f64).sum::<f64>() / IMG_SIDE as f64)
+                .collect();
+            let col_means: Vec<f64> = (0..IMG_SIDE)
+                .map(|x| (0..IMG_SIDE).map(|y| lum(y, x) as f64).sum::<f64>() / IMG_SIDE as f64)
+                .collect();
+            let var = |v: &[f64]| {
+                let m = v.iter().sum::<f64>() / v.len() as f64;
+                v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64
+            };
+            let (rv, cv) = (var(&row_means), var(&col_means));
+            if l == 0 {
+                assert!(rv > cv, "horizontal image must vary across rows: {rv} vs {cv}");
+            } else {
+                assert!(cv > rv, "vertical image must vary across cols: {cv} vs {rv}");
+            }
+        }
+    }
+
+    #[test]
+    fn patchify_preserves_pixels() {
+        let mut g = ImageGen::new(4);
+        let (px, _) = g.image();
+        let patches = ImageGen::patchify(&px);
+        // First patch's first pixel is image (0, 0).
+        assert_eq!(patches[0], px[0]);
+        // Second patch starts at image (0, 4).
+        assert_eq!(patches[PATCH_DIM], px[4 * 3]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Synthetic data pipeline — the repo's substitute for WikiText-103,
+//! GLUE, LRA, and Dogs-vs-Cats (see DESIGN.md §5 "Substitutions").
+//!
+//! Every generator plants a *controlled* statistical structure so that
+//! (a) losses/accuracies are meaningfully learnable, and (b) tasks
+//! separate short-range from long-range attention quality, which is the
+//! axis the paper's comparisons live on.
+
+pub mod corpus;
+pub mod images;
+pub mod lra;
+pub mod tasks;
+
+pub use corpus::{Corpus, MlmBatch, Tokenizer};
+pub use images::VitBatch;
+pub use lra::LraTask;
+pub use tasks::{ClsBatch, GlueTask};
+
+/// Special token ids shared across all token-mode datasets.
+pub mod special {
+    pub const PAD: i32 = 0;
+    pub const MASK: i32 = 1;
+    pub const CLS: i32 = 2;
+    pub const SEP: i32 = 3;
+    /// First id available to content tokens.
+    pub const FIRST_CONTENT: i32 = 4;
+}

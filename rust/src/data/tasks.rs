@@ -1,0 +1,274 @@
+//! GLUE-like synthetic classification tasks (Table 1 stand-ins).
+//!
+//! Four tasks mirror the *kinds* of reasoning in MNLI / QNLI / QQP /
+//! SST-2, each parameterized so the class signal requires attention over
+//! token sets (not just position-0 features), with controllable
+//! long-range separation between evidence tokens.
+
+use super::special;
+use crate::rng::Pcg64;
+
+/// One classification batch in the AOT train-step layout.
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    pub batch: usize,
+    pub seqlen: usize,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+/// The four Table-1 tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlueTask {
+    /// MNLI-like: premise/hypothesis entailment (3 classes).
+    Nli,
+    /// QNLI-like: does the context contain the queried token? (2 classes)
+    Qnli,
+    /// QQP-like: are the two segments paraphrases? (2 classes)
+    Qqp,
+    /// SST-2-like: sentiment from class-conditional token frequencies.
+    Sst2,
+}
+
+impl GlueTask {
+    pub const ALL: [GlueTask; 4] = [GlueTask::Nli, GlueTask::Qnli, GlueTask::Qqp, GlueTask::Sst2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Nli => "MNLI-like",
+            GlueTask::Qnli => "QNLI-like",
+            GlueTask::Qqp => "QQP-like",
+            GlueTask::Sst2 => "SST2-like",
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            GlueTask::Nli => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// Generator with a held-out eval stream (seeded independently).
+pub struct GlueGen {
+    pub task: GlueTask,
+    pub vocab_size: usize,
+    pub seqlen: usize,
+    rng: Pcg64,
+}
+
+impl GlueGen {
+    pub fn new(task: GlueTask, vocab_size: usize, seqlen: usize, seed: u64) -> Self {
+        Self { task, vocab_size, seqlen, rng: Pcg64::new(seed, task as u64 + 1) }
+    }
+
+    fn content(&mut self) -> i32 {
+        special::FIRST_CONTENT
+            + self.rng.below((self.vocab_size as i32 - special::FIRST_CONTENT) as u64) as i32
+    }
+
+    /// Sample one (tokens, label) example.
+    pub fn example(&mut self) -> (Vec<i32>, i32) {
+        match self.task {
+            GlueTask::Nli => self.nli(),
+            GlueTask::Qnli => self.qnli(),
+            GlueTask::Qqp => self.qqp(),
+            GlueTask::Sst2 => self.sst2(),
+        }
+    }
+
+    pub fn batch(&mut self, batch: usize) -> ClsBatch {
+        let mut tokens = Vec::with_capacity(batch * self.seqlen);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (t, l) = self.example();
+            debug_assert_eq!(t.len(), self.seqlen);
+            tokens.extend_from_slice(&t);
+            labels.push(l);
+        }
+        ClsBatch { batch, seqlen: self.seqlen, tokens, labels }
+    }
+
+    fn frame(&self, premise: &[i32], hypothesis: &[i32]) -> Vec<i32> {
+        // [CLS] premise [SEP] hypothesis [SEP] padding...
+        let mut out = Vec::with_capacity(self.seqlen);
+        out.push(special::CLS);
+        out.extend_from_slice(premise);
+        out.push(special::SEP);
+        out.extend_from_slice(hypothesis);
+        out.push(special::SEP);
+        while out.len() < self.seqlen {
+            out.push(special::PAD);
+        }
+        out.truncate(self.seqlen);
+        out
+    }
+
+    /// MNLI-like: entail = hypothesis is a subset of premise tokens;
+    /// contradict = hypothesis contains the premise's "negation pair"
+    /// tokens (id XOR 1); neutral = fresh random tokens.
+    fn nli(&mut self) -> (Vec<i32>, i32) {
+        let plen = (self.seqlen - 3) * 2 / 3;
+        let hlen = (self.seqlen - 3) - plen;
+        let premise: Vec<i32> = (0..plen).map(|_| self.content()).collect();
+        let label = self.rng.below(3) as i32;
+        let hypothesis: Vec<i32> = match label {
+            0 => {
+                // entailment: sample from premise tokens
+                (0..hlen)
+                    .map(|_| premise[self.rng.below(plen as u64) as usize])
+                    .collect()
+            }
+            1 => {
+                // contradiction: premise tokens flipped to their "antonym"
+                (0..hlen)
+                    .map(|_| {
+                        let t = premise[self.rng.below(plen as u64) as usize];
+                        (t ^ 1).max(special::FIRST_CONTENT)
+                    })
+                    .collect()
+            }
+            _ => (0..hlen).map(|_| self.content()).collect(),
+        };
+        (self.frame(&premise, &hypothesis), label)
+    }
+
+    /// QNLI-like: hypothesis is a single query token; label 1 iff it
+    /// occurs somewhere in the (long) premise — pure long-range lookup.
+    fn qnli(&mut self) -> (Vec<i32>, i32) {
+        let plen = self.seqlen - 4;
+        let premise: Vec<i32> = (0..plen).map(|_| self.content()).collect();
+        let positive = self.rng.below(2) == 1;
+        let query = if positive {
+            premise[self.rng.below(plen as u64) as usize]
+        } else {
+            // A token guaranteed absent: resample until not in premise.
+            loop {
+                let t = self.content();
+                if !premise.contains(&t) {
+                    break t;
+                }
+            }
+        };
+        (self.frame(&premise, &[query]), positive as i32)
+    }
+
+    /// QQP-like: paraphrase = second segment is a shuffle of the first.
+    fn qqp(&mut self) -> (Vec<i32>, i32) {
+        let plen = (self.seqlen - 3) / 2;
+        let hlen = (self.seqlen - 3) - plen;
+        let a: Vec<i32> = (0..plen).map(|_| self.content()).collect();
+        let positive = self.rng.below(2) == 1;
+        let b: Vec<i32> = if positive {
+            let mut b: Vec<i32> = (0..hlen).map(|i| a[i % plen]).collect();
+            self.rng.shuffle(&mut b);
+            b
+        } else {
+            (0..hlen).map(|_| self.content()).collect()
+        };
+        (self.frame(&a, &b), positive as i32)
+    }
+
+    /// SST-2-like: two disjoint "sentiment lexicons" (low vs high token
+    /// ranges); the class-consistent lexicon dominates 65/35.
+    fn sst2(&mut self) -> (Vec<i32>, i32) {
+        let n = self.seqlen - 2;
+        let label = self.rng.below(2) as i32;
+        let half = (self.vocab_size as i32 - special::FIRST_CONTENT) / 2;
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..n {
+            let from_class = self.rng.f64() < 0.65;
+            let cls = if from_class { label } else { 1 - label };
+            let base = special::FIRST_CONTENT + cls * half;
+            tokens.push(base + self.rng.below(half as u64) as i32);
+        }
+        let mut out = vec![special::CLS];
+        out.extend(tokens);
+        out.push(special::SEP);
+        while out.len() < self.seqlen {
+            out.push(special::PAD);
+        }
+        (out, label)
+    }
+
+    /// Majority-class floor for this task (accuracy baseline).
+    pub fn chance_accuracy(&self) -> f64 {
+        1.0 / self.task.num_classes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_have_exact_length_and_valid_labels() {
+        for task in GlueTask::ALL {
+            let mut g = GlueGen::new(task, 4096, 128, 1);
+            for _ in 0..20 {
+                let (t, l) = g.example();
+                assert_eq!(t.len(), 128, "{task:?}");
+                assert!((l as usize) < task.num_classes(), "{task:?} label {l}");
+                assert!(t.iter().all(|&x| x >= 0 && (x as usize) < 4096));
+            }
+        }
+    }
+
+    #[test]
+    fn batches_are_shaped() {
+        let mut g = GlueGen::new(GlueTask::Qqp, 4096, 128, 2);
+        let b = g.batch(16);
+        assert_eq!(b.tokens.len(), 16 * 128);
+        assert_eq!(b.labels.len(), 16);
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        for task in GlueTask::ALL {
+            let mut g = GlueGen::new(task, 4096, 128, 3);
+            let mut counts = vec![0usize; task.num_classes()];
+            for _ in 0..600 {
+                let (_, l) = g.example();
+                counts[l as usize] += 1;
+            }
+            for &c in &counts {
+                let frac = c as f64 / 600.0;
+                let expect = 1.0 / task.num_classes() as f64;
+                assert!((frac - expect).abs() < 0.1, "{task:?} {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn qnli_signal_is_learnable_by_lookup() {
+        // A literal scan of the premise decides the label perfectly.
+        let mut g = GlueGen::new(GlueTask::Qnli, 4096, 128, 4);
+        for _ in 0..50 {
+            let (t, l) = g.example();
+            // frame: [CLS] premise(124) [SEP] query [SEP]
+            let premise = &t[1..125];
+            let query = t[126];
+            let present = premise.contains(&query);
+            assert_eq!(present as i32, l);
+        }
+    }
+
+    #[test]
+    fn sst2_lexicons_separate() {
+        let mut g = GlueGen::new(GlueTask::Sst2, 4096, 128, 5);
+        let half = (4096 - special::FIRST_CONTENT) / 2;
+        for _ in 0..50 {
+            let (t, l) = g.example();
+            let content: Vec<i32> =
+                t.iter().copied().filter(|&x| x >= special::FIRST_CONTENT).collect();
+            let low = content.iter().filter(|&&x| x < special::FIRST_CONTENT + half).count();
+            let frac_low = low as f64 / content.len() as f64;
+            if l == 0 {
+                assert!(frac_low > 0.5, "{frac_low}");
+            } else {
+                assert!(frac_low < 0.5, "{frac_low}");
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Native (no-PJRT) analysis figures: figs. 2, 5, 6, 7.
+
+use anyhow::Result;
+
+use super::maybe_write_csv;
+use crate::analysis::concentration::concentration_profile;
+use crate::analysis::fenton;
+use crate::analysis::lognormal::{histogram_study, sa_lognormal_check};
+use crate::attention::{MomentMatcher, Method};
+use crate::cli::Args;
+use crate::util::print_table;
+
+fn matcher(args: &Args) -> MomentMatcher {
+    let dir = crate::runtime::artifacts_dir(args.get("artifacts"));
+    MomentMatcher::from_artifacts(&dir).unwrap_or_else(|| {
+        println!("(artifacts absent: fitting moment matching natively...)");
+        MomentMatcher::fit(256, 64, &[0, 1])
+    })
+}
+
+/// Fig 2: entropy + spectral gap vs input spread for each kernel.
+pub fn run_fig2(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 128)?;
+    let d = args.get_usize("d", 64)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let sigmas: Vec<f64> = vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0];
+    let mm = matcher(args);
+
+    println!("== Fig 2: attention concentration vs input spread (N={n}, d={d}) ==");
+    println!("   kernels: softmax | lln+mm | lln (unmatched) | elu | relu | quadratic\n");
+    let mut curves = Vec::new();
+    let specs: Vec<(&str, Method, Option<&MomentMatcher>)> = vec![
+        ("softmax", Method::Softmax, None),
+        ("lln+mm", Method::Lln, Some(&mm)),
+        ("lln", Method::Lln, None),
+        ("elu", Method::Elu, None),
+        ("relu", Method::Relu, None),
+        ("quadratic", Method::Quadratic, None),
+    ];
+    for (label, method, mmref) in &specs {
+        curves.push((*label, concentration_profile(*method, &sigmas, n, d, *mmref, seed)));
+    }
+
+    for metric in ["entropy[bits]", "spectral gap"] {
+        println!("-- {metric} --");
+        let mut rows = Vec::new();
+        for (label, pts) in &curves {
+            let mut row = vec![label.to_string()];
+            for p in pts {
+                let v = if metric.starts_with("entropy") { p.entropy } else { p.spectral_gap };
+                row.push(format!("{v:.3}"));
+            }
+            rows.push(row);
+        }
+        let mut headers: Vec<String> = vec!["kernel".into()];
+        headers.extend(sigmas.iter().map(|s| format!("s={s}")));
+        let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        print_table(&hrefs, &rows);
+        println!();
+    }
+
+    // Shape check the paper claims: only matched LLN tracks softmax.
+    let dev = |a: &[crate::analysis::ConcentrationPoint], b: &[crate::analysis::ConcentrationPoint]| {
+        a.iter().zip(b).map(|(x, y)| (x.entropy - y.entropy).abs()).sum::<f64>() / a.len() as f64
+    };
+    let sm = &curves[0].1;
+    println!("mean |entropy - softmax|:  lln+mm={:.3}  lln={:.3}  elu={:.3}  relu={:.3}",
+        dev(&curves[1].1, sm), dev(&curves[2].1, sm), dev(&curves[3].1, sm), dev(&curves[4].1, sm));
+
+    let rows: Vec<String> = curves
+        .iter()
+        .flat_map(|(label, pts)| {
+            pts.iter().map(move |p| {
+                format!("{label},{},{},{},{}", p.sigma, p.temperature, p.entropy, p.spectral_gap)
+            })
+        })
+        .collect();
+    maybe_write_csv(args, "fig2", "kernel,sigma,temperature,entropy,spectral_gap", &rows)?;
+    Ok(())
+}
+
+/// Fig 5: SA log-normal parameters vs theory + moment-matching alignment.
+pub fn run_fig5(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 256)?;
+    let d = args.get_usize("d", 64)?;
+    let mm = matcher(args);
+
+    println!("== Fig 5a: SA log-normal parameters, measured vs theory (N={n}, d={d}) ==");
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for sq in [0.6, 0.8, 1.0, 1.2, 1.4, 1.6] {
+        let c = sa_lognormal_check(sq, sq, n, d, 11);
+        rows.push(vec![
+            format!("{sq:.1}"),
+            format!("{:.3}", c.theory_sigma2),
+            format!("{:.3}", c.measured_sigma2),
+            format!("{:.2}", c.theory_mu),
+            format!("{:.2}", c.measured_mu),
+        ]);
+        csv.push(format!(
+            "{sq},{},{},{},{}",
+            c.theory_sigma2, c.measured_sigma2, c.theory_mu, c.measured_mu
+        ));
+    }
+    print_table(&["sigma_q=sigma_k", "sigma2 theory", "sigma2 measured", "mu theory", "mu measured"], &rows);
+
+    println!("\n== Fig 5b: LLN variance before/after moment matching ==");
+    let mut rows = Vec::new();
+    for sq in [0.9, 1.0, 1.1, 1.2, 1.3, 1.4] {
+        let v_sm = crate::attention::moment_matching::measure_sm_log_variance(sq, sq, n, d, 13);
+        let (alpha, beta) = mm.alpha_beta(sq as f64, sq as f64);
+        let mut rng = crate::rng::Pcg64::seed(13);
+        let q = crate::tensor::Mat::gaussian(n, d, sq, &mut rng);
+        let k = crate::tensor::Mat::gaussian(n, d, sq, &mut rng);
+        let v_matched = crate::stats::log_variance(
+            &crate::attention::lln_attention_matrix(&q, &k, alpha, beta),
+            1e-30,
+        );
+        let v_naive = crate::stats::log_variance(
+            &crate::attention::lln_attention_matrix(&q, &k, 1.0, 1.0),
+            1e-30,
+        );
+        rows.push(vec![
+            format!("{sq:.1}"),
+            format!("{v_sm:.3}"),
+            format!("{v_matched:.3}"),
+            format!("{v_naive:.3}"),
+            format!("{alpha:.2}"),
+        ]);
+    }
+    print_table(&["sigma", "SA var", "LLN var (mm)", "LLN var (a=b=1)", "alpha"], &rows);
+    maybe_write_csv(args, "fig5", "sigma,theory_s2,measured_s2,theory_mu,measured_mu", &csv)?;
+    Ok(())
+}
+
+/// Fig 6: Fenton approximation in moderate + broad regimes.
+pub fn run_fig6(args: &Args) -> Result<()> {
+    let d = args.get_usize("d", 64)?;
+    let trials = args.get_usize("trials", 4000)?;
+
+    println!("== Fig 6a: moderate regime — Fenton theory vs Monte-Carlo (d={d}) ==");
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for p in fenton::moderate_sweep(d, trials, 5) {
+        rows.push(vec![
+            format!("{:.1}", p.s2),
+            format!("{:.4}", p.fenton_theory),
+            format!("{:.4}", p.measured),
+            format!("{:+.1}%", 100.0 * (p.measured - p.fenton_theory) / p.fenton_theory),
+        ]);
+        csv.push(format!("{},{},{}", p.s2, p.fenton_theory, p.measured));
+    }
+    print_table(&["sigma^2", "Fenton", "measured", "err"], &rows);
+
+    println!("\n== Fig 6b: broad regime — linearity of var(log sum) in sigma^2 ==");
+    let (pts, (slope, intercept, r2)) = fenton::broad_sweep(d, trials, 6);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|(s2, v)| vec![format!("{s2:.0}"), format!("{v:.3}")])
+        .collect();
+    print_table(&["sigma^2", "var(log sum)"], &rows);
+    println!("linear fit: var = {slope:.4} * sigma^2 + {intercept:.3}   (r^2 = {r2:.4})");
+    maybe_write_csv(args, "fig6", "s2,fenton,measured", &csv)?;
+    Ok(())
+}
+
+/// Fig 7: log-attention histograms, SA vs LLN matched/unmatched.
+pub fn run_fig7(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 256)?;
+    let d = args.get_usize("d", 64)?;
+    let sigma = args.get_f64("sigma", 1.2)?;
+    let mm = matcher(args);
+    let study = histogram_study(sigma, n, d, 48, &mm, 17);
+
+    println!("== Fig 7: histogram of log attention weights (sigma={sigma}, N={n}, d={d}) ==");
+    let render = |label: &str, h: &crate::stats::Histogram| {
+        let dens = h.density();
+        let max = dens.iter().cloned().fold(0.0, f64::max).max(1e-12);
+        let bar: String = dens
+            .iter()
+            .map(|&v| {
+                const SHADES: [char; 5] = [' ', '░', '▒', '▓', '█'];
+                SHADES[((v / max) * 4.0).round() as usize]
+            })
+            .collect();
+        println!("{label:>14} |{bar}|");
+    };
+    println!("  log P range: [{:.1}, {:.1}]", study.sa.lo, study.sa.hi);
+    render("softmax", &study.sa);
+    render("lln matched", &study.lln_matched);
+    render("lln unmatched", &study.lln_unmatched);
+    println!(
+        "\nKS distance to SA:  matched = {:.4},  unmatched = {:.4}  (lower = closer)",
+        study.ks_matched, study.ks_unmatched
+    );
+
+    let mut csv = Vec::new();
+    let centers = study.sa.bin_centers();
+    let (dsa, dm, du) = (study.sa.density(), study.lln_matched.density(), study.lln_unmatched.density());
+    for i in 0..centers.len() {
+        csv.push(format!("{},{},{},{}", centers[i], dsa[i], dm[i], du[i]));
+    }
+    maybe_write_csv(args, "fig7", "log_p,sa,lln_matched,lln_unmatched", &csv)?;
+    Ok(())
+}

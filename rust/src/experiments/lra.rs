@@ -1,0 +1,85 @@
+//! Tables 4 + 5: LRA-lite — training time/memory per task (Table 4) and
+//! task score (Table 5) for SA vs the linear-attention class.
+
+use anyhow::Result;
+
+use super::glue::train_and_eval_cls;
+use super::maybe_write_csv;
+use crate::cli::Args;
+use crate::data::lra::{LraGen, LraTask};
+use crate::runtime::{artifacts_dir, Engine};
+use crate::util::{current_rss_mb, print_table, Stopwatch};
+
+const METHODS: [&str; 4] = ["softmax", "lln_diag", "performer", "nystrom"];
+
+pub fn run_lra(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let steps = args.get_usize("steps", 120)?;
+    let eval_batches = args.get_usize("eval-batches", 15)?;
+    let lr = args.get_f64("lr", 1.5e-3)?;
+    let methods = args.get_list("methods", &METHODS.join(","));
+    let mut engine = Engine::new(&dir)?;
+
+    println!("== Tables 4+5: LRA-lite (N=512, {steps} steps/task, batch 4) ==\n");
+
+    let mut score_rows = Vec::new();
+    let mut time_rows = Vec::new();
+    let mut csv = Vec::new();
+    for method in &methods {
+        let artifact = format!("train_lra_{method}");
+        let mut scores = Vec::new();
+        let mut times = Vec::new();
+        let mut mems = Vec::new();
+        for task in LraTask::ALL {
+            let mut tg = LraGen::new(task, 512, 100);
+            let mut eg = LraGen::new(task, 512, 999);
+            let mut train_fn = || {
+                let b = tg.batch(4);
+                (b.tokens, b.labels, 4usize, 512usize)
+            };
+            let mut eval_fn = || {
+                let b = eg.batch(4);
+                (b.tokens, b.labels, 4usize, 512usize)
+            };
+            let rss0 = current_rss_mb();
+            let sw = Stopwatch::start();
+            let (acc, _gn, _loss) = train_and_eval_cls(
+                &mut engine, &dir, &artifact, &mut train_fn, &mut eval_fn,
+                steps, eval_batches, lr, 10,
+            )?;
+            let total = sw.elapsed_secs();
+            let mem = (current_rss_mb() - rss0).max(0.0);
+            scores.push(acc);
+            times.push(total);
+            mems.push(mem);
+            eprintln!(
+                "   [{method}] {}: {:.1}%  ({:.1}s, +{:.0} MB)",
+                task.name(), acc * 100.0, total, mem
+            );
+            csv.push(format!("{method},{},{},{},{}", task.name(), acc * 100.0, total, mem));
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        let mut srow = vec![method.to_string()];
+        srow.extend(scores.iter().map(|a| format!("{:.1}", a * 100.0)));
+        srow.push(format!("{:.1}", avg * 100.0));
+        score_rows.push(srow);
+        let mut trow = vec![method.to_string()];
+        trow.extend(times.iter().map(|t| format!("{t:.0}")));
+        time_rows.push(trow);
+    }
+
+    let mut headers: Vec<String> = vec!["method".into()];
+    headers.extend(LraTask::ALL.iter().map(|t| t.name().to_string()));
+    let mut score_headers = headers.clone();
+    score_headers.push("AVG".into());
+    println!("\n-- Table 5 analog: LRA-lite score [%] --");
+    let hrefs: Vec<&str> = score_headers.iter().map(String::as_str).collect();
+    print_table(&hrefs, &score_rows);
+    println!("\n-- Table 4 analog: training time [s] --");
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    print_table(&hrefs, &time_rows);
+    println!("\npaper shape: LLN+Diag cheapest/fastest of the accurate methods with");
+    println!("average score ~ softmax; Performer fast but weaker on some tasks.");
+    maybe_write_csv(args, "lra", "method,task,score,secs,mem_mb", &csv)?;
+    Ok(())
+}

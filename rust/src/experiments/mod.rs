@@ -1,0 +1,75 @@
+//! Experiment harnesses — one runner per paper table/figure.
+//!
+//! Each runner regenerates the corresponding table/figure as terminal
+//! output (same rows/series the paper reports) and, where useful, a CSV
+//! under `--out`.  See DESIGN.md §5 for the experiment index and
+//! EXPERIMENTS.md for recorded paper-vs-measured results.
+
+pub mod figures;
+pub mod glue;
+pub mod lra;
+pub mod pretrain;
+pub mod scaling;
+pub mod serve_bench;
+pub mod training_dynamics;
+pub mod vit;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+
+/// All experiment ids and their one-line descriptions.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table1", "GLUE-like accuracy across attention methods (paper Table 1)"),
+    ("table2", "memory + time scaling vs sequence length (paper Table 2)"),
+    ("table3", "ViT-lite image classification (paper Table 3)"),
+    ("lra", "LRA-lite speed/memory + score (paper Tables 4-5)"),
+    ("fig1", "temperature/entropy/spectral gap during training (paper Fig 1)"),
+    ("fig2", "entropy + spectral gap vs temperature per kernel (paper Fig 2)"),
+    ("fig5", "SA log-normal stats vs theory; moment matching (paper Fig 5)"),
+    ("fig6", "Fenton log-normal-sum approximation (paper Fig 6)"),
+    ("fig7", "attention histograms SA vs LLN (paper Fig 7)"),
+    ("fig8", "MLM pretraining loss curves LLN vs SA (paper Fig 8 + Fig 9)"),
+    ("fig10", "accuracy + grad-norm vs fixed alpha/beta (paper Fig 10)"),
+    ("serve", "serving throughput/latency through the coordinator"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(name: &str, args: &Args) -> Result<()> {
+    match name {
+        "table1" => glue::run_table1(args),
+        "table2" => scaling::run_table2(args),
+        "table3" => vit::run_table3(args),
+        "lra" => lra::run_lra(args),
+        "fig1" => training_dynamics::run_fig1(args),
+        "fig2" => figures::run_fig2(args),
+        "fig5" => figures::run_fig5(args),
+        "fig6" => figures::run_fig6(args),
+        "fig7" => figures::run_fig7(args),
+        "fig8" => pretrain::run_fig8(args),
+        "fig10" => glue::run_fig10(args),
+        "serve" => serve_bench::run_serve(args),
+        other => bail!(
+            "unknown experiment {other:?}; available: {}",
+            EXPERIMENTS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+/// Write rows as CSV when --out is given.
+pub fn maybe_write_csv(args: &Args, name: &str, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(dir) = args.get("out") {
+        let path = std::path::Path::new(dir);
+        std::fs::create_dir_all(path)?;
+        let file = path.join(format!("{name}.csv"));
+        let mut text = String::from(header);
+        text.push('\n');
+        for r in rows {
+            text.push_str(r);
+            text.push('\n');
+        }
+        std::fs::write(&file, text)?;
+        println!("  -> wrote {}", file.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Table 2: memory usage and time per iteration vs sequence length.
+//!
+//! Time: measured wall-clock of the AOT attention executables on the
+//! PJRT CPU client.  Memory: the analytic per-head activation model from
+//! `attention::memory_model_bytes` scaled to the paper's RoBERTa-base
+//! training setup (12 layers x 12 heads, fwd+bwd stash ~ 3x activations,
+//! plus a fixed model/optimizer baseline), reported in GB alongside the
+//! process RSS delta actually observed.
+//!
+//! The paper's "OOM" entries for softmax at N >= 8192 map to quadratic
+//! blow-up here: we never exported those executables (the interpreter
+//! would need the same O(N^2) buffers), and print OOM* in their place.
+
+use anyhow::Result;
+
+use super::maybe_write_csv;
+use crate::attention::{memory_model_bytes, Method};
+use crate::cli::Args;
+use crate::rng::Pcg64;
+use crate::runtime::{artifacts_dir, Engine, HostTensor};
+use crate::util::{current_rss_mb, print_table, Stopwatch};
+
+const NS: [usize; 5] = [256, 1024, 4096, 8192, 16384];
+const METHODS: [(&str, Method); 5] = [
+    ("softmax", Method::Softmax),
+    ("nystrom", Method::Nystrom),
+    ("lln", Method::Lln),
+    ("lln_diag", Method::LlnDiag),
+    ("elu", Method::Elu),
+];
+
+/// Paper-scale memory extrapolation: RoBERTa-base-ish (L=12, H=12),
+/// fwd+bwd activation stash factor 3, + 4 GB parameter/optimizer floor
+/// (matches the paper's ~4 GB at N=512 baseline row).
+fn model_memory_gb(method: Method, n: usize) -> f64 {
+    let per_head = memory_model_bytes(method, n, 64) as f64;
+    let layers_heads = 12.0 * 12.0;
+    let stash = 3.0;
+    4.0 + per_head * layers_heads * stash / 1e9
+}
+
+pub fn run_table2(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let iters = args.get_usize("iters", 3)?;
+    let mut engine = Engine::new(&dir)?;
+    let mut rng = Pcg64::seed(7);
+    let d = 64usize;
+
+    println!("== Table 2: memory + time vs sequence length ==");
+    println!("   time = measured PJRT fwd of the AOT kernel (d={d}, {iters} iters)");
+    println!("   mem  = analytic model @ paper scale (12L x 12H, fwd+bwd)\n");
+
+    let mut time_rows = Vec::new();
+    let mut mem_rows = Vec::new();
+    let mut csv = Vec::new();
+    for (name, method) in METHODS {
+        let mut trow = vec![name.to_string()];
+        let mut mrow = vec![name.to_string()];
+        for &n in &NS {
+            // Memory column (analytic; OOM past the paper's 40 GB card).
+            let gb = model_memory_gb(method, n);
+            mrow.push(if gb > 40.0 { "OOM".into() } else { format!("{gb:.1}") });
+
+            // Time column (measured; softmax artifacts stop at 4096).
+            let artifact = format!("attn_{name}_n{n}");
+            if engine.manifest().artifact(&artifact).is_err() {
+                trow.push("OOM*".into());
+                csv.push(format!("{name},{n},oom,{gb:.2}"));
+                continue;
+            }
+            let q = HostTensor::F32 {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            };
+            let k = HostTensor::F32 {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            };
+            let v = HostTensor::F32 {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            };
+            let inputs: Vec<HostTensor> = if name == "lln" || name == "lln_diag" {
+                vec![q, k, v, HostTensor::scalar_f32(2.2), HostTensor::scalar_f32(2.2)]
+            } else {
+                vec![q, k, v]
+            };
+            // warmup (compile + first run)
+            let rss0 = current_rss_mb();
+            engine.execute(&artifact, &inputs)?;
+            let sw = Stopwatch::start();
+            for _ in 0..iters {
+                engine.execute(&artifact, &inputs)?;
+            }
+            let secs = sw.elapsed_secs() / iters as f64;
+            let rss_delta = (current_rss_mb() - rss0).max(0.0);
+            trow.push(if secs < 1.0 {
+                format!("{:.0}ms", secs * 1e3)
+            } else {
+                format!("{secs:.2}s")
+            });
+            csv.push(format!("{name},{n},{secs:.5},{gb:.2},{rss_delta:.1}"));
+        }
+        time_rows.push(trow);
+        mem_rows.push(mrow);
+    }
+
+    let mut headers: Vec<String> = vec!["method".into()];
+    headers.extend(NS.iter().map(|n| n.to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    println!("-- Memory [GB] (paper-scale model; card = 40 GB) --");
+    print_table(&hrefs, &mem_rows);
+    println!("\n-- Time per fwd [measured] --");
+    print_table(&hrefs, &time_rows);
+    println!("\n* softmax kernels past 4096 are not exported: the O(N^2) buffers");
+    println!("  are the paper's OOM — see EXPERIMENTS.md T2 notes.");
+    println!("paper shape: softmax superlinear + OOM by 8k; LLN/Nystrom linear;");
+    println!("LLN faster than Nystrom; +Diag a ~10-15% overhead.");
+    maybe_write_csv(args, "table2", "method,n,secs,model_gb,rss_delta_mb", &csv)?;
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Table 3: ViT-lite image classification (Dogs-vs-Cats stand-in) —
+//! softmax vs LLN+Diag vs Linformer on oriented-texture images.
+
+use anyhow::Result;
+
+use super::maybe_write_csv;
+use crate::cli::Args;
+use crate::data::images::{ImageGen, PATCHES, PATCH_DIM};
+use crate::runtime::{artifacts_dir, Engine, HostTensor};
+use crate::training::driver::{accuracy_from_logits, TrainDriver};
+use crate::util::print_table;
+
+const METHODS: [&str; 3] = ["softmax", "lln_diag", "linformer"];
+
+pub fn run_table3(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let steps = args.get_usize("steps", 200)?;
+    let eval_batches = args.get_usize("eval-batches", 12)?;
+    let lr = args.get_f64("lr", 1e-3)?;
+    let methods = args.get_list("methods", &METHODS.join(","));
+    let mut engine = Engine::new(&dir)?;
+
+    println!("== Table 3: ViT-lite on synthetic oriented textures ({steps} steps) ==\n");
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for method in &methods {
+        let artifact = format!("train_vit_{method}");
+        let mut driver = TrainDriver::new(&engine, &dir, &artifact)?;
+        let mut gen = ImageGen::new(100);
+        for step in 0..steps {
+            let b = gen.batch(16);
+            let warm = (steps / 10).max(1);
+            let lr_t = if step < warm { lr * (step + 1) as f64 / warm as f64 } else { lr };
+            driver.step(
+                &mut engine,
+                lr_t,
+                &[
+                    HostTensor::F32 { shape: vec![16, PATCHES, PATCH_DIM], data: b.patches },
+                    HostTensor::I32 { shape: vec![16], data: b.labels },
+                ],
+            )?;
+        }
+        let mut eval = ImageGen::new(999);
+        let mut correct = 0.0;
+        let mut total = 0usize;
+        for _ in 0..eval_batches {
+            let b = eval.batch(16);
+            let outs = driver.eval(
+                &mut engine,
+                &[HostTensor::F32 { shape: vec![16, PATCHES, PATCH_DIM], data: b.patches }],
+            )?;
+            correct += accuracy_from_logits(outs[0].as_f32()?, &b.labels, 2) * 16.0;
+            total += 16;
+        }
+        let acc = correct / total as f64;
+        eprintln!("   [{method}] {:.1}%", acc * 100.0);
+        rows.push(vec![method.to_string(), format!("{:.2}", acc * 100.0)]);
+        csv.push(format!("{method},{}", acc * 100.0));
+    }
+    print_table(&["method", "accuracy [%]"], &rows);
+    println!("\npaper shape: LLN+Diag ~ softmax, both > Linformer.");
+    maybe_write_csv(args, "table3", "method,accuracy", &csv)?;
+    Ok(())
+}

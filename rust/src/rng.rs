@@ -1,0 +1,308 @@
+//! Deterministic pseudo-random number generation (substrate for the
+//! unavailable `rand` crate, layered on `rand_core`).
+//!
+//! * [`Pcg64`] — PCG-XSH-RR 64/32 folded to 64-bit output; fast, solid
+//!   statistical quality, tiny state, trivially seedable.
+//! * Gaussian sampling via Box–Muller (cached spare), Zipf sampling via
+//!   rejection-inversion (Hörmann–Derflinger style bound), plus the
+//!   categorical / permutation helpers the data generators need.
+
+use rand_core::{Error, RngCore, SeedableRng};
+
+/// Splitmix64: used to expand user seeds into full PCG state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR with 128-bit state emulated as two 64-bit lanes.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Cached second Box–Muller output.
+    spare_gauss: Option<f64>,
+}
+
+impl Pcg64 {
+    const MULT: u64 = 6364136223846793005;
+
+    /// Construct from a user seed and a stream id; distinct streams are
+    /// statistically independent (odd increments).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed ^ (0xDA3E_39CB_94B9_5BDB ^ stream.rotate_left(17));
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1;
+        let mut rng = Self { state, inc, spare_gauss: None };
+        rng.next_u64(); // warm-up step decorrelates near-zero seeds
+        rng
+    }
+
+    /// Single-argument convenience constructor (stream 0).
+    pub fn seed(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    fn step(&mut self) -> u64 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        let lo = xorshifted.rotate_right(rot) as u64;
+        // Second extraction for the high half keeps the generator 64-bit-out.
+        let old2 = self.state;
+        self.state = old2.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted2 = (((old2 >> 18) ^ old2) >> 27) as u32;
+        let rot2 = (old2 >> 59) as u32;
+        let hi = xorshifted2.rotate_right(rot2) as u64;
+        (hi << 32) | lo
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(s) = self.spare_gauss.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_gauss = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with given mean/std as f32.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        (mean as f64 + std as f64 * self.gauss()) as f32
+    }
+
+    /// Fill a slice with N(mean, std^2) samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for x in out {
+            *x = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Zipf(s) over {0, .., n-1} by inverse-CDF on precomputed weights is
+    /// O(n) setup; this standalone sampler is O(1) amortized via
+    /// rejection-inversion and suits repeated draws with static (n, s).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n >= 1);
+        // For s == 1 the harmonic integral needs its own closed form.
+        let h = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (1.0 + x).ln()
+            } else {
+                ((1.0 + x).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let h_inv = |y: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                y.exp() - 1.0
+            } else {
+                ((1.0 - s) * y + 1.0).powf(1.0 / (1.0 - s)) - 1.0
+            }
+        };
+        let hx0 = h(0.5) - 1.0;
+        let hn = h(n as f64 - 0.5);
+        loop {
+            let u = hx0 + self.f64() * (hn - hx0);
+            let x = h_inv(u);
+            let k = (x + 0.5).floor().clamp(0.0, n as f64 - 1.0);
+            // Acceptance test against the true pmf envelope.
+            if k - x <= (1.0 + k).powf(-s).recip().recip() || u >= h(k + 0.5) - (1.0 + k).powf(-s) {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+impl RngCore for Pcg64 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.step() as u32
+    }
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.step()
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut chunks = dest.chunks_exact_mut(8);
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let bytes = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&bytes[..rem.len()]);
+        }
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+impl SeedableRng for Pcg64 {
+    type Seed = [u8; 8];
+    fn from_seed(seed: Self::Seed) -> Self {
+        Self::seed(u64::from_le_bytes(seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = (0..8).map(|_| 0).scan(Pcg64::seed(42), |r, _| Some(r.next_u64())).collect();
+        let b: Vec<u64> = (0..8).map(|_| 0).scan(Pcg64::seed(42), |r, _| Some(r.next_u64())).collect();
+        assert_eq!(a, b);
+        let c: Vec<u64> = (0..8).map(|_| 0).scan(Pcg64::seed(43), |r, _| Some(r.next_u64())).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        assert_ne!(
+            (0..4).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg64::seed(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seed(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Pcg64::seed(3);
+        let n = 20_000;
+        let mut counts = vec![0usize; 100];
+        for _ in 0..n {
+            counts[r.zipf(100, 1.2) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10], "{:?}", &counts[..12]);
+        assert!(counts[0] > n / 20);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed(4);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::seed(5);
+        let mut hits = [0usize; 3];
+        for _ in 0..30_000 {
+            hits[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(hits[2] > hits[1] && hits[1] > hits[0], "{hits:?}");
+        let frac2 = hits[2] as f64 / 30_000.0;
+        assert!((frac2 - 0.7).abs() < 0.03, "{frac2}");
+    }
+
+    #[test]
+    fn fill_bytes_covers_remainder() {
+        let mut r = Pcg64::seed(6);
+        let mut buf = [0u8; 13];
+        r.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+}

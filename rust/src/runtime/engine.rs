@@ -1,0 +1,315 @@
+//! The thread-confined PJRT execution engine.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSpec, IoSpec, Manifest};
+use crate::tensor::Mat;
+
+/// A host-side tensor moving across threads (what requests/batches carry).
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        HostTensor::F32 { shape: vec![m.rows(), m.cols()], data: m.data().to_vec() }
+    }
+
+    pub fn to_mat(&self) -> Result<Mat> {
+        match self {
+            HostTensor::F32 { shape, data } if shape.len() == 2 => {
+                Ok(Mat::from_vec(shape[0], shape[1], data.clone()))
+            }
+            _ => bail!("not a 2-D f32 tensor: {:?}", self.shape()),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn first_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?.first().copied().unwrap_or(0.0))
+    }
+
+    /// Build an xla literal with this tensor's shape/dtype.
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            HostTensor::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+                    .map_err(|e| anyhow!("literal f32 {shape:?}: {e:?}"))
+            }
+            HostTensor::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+                    .map_err(|e| anyhow!("literal i32 {shape:?}: {e:?}"))
+            }
+        }
+    }
+
+    /// Read a literal back into a host tensor using the manifest spec's
+    /// shape (PJRT returns logical shapes; we trust the manifest).
+    pub fn from_literal(lit: &Literal, spec: &IoSpec) -> Result<Self> {
+        match spec.dtype.as_str() {
+            "f32" => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("read f32: {e:?}"))?;
+                Ok(HostTensor::F32 { shape: spec.shape.clone(), data })
+            }
+            "i32" => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow!("read i32: {e:?}"))?;
+                Ok(HostTensor::I32 { shape: spec.shape.clone(), data })
+            }
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Thread-confined engine: PJRT CPU client + manifest + compiled-executable
+/// cache.  Construct one per thread that needs to execute artifacts.
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.artifact(name)?.clone();
+            let path = self.dir.join(&spec.file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile a set of artifacts (worker warmup).
+    pub fn warmup(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute by artifact name with host tensors; validates shapes and
+    /// dtypes against the manifest and returns outputs in manifest order.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+            if t.len() != ispec.elements() {
+                bail!(
+                    "{name}: input {} has {} elements, manifest says {:?}",
+                    ispec.name,
+                    t.len(),
+                    ispec.shape
+                );
+            }
+            literals.push(t.to_literal().with_context(|| format!("{name}: input {}", ispec.name))?);
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: {} outputs vs manifest {}", parts.len(), spec.outputs.len());
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| {
+                HostTensor::from_literal(lit, ospec)
+                    .with_context(|| format!("{name}: output {}", ospec.name))
+            })
+            .collect()
+    }
+
+    /// Execute with pre-built literals, returning raw output literals
+    /// (the training driver's and serving workers' zero-copy hot path).
+    /// Accepts owned or borrowed literals so resident parameter sets can
+    /// be passed by reference every call.
+    pub fn execute_literals<L: std::borrow::Borrow<Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+    use crate::rng::Pcg64;
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir(None);
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::new(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn host_tensor_round_trip_f32() {
+        let t = HostTensor::F32 { shape: vec![2, 3], data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        let lit = t.to_literal().unwrap();
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 3], dtype: "f32".into() };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn host_tensor_round_trip_i32() {
+        let t = HostTensor::I32 { shape: vec![4], data: vec![1, -2, 3, 7] };
+        let lit = t.to_literal().unwrap();
+        let spec = IoSpec { name: "x".into(), shape: vec![4], dtype: "i32".into() };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_i32().unwrap(), t.as_i32().unwrap());
+    }
+
+    #[test]
+    fn lln_micro_kernel_matches_native() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Pcg64::seed(42);
+        let (n, d) = (256, 64);
+        let q = Mat::gaussian(n, d, 1.0, &mut rng);
+        let k = Mat::gaussian(n, d, 1.0, &mut rng);
+        let v = Mat::gaussian(n, d, 1.0, &mut rng);
+        let (alpha, beta) = (2.0f32, 2.0f32);
+        let out = eng
+            .execute(
+                "attn_lln_n256",
+                &[
+                    HostTensor::from_mat(&q),
+                    HostTensor::from_mat(&k),
+                    HostTensor::from_mat(&v),
+                    HostTensor::scalar_f32(alpha),
+                    HostTensor::scalar_f32(beta),
+                ],
+            )
+            .unwrap();
+        let got = out[0].to_mat().unwrap();
+        let want = crate::attention::lln_attention(&q, &k, &v, alpha, beta);
+        let err = got.max_abs_diff(&want);
+        assert!(err < 2e-3, "PJRT vs native mismatch: {err}");
+    }
+
+    #[test]
+    fn softmax_micro_kernel_matches_native() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = Pcg64::seed(43);
+        let (n, d) = (256, 64);
+        let q = Mat::gaussian(n, d, 1.0, &mut rng);
+        let k = Mat::gaussian(n, d, 1.0, &mut rng);
+        let v = Mat::gaussian(n, d, 1.0, &mut rng);
+        let out = eng
+            .execute(
+                "attn_softmax_n256",
+                &[HostTensor::from_mat(&q), HostTensor::from_mat(&k), HostTensor::from_mat(&v)],
+            )
+            .unwrap();
+        let got = out[0].to_mat().unwrap();
+        let want = crate::attention::softmax_attention(&q, &k, &v);
+        assert!(got.max_abs_diff(&want) < 2e-3);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(mut eng) = engine() else { return };
+        let err = eng.execute("attn_softmax_n256", &[]).unwrap_err();
+        assert!(format!("{err}").contains("inputs"));
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let Some(mut eng) = engine() else { return };
+        let bad = HostTensor::F32 { shape: vec![2, 2], data: vec![0.0; 4] };
+        let err = eng.execute("attn_softmax_n256", &[bad.clone(), bad.clone(), bad]).unwrap_err();
+        assert!(format!("{err}").contains("elements"));
+    }
+}

@@ -1,0 +1,275 @@
+//! Typed view of `artifacts/manifest.json` (produced by python aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One executable input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    pub fn is_param(&self) -> bool {
+        self.name.starts_with("p:")
+    }
+    pub fn is_opt_state(&self) -> bool {
+        self.name.starts_with("m:") || self.name.starts_with("v:")
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|x| x.name == name)
+    }
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|x| x.name == name)
+    }
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// One exported model: config + parameter schema + initial weights file.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub tag: String,
+    pub params_file: String,
+    pub param_order: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub config: BTreeMap<String, String>,
+}
+
+impl ModelSpec {
+    pub fn total_params(&self) -> usize {
+        self.param_order
+            .iter()
+            .map(|k| self.param_shapes[k].iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub mm_a: f64,
+    pub mm_b: f64,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+fn io_specs(v: &Json, what: &str) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what} not an array"))?
+        .iter()
+        .map(|x| {
+            Ok(IoSpec {
+                name: x.get("name").and_then(Json::as_str).context("io name")?.to_string(),
+                shape: x
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("io shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: x.get("dtype").and_then(Json::as_str).context("io dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn meta_map(v: Option<&Json>) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    if let Some(Json::Obj(m)) = v {
+        for (k, x) in m {
+            let s = match x {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                Json::Null => "null".into(),
+                other => other.to_string_compact(),
+            };
+            out.insert(k.clone(), s);
+        }
+    }
+    out
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mm_a = v.get("mm_a").and_then(Json::as_f64).context("mm_a")?;
+        let mm_b = v.get("mm_b").and_then(Json::as_f64).context("mm_b")?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in v.get("artifacts").and_then(Json::as_arr).context("artifacts")? {
+            let name = a.get("name").and_then(Json::as_str).context("artifact name")?.to_string();
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: a.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                inputs: io_specs(a.get("inputs").context("inputs")?, "inputs")?,
+                outputs: io_specs(a.get("outputs").context("outputs")?, "outputs")?,
+                meta: meta_map(a.get("meta")),
+            };
+            if artifacts.insert(name.clone(), spec).is_some() {
+                bail!("duplicate artifact {name}");
+            }
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("models") {
+            for (tag, spec) in m {
+                let order: Vec<String> = spec
+                    .get("param_order")
+                    .and_then(Json::as_arr)
+                    .context("param_order")?
+                    .iter()
+                    .map(|x| x.as_str().unwrap_or_default().to_string())
+                    .collect();
+                let mut shapes = BTreeMap::new();
+                if let Some(Json::Obj(sh)) = spec.get("param_shapes") {
+                    for (k, dims) in sh {
+                        shapes.insert(
+                            k.clone(),
+                            dims.as_arr()
+                                .context("shape dims")?
+                                .iter()
+                                .map(|d| d.as_usize().context("dim"))
+                                .collect::<Result<_>>()?,
+                        );
+                    }
+                }
+                models.insert(
+                    tag.clone(),
+                    ModelSpec {
+                        tag: tag.clone(),
+                        params_file: spec
+                            .get("params_file")
+                            .and_then(Json::as_str)
+                            .context("params_file")?
+                            .to_string(),
+                        param_order: order,
+                        param_shapes: shapes,
+                        config: meta_map(spec.get("config")),
+                    },
+                );
+            }
+        }
+        Ok(Self { mm_a, mm_b, artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    pub fn model(&self, tag: &str) -> Result<&ModelSpec> {
+        self.models.get(tag).ok_or_else(|| anyhow!("model {tag:?} not in manifest"))
+    }
+
+    /// All artifacts whose meta.method equals the given method.
+    pub fn artifacts_for_method(&self, method: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.meta.get("method").map(String::as_str) == Some(method))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "mm_a": 0.21, "mm_b": -1.08,
+      "models": {
+        "glue_lln": {
+          "params_file": "params_glue_lln.bin",
+          "param_order": ["cls.b", "cls.w"],
+          "param_shapes": {"cls.b": [4], "cls.w": [128, 4]},
+          "config": {"attn": "lln", "d_model": 128}
+        }
+      },
+      "artifacts": [
+        {"name": "attn_lln_n256", "file": "attn_lln_n256.hlo.txt",
+         "inputs": [{"name": "q", "shape": [256, 64], "dtype": "f32"}],
+         "outputs": [{"name": "out", "shape": [256, 64], "dtype": "f32"}],
+         "meta": {"method": "lln", "n": 256}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!((m.mm_a - 0.21).abs() < 1e-12);
+        let a = m.artifact("attn_lln_n256").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![256, 64]);
+        assert_eq!(a.meta_usize("n"), Some(256));
+        let model = m.model("glue_lln").unwrap();
+        assert_eq!(model.total_params(), 4 + 128 * 4);
+        assert_eq!(model.config.get("attn").unwrap(), "lln");
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn method_filter() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts_for_method("lln").len(), 1);
+        assert_eq!(m.artifacts_for_method("softmax").len(), 0);
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.artifacts.len() >= 50, "{}", m.artifacts.len());
+            assert!(m.models.len() >= 10);
+            // Train artifacts carry the state-symmetry property the
+            // training driver relies on.
+            let t = m.artifact("train_tinymlm_lln").unwrap();
+            let n_in_params = t.inputs.iter().filter(|x| x.is_param()).count();
+            let n_out_params = t.outputs.iter().filter(|x| x.is_param()).count();
+            assert_eq!(n_in_params, n_out_params);
+        }
+    }
+}

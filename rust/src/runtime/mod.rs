@@ -1,0 +1,37 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! Layering (see /opt/xla-example/load_hlo):
+//!   `HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//!   -> `PjRtClient::compile` -> `execute` / `execute_b`.
+//!
+//! The `xla` crate's wrappers are raw-pointer types without Send/Sync,
+//! so an [`Engine`] is **thread-confined**: every coordinator worker and
+//! the training driver construct their own engine (compilation results
+//! are cached per engine).  Cross-thread traffic moves plain `Vec<f32>`
+//! / `Vec<i32>` tensors, never PJRT handles.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{Engine, HostTensor};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelSpec};
+pub use params::ParamStore;
+
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifacts directory: explicit flag > $LLN_ARTIFACTS > ./artifacts.
+pub fn artifacts_dir(explicit: Option<&str>) -> PathBuf {
+    if let Some(p) = explicit {
+        return PathBuf::from(p);
+    }
+    if let Ok(p) = std::env::var("LLN_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(crate::ARTIFACTS_DIR)
+}
+
+/// True if artifacts have been built (integration tests skip otherwise).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}

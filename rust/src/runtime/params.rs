@@ -1,0 +1,195 @@
+//! Parameter + optimizer-state store for the training driver.
+//!
+//! Holds the flat (canonical-order) parameter arrays as xla Literals —
+//! PJRT CPU shares the host buffer, so one `execute` per train step moves
+//! no parameter bytes.  Checkpointing writes the same raw-f32 format the
+//! AOT exporter uses for initial weights.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::Literal;
+
+use super::engine::HostTensor;
+use super::manifest::ModelSpec;
+
+/// Flat parameter set in canonical (sorted-name) order.
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    /// Host copies (always current — outputs are copied back each step).
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Load initial parameters from the AOT `params_<tag>.bin` blob.
+    pub fn load_initial(dir: &Path, model: &ModelSpec) -> Result<Self> {
+        let path = dir.join(&model.params_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let total: usize = model
+            .param_order
+            .iter()
+            .map(|k| model.param_shapes[k].iter().product::<usize>())
+            .sum();
+        if bytes.len() != total * 4 {
+            bail!("{}: {} bytes, schema wants {}", path.display(), bytes.len(), total * 4);
+        }
+        let mut values = Vec::with_capacity(model.param_order.len());
+        let mut shapes = Vec::with_capacity(model.param_order.len());
+        let mut off = 0usize;
+        for name in &model.param_order {
+            let shape = model.param_shapes[name].clone();
+            let n: usize = shape.iter().product();
+            let mut v = vec![0f32; n];
+            let chunk = &bytes[off * 4..(off + n) * 4];
+            for (i, w) in chunk.chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+            }
+            off += n;
+            values.push(v);
+            shapes.push(shape);
+        }
+        Ok(Self { names: model.param_order.clone(), shapes, values })
+    }
+
+    /// Zero-initialized store with the same schema (Adam m/v states).
+    pub fn zeros_like(other: &Self) -> Self {
+        Self {
+            names: other.names.clone(),
+            shapes: other.shapes.clone(),
+            values: other.values.iter().map(|v| vec![0f32; v.len()]).collect(),
+        }
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.values.iter().map(Vec::len).sum()
+    }
+
+    /// Build literals for all arrays (the per-step input assembly).
+    pub fn to_literals(&self) -> Result<Vec<Literal>> {
+        self.names
+            .iter()
+            .zip(&self.shapes)
+            .zip(&self.values)
+            .map(|((name, shape), data)| {
+                HostTensor::F32 { shape: shape.clone(), data: data.clone() }
+                    .to_literal()
+                    .with_context(|| format!("param {name}"))
+            })
+            .collect()
+    }
+
+    /// Copy a train step's output literals back into the store.
+    pub fn update_from_literals(&mut self, lits: &[Literal]) -> Result<()> {
+        if lits.len() != self.values.len() {
+            bail!("update: {} literals for {} params", lits.len(), self.values.len());
+        }
+        for (i, lit) in lits.iter().enumerate() {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("param {}: {e:?}", self.names[i]))?;
+            if v.len() != self.values[i].len() {
+                bail!("param {}: {} vs {}", self.names[i], v.len(), self.values[i].len());
+            }
+            self.values[i] = v;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.names.iter().position(|n| n == name).map(|i| self.values[i].as_slice())
+    }
+
+    /// Serialize to the raw-f32 checkpoint format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.total_elements() * 4);
+        for v in &self.values {
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a checkpoint saved by [`ParamStore::save`] (same schema).
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.total_elements() * 4 {
+            bail!("checkpoint size mismatch");
+        }
+        let mut off = 0usize;
+        for v in &mut self.values {
+            for x in v.iter_mut() {
+                let b = &bytes[off..off + 4];
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                off += 4;
+            }
+        }
+        Ok(())
+    }
+
+    /// L2 norm over all parameters (divergence telemetry).
+    pub fn global_norm(&self) -> f64 {
+        self.values
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir, Manifest};
+
+    #[test]
+    fn loads_initial_params_when_artifacts_present() {
+        let dir = artifacts_dir(None);
+        if !artifacts_available(&dir) {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("tinymlm_lln").unwrap();
+        let store = ParamStore::load_initial(&dir, model).unwrap();
+        assert_eq!(store.names.len(), model.param_order.len());
+        assert_eq!(store.total_elements(), model.total_params());
+        // Embeddings initialized to ~N(0, 0.02): nonzero, small.
+        let emb = store.get("emb.tok").unwrap();
+        assert!(emb.iter().any(|&x| x != 0.0));
+        assert!(emb.iter().all(|&x| x.abs() < 1.0));
+        let norm = store.global_norm();
+        assert!(norm > 0.0 && norm.is_finite());
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let dir = artifacts_dir(None);
+        if !artifacts_available(&dir) {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("tinymlm_lln").unwrap();
+        let mut store = ParamStore::load_initial(&dir, model).unwrap();
+        let tmp = std::env::temp_dir().join("lln_ckpt_test.bin");
+        store.save(&tmp).unwrap();
+        let orig = store.values[3].clone();
+        for x in &mut store.values[3] {
+            *x = 0.0;
+        }
+        store.load_checkpoint(&tmp).unwrap();
+        assert_eq!(store.values[3], orig);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn zeros_like_matches_schema() {
+        let store = ParamStore {
+            names: vec!["a".into(), "b".into()],
+            shapes: vec![vec![2, 3], vec![4]],
+            values: vec![vec![1.0; 6], vec![2.0; 4]],
+        };
+        let z = ParamStore::zeros_like(&store);
+        assert_eq!(z.total_elements(), 10);
+        assert!(z.values.iter().flatten().all(|&x| x == 0.0));
+    }
+}

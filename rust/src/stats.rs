@@ -1,0 +1,292 @@
+//! Statistics instruments: entropy, histograms, log-normal fitting, and
+//! distribution distances — the measurement half of the paper's §3.
+//!
+//! Everything operates on the stochastic matrices produced by
+//! [`crate::attention`] or fetched from the PJRT probe artifacts.
+
+use crate::tensor::Mat;
+
+/// Shannon entropy (bits) of one probability row (paper eq. 20).
+pub fn row_entropy(p: &[f32]) -> f64 {
+    let mut h = 0.0f64;
+    for &x in p {
+        if x > 0.0 {
+            let x = x as f64;
+            h -= x * x.log2();
+        }
+    }
+    h
+}
+
+/// Mean row entropy of a stochastic matrix (paper eq. 7).
+pub fn attention_entropy(p: &Mat) -> f64 {
+    (0..p.rows()).map(|i| row_entropy(p.row(i))).sum::<f64>() / p.rows() as f64
+}
+
+/// Row-variance of a stochastic matrix averaged over rows (paper eq. 21).
+pub fn attention_row_variance(p: &Mat) -> f64 {
+    let n = p.cols() as f64;
+    let mut total = 0.0f64;
+    for i in 0..p.rows() {
+        let row = p.row(i);
+        let mu = 1.0 / n; // stochastic rows have mean exactly 1/N
+        total += row.iter().map(|&x| (x as f64 - mu).powi(2)).sum::<f64>() / n;
+    }
+    total / p.rows() as f64
+}
+
+/// Variance of log-entries — the "sigma^2" of the log-normal model
+/// (what moment matching equalizes, paper fig. 5).
+pub fn log_variance(p: &Mat, eps: f64) -> f64 {
+    let logs: Vec<f64> = p.data().iter().map(|&x| ((x as f64).max(eps)).ln()).collect();
+    let mu = logs.iter().sum::<f64>() / logs.len() as f64;
+    logs.iter().map(|&x| (x - mu).powi(2)).sum::<f64>() / logs.len() as f64
+}
+
+/// Mean of log-entries (the log-normal "mu", paper Prop 3.1).
+pub fn log_mean(p: &Mat, eps: f64) -> f64 {
+    p.data().iter().map(|&x| ((x as f64).max(eps)).ln()).sum::<f64>() / p.data().len() as f64
+}
+
+/// Summary of a fitted log-normal: parameters of ln X ~ N(mu, sigma^2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogNormalFit {
+    pub mu: f64,
+    pub sigma2: f64,
+}
+
+/// Fit a log-normal by moments of the log (MLE for log-normal data).
+pub fn fit_log_normal(samples: &[f32], eps: f64) -> LogNormalFit {
+    let logs: Vec<f64> = samples.iter().map(|&x| ((x as f64).max(eps)).ln()).collect();
+    let mu = logs.iter().sum::<f64>() / logs.len() as f64;
+    let sigma2 = logs.iter().map(|&x| (x - mu).powi(2)).sum::<f64>() / logs.len() as f64;
+    LogNormalFit { mu, sigma2 }
+}
+
+/// Histogram with fixed bin edges over [lo, hi]; out-of-range clamps to
+/// the edge bins (used for fig. 7's attention-weight histograms).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let idx = (t.max(0.0) as usize).min(bins - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn add_all(&mut self, xs: impl IntoIterator<Item = f64>) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Normalized density per bin.
+    pub fn density(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let norm = (self.total.max(1) as f64) * w;
+        self.counts.iter().map(|&c| c as f64 / norm).collect()
+    }
+
+    pub fn bin_centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len()).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+}
+
+/// Two-sample Kolmogorov–Smirnov distance (distribution similarity for
+/// fig. 7's SA-vs-LLN comparison).
+pub fn ks_distance(a: &[f32], b: &[f32]) -> f64 {
+    let mut xa: Vec<f32> = a.to_vec();
+    let mut xb: Vec<f32> = b.to_vec();
+    xa.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    xb.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    let (na, nb) = (xa.len() as f64, xb.len() as f64);
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d = 0.0f64;
+    while i < xa.len() && j < xb.len() {
+        let (va, vb) = (xa[i], xb[j]);
+        if va <= vb {
+            i += 1;
+        }
+        if vb <= va {
+            j += 1;
+        }
+        d = d.max((i as f64 / na - j as f64 / nb).abs());
+    }
+    d
+}
+
+/// Ordinary least squares y = a x + b; returns (a, b, r^2).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&xi, &yi) in x.iter().zip(y) {
+        sxx += (xi - mx) * (xi - mx);
+        sxy += (xi - mx) * (yi - my);
+        syy += (yi - my) * (yi - my);
+    }
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Streaming mean/variance (Welford) for metric pipelines.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Percentile of a sample (linear interpolation), q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn entropy_uniform_is_log2_n() {
+        let n = 64;
+        let p = Mat::from_vec(1, n, vec![1.0 / n as f32; n]);
+        assert!((attention_entropy(&p) - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_onehot_is_zero() {
+        let mut row = vec![0.0f32; 16];
+        row[3] = 1.0;
+        assert!(row_entropy(&row).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let mut rng = Pcg64::seed(1);
+        let mut p = Mat::gaussian(8, 32, 1.0, &mut rng);
+        p.softmax_rows();
+        let h = attention_entropy(&p);
+        assert!(h > 0.0 && h < 5.0 + 1e-9); // log2(32) = 5
+    }
+
+    #[test]
+    fn log_normal_fit_recovers_parameters() {
+        let mut rng = Pcg64::seed(2);
+        let (mu, sigma) = (-2.0f64, 0.7f64);
+        let samples: Vec<f32> = (0..50_000)
+            .map(|_| ((mu + sigma * rng.gauss()).exp()) as f32)
+            .collect();
+        let fit = fit_log_normal(&samples, 1e-30);
+        assert!((fit.mu - mu).abs() < 0.02, "mu {}", fit.mu);
+        assert!((fit.sigma2 - sigma * sigma).abs() < 0.02, "s2 {}", fit.sigma2);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_one() {
+        let mut rng = Pcg64::seed(3);
+        let mut h = Histogram::new(-4.0, 4.0, 40);
+        h.add_all((0..10_000).map(|_| rng.gauss()));
+        let w = 8.0 / 40.0;
+        let total: f64 = h.density().iter().map(|d| d * w).sum();
+        assert!((total - 1.0).abs() < 0.02, "{total}"); // tails clamp in
+    }
+
+    #[test]
+    fn ks_same_distribution_small() {
+        let mut rng = Pcg64::seed(4);
+        let a: Vec<f32> = (0..5000).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..5000).map(|_| rng.gauss() as f32).collect();
+        assert!(ks_distance(&a, &b) < 0.05);
+    }
+
+    #[test]
+    fn ks_different_distribution_large() {
+        let mut rng = Pcg64::seed(5);
+        let a: Vec<f32> = (0..5000).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..5000).map(|_| rng.gauss() as f32 + 2.0).collect();
+        assert!(ks_distance(&a, &b) > 0.5);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 3.0 * v - 1.0).collect();
+        let (a, b, r2) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9 && (b + 1.0).abs() < 1e-9 && (r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,399 @@
+//! Dense row-major f32 matrix — the numeric substrate for the native
+//! attention baselines and the analysis instruments.
+//!
+//! Deliberately small: a 2-D owned matrix with the handful of BLAS-2/3
+//! operations the paper's math needs.  The matmul is cache-blocked with
+//! a k-panel inner loop that autovectorizes well; it is the hot path of
+//! the native analysis benches (see EXPERIMENTS.md §Perf).
+
+use std::fmt;
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Gaussian-filled matrix (mean 0, given std).
+    pub fn gaussian(rows: usize, cols: usize, std: f32, rng: &mut crate::rng::Pcg64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data, 0.0, std);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — cache-blocked ikj matmul.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // ikj order: the inner j loop is a contiguous FMA over `other`'s
+        // row and `out`'s row — autovectorizes to the machine width.
+        const KB: usize = 64;
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` without materializing the transpose (dot-product
+    /// kernel; both operands stream row-contiguously).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Elementwise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        let mut out = self.clone();
+        out.map_inplace(f);
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// Row-wise softmax in place (numerically stable).
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - max).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Normalize each row to sum 1 (entries assumed non-negative).
+    pub fn normalize_rows(&mut self, eps: f32) {
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            let sum: f32 = row.iter().sum::<f32>() + eps;
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(i)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn variance(&self) -> f64 {
+        let mu = self.mean();
+        self.data.iter().map(|&x| (x as f64 - mu).powi(2)).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Matrix–vector product `self @ v`.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(&a, &b)| a * b).sum())
+            .collect()
+    }
+
+    /// Transposed matrix–vector product `self^T @ v`.
+    pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            for (o, &x) in out.iter_mut().zip(self.row(i)) {
+                *o += vi * x;
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Check every row sums to ~1 and entries are non-negative.
+    pub fn is_stochastic(&self, tol: f32) -> bool {
+        self.data.iter().all(|&x| x >= -tol)
+            && self.row_sums().iter().all(|&s| (s - 1.0).abs() < tol)
+    }
+}
+
+/// Vector helpers shared by linalg/stats.
+pub mod vec_ops {
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+    pub fn norm(a: &[f32]) -> f64 {
+        dot(a, a).sqrt()
+    }
+    pub fn scale_inplace(a: &mut [f32], s: f32) {
+        for x in a {
+            *x *= s;
+        }
+    }
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+    pub fn mean(a: &[f32]) -> f64 {
+        a.iter().map(|&x| x as f64).sum::<f64>() / a.len() as f64
+    }
+    pub fn variance(a: &[f32]) -> f64 {
+        let mu = mean(a);
+        a.iter().map(|&x| (x as f64 - mu).powi(2)).sum::<f64>() / a.len() as f64
+    }
+    pub fn std(a: &[f32]) -> f64 {
+        variance(a).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul_of_transpose() {
+        let mut rng = Pcg64::seed(1);
+        let a = Mat::gaussian(7, 5, 1.0, &mut rng);
+        let b = Mat::gaussian(9, 5, 1.0, &mut rng);
+        let via_t = a.matmul_t(&b);
+        let explicit = a.matmul(&b.transpose());
+        assert!(via_t.max_abs_diff(&explicit) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Pcg64::seed(2);
+        let a = Mat::gaussian(4, 6, 1.0, &mut rng);
+        assert_eq!(a, a.transpose().transpose());
+    }
+
+    #[test]
+    fn softmax_rows_stochastic() {
+        let mut rng = Pcg64::seed(3);
+        let mut a = Mat::gaussian(10, 16, 3.0, &mut rng);
+        a.softmax_rows();
+        assert!(a.is_stochastic(1e-5));
+    }
+
+    #[test]
+    fn softmax_handles_large_scores() {
+        let mut a = Mat::from_vec(1, 3, vec![1000.0, 999.0, -1000.0]);
+        a.softmax_rows();
+        assert!(a.data().iter().all(|x| x.is_finite()));
+        assert!((a.row_sums()[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Pcg64::seed(4);
+        let a = Mat::gaussian(5, 7, 1.0, &mut rng);
+        let v: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let direct = a.matvec(&v);
+        let via_mat = a.matmul(&Mat::from_vec(7, 1, v.clone()));
+        for (i, &x) in direct.iter().enumerate() {
+            assert!((x - via_mat.get(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_t_consistency() {
+        let mut rng = Pcg64::seed(5);
+        let a = Mat::gaussian(5, 7, 1.0, &mut rng);
+        let v: Vec<f32> = (0..5).map(|i| i as f32 - 2.0).collect();
+        let direct = a.matvec_t(&v);
+        let explicit = a.transpose().matvec(&v);
+        for (x, y) in direct.iter().zip(&explicit) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mean_variance() {
+        let a = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((a.mean() - 2.5).abs() < 1e-9);
+        assert!((a.variance() - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalize_rows_sums_to_one() {
+        let mut a = Mat::from_vec(2, 3, vec![1.0, 1.0, 2.0, 3.0, 0.0, 1.0]);
+        a.normalize_rows(0.0);
+        for s in a.row_sums() {
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

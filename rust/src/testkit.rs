@@ -1,0 +1,195 @@
+//! Property-based testing mini-framework (proptest substitute).
+//!
+//! Deterministic seeded case generation with failure reporting and
+//! first-order shrinking: on failure the runner retries with "smaller"
+//! regenerated cases (halved size parameter) to report a minimal-ish
+//! reproducer seed.
+//!
+//! ```ignore
+//! check(100, |g| {
+//!     let xs = g.vec_f32(1..=64, -1.0..=1.0);
+//!     prop_assert(xs.len() <= 64, "len bound")
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Case generator handed to property bodies; all draws are deterministic
+/// in (seed, case index, size).
+pub struct Gen {
+    rng: Pcg64,
+    /// Soft upper bound used by sized generators; shrinking lowers it.
+    pub size: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, size: usize) -> Self {
+        Self { rng: Pcg64::new(seed, case), size }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Sized length: in [lo, min(hi, max(lo, size))].
+    pub fn len_in(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = self.size.max(lo).min(hi);
+        self.usize_in(lo, cap)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn gauss_f32(&mut self, std: f32) -> f32 {
+        self.rng.normal_f32(0.0, std)
+    }
+
+    pub fn vec_f32(&mut self, lo_len: usize, hi_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.len_in(lo_len, hi_len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_gauss(&mut self, lo_len: usize, hi_len: usize, std: f32) -> Vec<f32> {
+        let n = self.len_in(lo_len, hi_len);
+        (0..n).map(|_| self.gauss_f32(std)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Configuration for the property runner.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckConfig {
+    pub cases: u64,
+    pub seed: u64,
+    pub start_size: usize,
+    /// Shrink attempts after first failure (regeneration at smaller size).
+    pub shrink_rounds: usize,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        // LLN_PROP_SEED pins the run for reproduction.
+        let seed = std::env::var("LLN_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD15EA5E);
+        Self { cases: 64, seed, start_size: 64, shrink_rounds: 12 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with a reproducer on
+/// the first failure (after shrink attempts).
+pub fn check_with(config: CheckConfig, prop: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..config.cases {
+        let mut g = Gen::new(config.seed, case, config.start_size);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: re-run the same case stream at smaller sizes.
+            let mut best: (usize, String) = (config.start_size, msg);
+            let mut size = config.start_size;
+            for _ in 0..config.shrink_rounds {
+                if size <= 1 {
+                    break;
+                }
+                size /= 2;
+                let mut g2 = Gen::new(config.seed, case, size);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (size, m2);
+                }
+            }
+            panic!(
+                "property failed (seed={:#x}, case={}, size={}): {}\n  reproduce with LLN_PROP_SEED={}",
+                config.seed, case, best.0, best.1, config.seed
+            );
+        }
+    }
+}
+
+/// Run with default configuration and a given case count.
+pub fn check(cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    check_with(CheckConfig { cases, ..Default::default() }, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0u64);
+        check_with(CheckConfig { cases: 32, ..Default::default() }, |g| {
+            let _ = g.u64(0, 10);
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_reproducer() {
+        check(16, |g| {
+            let v = g.vec_f32(1, 64, 0.0, 1.0);
+            prop_assert(v.len() < 8, "vector too long")
+        });
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut a = Gen::new(1, 0, 64);
+        let mut b = Gen::new(1, 0, 64);
+        for _ in 0..32 {
+            assert_eq!(a.u64(0, 1000), b.u64(0, 1000));
+        }
+    }
+
+    #[test]
+    fn cases_are_distinct() {
+        let mut a = Gen::new(1, 0, 64);
+        let mut b = Gen::new(1, 1, 64);
+        let va: Vec<u64> = (0..8).map(|_| a.u64(0, u64::MAX - 1)).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.u64(0, u64::MAX - 1)).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check(64, |g| {
+            let x = g.f32_in(-2.0, 3.0);
+            prop_assert((-2.0..=3.0).contains(&x), format!("{x} out of range"))?;
+            let n = g.len_in(2, 50);
+            prop_assert((2..=50).contains(&n), format!("{n} out of range"))
+        });
+    }
+}

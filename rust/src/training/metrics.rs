@@ -1,0 +1,159 @@
+//! Training metrics: JSONL log writer + in-memory history (fig. 8/9
+//! curves are rendered from these records).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// One logged record (a superset of what each experiment uses).
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f64,
+    pub alpha: Option<f32>,
+    pub beta: Option<f32>,
+    pub extra: Vec<(String, f64)>,
+}
+
+/// Append-only JSONL metrics log + in-memory history.
+pub struct MetricsLog {
+    path: Option<PathBuf>,
+    pub history: Vec<Record>,
+}
+
+impl MetricsLog {
+    /// In-memory only.
+    pub fn ephemeral() -> Self {
+        Self { path: None, history: Vec::new() }
+    }
+
+    /// Backed by a JSONL file (created/truncated).
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, b"").with_context(|| format!("creating {}", path.display()))?;
+        Ok(Self { path: Some(path.to_path_buf()), history: Vec::new() })
+    }
+
+    pub fn log(&mut self, rec: Record) -> Result<()> {
+        if let Some(path) = &self.path {
+            let mut pairs = vec![
+                ("step", Json::Num(rec.step as f64)),
+                ("loss", Json::Num(rec.loss as f64)),
+                ("grad_norm", Json::Num(rec.grad_norm as f64)),
+                ("lr", Json::Num(rec.lr)),
+            ];
+            if let Some(a) = rec.alpha {
+                pairs.push(("alpha", Json::Num(a as f64)));
+            }
+            if let Some(b) = rec.beta {
+                pairs.push(("beta", Json::Num(b as f64)));
+            }
+            for (k, v) in &rec.extra {
+                pairs.push((k.as_str(), Json::Num(*v)));
+            }
+            let line = obj(pairs).to_string_compact();
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(path)
+                .with_context(|| format!("appending {}", path.display()))?;
+            writeln!(f, "{line}")?;
+        }
+        self.history.push(rec);
+        Ok(())
+    }
+
+    /// Smoothed loss curve (trailing window mean) for compact reports.
+    pub fn smoothed_loss(&self, window: usize) -> Vec<(usize, f64)> {
+        let w = window.max(1);
+        self.history
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let lo = i.saturating_sub(w - 1);
+                let slice = &self.history[lo..=i];
+                let mean = slice.iter().map(|r| r.loss as f64).sum::<f64>() / slice.len() as f64;
+                (r.step, mean)
+            })
+            .collect()
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.history.last().map(|r| r.loss)
+    }
+
+    pub fn max_grad_norm(&self) -> f64 {
+        self.history.iter().map(|r| r.grad_norm as f64).fold(0.0, f64::max)
+    }
+}
+
+/// Render an ASCII sparkline of a series (terminal loss curves).
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = values.iter().cloned().fold(f64::MIN, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let step = (values.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < values.len() && out.chars().count() < width {
+        let v = values[i as usize];
+        let idx = (((v - lo) / span) * 7.0).round() as usize;
+        out.push(BARS[idx.min(7)]);
+        i += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> Record {
+        Record { step, loss, grad_norm: 1.0, lr: 1e-3, alpha: None, beta: None, extra: vec![] }
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let tmp = std::env::temp_dir().join("lln_metrics_test.jsonl");
+        let mut log = MetricsLog::create(&tmp).unwrap();
+        log.log(Record { alpha: Some(2.1), ..rec(1, 5.0) }).unwrap();
+        log.log(rec(2, 4.5)).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("step").unwrap().as_usize(), Some(1));
+        assert!((v.get("alpha").unwrap().as_f64().unwrap() - 2.1).abs() < 1e-6);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let mut log = MetricsLog::ephemeral();
+        for (i, l) in [4.0f32, 2.0, 6.0].iter().enumerate() {
+            log.log(rec(i, *l)).unwrap();
+        }
+        let s = log.smoothed_loss(2);
+        assert!((s[0].1 - 4.0).abs() < 1e-9);
+        assert!((s[1].1 - 3.0).abs() < 1e-9);
+        assert!((s[2].1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparkline_is_width_bounded() {
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let s = sparkline(&vals, 20);
+        assert!(s.chars().count() <= 20);
+        assert!(!s.is_empty());
+    }
+}

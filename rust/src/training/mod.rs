@@ -1,0 +1,8 @@
+//! Training orchestration: the Rust-side loop around the AOT train-step
+//! executables (paper figs. 8/9 pipelines; Table 1/3/4 task training).
+
+pub mod driver;
+pub mod metrics;
+
+pub use driver::{StepTelemetry, TrainDriver};
+pub use metrics::MetricsLog;

@@ -1,0 +1,99 @@
+//! Shared utilities: JSON (manifest + metrics), bounded channels and a
+//! thread pool (tokio substitute), and timing helpers.
+
+pub mod json;
+pub mod pool;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch for coarse phase timing.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Peak resident-set size of this process in megabytes (Linux), used by
+/// the Table 2 memory column.  Falls back to the *current* RSS on
+/// kernels whose procfs lacks `VmHWM` (some container runtimes).
+pub fn peak_rss_mb() -> f64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    current_rss_mb()
+}
+
+/// Current resident-set size in megabytes.
+pub fn current_rss_mb() -> f64 {
+    if let Ok(statm) = std::fs::read_to_string("/proc/self/statm") {
+        let fields: Vec<&str> = statm.split_whitespace().collect();
+        if fields.len() > 1 {
+            if let Ok(pages) = fields[1].parse::<f64>() {
+                return pages * 4096.0 / (1024.0 * 1024.0);
+            }
+        }
+    }
+    0.0
+}
+
+/// Render a compact fixed-width table to stdout (experiment harness output).
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>width$}  ", c, width = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(current_rss_mb() > 0.0);
+        assert!(peak_rss_mb() > 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+    }
+}

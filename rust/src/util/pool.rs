@@ -1,0 +1,363 @@
+//! Bounded MPMC channel + fixed-size thread pool (tokio substitute).
+//!
+//! The coordinator's admission queue and worker pool are built on these.
+//! The channel is a mutex+condvar ring buffer: bounded (backpressure by
+//! blocking or failing fast), FIFO, multi-producer multi-consumer.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Error returned by sends on a closed or full channel.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError<T> {
+    /// Channel closed — value returned to caller.
+    Closed(T),
+    /// try_send on a full channel — value returned to caller.
+    Full(T),
+}
+
+/// Error returned by receives on a closed-and-drained channel.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded FIFO channel handle (clone freely; all clones share state).
+pub struct Channel<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State { items: VecDeque::with_capacity(capacity), closed: false }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Blocking send; waits while full.  Errors if closed.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed(item));
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; `Full` signals backpressure to the caller
+    /// (the router surfaces this as 429-style rejection).
+    pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed {
+            return Err(SendError::Closed(item));
+        }
+        if st.items.len() >= self.inner.capacity {
+            return Err(SendError::Full(item));
+        }
+        st.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; `Err` only when closed AND drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(RecvError);
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with timeout; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<T>, RecvError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed {
+                return Err(RecvError);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return Err(RecvError);
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batcher fill path).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let take = st.items.len().min(max);
+        let out: Vec<T> = st.items.drain(..take).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Close: senders fail, receivers drain then fail.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+/// Fixed-size thread pool executing boxed jobs.
+pub struct ThreadPool {
+    tx: Channel<Job>,
+    handles: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads > 0);
+        let tx: Channel<Job> = Channel::bounded(threads * 64);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = tx.clone();
+            let sd = Arc::clone(&shutdown);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while !sd.load(Ordering::Relaxed) {
+                            match rx.recv() {
+                                Ok(job) => job(),
+                                Err(RecvError) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx, handles, shutdown }
+    }
+
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Box::new(job)).ok();
+    }
+
+    /// Graceful shutdown: drain queued jobs, then join workers.
+    pub fn shutdown(mut self) {
+        self.tx.close();
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.tx.close();
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+/// Run a closure over a range in parallel chunks using scoped threads
+/// (simple data-parallel helper for the native analysis paths).
+pub fn parallel_for_chunks(total: usize, num_threads: usize, f: impl Fn(usize, usize) + Sync) {
+    if total == 0 {
+        return;
+    }
+    let threads = num_threads.max(1).min(total);
+    let chunk = total.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let f = &f;
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(total);
+            if lo < hi {
+                scope.spawn(move || f(lo, hi));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let ch = Channel::bounded(8);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(ch.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn try_send_full_backpressure() {
+        let ch = Channel::bounded(2);
+        ch.try_send(1).unwrap();
+        ch.try_send(2).unwrap();
+        assert_eq!(ch.try_send(3), Err(SendError::Full(3)));
+        ch.recv().unwrap();
+        ch.try_send(3).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let ch = Channel::bounded(4);
+        ch.send(10).unwrap();
+        ch.close();
+        assert_eq!(ch.send(11), Err(SendError::Closed(11)));
+        assert_eq!(ch.recv(), Ok(10));
+        assert_eq!(ch.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let ch: Channel<usize> = Channel::bounded(16);
+        let n_items = 4000usize;
+        let seen = Arc::new(Mutex::new(vec![0u8; n_items]));
+        std::thread::scope(|s| {
+            for p in 0..4 {
+                let tx = ch.clone();
+                s.spawn(move || {
+                    for i in (p..n_items).step_by(4) {
+                        tx.send(i).unwrap();
+                    }
+                });
+            }
+            let done = Arc::new(AtomicUsize::new(0));
+            for _ in 0..3 {
+                let rx = ch.clone();
+                let seen = Arc::clone(&seen);
+                let done = Arc::clone(&done);
+                s.spawn(move || loop {
+                    match rx.recv_timeout(Duration::from_millis(200)).unwrap_or(None) {
+                        Some(i) => {
+                            seen.lock().unwrap()[i] += 1;
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            if done.load(Ordering::Relaxed) >= n_items {
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let seen = seen.lock().unwrap();
+        assert!(seen.iter().all(|&c| c == 1), "loss or duplication detected");
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let ch = Channel::bounded(8);
+        for i in 0..6 {
+            ch.send(i).unwrap();
+        }
+        assert_eq!(ch.drain_up_to(4), vec![0, 1, 2, 3]);
+        assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        let got = ch.recv_timeout(Duration::from_millis(20)).unwrap();
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn thread_pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(4, "test");
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.shutdown();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let hits = Arc::new(Mutex::new(vec![0u8; 103]));
+        parallel_for_chunks(103, 5, |lo, hi| {
+            let mut h = hits.lock().unwrap();
+            for i in lo..hi {
+                h[i] += 1;
+            }
+        });
+        assert!(hits.lock().unwrap().iter().all(|&c| c == 1));
+    }
+}

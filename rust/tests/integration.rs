@@ -1,0 +1,265 @@
+//! Cross-layer integration tests: AOT artifacts x runtime x training x
+//! coordinator.  All tests skip gracefully when `artifacts/` is absent
+//! (`make test` builds artifacts first, so CI always exercises them).
+
+use lln::attention;
+use lln::data::{special, tasks::GlueGen, Corpus, GlueTask};
+use lln::rng::Pcg64;
+use lln::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
+use lln::tensor::Mat;
+use lln::training::driver::{accuracy_from_logits, TrainDriver};
+
+fn engine() -> Option<(Engine, std::path::PathBuf)> {
+    let dir = artifacts_dir(None);
+    if !artifacts_available(&dir) {
+        eprintln!("skipping integration test: run `make artifacts`");
+        return None;
+    }
+    Some((Engine::new(&dir).unwrap(), dir))
+}
+
+#[test]
+fn every_micro_kernel_matches_native_reference() {
+    let Some((mut eng, _dir)) = engine() else { return };
+    let mut rng = Pcg64::seed(99);
+    let (n, d) = (256usize, 64usize);
+    let q = Mat::gaussian(n, d, 1.0, &mut rng);
+    let k = Mat::gaussian(n, d, 1.0, &mut rng);
+    let v = Mat::gaussian(n, d, 1.0, &mut rng);
+    let t = |m: &Mat| HostTensor::from_mat(m);
+
+    // (artifact, native) pairs — the full cross-layer correctness sweep.
+    let lln_native = attention::lln_attention(&q, &k, &v, 2.0, 2.0);
+    let cases: Vec<(&str, Mat, Vec<HostTensor>)> = vec![
+        (
+            "attn_softmax_n256",
+            attention::softmax_attention(&q, &k, &v),
+            vec![t(&q), t(&k), t(&v)],
+        ),
+        (
+            "attn_lln_n256",
+            lln_native.clone(),
+            vec![t(&q), t(&k), t(&v), HostTensor::scalar_f32(2.0), HostTensor::scalar_f32(2.0)],
+        ),
+        (
+            "attn_lln_diag_n256",
+            attention::lln_diag_attention(&q, &k, &v, 2.0, 2.0, 64),
+            vec![t(&q), t(&k), t(&v), HostTensor::scalar_f32(2.0), HostTensor::scalar_f32(2.0)],
+        ),
+        ("attn_elu_n256", attention::elu_attention(&q, &k, &v), vec![t(&q), t(&k), t(&v)]),
+        (
+            "attn_nystrom_n256",
+            attention::nystrom_attention(&q, &k, &v, 32),
+            vec![t(&q), t(&k), t(&v)],
+        ),
+    ];
+    for (name, native, inputs) in cases {
+        let out = eng.execute(name, &inputs).unwrap();
+        let got = out[0].to_mat().unwrap();
+        let err = got.max_abs_diff(&native);
+        assert!(err < 5e-3, "{name}: PJRT vs native max|diff| = {err}");
+    }
+}
+
+#[test]
+fn linear_kernels_scale_to_16k_tokens() {
+    let Some((mut eng, _dir)) = engine() else { return };
+    let (n, d) = (16384usize, 64usize);
+    let mut rng = Pcg64::seed(3);
+    let mk = |rng: &mut Pcg64| HostTensor::F32 {
+        shape: vec![n, d],
+        data: (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    };
+    let inputs = vec![
+        mk(&mut rng),
+        mk(&mut rng),
+        mk(&mut rng),
+        HostTensor::scalar_f32(2.2),
+        HostTensor::scalar_f32(2.2),
+    ];
+    let out = eng.execute("attn_lln_n16384", &inputs).unwrap();
+    let data = out[0].as_f32().unwrap();
+    assert_eq!(data.len(), n * d);
+    assert!(data.iter().all(|x| x.is_finite()));
+    // The softmax kernel at this length is intentionally absent (Table 2's OOM).
+    assert!(eng.manifest().artifact("attn_softmax_n16384").is_err());
+}
+
+#[test]
+fn glue_training_beats_chance_quickly() {
+    let Some((mut eng, dir)) = engine() else { return };
+    // SST2-like is the easiest task: ~80 steps separate it cleanly.
+    let mut driver = TrainDriver::new(&eng, &dir, "train_glue_lln_diag").unwrap();
+    let mut tg = GlueGen::new(GlueTask::Sst2, 512, 128, 5);
+    for step in 0..140 {
+        let b = tg.batch(16);
+        let lr = if step < 8 { 2e-4 * (step + 1) as f64 } else { 1.5e-3 };
+        let out = driver
+            .step(
+                &mut eng,
+                lr,
+                &[
+                    HostTensor::I32 { shape: vec![16, 128], data: b.tokens },
+                    HostTensor::I32 { shape: vec![16], data: b.labels },
+                ],
+            )
+            .unwrap();
+        if step % 35 == 0 {
+            eprintln!("  step {step}: loss {:.4} gnorm {:.3}", out.loss, out.grad_norm);
+        }
+    }
+    // Also measure on the *training* stream to separate train-path from
+    // eval-path problems.
+    let mut train_acc = 0.0;
+    for _ in 0..4 {
+        let b = tg.batch(16);
+        let outs = driver
+            .eval(&mut eng, &[HostTensor::I32 { shape: vec![16, 128], data: b.tokens.clone() }])
+            .unwrap();
+        let logits = outs[0].as_f32().unwrap();
+        train_acc += accuracy_from_logits(logits, &b.labels, 4);
+    }
+    eprintln!("  train-dist acc: {:.3}", train_acc / 4.0);
+    let mut eg = GlueGen::new(GlueTask::Sst2, 512, 128, 77);
+    let mut acc_sum = 0.0;
+    for _ in 0..8 {
+        let b = eg.batch(16);
+        let outs = driver
+            .eval(&mut eng, &[HostTensor::I32 { shape: vec![16, 128], data: b.tokens }])
+            .unwrap();
+        acc_sum += accuracy_from_logits(outs[0].as_f32().unwrap(), &b.labels, 4);
+    }
+    let acc = acc_sum / 8.0;
+    assert!(acc > 0.75, "LLN+Diag should learn SST2-like fast; got {acc}");
+}
+
+#[test]
+fn mlm_eval_loss_decreases_on_held_out_data() {
+    let Some((mut eng, dir)) = engine() else { return };
+    let mut driver = TrainDriver::new(&eng, &dir, "train_tinymlm_softmax").unwrap();
+    let mut corpus = Corpus::new(512, 11);
+    let mut heldout = Corpus::new(512, 12);
+    let eval_b = heldout.mlm_batch(4, 128, 0.15);
+    let eval_data = [
+        HostTensor::I32 { shape: vec![4, 128], data: eval_b.tokens.clone() },
+        HostTensor::I32 { shape: vec![4, 128], data: eval_b.labels.clone() },
+        HostTensor::F32 { shape: vec![4, 128], data: eval_b.weights.clone() },
+    ];
+    let loss_before = driver.eval(&mut eng, &eval_data).unwrap()[0].first_f32().unwrap();
+    for _ in 0..15 {
+        let b = corpus.mlm_batch(4, 128, 0.15);
+        driver
+            .step(
+                &mut eng,
+                3e-3,
+                &[
+                    HostTensor::I32 { shape: vec![4, 128], data: b.tokens },
+                    HostTensor::I32 { shape: vec![4, 128], data: b.labels },
+                    HostTensor::F32 { shape: vec![4, 128], data: b.weights },
+                ],
+            )
+            .unwrap();
+    }
+    let loss_after = driver.eval(&mut eng, &eval_data).unwrap()[0].first_f32().unwrap();
+    assert!(
+        loss_after < loss_before - 0.2,
+        "held-out loss should drop: {loss_before} -> {loss_after}"
+    );
+}
+
+#[test]
+fn checkpoint_restores_exact_eval_behaviour() {
+    let Some((mut eng, dir)) = engine() else { return };
+    let mut driver = TrainDriver::new(&eng, &dir, "train_tinymlm_elu").unwrap();
+    let mut corpus = Corpus::new(512, 21);
+    for _ in 0..3 {
+        let b = corpus.mlm_batch(4, 128, 0.15);
+        driver
+            .step(
+                &mut eng,
+                1e-3,
+                &[
+                    HostTensor::I32 { shape: vec![4, 128], data: b.tokens },
+                    HostTensor::I32 { shape: vec![4, 128], data: b.labels },
+                    HostTensor::F32 { shape: vec![4, 128], data: b.weights },
+                ],
+            )
+            .unwrap();
+    }
+    let eval_b = corpus.mlm_batch(4, 128, 0.15);
+    let eval_data = [
+        HostTensor::I32 { shape: vec![4, 128], data: eval_b.tokens },
+        HostTensor::I32 { shape: vec![4, 128], data: eval_b.labels },
+        HostTensor::F32 { shape: vec![4, 128], data: eval_b.weights },
+    ];
+    let loss1 = driver.eval(&mut eng, &eval_data).unwrap()[0].first_f32().unwrap();
+    let ckpt = std::env::temp_dir().join("lln_integ_ckpt.bin");
+    driver.save_checkpoint(&ckpt).unwrap();
+    // Fresh driver + restore -> identical eval loss.
+    let mut driver2 = TrainDriver::new(&eng, &dir, "train_tinymlm_elu").unwrap();
+    driver2.params_mut().load_checkpoint(&ckpt).unwrap();
+    let loss2 = driver2.eval(&mut eng, &eval_data).unwrap()[0].first_f32().unwrap();
+    assert!((loss1 - loss2).abs() < 1e-5, "{loss1} vs {loss2}");
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn probe_artifact_feeds_analysis_instruments() {
+    let Some((mut eng, dir)) = engine() else { return };
+    let driver = TrainDriver::new(&eng, &dir, "train_mlm_softmax").unwrap();
+    let mut corpus = Corpus::new(8192, 31);
+    let tokens = corpus.mlm_batch(2, 128, 0.0).labels;
+    let mut inputs = driver.params().to_literals().unwrap();
+    inputs.push(
+        HostTensor::I32 { shape: vec![2, 128], data: tokens }.to_literal().unwrap(),
+    );
+    let outs = eng.execute_literals("probe_softmax", &inputs).unwrap();
+    let mats = outs[0].to_vec::<f32>().unwrap();
+    let n = 128;
+    // Each layer's matrix must be row-stochastic.
+    for l in 0..4 {
+        let m = Mat::from_vec(n, n, mats[l * n * n..(l + 1) * n * n].to_vec());
+        assert!(m.is_stochastic(1e-3), "layer {l} not stochastic");
+        let h = lln::stats::attention_entropy(&m);
+        assert!(h > 0.0 && h <= (n as f64).log2() + 1e-6);
+        let gap = lln::linalg::spectral_gap(&m, 300, 1e-8).gap;
+        assert!((0.0..=1.0).contains(&gap));
+    }
+}
+
+#[test]
+fn serve_and_train_agree_on_params_schema() {
+    let Some((eng, _dir)) = engine() else { return };
+    // Every serve artifact's parameter inputs must match its model schema
+    // in order and count — the worker relies on this blindly.
+    for (name, spec) in &eng.manifest().artifacts {
+        if !name.starts_with("serve_") {
+            continue;
+        }
+        let model = eng.manifest().model(spec.meta.get("model").unwrap()).unwrap();
+        let param_inputs: Vec<&str> = spec
+            .inputs
+            .iter()
+            .filter(|i| i.is_param())
+            .map(|i| i.name.as_str())
+            .collect();
+        let expected: Vec<String> =
+            model.param_order.iter().map(|p| format!("p:{p}")).collect();
+        assert_eq!(
+            param_inputs,
+            expected.iter().map(String::as_str).collect::<Vec<_>>(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn tokenizer_special_ids_consistent_with_generators() {
+    // The serving path pads with PAD=0; generators must never emit
+    // negative or out-of-range ids.
+    let mut g = GlueGen::new(GlueTask::Nli, 512, 128, 3);
+    for _ in 0..20 {
+        let (t, _) = g.example();
+        assert!(t.iter().all(|&x| x >= special::PAD && (x as usize) < 512));
+    }
+}
