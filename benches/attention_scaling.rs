@@ -1,22 +1,54 @@
-//! Bench: paper Table 2 — time per attention forward vs sequence length,
-//! through the AOT PJRT kernels.  `cargo bench --bench attention_scaling`.
+//! Bench: paper Table 2 — time per attention forward vs sequence length.
+//!
+//! Section 1 runs the native `AttentionBackend` registry (always
+//! available); section 2 runs the AOT PJRT kernels when artifacts are
+//! built.  `cargo bench --bench attention_scaling`.
 
-use lln::bench::Bench;
+use lln::attention::{backend_for, BackendParams, Method};
+use lln::bench::{run_attention_backend, Bench};
 use lln::rng::Pcg64;
 use lln::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
+use lln::tensor::default_threads;
 
 fn main() {
-    let dir = artifacts_dir(None);
-    if !artifacts_available(&dir) {
-        println!("artifacts not built — run `make artifacts` first; skipping");
-        return;
-    }
-    let mut engine = Engine::new(&dir).expect("engine");
-    let mut rng = Pcg64::seed(0);
     let d = 64usize;
     let mut b = Bench::new();
 
-    println!("== Table 2 bench: AOT attention kernels (PJRT CPU, d={d}) ==");
+    println!(
+        "== Table 2 bench (native backends, d={d}, {} worker threads) ==",
+        default_threads()
+    );
+    for method in [Method::Softmax, Method::Lln, Method::LlnDiag, Method::Elu, Method::Nystrom] {
+        for n in [256usize, 1024, 4096] {
+            if !method.is_linear() && n > 1024 {
+                println!("backend {} n={n:<24} --- (skipped: quadratic regime)", method.name());
+                continue;
+            }
+            let bk = backend_for(
+                method,
+                BackendParams { alpha: 2.2, beta: 2.2, ..Default::default() },
+            );
+            let mean = run_attention_backend(&mut b, bk.as_ref(), n, d, n as u64);
+            let gflops = bk.flops_model(n, d) / mean / 1e9;
+            println!("    model: {:.1} GFLOP/s effective", gflops);
+        }
+    }
+
+    let dir = artifacts_dir(None);
+    if !artifacts_available(&dir) {
+        println!("\nartifacts not built — skipping the PJRT (AOT kernel) section");
+        return;
+    }
+    let mut engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("\nPJRT engine unavailable ({e:#}) — skipping the AOT kernel section");
+            return;
+        }
+    };
+    let mut rng = Pcg64::seed(0);
+
+    println!("\n== Table 2 bench: AOT attention kernels (PJRT CPU, d={d}) ==");
     for method in ["softmax", "lln", "lln_diag", "elu", "performer", "nystrom"] {
         for n in [256usize, 1024, 4096, 8192, 16384] {
             let name = format!("attn_{method}_n{n}");

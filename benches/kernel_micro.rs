@@ -1,32 +1,90 @@
 //! Bench: native Rust attention kernels (the analysis hot path) across
 //! methods and sequence lengths — tracks the §Perf L3-native numbers.
+//!
+//! Two tiers per method:
+//!   * scalar reference — the single-threaded `attention::kernels` free
+//!     functions (what the parity suite pins everything against);
+//!   * backend hot path — the `AttentionBackend` registry's blocked,
+//!     multi-threaded / chunk-streamed implementations.
+//! The speedup lines at the end are the acceptance signal for the
+//! parallel-backend work: blocked+threaded softmax and LLN forward must
+//! beat the scalar baseline at n=1024, d=64.
 
-use lln::attention as att;
-use lln::bench::Bench;
+use lln::attention::{self as att, backend_for, BackendParams, Method};
+use lln::bench::{run_attention_backend, Bench};
 use lln::rng::Pcg64;
-use lln::tensor::Mat;
+use lln::tensor::{default_threads, Mat};
 
 fn main() {
     let d = 64usize;
+    let threads = default_threads();
     let mut rng = Pcg64::seed(1);
     let mut b = Bench::new();
 
-    println!("== native attention kernels (d={d}) ==");
-    for n in [256usize, 1024, 4096] {
+    println!("== native attention kernels (d={d}, {threads} worker threads) ==");
+    let mut speedups: Vec<(String, usize, f64)> = Vec::new();
+    for n in [256usize, 1024] {
         let q = Mat::gaussian(n, d, 1.0, &mut rng);
         let k = Mat::gaussian(n, d, 1.0, &mut rng);
         let v = Mat::gaussian(n, d, 1.0, &mut rng);
-        b.run(&format!("native softmax n={n}"), n as f64, || att::softmax_attention(&q, &k, &v));
-        b.run(&format!("native lln n={n}"), n as f64, || att::lln_attention(&q, &k, &v, 2.2, 2.2));
-        b.run(&format!("native lln_diag n={n}"), n as f64, || {
-            att::lln_diag_attention(&q, &k, &v, 2.2, 2.2, 64)
-        });
-        b.run(&format!("native elu n={n}"), n as f64, || att::elu_attention(&q, &k, &v));
+
+        let t_sm_scalar =
+            b.run(&format!("scalar softmax n={n}"), n as f64, || att::softmax_attention(&q, &k, &v))
+                .mean();
+        let sm = backend_for(Method::Softmax, BackendParams::default());
+        let t_sm_backend = run_attention_backend(&mut b, sm.as_ref(), n, d, 2);
+        speedups.push(("softmax".into(), n, t_sm_scalar / t_sm_backend));
+
+        let t_lln_scalar =
+            b.run(&format!("scalar lln n={n}"), n as f64, || att::lln_attention(&q, &k, &v, 2.2, 2.2))
+                .mean();
+        let lln = backend_for(
+            Method::Lln,
+            BackendParams { alpha: 2.2, beta: 2.2, ..Default::default() },
+        );
+        let t_lln_backend = run_attention_backend(&mut b, lln.as_ref(), n, d, 3);
+        speedups.push(("lln".into(), n, t_lln_scalar / t_lln_backend));
+
+        let t_diag_scalar = b
+            .run(&format!("scalar lln_diag n={n}"), n as f64, || {
+                att::lln_diag_attention(&q, &k, &v, 2.2, 2.2, 64)
+            })
+            .mean();
+        let diag = backend_for(
+            Method::LlnDiag,
+            BackendParams { alpha: 2.2, beta: 2.2, ..Default::default() },
+        );
+        let t_diag_backend = run_attention_backend(&mut b, diag.as_ref(), n, d, 4);
+        speedups.push(("lln_diag".into(), n, t_diag_scalar / t_diag_backend));
+
+        b.run(&format!("scalar elu n={n}"), n as f64, || att::elu_attention(&q, &k, &v));
+        run_attention_backend(&mut b, att::default_backend(Method::Elu).as_ref(), n, d, 5);
         if n <= 1024 {
-            b.run(&format!("native nystrom n={n}"), n as f64, || {
+            b.run(&format!("scalar nystrom n={n}"), n as f64, || {
                 att::nystrom_attention(&q, &k, &v, 32)
             });
         }
+    }
+
+    println!("\n== tensor substrate: scalar vs blocked+threaded ==");
+    for n in [512usize, 1024] {
+        let a = Mat::gaussian(n, d, 1.0, &mut rng);
+        let c = Mat::gaussian(n, d, 1.0, &mut rng);
+        b.run(&format!("scalar matmul_t {n}x{d}"), 2.0 * (n * n * d) as f64, || a.matmul_t(&c));
+        b.run(&format!("par    matmul_t {n}x{d}"), 2.0 * (n * n * d) as f64, || {
+            a.par_matmul_t(&c, 0)
+        });
+        let p = Mat::gaussian(n, n, 1.0, &mut rng);
+        b.run(&format!("scalar softmax_rows {n}x{n}"), (n * n) as f64, || {
+            let mut s = p.clone();
+            s.softmax_rows();
+            s
+        });
+        b.run(&format!("par    softmax_rows {n}x{n}"), (n * n) as f64, || {
+            let mut s = p.clone();
+            s.par_softmax_rows(0);
+            s
+        });
     }
 
     println!("\n== analysis instruments (N x N stochastic matrices) ==");
@@ -37,5 +95,19 @@ fn main() {
         b.run(&format!("entropy n={n}"), 1.0, || lln::stats::attention_entropy(&p));
         b.run(&format!("spectral_gap n={n}"), 1.0, || lln::linalg::spectral_gap(&p, 400, 1e-8));
         b.run(&format!("log_variance n={n}"), 1.0, || lln::stats::log_variance(&p, 1e-30));
+    }
+
+    println!("\n== backend vs scalar speedups ==");
+    let mut ok = true;
+    for (name, n, s) in &speedups {
+        println!("speedup {name:<10} n={n:<5} {s:.2}x (blocked+threaded backend vs scalar)");
+        if *n == 1024 && (name == "softmax" || name == "lln") && *s <= 1.0 {
+            ok = false;
+        }
+    }
+    if ok {
+        println!("PASS: blocked+threaded softmax and LLN beat the scalar baseline at n=1024");
+    } else {
+        println!("WARN: backend slower than scalar at n=1024 — check LLN_THREADS / core count");
     }
 }

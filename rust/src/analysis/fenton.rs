@@ -13,6 +13,26 @@ pub fn fenton_sigma2(s2: f64, d: usize) -> f64 {
     (((s2.exp() - 1.0) / d as f64) + 1.0).ln()
 }
 
+/// Fenton–Wilkinson moment matching: the log-normal LN(mu_s, s2_s)
+/// whose first two moments equal those of a sum of `d` iid LN(mu, s2)
+/// variables *exactly* (that equality is the construction — the
+/// approximation is only in pretending the sum is log-normal at all).
+/// Returns `(mu_s, s2_s)`.
+pub fn fenton_wilkinson_fit(mu: f64, s2: f64, d: usize) -> (f64, f64) {
+    let mean = d as f64 * (mu + 0.5 * s2).exp();
+    let var = d as f64 * (s2.exp() - 1.0) * (2.0 * mu + s2).exp();
+    let s2_s = (1.0 + var / (mean * mean)).ln();
+    let mu_s = mean.ln() - 0.5 * s2_s;
+    (mu_s, s2_s)
+}
+
+/// First two moments (mean, variance) of LN(mu, s2).
+pub fn lognormal_moments(mu: f64, s2: f64) -> (f64, f64) {
+    let mean = (mu + 0.5 * s2).exp();
+    let var = (s2.exp() - 1.0) * (2.0 * mu + s2).exp();
+    (mean, var)
+}
+
 /// Empirical var(log sum_d exp(N(0, s2))) over `trials` Monte-Carlo draws.
 pub fn lognormal_sum_variance(s2: f64, d: usize, trials: usize, seed: u64) -> f64 {
     let sigma = s2.sqrt();
@@ -90,5 +110,65 @@ mod tests {
         let few = lognormal_sum_variance(1.0, 8, 4000, 3);
         let many = lognormal_sum_variance(1.0, 256, 4000, 3);
         assert!(many < few, "few={few} many={many}");
+    }
+
+    #[test]
+    fn fenton_wilkinson_preserves_mean_and_variance_analytically() {
+        // FW is *defined* by moment preservation: the fitted log-normal's
+        // first two moments must equal the sum's exactly.
+        for (mu, s2, d) in [(0.0, 0.5, 16), (-0.5, 1.0, 64), (1.0, 0.25, 8), (-2.0, 2.0, 128)] {
+            let (mu_s, s2_s) = fenton_wilkinson_fit(mu, s2, d);
+            let (fit_mean, fit_var) = lognormal_moments(mu_s, s2_s);
+            let (one_mean, one_var) = lognormal_moments(mu, s2);
+            let (sum_mean, sum_var) = (d as f64 * one_mean, d as f64 * one_var);
+            assert!(
+                (fit_mean - sum_mean).abs() / sum_mean < 1e-10,
+                "mean drift: {fit_mean} vs {sum_mean} (mu={mu} s2={s2} d={d})"
+            );
+            assert!(
+                (fit_var - sum_var).abs() / sum_var < 1e-10,
+                "variance drift: {fit_var} vs {sum_var} (mu={mu} s2={s2} d={d})"
+            );
+        }
+    }
+
+    #[test]
+    fn fenton_wilkinson_reduces_to_fenton_sigma2_at_zero_mean() {
+        for (s2, d) in [(0.2, 8), (0.8, 64), (1.2, 256)] {
+            let (_, s2_s) = fenton_wilkinson_fit(0.0, s2, d);
+            let direct = fenton_sigma2(s2, d);
+            assert!((s2_s - direct).abs() < 1e-12, "{s2_s} vs {direct}");
+        }
+    }
+
+    #[test]
+    fn fenton_wilkinson_matches_monte_carlo_samples() {
+        // Empirical mean/variance of actual log-normal sums match the FW
+        // target moments (tolerances calibrated at ~4x the sampling
+        // noise for 40k trials).
+        let (mu, s2, d, trials) = (-0.5, 0.5, 32usize, 40_000usize);
+        let sigma = s2.sqrt();
+        let mut rng = Pcg64::seed(17);
+        let mut sums = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let mut s = 0.0f64;
+            for _ in 0..d {
+                s += (mu + sigma * rng.gauss()).exp();
+            }
+            sums.push(s);
+        }
+        let emp_mean = sums.iter().sum::<f64>() / trials as f64;
+        let emp_var =
+            sums.iter().map(|&x| (x - emp_mean) * (x - emp_mean)).sum::<f64>() / trials as f64;
+        let (mu_s, s2_s) = fenton_wilkinson_fit(mu, s2, d);
+        let (fw_mean, fw_var) = lognormal_moments(mu_s, s2_s);
+        assert!((emp_mean - fw_mean).abs() / fw_mean < 0.01, "mean {emp_mean} vs {fw_mean}");
+        assert!((emp_var - fw_var).abs() / fw_var < 0.06, "var {emp_var} vs {fw_var}");
+        // And the log-domain parameters track the FW fit (moderate regime).
+        let logs: Vec<f64> = sums.iter().map(|&x| x.ln()).collect();
+        let lmu = logs.iter().sum::<f64>() / trials as f64;
+        let lvar = logs.iter().map(|&x| (x - lmu) * (x - lmu)).sum::<f64>() / trials as f64;
+        assert!((lmu - mu_s).abs() < 0.01, "log-mean {lmu} vs {mu_s}");
+        assert!((lvar - s2_s).abs() / s2_s < 0.08, "log-var {lvar} vs {s2_s}");
     }
 }

@@ -62,6 +62,115 @@ pub fn linear_attention_matrix(phi_q: &Mat, phi_k: &Mat) -> Mat {
     p
 }
 
+/// Chunked O(N) *streaming* formulation of linearized attention — the
+/// backend hot path.  The (m, dv) KV state and the (m,) normalizer are
+/// accumulated exactly once over key/value row-chunks (never
+/// materialized per query row), with per-thread partials merged at the
+/// chunk barrier; query rows then read the shared state back in
+/// parallel.  Matches [`linear_attention`] up to f32 summation order.
+///
+/// `chunk` is the thread work-partition granularity: key/value rows are
+/// handed to workers in multiples of `chunk` (0 = 128).  It does not
+/// change memory use or per-partition summation order — only how the
+/// row range splits across workers.  `threads` is the scoped-worker
+/// count (0 = auto).
+pub fn linear_attention_streamed(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    chunk: usize,
+    threads: usize,
+) -> Mat {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_k.rows(), v.rows(), "key/value row mismatch");
+    let (nq, m) = phi_q.shape();
+    let nk = phi_k.rows();
+    let dv = v.cols();
+    let chunk = if chunk == 0 { 128 } else { chunk };
+    let threads = if threads == 0 { crate::tensor::default_threads() } else { threads };
+    let mut out = Mat::zeros(nq, dv);
+    if nq == 0 || dv == 0 {
+        return out;
+    }
+
+    // Phase 1: stream key/value chunks into per-thread (kv, z) partials.
+    let n_chunks = nk.div_ceil(chunk).max(1);
+    let t1 = threads.max(1).min(n_chunks);
+    let chunks_per = n_chunks.div_ceil(t1);
+    let mut kv = vec![0.0f32; m * dv];
+    let mut z = vec![0.0f32; m];
+    let partials: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for ti in 0..t1 {
+            let lo = ti * chunks_per * chunk;
+            let hi = ((ti + 1) * chunks_per * chunk).min(nk);
+            if lo >= hi {
+                continue;
+            }
+            handles.push(scope.spawn(move || {
+                let mut kv_p = vec![0.0f32; m * dv];
+                let mut z_p = vec![0.0f32; m];
+                for i in lo..hi {
+                    let krow = phi_k.row(i);
+                    let vrow = v.row(i);
+                    for (f, &kf) in krow.iter().enumerate() {
+                        z_p[f] += kf;
+                        if kf != 0.0 {
+                            let dst = &mut kv_p[f * dv..(f + 1) * dv];
+                            for (o, &vv) in dst.iter_mut().zip(vrow) {
+                                *o += kf * vv;
+                            }
+                        }
+                    }
+                }
+                (kv_p, z_p)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (kv_p, z_p) in partials {
+        for (a, b) in kv.iter_mut().zip(&kv_p) {
+            *a += b;
+        }
+        for (a, b) in z.iter_mut().zip(&z_p) {
+            *a += b;
+        }
+    }
+
+    // Phase 2: query rows read the shared state back, in parallel.
+    let t2 = threads.max(1).min(nq);
+    let rows_per = nq.div_ceil(t2);
+    let kv_ref = kv.as_slice();
+    let z_ref = z.as_slice();
+    std::thread::scope(|scope| {
+        for (ti, chunk_rows) in out.data_mut().chunks_mut(rows_per * dv).enumerate() {
+            let row0 = ti * rows_per;
+            scope.spawn(move || {
+                let rows_here = chunk_rows.len() / dv;
+                for i in 0..rows_here {
+                    let qrow = phi_q.row(row0 + i);
+                    let orow = &mut chunk_rows[i * dv..(i + 1) * dv];
+                    let mut den = 0.0f32;
+                    for (f, &qf) in qrow.iter().enumerate() {
+                        den += qf * z_ref[f];
+                        if qf != 0.0 {
+                            let krow = &kv_ref[f * dv..(f + 1) * dv];
+                            for (o, &kvv) in orow.iter_mut().zip(krow) {
+                                *o += qf * kvv;
+                            }
+                        }
+                    }
+                    let inv = 1.0 / (den + EPS);
+                    for o in orow.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
 // ---------------------------------------------------------------------------
 // LLN attention (paper eq. 8-9)
 // ---------------------------------------------------------------------------
@@ -76,6 +185,19 @@ pub fn lln_attention(q: &Mat, k: &Mat, v: &Mat, alpha: f32, beta: f32) -> Mat {
 
 pub fn lln_attention_matrix(q: &Mat, k: &Mat, alpha: f32, beta: f32) -> Mat {
     linear_attention_matrix(&lln_features(q, alpha), &lln_features(k, beta))
+}
+
+/// Streaming-chunked LLN forward (the [`super::backend`] hot path).
+pub fn lln_attention_streamed(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    alpha: f32,
+    beta: f32,
+    chunk: usize,
+    threads: usize,
+) -> Mat {
+    linear_attention_streamed(&lln_features(q, alpha), &lln_features(k, beta), v, chunk, threads)
 }
 
 // ---------------------------------------------------------------------------
@@ -209,24 +331,32 @@ pub fn nystrom_attention(q: &Mat, k: &Mat, v: &Mat, landmarks: usize) -> Mat {
 // Block-diagonal + LLN+Diag (paper sec. 4.2)
 // ---------------------------------------------------------------------------
 
+/// One diagonal tile's row-stochastic softmax scores: the shared kernel
+/// of [`blockdiag_attention`], [`par_blockdiag_attention`], and
+/// [`blockdiag_attention_matrix`] (keep them numerically identical).
+fn softmax_tile(q: &Mat, k: &Mat, b0: usize, block: usize, scale: f32) -> Mat {
+    let d = q.cols();
+    let mut s = Mat::zeros(block, block);
+    for i in 0..block {
+        for j in 0..block {
+            let mut acc = 0.0f32;
+            for t in 0..d {
+                acc += q.get(b0 + i, t) * k.get(b0 + j, t);
+            }
+            s.set(i, j, acc * scale);
+        }
+    }
+    s.softmax_rows();
+    s
+}
+
 pub fn blockdiag_attention(q: &Mat, k: &Mat, v: &Mat, block: usize) -> Mat {
     let (n, d) = q.shape();
     assert!(n % block == 0, "N must divide block size");
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Mat::zeros(n, v.cols());
     for b0 in (0..n).step_by(block) {
-        // scores over the diagonal tile only
-        let mut s = Mat::zeros(block, block);
-        for i in 0..block {
-            for j in 0..block {
-                let mut acc = 0.0f32;
-                for t in 0..d {
-                    acc += q.get(b0 + i, t) * k.get(b0 + j, t);
-                }
-                s.set(i, j, acc * scale);
-            }
-        }
-        s.softmax_rows();
+        let s = softmax_tile(q, k, b0, block, scale);
         for i in 0..block {
             for j in 0..block {
                 let p = s.get(i, j);
@@ -238,6 +368,66 @@ pub fn blockdiag_attention(q: &Mat, k: &Mat, v: &Mat, block: usize) -> Mat {
         }
     }
     out
+}
+
+/// Block-diagonal attention with the independent diagonal tiles
+/// partitioned across `threads` scoped workers (0 = auto).
+pub fn par_blockdiag_attention(q: &Mat, k: &Mat, v: &Mat, block: usize, threads: usize) -> Mat {
+    let (n, d) = q.shape();
+    assert!(n % block == 0, "N must divide block size");
+    let dv = v.cols();
+    let tiles = n / block;
+    let threads = if threads == 0 { crate::tensor::default_threads() } else { threads };
+    let t = threads.max(1).min(tiles.max(1));
+    if t <= 1 || n == 0 || dv == 0 {
+        return blockdiag_attention(q, k, v, block);
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let tiles_per = tiles.div_ceil(t);
+    let mut out = Mat::zeros(n, dv);
+    std::thread::scope(|scope| {
+        for (gi, group) in out.data_mut().chunks_mut(tiles_per * block * dv).enumerate() {
+            let tile0 = gi * tiles_per;
+            scope.spawn(move || {
+                let tiles_here = group.len() / (block * dv);
+                for ti in 0..tiles_here {
+                    let b0 = (tile0 + ti) * block;
+                    let s = softmax_tile(q, k, b0, block, scale);
+                    let rows = &mut group[ti * block * dv..(ti + 1) * block * dv];
+                    for i in 0..block {
+                        let orow = &mut rows[i * dv..(i + 1) * dv];
+                        for j in 0..block {
+                            let p = s.get(i, j);
+                            for (o, &vv) in orow.iter_mut().zip(v.row(b0 + j)) {
+                                *o += p * vv;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Dense N x N stochastic matrix of block-diagonal attention: softmax
+/// tiles on the diagonal, exact zeros elsewhere.  Row-stochastic by
+/// construction, which gives BlockDiag (and LLN+Diag) an explicit-matrix
+/// route for the parity and analysis suites.
+pub fn blockdiag_attention_matrix(q: &Mat, k: &Mat, block: usize) -> Mat {
+    let (n, d) = q.shape();
+    assert!(n % block == 0, "N must divide block size");
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut p = Mat::zeros(n, n);
+    for b0 in (0..n).step_by(block) {
+        let s = softmax_tile(q, k, b0, block, scale);
+        for i in 0..block {
+            for j in 0..block {
+                p.set(b0 + i, b0 + j, s.get(i, j));
+            }
+        }
+    }
+    p
 }
 
 pub fn lln_diag_attention(q: &Mat, k: &Mat, v: &Mat, alpha: f32, beta: f32, block: usize) -> Mat {
@@ -261,29 +451,14 @@ pub fn linformer_attention(q: &Mat, k: &Mat, v: &Mat, e: &Mat, f: &Mat) -> Mat {
     softmax_attention(q, &kp, &vp)
 }
 
-/// Dispatch: stochastic matrix for any method (fig. 2 sweeps).
-pub fn attention_matrix(
-    method: super::Method,
-    q: &Mat,
-    k: &Mat,
-    alpha: f32,
-    beta: f32,
-) -> Mat {
-    use super::Method::*;
-    match method {
-        Softmax => softmax_attention_matrix(q, k),
-        Lln | LlnDiag => lln_attention_matrix(q, k, alpha, beta),
-        Elu => elu_attention_matrix(q, k),
-        Relu => relu_attention_matrix(q, k),
-        Quadratic => quadratic_attention_matrix(q, k),
-        Performer => {
-            let proj = performer_projection(q.cols(), q.cols(), 7);
-            performer_attention_matrix(q, k, &proj)
-        }
-        Nystrom | BlockDiag | Linformer => {
-            panic!("no dense stochastic-matrix form for {method:?}")
-        }
-    }
+/// Dispatch: stochastic matrix for any method (fig. 2 sweeps).  Routed
+/// through the [`super::backend`] registry so analysis callers and the
+/// serving/bench hot paths share one dispatch point.
+pub fn attention_matrix(method: super::Method, q: &Mat, k: &Mat, alpha: f32, beta: f32) -> Mat {
+    let params = super::backend::BackendParams { alpha, beta, ..Default::default() };
+    super::backend::backend_for(method, params)
+        .explicit_matrix(q, k)
+        .unwrap_or_else(|| panic!("no dense stochastic-matrix form for {method:?}"))
 }
 
 #[cfg(test)]
@@ -418,5 +593,57 @@ mod tests {
     fn clamped_exp_is_finite_at_extremes() {
         assert!(clamped_exp(1e6).is_finite());
         assert!(clamped_exp(-1e6) > 0.0);
+    }
+
+    #[test]
+    fn streamed_linear_attention_matches_naive() {
+        let (q, k, v) = probe(96, 24, 12);
+        let pq = lln_features(&q, 1.2);
+        let pk = lln_features(&k, 1.2);
+        let naive = linear_attention(&pq, &pk, &v);
+        for (chunk, threads) in [(1, 1), (7, 2), (32, 3), (96, 1), (200, 2), (0, 0)] {
+            let fast = linear_attention_streamed(&pq, &pk, &v, chunk, threads);
+            let err = fast.max_abs_diff(&naive);
+            assert!(err < 1e-4, "chunk={chunk} threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn streamed_handles_rectangular_value_dims() {
+        let mut rng = Pcg64::seed(13);
+        let pq = Mat::gaussian(40, 8, 0.5, &mut rng).map(|x| x.abs());
+        let pk = Mat::gaussian(56, 8, 0.5, &mut rng).map(|x| x.abs());
+        let v = Mat::gaussian(56, 5, 1.0, &mut rng);
+        let naive = linear_attention(&pq, &pk, &v);
+        let fast = linear_attention_streamed(&pq, &pk, &v, 9, 2);
+        assert!(fast.max_abs_diff(&naive) < 1e-4);
+    }
+
+    #[test]
+    fn par_blockdiag_matches_serial() {
+        let (q, k, v) = probe(128, 16, 14);
+        let serial = blockdiag_attention(&q, &k, &v, 32);
+        for threads in [1usize, 2, 3, 0] {
+            let par = par_blockdiag_attention(&q, &k, &v, 32, threads);
+            assert!(serial.max_abs_diff(&par) < 1e-6, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn blockdiag_matrix_is_stochastic_and_matches_forward() {
+        let (q, k, v) = probe(96, 16, 15);
+        let p = blockdiag_attention_matrix(&q, &k, 32);
+        assert!(p.is_stochastic(1e-4));
+        // Off-tile entries are exact zeros.
+        for i in 0..96 {
+            for j in 0..96 {
+                if i / 32 != j / 32 {
+                    assert_eq!(p.get(i, j), 0.0);
+                }
+            }
+        }
+        let via_matrix = p.matmul(&v);
+        let direct = blockdiag_attention(&q, &k, &v, 32);
+        assert!(via_matrix.max_abs_diff(&direct) < 1e-5);
     }
 }

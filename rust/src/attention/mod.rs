@@ -6,9 +6,11 @@
 //! than through PJRT), serve as CPU baselines, and cross-check the AOT
 //! kernels in integration tests.
 
+pub mod backend;
 pub mod kernels;
 pub mod moment_matching;
 
+pub use backend::{all_backends, backend_for, default_backend, AttentionBackend, BackendParams};
 pub use kernels::*;
 pub use moment_matching::MomentMatcher;
 

@@ -113,6 +113,26 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Bench one [`AttentionBackend`](crate::attention::AttentionBackend)
+/// forward at (n, d) on seeded Gaussian probes; returns the mean
+/// seconds per forward.  The shared entry point for `kernel_micro` and
+/// `attention_scaling`, so every bench target times methods through the
+/// same registry dispatch the serving path uses.
+pub fn run_attention_backend(
+    b: &mut Bench,
+    backend: &dyn crate::attention::AttentionBackend,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = crate::rng::Pcg64::seed(seed);
+    let q = crate::tensor::Mat::gaussian(n, d, 1.0, &mut rng);
+    let k = crate::tensor::Mat::gaussian(n, d, 1.0, &mut rng);
+    let v = crate::tensor::Mat::gaussian(n, d, 1.0, &mut rng);
+    let name = format!("backend {} n={n}", backend.name());
+    b.run(&name, n as f64, || backend.forward(&q, &k, &v)).mean()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

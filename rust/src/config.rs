@@ -245,8 +245,22 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     pub max_batch: usize,
     pub batch_timeout_ms: u64,
+    /// Worker threads per sequence-length bucket, all draining the
+    /// bucket's shared MPMC queue.  Each PJRT worker owns its own
+    /// engine AND its own resident parameter copy — the xla wrappers
+    /// are thread-confined, so literals cannot be shared across
+    /// workers — which is why the default stays 1: scaling this up
+    /// multiplies resident-parameter memory per bucket.
     pub workers: usize,
     pub buckets: Vec<usize>,
+    /// Opt-in: when PJRT artifacts are unavailable, serve through the
+    /// native [`AttentionBackend`](crate::attention::AttentionBackend)
+    /// encoder (untrained weights — a degraded pipeline exerciser, not
+    /// the model) instead of failing the worker.  Off by default so a
+    /// misconfigured artifacts path fails loudly in production.
+    pub native_fallback: bool,
+    /// Kernel-compute knobs forwarded to the native backends.
+    pub compute: ComputeConfig,
 }
 
 impl Default for ServeConfig {
@@ -256,8 +270,10 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             max_batch: 8,
             batch_timeout_ms: 5,
-            workers: 2,
+            workers: 1,
             buckets: vec![128, 512],
+            native_fallback: false,
+            compute: ComputeConfig::default(),
         }
     }
 }
@@ -276,7 +292,47 @@ impl ServeConfig {
             batch_timeout_ms: t.usize_or("serve.batch_timeout_ms", d.batch_timeout_ms as usize) as u64,
             workers: t.usize_or("serve.workers", d.workers),
             buckets,
+            native_fallback: t.bool_or("serve.native_fallback", d.native_fallback),
+            compute: ComputeConfig::from_table(t),
         }
+    }
+}
+
+/// Native compute-kernel configuration: worker-thread count and blocking
+/// for the parallel tensor kernels and the streaming linear-attention
+/// formulation (see `attention::BackendParams::from_compute`).
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeConfig {
+    /// Scoped-worker count for `Mat::par_*` and streamed attention
+    /// (0 = auto: `LLN_THREADS` env or available parallelism).
+    pub threads: usize,
+    /// Diagonal tile size for BlockDiag / LLN+Diag.
+    pub block: usize,
+    /// Streaming work-partition granularity: key/value rows are split
+    /// across workers in multiples of this (0 = auto).
+    pub chunk: usize,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        Self { threads: 0, block: 64, chunk: 0 }
+    }
+}
+
+impl ComputeConfig {
+    pub fn from_table(t: &ConfigTable) -> Self {
+        let d = Self::default();
+        Self {
+            threads: t.usize_or("compute.threads", d.threads),
+            block: t.usize_or("compute.block", d.block),
+            chunk: t.usize_or("compute.chunk", d.chunk),
+        }
+    }
+
+    /// The worker count the kernels will actually use (delegates to the
+    /// kernels' own resolution rule so the two can never disagree).
+    pub fn resolved_threads(&self) -> usize {
+        crate::tensor::resolve_threads(self.threads)
     }
 }
 
@@ -318,6 +374,25 @@ method = lln_diag
         assert_eq!(tc.steps, 500);
         let sc = ServeConfig::from_table(&t);
         assert_eq!(sc.buckets, vec![128, 512]);
+        assert!(!sc.native_fallback, "native fallback must be opt-in");
+        let t2 = ConfigTable::parse("[serve]\nnative_fallback = true").unwrap();
+        assert!(ServeConfig::from_table(&t2).native_fallback);
+    }
+
+    #[test]
+    fn compute_config_defaults_and_overrides() {
+        let t = ConfigTable::parse("[compute]\nthreads = 3\nblock = 32").unwrap();
+        let cc = ComputeConfig::from_table(&t);
+        assert_eq!(cc.threads, 3);
+        assert_eq!(cc.block, 32);
+        assert_eq!(cc.chunk, 0);
+        assert_eq!(cc.resolved_threads(), 3);
+        let auto = ComputeConfig::default();
+        assert!(auto.resolved_threads() >= 1);
+        // The serve config forwards the [compute] section to workers.
+        let sc = ServeConfig::from_table(&t);
+        assert_eq!(sc.compute.threads, 3);
+        assert_eq!(sc.compute.block, 32);
     }
 
     #[test]

@@ -87,4 +87,63 @@ mod tests {
         assert!(!should_fire(3, 8, 1.0, 5.0, false), "partial+young waits");
         assert!(should_fire(1, 8, 0.0, 5.0, true), "drain flushes");
     }
+
+    #[test]
+    fn fire_is_monotone_in_queued_and_wait() {
+        // Once the batcher decides to fire, more queued requests or a
+        // longer-waiting head must never flip it back to waiting.
+        check(512, |g| {
+            let max_batch = g.usize_in(1, 16);
+            let queued = g.usize_in(0, 32);
+            let wait = g.f64_in(0.0, 20.0);
+            let timeout = g.f64_in(0.0, 10.0);
+            let draining = g.bool();
+            prop_assert(
+                !should_fire(0, max_batch, wait, timeout, draining),
+                "must never fire an empty queue",
+            )?;
+            if should_fire(queued, max_batch, wait, timeout, draining) {
+                prop_assert(
+                    should_fire(queued + 1, max_batch, wait, timeout, draining),
+                    format!("not monotone in queued at q={queued}"),
+                )?;
+                prop_assert(
+                    should_fire(queued, max_batch, wait + 1.0, timeout, draining),
+                    format!("not monotone in wait at w={wait}"),
+                )?;
+                prop_assert(
+                    should_fire(queued, max_batch, wait, timeout, true),
+                    "draining must only add firing reasons",
+                )?;
+            }
+            // Boundary witnesses: a full batch always fires; a timed-out
+            // head always fires.
+            if queued > 0 {
+                prop_assert(
+                    should_fire(queued.max(max_batch), max_batch, 0.0, timeout, false),
+                    "full batch must fire",
+                )?;
+                prop_assert(
+                    should_fire(queued, max_batch, timeout, timeout, false),
+                    "expired head must fire",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plans_compose_with_fire_decision() {
+        // Whatever the fire decision drains, planning must cover it:
+        // firing `queued` requests yields ceil(queued / max_batch) plans.
+        check(256, |g| {
+            let queued = g.usize_in(1, 64);
+            let max_batch = g.usize_in(1, 16);
+            let plans = plan_batches(queued, max_batch);
+            prop_assert(
+                plans.len() == queued.div_ceil(max_batch),
+                format!("{queued} reqs / max {max_batch} -> {} plans", plans.len()),
+            )
+        });
+    }
 }

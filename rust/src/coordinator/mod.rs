@@ -13,9 +13,11 @@
 //! workers own engines, queues move plain vectors.
 
 pub mod batcher;
+pub mod native;
 pub mod server;
 
 pub use batcher::{plan_batches, BatchPlan};
+pub use native::NativeEncoder;
 pub use server::{Coordinator, ServeStats};
 
 use crate::data::special;

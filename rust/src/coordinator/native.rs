@@ -1,0 +1,166 @@
+//! Native-backend serving encoder: the coordinator's PJRT-free compute
+//! path, used when AOT artifacts (or the PJRT runtime itself) are
+//! unavailable and `ServeConfig::native_fallback` is set.
+//!
+//! tokens -> deterministic per-(token, position) Gaussian embedding ->
+//! one [`AttentionBackend`] forward (q = k = v = embedding) -> mean pool
+//! -> fixed seeded linear head -> logits.
+//!
+//! This is a degraded model (no trained weights), but it exercises the
+//! full serving stack — routing, bucketing, dynamic batching, stats,
+//! backpressure — with real attention compute, so the coordinator is
+//! testable and benchable in environments without artifacts.
+
+use crate::attention::{backend_for, AttentionBackend, BackendParams, Method};
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+
+/// Degraded-mode encoder defaults — the native fallback has no model
+/// manifest to read these from, so they are fixed and documented here.
+pub const NATIVE_D_MODEL: usize = 32;
+pub const NATIVE_NUM_CLASSES: usize = 4;
+pub const NATIVE_SEED: u64 = 0xC0DE;
+
+/// Largest tile size <= 64 that divides `n` (BlockDiag/LLN+Diag need
+/// the sequence length to be a multiple of the tile).
+pub fn tile_for(n: usize) -> usize {
+    let mut b = n.max(1).min(64);
+    while n % b != 0 {
+        b -= 1;
+    }
+    b
+}
+
+/// One bucket's native encoder (deterministic in `seed`).
+pub struct NativeEncoder {
+    backend: Box<dyn AttentionBackend>,
+    d_model: usize,
+    num_classes: usize,
+    head: Mat,
+    embed_seed: u64,
+}
+
+impl NativeEncoder {
+    pub fn new(
+        method: Method,
+        d_model: usize,
+        num_classes: usize,
+        seq_len: usize,
+        seed: u64,
+        compute: &crate::config::ComputeConfig,
+    ) -> Self {
+        // Honor the configured tile when it divides the bucket length;
+        // otherwise fall back to the largest tile that does.
+        let block = if compute.block != 0 && seq_len % compute.block == 0 {
+            compute.block
+        } else {
+            tile_for(seq_len)
+        };
+        let params =
+            BackendParams { alpha: 2.0, beta: 2.0, block, ..BackendParams::from_compute(compute) };
+        let mut rng = Pcg64::new(seed, 0x4EAD);
+        let head = Mat::gaussian(d_model, num_classes, (1.0 / d_model as f32).sqrt(), &mut rng);
+        Self { backend: backend_for(method, params), d_model, num_classes, head, embed_seed: seed }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Deterministic per-(token, position) embedding.
+    fn embed(&self, tokens: &[i32]) -> Mat {
+        let n = tokens.len();
+        let mut x = Mat::zeros(n, self.d_model);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let stream = (tok as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.embed_seed;
+            let mut rng = Pcg64::new(stream, pos as u64);
+            rng.fill_gaussian(x.row_mut(pos), 0.0, 0.5);
+        }
+        x
+    }
+
+    /// Logits for one (bucket-padded) token sequence.
+    pub fn infer(&self, tokens: &[i32]) -> Vec<f32> {
+        let x = self.embed(tokens);
+        let out = self.backend.forward(&x, &x, &x);
+        let rows = out.rows().max(1);
+        let mut pooled = vec![0.0f32; self.d_model];
+        for i in 0..out.rows() {
+            for (p, &o) in pooled.iter_mut().zip(out.row(i)) {
+                *p += o;
+            }
+        }
+        let inv = 1.0 / rows as f32;
+        for p in pooled.iter_mut() {
+            *p *= inv;
+        }
+        self.head.matvec_t(&pooled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ComputeConfig;
+
+    #[test]
+    fn tile_divides_common_buckets() {
+        for n in [32usize, 48, 64, 96, 128, 512] {
+            let b = tile_for(n);
+            assert!(b >= 1 && b <= 64 && n % b == 0, "n={n} b={b}");
+        }
+        assert_eq!(tile_for(128), 64);
+        assert_eq!(tile_for(96), 48);
+    }
+
+    #[test]
+    fn infer_is_deterministic_and_finite() {
+        let cc = ComputeConfig::default();
+        let enc = NativeEncoder::new(Method::LlnDiag, 32, 4, 64, 9, &cc);
+        let tokens: Vec<i32> = (0..64).map(|i| (i % 37) + 4).collect();
+        let a = enc.infer(&tokens);
+        let b = enc.infer(&tokens);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn infer_separates_different_inputs() {
+        let cc = ComputeConfig::default();
+        let enc = NativeEncoder::new(Method::Lln, 32, 4, 32, 1, &cc);
+        let a = enc.infer(&vec![5i32; 32]);
+        let b = enc.infer(&vec![6i32; 32]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn every_method_serves_a_bucket() {
+        let cc = ComputeConfig::default();
+        for m in Method::ALL {
+            let enc = NativeEncoder::new(m, 16, 4, 64, 3, &cc);
+            let logits = enc.infer(&vec![7i32; 64]);
+            assert_eq!(logits.len(), 4, "{m:?}");
+            assert!(logits.iter().all(|x| x.is_finite()), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn configured_compute_knobs_reach_the_backend() {
+        // threads=1, chunk=16 and a dividing block must be accepted and
+        // still produce the same deterministic logits as defaults (the
+        // kernels are parallelism-invariant).
+        let custom = ComputeConfig { threads: 1, block: 32, chunk: 16 };
+        let a = NativeEncoder::new(Method::Lln, 32, 4, 64, 9, &custom);
+        let b = NativeEncoder::new(Method::Lln, 32, 4, 64, 9, &ComputeConfig::default());
+        let tokens: Vec<i32> = (0..64).map(|i| (i % 11) + 4).collect();
+        let (la, lb) = (a.infer(&tokens), b.infer(&tokens));
+        for (x, y) in la.iter().zip(&lb) {
+            assert!((x - y).abs() < 1e-4, "{la:?} vs {lb:?}");
+        }
+    }
+}

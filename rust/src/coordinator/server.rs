@@ -1,4 +1,9 @@
 //! The threaded serving coordinator.
+//!
+//! Workers are generic over a [`BatchExec`] — either the PJRT engine
+//! path (AOT artifacts) or the native [`AttentionBackend`] encoder
+//! ([`super::native`]) when artifacts/PJRT are unavailable — so the
+//! batching loop, stats, and backpressure behave identically on both.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -9,7 +14,9 @@ use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
 use super::batcher::{plan_batches, should_fire};
+use super::native::NativeEncoder;
 use super::{pad_to_bucket, pick_bucket, Request, Response};
+use crate::attention::Method;
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, HostTensor, ParamStore};
 use crate::util::pool::{Channel, SendError};
@@ -60,8 +67,10 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn one worker per bucket (each owns a PJRT engine and the
-    /// executables + resident params for that bucket).
+    /// Spawn `cfg.workers` workers per bucket.  Each worker owns its
+    /// executor — a PJRT engine with the bucket's executables + resident
+    /// params, or the native-backend encoder fallback — and all workers
+    /// of a bucket drain the same MPMC queue.
     pub fn start(cfg: ServeConfig, artifacts: &std::path::Path) -> Result<Self> {
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let draining = Arc::new(AtomicBool::new(false));
@@ -70,20 +79,23 @@ impl Coordinator {
         for &bucket in &cfg.buckets {
             let q: Channel<Request> = Channel::bounded(cfg.queue_capacity);
             queues.push((bucket, q.clone()));
-            let cfgc = cfg.clone();
-            let dir = artifacts.to_path_buf();
-            let statsc = Arc::clone(&stats);
-            let drainc = Arc::clone(&draining);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("lln-worker-n{bucket}"))
-                    .spawn(move || {
-                        if let Err(e) = worker_loop(cfgc, dir, bucket, q, statsc, drainc) {
-                            eprintln!("worker n{bucket} died: {e:#}");
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+            for w in 0..cfg.workers.max(1) {
+                let cfgc = cfg.clone();
+                let dir = artifacts.to_path_buf();
+                let statsc = Arc::clone(&stats);
+                let drainc = Arc::clone(&draining);
+                let qc = q.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("lln-worker-n{bucket}-{w}"))
+                        .spawn(move || {
+                            if let Err(e) = worker_loop(cfgc, dir, bucket, qc, statsc, drainc) {
+                                eprintln!("worker n{bucket}-{w} died: {e:#}");
+                            }
+                        })
+                        .expect("spawn worker"),
+                );
+            }
         }
         Ok(Self {
             cfg,
@@ -145,8 +157,119 @@ impl Coordinator {
     }
 }
 
-/// Per-bucket worker: owns an Engine, resident param literals, and both
-/// batch-size executables; loops batching until the queue closes.
+/// One worker's batch executor: given the bucket-padded token buffer,
+/// produce per-request logits rows.  The batching loop above is the
+/// same for every implementation.
+trait BatchExec {
+    /// Executable batch capacity to plan for (PJRT batches are static;
+    /// the native path accepts any size up to `max_batch`).
+    fn plan_capacity(&self, members: usize, max_batch: usize) -> usize;
+
+    /// `tokens` holds `capacity * bucket` ids (`real` live rows, the
+    /// rest phantom padding).  Returns `real` logit rows.
+    fn run(&mut self, tokens: Vec<i32>, capacity: usize, real: usize, bucket: usize)
+        -> Result<Vec<Vec<f32>>>;
+}
+
+/// PJRT path: resident params + the bucket's b1/bN executables.
+struct PjrtExec {
+    engine: Engine,
+    exe_b1: String,
+    exe_bn: String,
+    param_lits: Vec<Literal>,
+    num_classes: usize,
+}
+
+impl PjrtExec {
+    fn new(cfg: &ServeConfig, dir: &std::path::Path, bucket: usize) -> Result<Self> {
+        let mut engine = Engine::new(dir)?;
+        let exe_b1 = format!("serve_{}_b1_n{}", cfg.method, bucket);
+        let exe_bn = format!("serve_{}_b{}_n{}", cfg.method, cfg.max_batch, bucket);
+        engine.warmup(&[&exe_b1, &exe_bn])?;
+
+        // Resident parameters: built once, reused for every call.
+        let model_tag = engine.manifest().artifact(&exe_b1)?.meta.get("model").cloned()
+            .ok_or_else(|| anyhow!("{exe_b1}: missing model meta"))?;
+        let model = engine.manifest().model(&model_tag)?.clone();
+        let params = ParamStore::load_initial(dir, &model)?;
+        let param_lits: Vec<Literal> = params.to_literals()?;
+        let num_classes: usize = {
+            let spec = engine.manifest().artifact(&exe_b1)?;
+            *spec.outputs[0].shape.last().unwrap_or(&4)
+        };
+        Ok(Self { engine, exe_b1, exe_bn, param_lits, num_classes })
+    }
+}
+
+impl BatchExec for PjrtExec {
+    fn plan_capacity(&self, members: usize, max_batch: usize) -> usize {
+        if members == 1 {
+            1
+        } else {
+            max_batch
+        }
+    }
+
+    fn run(
+        &mut self,
+        tokens: Vec<i32>,
+        capacity: usize,
+        real: usize,
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = if capacity == 1 { self.exe_b1.clone() } else { self.exe_bn.clone() };
+        let tok_lit = HostTensor::I32 { shape: vec![capacity, bucket], data: tokens }.to_literal()?;
+        let mut args: Vec<&Literal> = self.param_lits.iter().collect();
+        args.push(&tok_lit);
+        let outs = self.engine.execute_literals(&exe, &args)?;
+        let logits = outs[0].to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        let nc = self.num_classes;
+        Ok((0..real).map(|i| logits[i * nc..(i + 1) * nc].to_vec()).collect())
+    }
+}
+
+/// Native path: the [`AttentionBackend`](crate::attention::AttentionBackend)
+/// encoder — no artifacts, no PJRT, still the full serving pipeline.
+struct NativeExec {
+    encoder: NativeEncoder,
+}
+
+impl NativeExec {
+    fn new(cfg: &ServeConfig, bucket: usize) -> Result<Self> {
+        // A typo'd method must fail loudly, not silently serve lln_diag.
+        let method = Method::parse(&cfg.method)
+            .ok_or_else(|| anyhow!("unknown serving method {:?}", cfg.method))?;
+        Ok(Self {
+            encoder: NativeEncoder::new(
+                method,
+                super::native::NATIVE_D_MODEL,
+                super::native::NATIVE_NUM_CLASSES,
+                bucket,
+                super::native::NATIVE_SEED,
+                &cfg.compute,
+            ),
+        })
+    }
+}
+
+impl BatchExec for NativeExec {
+    fn plan_capacity(&self, members: usize, _max_batch: usize) -> usize {
+        members
+    }
+
+    fn run(
+        &mut self,
+        tokens: Vec<i32>,
+        _capacity: usize,
+        real: usize,
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok((0..real).map(|i| self.encoder.infer(&tokens[i * bucket..(i + 1) * bucket])).collect())
+    }
+}
+
+/// Per-bucket worker: owns its executor and loops batching until the
+/// queue closes.
 fn worker_loop(
     cfg: ServeConfig,
     dir: std::path::PathBuf,
@@ -155,20 +278,17 @@ fn worker_loop(
     stats: Arc<Mutex<ServeStats>>,
     draining: Arc<AtomicBool>,
 ) -> Result<()> {
-    let mut engine = Engine::new(&dir)?;
-    let exe_b1 = format!("serve_{}_b1_n{}", cfg.method, bucket);
-    let exe_bn = format!("serve_{}_b{}_n{}", cfg.method, cfg.max_batch, bucket);
-    engine.warmup(&[&exe_b1, &exe_bn])?;
-
-    // Resident parameters: built once, reused for every call.
-    let model_tag = engine.manifest().artifact(&exe_b1)?.meta.get("model").cloned()
-        .ok_or_else(|| anyhow!("{exe_b1}: missing model meta"))?;
-    let model = engine.manifest().model(&model_tag)?.clone();
-    let params = ParamStore::load_initial(&dir, &model)?;
-    let param_lits: Vec<Literal> = params.to_literals()?;
-    let num_classes: usize = {
-        let spec = engine.manifest().artifact(&exe_b1)?;
-        *spec.outputs[0].shape.last().unwrap_or(&4)
+    let mut exec: Box<dyn BatchExec> = match PjrtExec::new(&cfg, &dir, bucket) {
+        Ok(e) => Box::new(e),
+        Err(e) if cfg.native_fallback => {
+            eprintln!(
+                "worker n{bucket}: PJRT path unavailable ({e:#}); serving via native {} backend \
+                 (degraded: untrained weights)",
+                cfg.method
+            );
+            Box::new(NativeExec::new(&cfg, bucket)?)
+        }
+        Err(e) => return Err(e),
     };
 
     let mut pending: Vec<Request> = Vec::new();
@@ -196,22 +316,19 @@ fn worker_loop(
         }
         for plan in plan_batches(pending.len(), cfg.max_batch) {
             let batch: Vec<Request> = plan.members.iter().map(|_| pending.remove(0)).collect();
-            let exe = if plan.capacity == 1 { &exe_b1 } else { &exe_bn };
-            run_batch(&mut engine, exe, plan.capacity, bucket, num_classes, &param_lits, batch, &stats);
+            let capacity = exec.plan_capacity(batch.len(), cfg.max_batch);
+            run_batch(exec.as_mut(), capacity, bucket, batch, &stats);
         }
         pending.clear();
     }
 }
 
-/// Execute one padded batch and fan results back out.
-#[allow(clippy::too_many_arguments)]
+/// Execute one padded batch through the worker's executor and fan
+/// results back out.
 fn run_batch(
-    engine: &mut Engine,
-    exe: &str,
+    exec: &mut dyn BatchExec,
     capacity: usize,
     bucket: usize,
-    num_classes: usize,
-    param_lits: &[Literal],
     batch: Vec<Request>,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
@@ -220,19 +337,10 @@ fn run_batch(
     for r in &batch {
         tokens.extend(pad_to_bucket(&r.tokens, bucket));
     }
-    // Pad phantom rows up to the executable's static batch.
+    // Pad phantom rows up to the executor's static batch.
     tokens.resize(capacity * bucket, crate::data::special::PAD);
 
-    let result: Result<Vec<Vec<f32>>> = (|| {
-        let tok_lit = HostTensor::I32 { shape: vec![capacity, bucket], data: tokens }.to_literal()?;
-        let mut args: Vec<&Literal> = param_lits.iter().collect();
-        args.push(&tok_lit);
-        let outs = engine.execute_literals(exe, &args)?;
-        let logits = outs[0].to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
-        Ok((0..real)
-            .map(|i| logits[i * num_classes..(i + 1) * num_classes].to_vec())
-            .collect())
-    })();
+    let result = exec.run(tokens, capacity, real, bucket);
 
     let mut st = stats.lock().unwrap();
     st.batch_sizes.push(real);
@@ -281,10 +389,87 @@ mod tests {
             queue_capacity: 64,
             max_batch: 8,
             batch_timeout_ms: 3,
-            workers: 1,
             buckets: vec![128, 512],
+            // These tests exist to exercise the PJRT path; a fallback
+            // here would silently mask PJRT regressions.
+            native_fallback: false,
+            ..Default::default()
         };
         Some(Coordinator::start(cfg, &dir).unwrap())
+    }
+
+    /// A coordinator guaranteed to be on the native-backend path (the
+    /// artifacts dir does not exist), exercising the full serving stack
+    /// without PJRT.
+    fn native_coordinator(method: &str, workers: usize) -> Coordinator {
+        let cfg = ServeConfig {
+            method: method.into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            ..Default::default()
+        };
+        Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap()
+    }
+
+    #[test]
+    fn native_fallback_serves_single_request() {
+        let c = native_coordinator("lln_diag", 1);
+        let resp = c.infer(vec![special::CLS; 20]).unwrap();
+        let logits = resp.result.unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_fallback_batches_bursts() {
+        let c = native_coordinator("lln", 1);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| c.submit(vec![4 + (i as i32) % 7; 24]).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok(), "{:?}", resp.result);
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.completed, 16);
+        assert!(st.mean_batch_size() >= 1.0);
+        assert!(st.p95_latency() >= st.p50_latency());
+        drop(st);
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_fallback_scales_workers_per_bucket() {
+        let c = native_coordinator("softmax", 2);
+        let rxs: Vec<_> = (0..12).map(|_| c.submit(vec![9i32; 50]).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        assert_eq!(c.stats().lock().unwrap().completed, 12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_fallback_is_deterministic_per_request() {
+        let c = native_coordinator("elu", 1);
+        let a = c.infer(vec![11i32; 30]).unwrap().result.unwrap();
+        let b = c.infer(vec![11i32; 30]).unwrap().result.unwrap();
+        assert_eq!(a, b);
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_fallback_still_rejects_over_length() {
+        let c = native_coordinator("lln_diag", 1);
+        let err = c.submit(vec![special::CLS; 1000]).unwrap_err();
+        assert!(format!("{err}").contains("exceeds"));
+        c.shutdown();
     }
 
     #[test]

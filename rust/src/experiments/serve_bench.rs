@@ -9,11 +9,11 @@ use anyhow::Result;
 
 use super::maybe_write_csv;
 use crate::cli::Args;
-use crate::config::ServeConfig;
+use crate::config::{ConfigTable, ServeConfig};
 use crate::coordinator::Coordinator;
 use crate::data::tasks::{GlueGen, GlueTask};
 use crate::rng::Pcg64;
-use crate::runtime::artifacts_dir;
+use crate::runtime::{artifacts_available, artifacts_dir};
 use crate::util::print_table;
 
 pub fn run_serve(args: &Args) -> Result<()> {
@@ -24,10 +24,24 @@ pub fn run_serve(args: &Args) -> Result<()> {
     let long_frac = args.get_f64("long-frac", 0.3)?;
 
     println!("== Serving: coordinator throughput/latency ({requests} reqs, {rate}/s offered, {:.0}% long) ==\n", long_frac * 100.0);
+    // --config wires the [serve] / [compute] sections (queue, batching,
+    // workers-per-bucket, kernel threads) into the coordinator.
+    let base_cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_table(&ConfigTable::load(std::path::Path::new(path))?),
+        None => ServeConfig::default(),
+    };
+    // Experiment harness (not production serving): explicitly opt into
+    // the native-backend encoder when AOT artifacts are absent so the
+    // coordinator pipeline is still measurable.
+    let native = base_cfg.native_fallback || !artifacts_available(&dir);
+    if native && !artifacts_available(&dir) {
+        println!("(artifacts absent: serving via the native AttentionBackend encoder)\n");
+    }
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     for method in &methods {
-        let cfg = ServeConfig { method: method.clone(), ..Default::default() };
+        let cfg =
+            ServeConfig { method: method.clone(), native_fallback: native, ..base_cfg.clone() };
         let coord = Coordinator::start(cfg, &dir)?;
         // Warm both buckets (compile once) before timing.
         coord.infer(vec![crate::data::special::CLS; 64])?;

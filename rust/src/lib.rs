@@ -8,13 +8,43 @@
 //! * **L3 (this crate)** — coordinator: serving router + dynamic batcher,
 //!   the training driver, the paper's analysis instruments (temperature,
 //!   entropy, spectral gap, log-normal fitting, moment matching), native
-//!   CPU baselines of every attention method, and the per-table/figure
+//!   CPU backends of every attention method, and the per-table/figure
 //!   experiment harnesses.  Python is never on a request path.
+//!
+//! ## The `AttentionBackend` registry
+//!
+//! Every attention method is dispatched through one trait,
+//! [`attention::AttentionBackend`] (`forward` / `explicit_matrix` /
+//! `flops_model` / `name`), constructed from the
+//! [`attention::backend_for`] registry.  Backends implement the *fast*
+//! path — cache-blocked multi-threaded matmul/softmax
+//! ([`tensor::Mat::par_matmul`], [`tensor::Mat::par_matmul_t`],
+//! [`tensor::Mat::par_softmax_rows`]) and the chunked O(N) streaming
+//! linear-attention formulation
+//! ([`attention::linear_attention_streamed`]) that accumulates the
+//! (m, dv) KV state once instead of per row.  The single-threaded free
+//! functions in [`attention::kernels`] stay as the scalar reference; the
+//! property suite (`rust/tests/prop_kernels.rs`, built on [`testkit`])
+//! pins fast-vs-scalar parity, forward-vs-explicit-matrix parity, and
+//! row-stochasticity across random shapes.  The serving coordinator,
+//! the benches, and the experiment harnesses all call through the
+//! registry — the coordinator can fall back to a native-backend encoder
+//! ([`coordinator::NativeEncoder`]) when PJRT artifacts are absent
+//! (opt-in via `ServeConfig::native_fallback`; the `lln serve` demo and
+//! its benches opt in automatically when artifacts are missing).
+//!
+//! To add a method: add the [`attention::Method`] variant, implement
+//! `AttentionBackend`, register it in `backend_for`, and extend
+//! `EXPLICIT_METHODS` in `prop_kernels.rs` (or the implicit-method
+//! property if it has no dense matrix).  ROADMAP.md tracks this.
 //!
 //! The crate mirror of this image is offline, so several substrates that
 //! would normally be dependencies are implemented here (see DESIGN.md §3):
 //! [`cli`], [`config`], [`util::json`], [`rng`], [`tensor`], [`linalg`],
-//! [`stats`], [`testkit`], [`bench`].
+//! [`stats`], [`testkit`], [`bench`] — and the would-be external crates
+//! `anyhow`, `rand_core`, and `xla` are vendored under `rust/vendor/`
+//! (the `xla` crate as an API stub; PJRT execution is gated behind
+//! [`runtime::artifacts_available`]).
 
 pub mod analysis;
 pub mod attention;

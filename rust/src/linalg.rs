@@ -173,6 +173,32 @@ mod tests {
     }
 
     #[test]
+    fn spectral_gap_always_in_unit_interval() {
+        // Invariant: for any row-stochastic matrix, |lambda_2| and the
+        // gap both live in [0, 1] (property-swept over temperatures).
+        crate::testkit::check(24, |g| {
+            let n = g.usize_in(4, 40);
+            let temp = g.f32_in(0.1, 4.0);
+            let seed = g.u64(0, 1_000_000);
+            let p = {
+                let mut rng = Pcg64::seed(seed);
+                let mut p = Mat::gaussian(n, n, 1.0 / temp.max(1e-3), &mut rng);
+                p.softmax_rows();
+                p
+            };
+            let r = spectral_gap(&p, 300, 1e-8);
+            crate::testkit::prop_assert(
+                (0.0..=1.0).contains(&r.lambda2_abs),
+                format!("lambda2 {} out of [0,1]", r.lambda2_abs),
+            )?;
+            crate::testkit::prop_assert(
+                (0.0..=1.0).contains(&r.gap),
+                format!("gap {} out of [0,1]", r.gap),
+            )
+        });
+    }
+
+    #[test]
     fn thm_3_3_lambda2_squared_equals_pc_variance() {
         for seed in [1u64, 2, 3] {
             let p = random_stochastic(48, 0.7, seed);

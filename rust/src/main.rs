@@ -75,6 +75,7 @@ fn cli() -> Cli {
                         flag("requests", "demo request count", Some("100")),
                         flag("rate", "offered req/s", Some("100")),
                         flag("long-frac", "fraction of long requests", Some("0.3")),
+                        flag("config", "TOML file with [serve] / [compute] sections", None),
                     ]);
                     f
                 },

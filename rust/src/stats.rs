@@ -23,6 +23,17 @@ pub fn attention_entropy(p: &Mat) -> f64 {
     (0..p.rows()).map(|i| row_entropy(p.row(i))).sum::<f64>() / p.rows() as f64
 }
 
+/// Shannon entropy in nats of one probability row (so the uniform row
+/// over n entries scores exactly ln(n)).
+pub fn row_entropy_nats(p: &[f32]) -> f64 {
+    row_entropy(p) * std::f64::consts::LN_2
+}
+
+/// Mean row entropy in nats of a stochastic matrix.
+pub fn attention_entropy_nats(p: &Mat) -> f64 {
+    attention_entropy(p) * std::f64::consts::LN_2
+}
+
 /// Row-variance of a stochastic matrix averaged over rows (paper eq. 21).
 pub fn attention_row_variance(p: &Mat) -> f64 {
     let n = p.cols() as f64;
@@ -205,6 +216,21 @@ mod tests {
         let n = 64;
         let p = Mat::from_vec(1, n, vec![1.0 / n as f32; n]);
         assert!((attention_entropy(&p) - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_of_uniform_stochastic_matrix_is_ln_n() {
+        for n in [4usize, 17, 64, 256] {
+            let p = Mat::from_vec(3, n, vec![1.0 / n as f32; 3 * n]);
+            let h = attention_entropy_nats(&p);
+            assert!(
+                (h - (n as f64).ln()).abs() < 1e-4,
+                "n={n}: {h} vs ln(n)={}",
+                (n as f64).ln()
+            );
+            // Bits/nats agree up to the ln 2 factor.
+            assert!((attention_entropy(&p) * std::f64::consts::LN_2 - h).abs() < 1e-12);
+        }
     }
 
     #[test]

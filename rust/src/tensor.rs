@@ -8,6 +8,30 @@
 
 use std::fmt;
 
+/// Worker count for the parallel kernels: `LLN_THREADS` env override,
+/// else the machine's available parallelism.  `0` passed to any `par_*`
+/// entry point means "resolve via this function".
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LLN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a requested worker count: 0 means auto (the single source
+/// of the 0-means-auto rule — config and kernels both consult this).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    }
+}
+
 /// Row-major dense matrix of `f32`.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -128,6 +152,51 @@ impl Mat {
         out
     }
 
+    /// `self @ other` with the output rows partitioned across `threads`
+    /// scoped worker threads (0 = auto, see [`default_threads`]).  Each
+    /// worker runs the same cache-blocked ikj kernel as [`Mat::matmul`],
+    /// in the same per-row floating-point order, so results are bitwise
+    /// identical to the scalar path.
+    pub fn par_matmul(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let t = resolve_threads(threads).min(m.max(1));
+        if t <= 1 || m == 0 || n == 0 {
+            return self.matmul(other);
+        }
+        let mut out = Mat::zeros(m, n);
+        let rows_per = m.div_ceil(t);
+        let a = self.data.as_slice();
+        let b = other.data.as_slice();
+        std::thread::scope(|scope| {
+            for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
+                let row0 = ti * rows_per;
+                scope.spawn(move || {
+                    let rows_here = chunk.len() / n;
+                    const KB: usize = 64;
+                    for kb in (0..k).step_by(KB) {
+                        let kend = (kb + KB).min(k);
+                        for i in 0..rows_here {
+                            let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+                            let orow = &mut chunk[i * n..(i + 1) * n];
+                            for kk in kb..kend {
+                                let av = arow[kk];
+                                if av == 0.0 {
+                                    continue;
+                                }
+                                let brow = &b[kk * n..(kk + 1) * n];
+                                for j in 0..n {
+                                    orow[j] += av * brow[j];
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
     /// `self @ other^T` without materializing the transpose (dot-product
     /// kernel; both operands stream row-contiguously).
     pub fn matmul_t(&self, other: &Mat) -> Mat {
@@ -146,6 +215,43 @@ impl Mat {
                 orow[j] = acc;
             }
         }
+        out
+    }
+
+    /// `self @ other^T` with output rows partitioned across `threads`
+    /// scoped workers (0 = auto).  Per-row FP order matches
+    /// [`Mat::matmul_t`] exactly.
+    pub fn par_matmul_t(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let t = resolve_threads(threads).min(m.max(1));
+        if t <= 1 || m == 0 || n == 0 {
+            return self.matmul_t(other);
+        }
+        let mut out = Mat::zeros(m, n);
+        let rows_per = m.div_ceil(t);
+        let a = self.data.as_slice();
+        let b = other.data.as_slice();
+        std::thread::scope(|scope| {
+            for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
+                let row0 = ti * rows_per;
+                scope.spawn(move || {
+                    let rows_here = chunk.len() / n;
+                    for i in 0..rows_here {
+                        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+                        let orow = &mut chunk[i * n..(i + 1) * n];
+                        for j in 0..n {
+                            let brow = &b[j * k..(j + 1) * k];
+                            let mut acc = 0.0f32;
+                            for kk in 0..k {
+                                acc += arow[kk] * brow[kk];
+                            }
+                            orow[j] = acc;
+                        }
+                    }
+                });
+            }
+        });
         out
     }
 
@@ -199,6 +305,37 @@ impl Mat {
                 *x *= inv;
             }
         }
+    }
+
+    /// Row-wise softmax with rows partitioned across `threads` scoped
+    /// workers (0 = auto).  Rows are independent, so results are bitwise
+    /// identical to [`Mat::softmax_rows`].
+    pub fn par_softmax_rows(&mut self, threads: usize) {
+        let (m, n) = (self.rows, self.cols);
+        let t = resolve_threads(threads).min(m.max(1));
+        if t <= 1 || m == 0 || n == 0 {
+            self.softmax_rows();
+            return;
+        }
+        let rows_per = m.div_ceil(t);
+        std::thread::scope(|scope| {
+            for chunk in self.data.chunks_mut(rows_per * n) {
+                scope.spawn(move || {
+                    for row in chunk.chunks_mut(n) {
+                        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let mut sum = 0.0f32;
+                        for x in row.iter_mut() {
+                            *x = (*x - max).exp();
+                            sum += *x;
+                        }
+                        let inv = 1.0 / sum;
+                        for x in row.iter_mut() {
+                            *x *= inv;
+                        }
+                    }
+                });
+            }
+        });
     }
 
     /// Normalize each row to sum 1 (entries assumed non-negative).
@@ -395,5 +532,53 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(4, 2);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn par_matmul_bitwise_matches_scalar() {
+        let mut rng = Pcg64::seed(6);
+        for (m, k, n) in [(1, 7, 5), (17, 33, 9), (64, 64, 64), (65, 3, 2)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(k, n, 1.0, &mut rng);
+            let serial = a.matmul(&b);
+            for t in [1usize, 2, 3, 8, 0] {
+                let par = a.par_matmul(&b, t);
+                assert_eq!(serial.data(), par.data(), "m={m} k={k} n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_matmul_t_bitwise_matches_scalar() {
+        let mut rng = Pcg64::seed(7);
+        for (m, k, n) in [(1, 5, 3), (19, 16, 31), (48, 64, 48)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(n, k, 1.0, &mut rng);
+            let serial = a.matmul_t(&b);
+            for t in [1usize, 2, 5, 0] {
+                let par = a.par_matmul_t(&b, t);
+                assert_eq!(serial.data(), par.data(), "m={m} k={k} n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_softmax_rows_bitwise_matches_scalar() {
+        let mut rng = Pcg64::seed(8);
+        for (m, n) in [(1, 4), (13, 29), (64, 64)] {
+            let base = Mat::gaussian(m, n, 3.0, &mut rng);
+            let mut serial = base.clone();
+            serial.softmax_rows();
+            for t in [1usize, 2, 7, 0] {
+                let mut par = base.clone();
+                par.par_softmax_rows(t);
+                assert_eq!(serial.data(), par.data(), "m={m} n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
     }
 }

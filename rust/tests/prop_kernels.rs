@@ -1,0 +1,275 @@
+//! Property-based parity suite for the attention backends (built on
+//! `lln::testkit`, the repo's proptest substitute).
+//!
+//! Pins the three invariants every backend must satisfy across random
+//! shapes, scales, thread counts, and chunk sizes:
+//!
+//!   1. forward(q, k, v) ~= explicit_matrix(q, k) @ v for every method
+//!      that exposes a dense matrix;
+//!   2. every explicit attention matrix is row-stochastic (rows sum to
+//!      1 +- 1e-4, entries >= 0) — modulo ReLU's degenerate all-zero
+//!      rows, which carry no mass at all;
+//!   3. the blocked/parallel kernels match the single-threaded scalar
+//!      reference (bitwise for the row-partitioned kernels, within a
+//!      scaled 1e-5 for the chunk-streamed reformulation).
+//!
+//! Reproduce failures with `LLN_PROP_SEED=<seed> cargo test`.
+
+use lln::attention::{self as att, backend_for, default_backend, BackendParams, Method};
+use lln::tensor::Mat;
+use lln::testkit::{check, prop_assert, Gen, PropResult};
+
+fn gauss_mat(g: &mut Gen, rows: usize, cols: usize, std: f32) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| g.gauss_f32(std))
+}
+
+/// Max-abs closeness with tolerance scaled by the reference magnitude.
+fn assert_close(a: &Mat, b: &Mat, base_tol: f32, what: &str) -> PropResult {
+    let scale = b.data().iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1.0);
+    let err = a.max_abs_diff(b);
+    prop_assert(
+        err <= base_tol * scale,
+        format!("{what}: max|diff| = {err} (tol {} at scale {scale})", base_tol * scale),
+    )
+}
+
+/// Methods exposing a dense stochastic matrix (parity-testable route).
+const EXPLICIT_METHODS: [Method; 8] = [
+    Method::Softmax,
+    Method::Lln,
+    Method::LlnDiag,
+    Method::Elu,
+    Method::Relu,
+    Method::Quadratic,
+    Method::Performer,
+    Method::BlockDiag,
+];
+
+#[test]
+fn forward_matches_explicit_matrix_route() {
+    check(48, |g| {
+        let block = *g.choose(&[4usize, 8, 16]);
+        let n = block * g.usize_in(1, 4);
+        let d = g.usize_in(4, 24);
+        let alpha = g.f32_in(0.5, 1.5);
+        let threads = g.usize_in(1, 4);
+        let chunk = g.usize_in(1, 40);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in EXPLICIT_METHODS {
+            let params =
+                BackendParams { alpha, beta: alpha, block, threads, chunk, ..Default::default() };
+            let bk = backend_for(m, params);
+            let p = match bk.explicit_matrix(&q, &k) {
+                Some(p) => p,
+                None => return prop_assert(false, format!("{} lost its matrix", bk.name())),
+            };
+            assert_close(
+                &bk.forward(&q, &k, &v),
+                &p.matmul(&v),
+                5e-4,
+                &format!("{} n={n} d={d} a={alpha}", bk.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn explicit_matrices_are_row_stochastic() {
+    check(48, |g| {
+        let block = *g.choose(&[4usize, 8, 16]);
+        let n = block * g.usize_in(1, 4);
+        let d = g.usize_in(12, 32);
+        let alpha = g.f32_in(0.5, 2.0);
+        let sigma = g.f32_in(0.3, 1.2);
+        let q = gauss_mat(g, n, d, sigma);
+        let k = gauss_mat(g, n, d, sigma);
+        for m in EXPLICIT_METHODS {
+            let params = BackendParams { alpha, beta: alpha, block, ..Default::default() };
+            let p = backend_for(m, params).explicit_matrix(&q, &k).unwrap();
+            prop_assert(p.shape() == (n, n), format!("{m:?}: shape {:?}", p.shape()))?;
+            for (ri, s) in p.row_sums().iter().enumerate() {
+                let row_max = p.row(ri).iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+                // A ReLU row whose features all died carries no mass;
+                // every other row must be a probability distribution.
+                let degenerate = m == Method::Relu && row_max < 1e-6;
+                prop_assert(
+                    degenerate || (s - 1.0).abs() < 1e-4,
+                    format!("{m:?} n={n} d={d}: row {ri} sums to {s}"),
+                )?;
+            }
+            prop_assert(
+                p.data().iter().all(|&x| x >= -1e-6),
+                format!("{m:?}: negative attention weight"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_matmuls_match_scalar_reference() {
+    check(64, |g| {
+        let m = g.usize_in(1, 40);
+        let kdim = g.usize_in(1, 32);
+        let n = g.usize_in(1, 40);
+        let threads = g.usize_in(1, 4);
+        let a = gauss_mat(g, m, kdim, 1.0);
+        let b = gauss_mat(g, kdim, n, 1.0);
+        prop_assert(
+            a.par_matmul(&b, threads).max_abs_diff(&a.matmul(&b)) < 1e-5,
+            format!("par_matmul {m}x{kdim}x{n} t={threads}"),
+        )?;
+        let c = gauss_mat(g, n, kdim, 1.0);
+        prop_assert(
+            a.par_matmul_t(&c, threads).max_abs_diff(&a.matmul_t(&c)) < 1e-5,
+            format!("par_matmul_t {m}x{kdim}x{n} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn parallel_softmax_matches_scalar_reference() {
+    check(64, |g| {
+        let m = g.usize_in(1, 48);
+        let n = g.usize_in(1, 48);
+        let threads = g.usize_in(1, 4);
+        let base = gauss_mat(g, m, n, 3.0);
+        let mut scalar = base.clone();
+        scalar.softmax_rows();
+        let mut par = base.clone();
+        par.par_softmax_rows(threads);
+        prop_assert(
+            par.max_abs_diff(&scalar) < 1e-5,
+            format!("par_softmax_rows {m}x{n} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn streamed_linear_attention_matches_scalar_reference() {
+    check(48, |g| {
+        let nq = g.usize_in(1, 48);
+        let nk = g.usize_in(1, 48);
+        let feat = g.usize_in(1, 16);
+        let dv = g.usize_in(1, 16);
+        let chunk = g.usize_in(1, 64);
+        let threads = g.usize_in(1, 4);
+        let alpha = g.f32_in(0.3, 1.2);
+        let pq = att::lln_features(&gauss_mat(g, nq, feat, 0.8), alpha);
+        let pk = att::lln_features(&gauss_mat(g, nk, feat, 0.8), alpha);
+        let v = gauss_mat(g, nk, dv, 1.0);
+        let naive = att::linear_attention(&pq, &pk, &v);
+        let fast = att::linear_attention_streamed(&pq, &pk, &v, chunk, threads);
+        // 5e-5 scaled: the streamed form reorders f32 sums, so exact
+        // 1e-5 holds at unit scale but needs headroom at |v|-scale.
+        assert_close(
+            &fast,
+            &naive,
+            5e-5,
+            &format!("streamed nq={nq} nk={nk} m={feat} dv={dv} chunk={chunk} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn backend_forwards_match_scalar_kernels() {
+    check(32, |g| {
+        let n = 8 * g.usize_in(1, 6);
+        let d = g.usize_in(4, 24);
+        let alpha = g.f32_in(0.5, 1.5);
+        let threads = g.usize_in(1, 4);
+        let chunk = g.usize_in(1, 32);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        let params =
+            BackendParams { alpha, beta: alpha, block: 8, threads, chunk, ..Default::default() };
+
+        let sm = backend_for(Method::Softmax, params).forward(&q, &k, &v);
+        prop_assert(
+            sm.max_abs_diff(&att::softmax_attention(&q, &k, &v)) < 1e-6,
+            format!("softmax backend diverged n={n} d={d} t={threads}"),
+        )?;
+
+        let lln = backend_for(Method::Lln, params).forward(&q, &k, &v);
+        assert_close(
+            &lln,
+            &att::lln_attention(&q, &k, &v, alpha, alpha),
+            5e-5,
+            &format!("lln backend n={n} d={d} t={threads} chunk={chunk}"),
+        )?;
+
+        let bd = backend_for(Method::BlockDiag, params).forward(&q, &k, &v);
+        assert_close(
+            &bd,
+            &att::blockdiag_attention(&q, &k, &v, 8),
+            1e-6,
+            &format!("blockdiag backend n={n} t={threads}"),
+        )?;
+
+        let diag = backend_for(Method::LlnDiag, params).forward(&q, &k, &v);
+        assert_close(
+            &diag,
+            &att::lln_diag_attention(&q, &k, &v, alpha, alpha, 8),
+            5e-5,
+            &format!("lln_diag backend n={n} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn implicit_backends_produce_finite_shaped_outputs() {
+    check(24, |g| {
+        let lm = g.usize_in(2, 8);
+        let n = lm * g.usize_in(1, 6);
+        let d = g.usize_in(4, 16);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in [Method::Nystrom, Method::Linformer] {
+            let params = BackendParams { landmarks: lm, kproj: n.min(8), ..Default::default() };
+            let bk = backend_for(m, params);
+            prop_assert(bk.explicit_matrix(&q, &k).is_none(), format!("{m:?} grew a matrix"))?;
+            let out = bk.forward(&q, &k, &v);
+            prop_assert(out.shape() == (n, d), format!("{m:?}: shape {:?}", out.shape()))?;
+            prop_assert(
+                out.data().iter().all(|x| x.is_finite()),
+                format!("{m:?}: non-finite output n={n} d={d}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn flops_models_are_positive_and_monotone() {
+    check(24, |g| {
+        let n1 = g.usize_in(64, 512);
+        let n2 = n1 * g.usize_in(2, 8);
+        let d = *g.choose(&[32usize, 64, 128]);
+        for bk in att::all_backends() {
+            let (f1, f2) = (bk.flops_model(n1, d), bk.flops_model(n2, d));
+            prop_assert(
+                f1 > 0.0 && f2 > f1,
+                format!("{}: flops not monotone ({f1} -> {f2})", bk.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn default_backends_cover_every_method() {
+    for (bk, m) in att::all_backends().iter().zip(Method::ALL) {
+        assert_eq!(bk.method(), m);
+        assert_eq!(bk.name(), m.name());
+        assert_eq!(Method::parse(bk.name()), Some(m));
+    }
+    // And the registry is consistent with single-method construction.
+    for m in Method::ALL {
+        assert_eq!(default_backend(m).method(), m);
+    }
+}

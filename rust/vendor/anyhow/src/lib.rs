@@ -1,0 +1,140 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The crates.io mirror is unavailable in this build image, so the repo
+//! vendors the slice of `anyhow` it actually uses: [`Error`], [`Result`],
+//! the [`anyhow!`]/[`bail!`] macros, and the [`Context`] extension trait
+//! for `Result` and `Option`.  Context is recorded by prefixing the
+//! message (`"outer: inner"`), which keeps `{e}` / `{e:#}` renderings and
+//! substring-based test assertions behaving like upstream for this
+//! codebase's usage.
+
+use std::fmt;
+
+/// Dynamic error: a message chain.  Mirrors `anyhow::Error` closely
+/// enough for this repo: it does NOT implement `std::error::Error`
+/// (exactly like upstream), which is what allows the blanket
+/// `From<E: std::error::Error>` conversion below to coexist with the
+/// reflexive `From<Error> for Error` used by `?`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Construct from anything displayable (parity with `Error::msg`).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Self { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result`: error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures (implemented for `Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(format!("{context}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::new(context.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::new(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_fail() -> Result<String> {
+        let e = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(e)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!format!("{err}").is_empty());
+    }
+
+    #[test]
+    fn context_chains_prefix() {
+        let base: Result<(), Error> = Err(crate::anyhow!("inner {}", 7));
+        let err = base.context("outer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer: inner 7");
+        assert_eq!(format!("{err:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing key").unwrap_err();
+        assert!(format!("{err}").contains("missing key"));
+    }
+
+    #[test]
+    fn bail_macro_returns() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                crate::bail!("nope: {x}");
+            }
+            Ok(1)
+        }
+        assert!(f(false).is_ok());
+        assert!(format!("{}", f(true).unwrap_err()).contains("nope"));
+    }
+}
