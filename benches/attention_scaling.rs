@@ -3,30 +3,41 @@
 //! Section 1 runs the native `AttentionBackend` registry (always
 //! available); section 2 runs the AOT PJRT kernels when artifacts are
 //! built.  `cargo bench --bench attention_scaling`.
+//!
+//! Since the fused O(n·tile) kernels landed, the exact (quadratic-time)
+//! methods run honestly up to n=8192 — no n×n matrix is materialized —
+//! so the long-sequence rows compare against real exact attention, not
+//! a skipped cell.  `--tile` / `--unroll` (after `--`) forward the
+//! `[compute]` fused-kernel knobs.
 
 use lln::attention::{backend_for, BackendParams, Method};
-use lln::bench::{run_attention_backend, Bench};
+use lln::bench::{bench_arg_usize, run_attention_backend, Bench};
 use lln::rng::Pcg64;
 use lln::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
 use lln::tensor::default_threads;
 
 fn main() {
     let d = 64usize;
+    let tile = bench_arg_usize("tile").unwrap_or(0);
+    let unroll = bench_arg_usize("unroll").unwrap_or(0);
     let mut b = Bench::new();
 
     println!(
-        "== Table 2 bench (native backends, d={d}, {} worker threads) ==",
+        "== Table 2 bench (native backends, d={d}, {} worker threads, tile={tile}, unroll={unroll}) ==",
         default_threads()
     );
     for method in [Method::Softmax, Method::Lln, Method::LlnDiag, Method::Elu, Method::Nystrom] {
-        for n in [256usize, 1024, 4096] {
-            if !method.is_linear() && n > 1024 {
-                println!("backend {} n={n:<24} --- (skipped: quadratic regime)", method.name());
+        for n in [256usize, 1024, 4096, 8192, 16384] {
+            if !method.is_linear() && n > 8192 {
+                println!(
+                    "backend {} n={n:<24} --- (skipped: quadratic time; see `lln bench`)",
+                    method.name()
+                );
                 continue;
             }
             let bk = backend_for(
                 method,
-                BackendParams { alpha: 2.2, beta: 2.2, ..Default::default() },
+                BackendParams { alpha: 2.2, beta: 2.2, tile, unroll, ..Default::default() },
             );
             let mean = run_attention_backend(&mut b, bk.as_ref(), n, d, n as u64);
             let gflops = bk.flops_model(n, d) / mean / 1e9;

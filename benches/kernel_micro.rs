@@ -4,20 +4,28 @@
 //! Two tiers per method:
 //!   * scalar reference — the single-threaded `attention::kernels` free
 //!     functions (what the parity suite pins everything against);
-//!   * backend hot path — the `AttentionBackend` registry's blocked,
-//!     multi-threaded / chunk-streamed implementations.
-//! The speedup lines at the end are the acceptance signal for the
-//! parallel-backend work: blocked+threaded softmax and LLN forward must
-//! beat the scalar baseline at n=1024, d=64.
+//!   * backend hot path — the `AttentionBackend` registry's fused /
+//!     register-blocked, multi-threaded / chunk-streamed paths.
+//! The speedup lines at the end are the acceptance signals: the
+//! blocked+threaded backends must beat the scalar baseline at n=1024,
+//! and the fused O(n·tile) softmax must beat the PR-1
+//! `par_matmul_t`+`par_softmax_rows` pipeline by ≥ 2x at n=4096.
+//!
+//! Flags (after `cargo bench --bench kernel_micro --`):
+//!   --json <path>   write the kernel trajectory as BENCH_kernels.json
+//!   --tile <n>      fused-kernel K/V tile rows (0 = auto)
+//!   --unroll <n>    fused-kernel query register block (0 = auto)
 
 use lln::attention::{self as att, backend_for, BackendParams, Method};
-use lln::bench::{run_attention_backend, Bench};
+use lln::bench::{bench_arg, bench_arg_usize, run_attention_backend, run_kernel_bench, Bench};
 use lln::rng::Pcg64;
 use lln::tensor::{default_threads, Mat};
 
 fn main() {
     let d = 64usize;
     let threads = default_threads();
+    let tile = bench_arg_usize("tile").unwrap_or(0);
+    let unroll = bench_arg_usize("unroll").unwrap_or(0);
     let mut rng = Pcg64::seed(1);
     let mut b = Bench::new();
 
@@ -109,5 +117,27 @@ fn main() {
         println!("PASS: blocked+threaded softmax and LLN beat the scalar baseline at n=1024");
     } else {
         println!("WARN: backend slower than scalar at n=1024 — check LLN_THREADS / core count");
+    }
+
+    // Fused O(n·tile) kernels vs the materialized pipelines — the
+    // BENCH_kernels.json trajectory (shared with `lln bench`).
+    println!("\n== fused O(n·tile) kernels vs materialized pipelines (tile={tile}, unroll={unroll}) ==");
+    let params = BackendParams { tile, unroll, ..Default::default() };
+    let mut qb = Bench::quick();
+    let report = run_kernel_bench(&mut qb, &[1024, 4096], d, params);
+    println!("\n== fused vs pipeline speedups ==");
+    for (fast, slow, n, sp) in report.speedups() {
+        println!("speedup {fast:<24} vs {slow:<26} n={n:<6} {sp:.2}x");
+    }
+    match report.speedup("softmax_fused", "softmax_pipeline_pr1", 4096) {
+        Some(sp) if sp >= 2.0 => {
+            println!("PASS: fused softmax beats the PR-1 pipeline {sp:.2}x (>= 2x) at n=4096")
+        }
+        Some(sp) => println!("WARN: fused softmax only {sp:.2}x vs PR-1 pipeline at n=4096"),
+        None => println!("WARN: missing fused/pr1 measurement at n=4096"),
+    }
+    if let Some(path) = bench_arg("json") {
+        report.write_json(std::path::Path::new(&path)).expect("write BENCH_kernels.json");
+        println!("wrote {path}");
     }
 }

@@ -4,19 +4,25 @@
 //! the serving workers, the benches, the experiment harnesses, and the
 //! fig. 2 analysis sweeps — instead of per-call-site `match` arms over
 //! [`Method`].  Each implementation wires the method's *fast* path
-//! (cache-blocked + multi-threaded matmuls, chunked O(N) streaming for
-//! the linear class) while the free functions in
-//! [`kernels`](super::kernels) remain the single-threaded scalar
-//! reference that the property suite (`rust/tests/prop_kernels.rs`)
-//! pins the fast paths against.
+//! (fused O(n·tile) streaming-softmax for the exact class,
+//! register-blocked + multi-threaded matmuls, chunked O(N) streaming
+//! for the linear class) while the free functions in
+//! [`kernels`](super::kernels) remain the single-threaded reference
+//! formulation that the property suite (`rust/tests/prop_kernels.rs`)
+//! pins the fast paths against.  (Since the register-blocked
+//! microkernels landed, those free functions route their matmuls
+//! through [`tensor::micro`](crate::tensor::micro) too; the *scalar*
+//! anchors are `Mat::matmul_ref` / `Mat::matmul_t_ref`, which the
+//! parity suite pins the microkernels against separately.)
 //!
 //! To add a method: implement the trait, register it in
 //! [`backend_for`], add the `Method` variant, and extend the parity
 //! properties — see ROADMAP.md "Open items" for the checklist.
 
 use super::kernels::{
-    blockdiag_attention_matrix, elu_attention_matrix, elu_features, linear_attention_streamed,
-    lln_attention_matrix, lln_attention_streamed, nystrom_attention, par_blockdiag_attention,
+    blockdiag_attention_matrix, elu_attention_matrix, elu_features, fused_quadratic_attention,
+    fused_softmax_attention, linear_attention_streamed, lln_attention_matrix,
+    lln_attention_streamed, nystrom_attention, par_blockdiag_attention,
     performer_attention_matrix, performer_features, performer_projection,
     quadratic_attention_matrix, relu_attention_matrix, softmax_attention_matrix,
 };
@@ -48,6 +54,16 @@ pub struct BackendParams {
     /// Streaming work-partition granularity for the linear class: k/v
     /// rows are split across workers in multiples of this (0 = auto).
     pub chunk: usize,
+    /// K/V tile rows for the fused O(n·tile) exact kernels (0 = auto:
+    /// [`DEFAULT_FUSED_TILE`](super::kernels::DEFAULT_FUSED_TILE)).
+    pub tile: usize,
+    /// Query rows per register block in the fused kernels (0 = auto).
+    pub unroll: usize,
+    /// Route the exact quadratic-cost forwards (Softmax, Quadratic)
+    /// through the fused streaming kernels instead of materializing the
+    /// n×n score matrix.  On by default; turn off to get the
+    /// bitwise-reproducible materialized pipeline.
+    pub fused: bool,
 }
 
 impl Default for BackendParams {
@@ -62,14 +78,26 @@ impl Default for BackendParams {
             seed: 7,
             threads: 0,
             chunk: 0,
+            tile: 0,
+            unroll: 0,
+            fused: true,
         }
     }
 }
 
 impl BackendParams {
-    /// Pull worker-count / blocking knobs from the launcher config.
+    /// Pull worker-count / blocking / fused-kernel knobs from the
+    /// launcher config.
     pub fn from_compute(c: &crate::config::ComputeConfig) -> Self {
-        Self { threads: c.threads, block: c.block, chunk: c.chunk, ..Default::default() }
+        Self {
+            threads: c.threads,
+            block: c.block,
+            chunk: c.chunk,
+            tile: c.tile,
+            unroll: c.unroll,
+            fused: c.fused,
+            ..Default::default()
+        }
     }
 }
 
@@ -108,6 +136,12 @@ impl AttentionBackend for SoftmaxBackend {
         Method::Softmax
     }
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        if self.0.fused {
+            // O(n·tile) streaming-softmax path: never builds the n×n
+            // score matrix, which is what lets exact softmax serve and
+            // bench honestly at 8k–16k tokens.
+            return fused_softmax_attention(q, k, v, self.0.tile, self.0.unroll, self.0.threads);
+        }
         let d = q.cols();
         let mut scores = q.par_matmul_t(k, self.0.threads);
         let scale = 1.0 / (d as f32).sqrt();
@@ -235,6 +269,9 @@ impl AttentionBackend for QuadraticBackend {
         Method::Quadratic
     }
     fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        if self.0.fused {
+            return fused_quadratic_attention(q, k, v, self.0.tile, self.0.unroll, self.0.threads);
+        }
         quadratic_attention_matrix(q, k).par_matmul(v, self.0.threads)
     }
     fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
@@ -426,11 +463,45 @@ mod tests {
     }
 
     #[test]
-    fn softmax_backend_matches_scalar_reference() {
+    fn unfused_softmax_backend_matches_scalar_reference() {
+        // The materialized pipeline (fused = false) stays pinned
+        // bitwise to the scalar kernel route: both sides run the same
+        // register-blocked microkernels in the same per-row FP order.
         let (q, k, v) = probe(64, 32, 1);
-        let fast = default_backend(Method::Softmax).forward(&q, &k, &v);
+        let params = BackendParams { fused: false, ..Default::default() };
+        let fast = backend_for(Method::Softmax, params).forward(&q, &k, &v);
         let slow = crate::attention::softmax_attention(&q, &k, &v);
         assert_eq!(fast.data(), slow.data(), "row-partitioned path must be bitwise identical");
+    }
+
+    #[test]
+    fn fused_softmax_backend_matches_unfused_within_eps() {
+        // Default (fused) forward reorders f32 sums but must agree with
+        // the materialized pipeline to streaming-softmax tolerance.
+        let (q, k, v) = probe(96, 32, 8);
+        for tile in [0usize, 16, 40, 200] {
+            let fused = backend_for(
+                Method::Softmax,
+                BackendParams { tile, ..Default::default() },
+            )
+            .forward(&q, &k, &v);
+            let unfused = backend_for(
+                Method::Softmax,
+                BackendParams { fused: false, ..Default::default() },
+            )
+            .forward(&q, &k, &v);
+            let err = fused.max_abs_diff(&unfused);
+            assert!(err < 1e-5, "tile={tile}: {err}");
+        }
+    }
+
+    #[test]
+    fn fused_quadratic_backend_matches_matrix_route() {
+        let (q, k, v) = probe(96, 16, 9);
+        let bk = default_backend(Method::Quadratic);
+        let p = bk.explicit_matrix(&q, &k).unwrap();
+        let err = bk.forward(&q, &k, &v).max_abs_diff(&p.matmul(&v));
+        assert!(err < 1e-4, "fused quadratic vs matrix route: {err}");
     }
 
     #[test]

@@ -36,6 +36,262 @@ pub fn softmax_attention_matrix(q: &Mat, k: &Mat) -> Mat {
 }
 
 // ---------------------------------------------------------------------------
+// Fused tiled exact attention (flash-style streaming softmax)
+// ---------------------------------------------------------------------------
+
+/// Default K/V tile rows for the fused kernels: 128 rows of d=64 f32
+/// keys + values ≈ 64 KiB, hot in L2 while a query block streams over
+/// them.
+pub const DEFAULT_FUSED_TILE: usize = 128;
+/// Default query rows per register block in the fused kernels (matches
+/// [`crate::tensor::micro::MR`]).
+pub const DEFAULT_FUSED_UNROLL: usize = 4;
+/// Cap on the query-row register block — beyond this the per-worker
+/// score buffer stops paying for itself.
+pub const MAX_FUSED_UNROLL: usize = 8;
+
+fn resolve_tile(tile: usize) -> usize {
+    if tile == 0 {
+        DEFAULT_FUSED_TILE
+    } else {
+        tile
+    }
+}
+
+fn resolve_unroll(unroll: usize) -> usize {
+    if unroll == 0 {
+        DEFAULT_FUSED_UNROLL
+    } else {
+        unroll.min(MAX_FUSED_UNROLL)
+    }
+}
+
+/// Fused tiled softmax attention — exact (up to f32 summation order)
+/// softmax attention in O(n·tile) working memory: the n×n score matrix
+/// is never materialized.
+///
+/// Query rows are split across `threads` scoped workers (0 = auto) via
+/// [`partition_rows`](crate::tensor::partition_rows); each worker walks
+/// its rows in `unroll`-row register blocks (0 = auto) and streams K/V
+/// in `tile`-row tiles (0 = auto), maintaining the online-softmax
+/// (running row-max m, running row-sum l, value accumulator) recurrence
+/// per query row:
+///
+///   m' = max(m, max_j s_j);  c = exp(m - m');
+///   l' = c·l + Σ_j exp(s_j - m');  acc' = c·acc + Σ_j exp(s_j - m')·v_j
+///
+/// Score tiles come from the register-blocked
+/// [`micro::matmul_t_block`](crate::tensor::micro::matmul_t_block)
+/// kernel, so this is also substantially faster than the materialized
+/// `par_matmul_t` + `par_softmax_rows` + `par_matmul` pipeline it
+/// replaces.  Any `tile` ≥ 1 is legal, including tiles larger than the
+/// key count and tiles that do not divide it.
+pub fn fused_softmax_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    tile: usize,
+    unroll: usize,
+    threads: usize,
+) -> Mat {
+    assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
+    assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
+    let (nq, d) = q.shape();
+    let nk = k.rows();
+    let dv = v.cols();
+    let mut out = Mat::zeros(nq, dv);
+    if nq == 0 || nk == 0 || dv == 0 {
+        return out;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let tile = resolve_tile(tile).min(nk);
+    let ur = resolve_unroll(unroll);
+    let t = crate::tensor::resolve_threads(threads).min(nq);
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    if t <= 1 {
+        // Same serial short-circuit as the other `par_*` entry points:
+        // no worker spawn when one span would do.
+        fused_softmax_rows(qd, kd, vd, out.data_mut(), 0, nq, d, nk, dv, scale, tile, ur);
+        return out;
+    }
+    crate::tensor::par_row_spans(out.data_mut(), nq, dv, t, |row0, len, chunk| {
+        fused_softmax_rows(qd, kd, vd, chunk, row0, len, d, nk, dv, scale, tile, ur);
+    });
+    out
+}
+
+/// One worker's query-row span of [`fused_softmax_attention`].
+#[allow(clippy::too_many_arguments)]
+fn fused_softmax_rows(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    row0: usize,
+    rows: usize,
+    d: usize,
+    nk: usize,
+    dv: usize,
+    scale: f32,
+    tile: usize,
+    ur: usize,
+) {
+    // Per-worker scratch: O(ur·(tile + dv)) — independent of n.
+    let mut scores = vec![0.0f32; ur * tile];
+    let mut acc = vec![0.0f32; ur * dv];
+    let mut row_max = vec![f32::NEG_INFINITY; ur];
+    let mut row_sum = vec![0.0f32; ur];
+    let mut i = 0;
+    while i < rows {
+        let ib = ur.min(rows - i);
+        acc[..ib * dv].fill(0.0);
+        row_max[..ib].fill(f32::NEG_INFINITY);
+        row_sum[..ib].fill(0.0);
+        let qrows = &q[(row0 + i) * d..(row0 + i + ib) * d];
+        let mut t0 = 0;
+        while t0 < nk {
+            let tn = tile.min(nk - t0);
+            let ktile = &k[t0 * d..(t0 + tn) * d];
+            crate::tensor::micro::matmul_t_block(qrows, ktile, &mut scores[..ib * tn], ib, d, tn);
+            for r in 0..ib {
+                let srow = &mut scores[r * tn..(r + 1) * tn];
+                let mut tile_max = f32::NEG_INFINITY;
+                for s in srow.iter_mut() {
+                    *s *= scale;
+                    tile_max = tile_max.max(*s);
+                }
+                let m_new = row_max[r].max(tile_max);
+                // First tile: row_max is -inf, m_new is finite (scores
+                // of finite inputs are finite), so the correction
+                // exp(-inf) = 0 cleanly re-zeroes the empty state.
+                let correction = (row_max[r] - m_new).exp();
+                let arow = &mut acc[r * dv..(r + 1) * dv];
+                if correction != 1.0 {
+                    row_sum[r] *= correction;
+                    for a in arow.iter_mut() {
+                        *a *= correction;
+                    }
+                }
+                let mut tile_sum = 0.0f32;
+                for (j, &s) in srow.iter().enumerate() {
+                    let p = (s - m_new).exp();
+                    tile_sum += p;
+                    let vrow = &v[(t0 + j) * dv..(t0 + j + 1) * dv];
+                    for (a, &vv) in arow.iter_mut().zip(vrow) {
+                        *a += p * vv;
+                    }
+                }
+                row_sum[r] += tile_sum;
+                row_max[r] = m_new;
+            }
+            t0 += tn;
+        }
+        for r in 0..ib {
+            // row_sum >= exp(m - m) = 1: no eps needed, exactly like
+            // the dense softmax.
+            let inv = 1.0 / row_sum[r];
+            let orow = &mut out[(i + r) * dv..(i + r + 1) * dv];
+            for (o, &a) in orow.iter_mut().zip(&acc[r * dv..(r + 1) * dv]) {
+                *o = a * inv;
+            }
+        }
+        i += ib;
+    }
+}
+
+/// Fused tiled quadratic-kernel attention: same K/V streaming as
+/// [`fused_softmax_attention`] but with κ(q,k) = (q·k)² weights, which
+/// need no online max — just numerator/denominator accumulators.
+/// Matches [`quadratic_attention_matrix`]` @ v` (same EPS in the
+/// denominator) up to f32 summation order, in O(n·tile) memory.
+pub fn fused_quadratic_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    tile: usize,
+    unroll: usize,
+    threads: usize,
+) -> Mat {
+    assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
+    assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
+    let (nq, d) = q.shape();
+    let nk = k.rows();
+    let dv = v.cols();
+    let mut out = Mat::zeros(nq, dv);
+    if nq == 0 || nk == 0 || dv == 0 {
+        return out;
+    }
+    let tile = resolve_tile(tile).min(nk);
+    let ur = resolve_unroll(unroll);
+    let t = crate::tensor::resolve_threads(threads).min(nq);
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    if t <= 1 {
+        fused_quadratic_rows(qd, kd, vd, out.data_mut(), 0, nq, d, nk, dv, tile, ur);
+        return out;
+    }
+    crate::tensor::par_row_spans(out.data_mut(), nq, dv, t, |row0, len, chunk| {
+        fused_quadratic_rows(qd, kd, vd, chunk, row0, len, d, nk, dv, tile, ur);
+    });
+    out
+}
+
+/// One worker's query-row span of [`fused_quadratic_attention`].
+#[allow(clippy::too_many_arguments)]
+fn fused_quadratic_rows(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    row0: usize,
+    rows: usize,
+    d: usize,
+    nk: usize,
+    dv: usize,
+    tile: usize,
+    ur: usize,
+) {
+    let mut scores = vec![0.0f32; ur * tile];
+    let mut num = vec![0.0f32; ur * dv];
+    let mut den = vec![0.0f32; ur];
+    let mut i = 0;
+    while i < rows {
+        let ib = ur.min(rows - i);
+        num[..ib * dv].fill(0.0);
+        den[..ib].fill(0.0);
+        let qrows = &q[(row0 + i) * d..(row0 + i + ib) * d];
+        let mut t0 = 0;
+        while t0 < nk {
+            let tn = tile.min(nk - t0);
+            let ktile = &k[t0 * d..(t0 + tn) * d];
+            crate::tensor::micro::matmul_t_block(qrows, ktile, &mut scores[..ib * tn], ib, d, tn);
+            for r in 0..ib {
+                let srow = &scores[r * tn..(r + 1) * tn];
+                let nrow = &mut num[r * dv..(r + 1) * dv];
+                let mut tile_den = 0.0f32;
+                for (j, &s) in srow.iter().enumerate() {
+                    let w = s * s;
+                    tile_den += w;
+                    let vrow = &v[(t0 + j) * dv..(t0 + j + 1) * dv];
+                    for (o, &vv) in nrow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+                den[r] += tile_den;
+            }
+            t0 += tn;
+        }
+        for r in 0..ib {
+            let inv = 1.0 / (den[r] + EPS);
+            let orow = &mut out[(i + r) * dv..(i + r + 1) * dv];
+            for (o, &x) in orow.iter_mut().zip(&num[r * dv..(r + 1) * dv]) {
+                *o = x * inv;
+            }
+        }
+        i += ib;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Generic linearized attention (paper eq. 4)
 // ---------------------------------------------------------------------------
 
@@ -334,18 +590,18 @@ pub fn nystrom_attention(q: &Mat, k: &Mat, v: &Mat, landmarks: usize) -> Mat {
 /// One diagonal tile's row-stochastic softmax scores: the shared kernel
 /// of [`blockdiag_attention`], [`par_blockdiag_attention`], and
 /// [`blockdiag_attention_matrix`] (keep them numerically identical).
+/// Scores come from the register-blocked
+/// [`micro::matmul_t_block`](crate::tensor::micro::matmul_t_block) over
+/// the tile's contiguous row range — the same microkernel the fused
+/// softmax path uses — so the LLN+Diag score path shares the SIMD
+/// kernels too.
 fn softmax_tile(q: &Mat, k: &Mat, b0: usize, block: usize, scale: f32) -> Mat {
     let d = q.cols();
     let mut s = Mat::zeros(block, block);
-    for i in 0..block {
-        for j in 0..block {
-            let mut acc = 0.0f32;
-            for t in 0..d {
-                acc += q.get(b0 + i, t) * k.get(b0 + j, t);
-            }
-            s.set(i, j, acc * scale);
-        }
-    }
+    let qrows = &q.data()[b0 * d..(b0 + block) * d];
+    let krows = &k.data()[b0 * d..(b0 + block) * d];
+    crate::tensor::micro::matmul_t_block(qrows, krows, s.data_mut(), block, d, block);
+    s.map_inplace(|x| x * scale);
     s.softmax_rows();
     s
 }
@@ -627,6 +883,84 @@ mod tests {
             let par = par_blockdiag_attention(&q, &k, &v, 32, threads);
             assert!(serial.max_abs_diff(&par) < 1e-6, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn fused_softmax_matches_dense_route() {
+        let (q, k, v) = probe(96, 24, 20);
+        let dense = softmax_attention_matrix(&q, &k).matmul(&v);
+        // Tiles that divide n, tiles that don't, tile == 1, tile > n,
+        // every unroll mode, and thread counts beyond the row count.
+        for (tile, unroll, threads) in
+            [(16, 4, 1), (0, 0, 0), (7, 1, 3), (1, 2, 2), (200, 8, 4), (96, 3, 128)]
+        {
+            let fused = fused_softmax_attention(&q, &k, &v, tile, unroll, threads);
+            let err = fused.max_abs_diff(&dense);
+            assert!(err < 1e-5, "tile={tile} unroll={unroll} threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn fused_softmax_handles_rectangular_shapes() {
+        let mut rng = Pcg64::seed(21);
+        let q = Mat::gaussian(37, 16, 0.8, &mut rng);
+        let k = Mat::gaussian(53, 16, 0.8, &mut rng);
+        let v = Mat::gaussian(53, 5, 1.0, &mut rng);
+        let dense = softmax_attention_matrix(&q, &k).matmul(&v);
+        let fused = fused_softmax_attention(&q, &k, &v, 8, 4, 2);
+        assert!(fused.max_abs_diff(&dense) < 1e-5);
+    }
+
+    #[test]
+    fn fused_softmax_stable_at_extreme_scores() {
+        // Rows with huge score spread: the online max must keep every
+        // exp() in range, exactly like the dense stable softmax.
+        let mut rng = Pcg64::seed(22);
+        let mut q = Mat::gaussian(16, 8, 1.0, &mut rng);
+        for t in 0..8 {
+            q.set(0, t, 300.0);
+            q.set(1, t, -300.0);
+        }
+        let k = Mat::gaussian(48, 8, 1.0, &mut rng);
+        let v = Mat::gaussian(48, 4, 1.0, &mut rng);
+        let out = fused_softmax_attention(&q, &k, &v, 16, 4, 2);
+        assert!(out.data().iter().all(|x| x.is_finite()));
+        let dense = softmax_attention_matrix(&q, &k).matmul(&v);
+        assert!(out.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn fused_softmax_output_in_value_hull() {
+        let (q, k, v) = probe(64, 16, 23);
+        let out = fused_softmax_attention(&q, &k, &v, 24, 4, 3);
+        let vmax = v.data().iter().cloned().fold(f32::MIN, f32::max);
+        let vmin = v.data().iter().cloned().fold(f32::MAX, f32::min);
+        assert!(out.data().iter().all(|&x| x <= vmax + 1e-4 && x >= vmin - 1e-4));
+    }
+
+    #[test]
+    fn fused_quadratic_matches_matrix_route() {
+        let (q, k, v) = probe(80, 16, 24);
+        let dense = quadratic_attention_matrix(&q, &k).matmul(&v);
+        for (tile, unroll, threads) in [(16, 4, 1), (0, 0, 0), (13, 2, 3), (300, 1, 2)] {
+            let fused = fused_quadratic_attention(&q, &k, &v, tile, unroll, threads);
+            let err = fused.max_abs_diff(&dense);
+            assert!(err < 1e-4, "tile={tile} unroll={unroll} threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn fused_kernels_handle_degenerate_shapes() {
+        let empty_q = Mat::zeros(0, 8);
+        let k = Mat::zeros(4, 8);
+        let v = Mat::zeros(4, 3);
+        assert_eq!(fused_softmax_attention(&empty_q, &k, &v, 0, 0, 0).shape(), (0, 3));
+        let one = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let kv = Mat::from_vec(1, 2, vec![0.5, -0.5]);
+        let vv = Mat::from_vec(1, 1, vec![3.0]);
+        // n=1: softmax over a single key is exactly that value row.
+        let out = fused_softmax_attention(&one, &kv, &vv, 64, 4, 8);
+        assert!((out.get(0, 0) - 3.0).abs() < 1e-6);
     }
 
     #[test]

@@ -74,8 +74,11 @@ impl Method {
 }
 
 /// Analytic memory model (bytes) for a single attention head's forward
-/// pass — the Table 2 "Memory" column, parameterized like the paper.
-/// `n` sequence length, `d` head dim, f32 everywhere.
+/// pass — the Table 2 "Memory" column, parameterized like the paper
+/// (the full matrix is kept for backward, so Softmax/Quadratic charge
+/// n×n here even though the native *inference* forwards now run the
+/// fused O(n·tile) kernels).  `n` sequence length, `d` head dim, f32
+/// everywhere.
 pub fn memory_model_bytes(method: Method, n: usize, d: usize) -> usize {
     let f = 4; // f32
     let io = 3 * n * d * f + n * d * f; // q, k, v, out

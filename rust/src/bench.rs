@@ -133,6 +133,224 @@ pub fn run_attention_backend(
     b.run(&name, n as f64, || backend.forward(&q, &k, &v)).mean()
 }
 
+// ---------------------------------------------------------------------------
+// Kernel perf trajectory (BENCH_kernels.json)
+// ---------------------------------------------------------------------------
+
+/// One timed kernel entry of the JSON trajectory report.
+#[derive(Clone, Debug)]
+pub struct KernelRecord {
+    pub name: &'static str,
+    pub n: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub iters: usize,
+}
+
+/// The `lln bench --json` / `kernel_micro -- --json` report: per-method
+/// ns/op at each probed sequence length plus derived speedups — the
+/// cross-PR perf record CI uploads as the `BENCH_kernels.json`
+/// artifact.
+pub struct KernelReport {
+    pub d: usize,
+    pub threads: usize,
+    pub records: Vec<KernelRecord>,
+}
+
+/// (fast, slow) kernel pairs whose ratio the report derives whenever
+/// both were measured at the same n.  `softmax_fused` vs
+/// `softmax_pipeline_pr1` at n=4096 is the headline acceptance number.
+const SPEEDUP_PAIRS: &[(&str, &str)] = &[
+    ("softmax_fused", "softmax_pipeline_pr1"),
+    ("softmax_fused", "softmax_pipeline_blocked"),
+    ("matmul_t_blocked", "matmul_t_pr1"),
+];
+
+/// The PR-1 scalar-dot baseline is only timed up to this n — it is the
+/// slow thing being replaced, and above 4k it also re-materializes the
+/// n×n matrix the fused path exists to avoid.
+pub const PR1_BASELINE_MAX_N: usize = 4096;
+
+impl KernelReport {
+    pub fn mean_ns(&self, name: &str, n: usize) -> Option<f64> {
+        self.records.iter().find(|r| r.name == name && r.n == n).map(|r| r.mean_ns)
+    }
+
+    /// slow/fast time ratio, when both kernels were measured at `n`.
+    pub fn speedup(&self, fast: &str, slow: &str, n: usize) -> Option<f64> {
+        let f = self.mean_ns(fast, n)?;
+        let s = self.mean_ns(slow, n)?;
+        if f > 0.0 {
+            Some(s / f)
+        } else {
+            None
+        }
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self.records.iter().map(|r| r.n).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// Every derivable (fast, slow, n, ratio) speedup line.
+    pub fn speedups(&self) -> Vec<(&'static str, &'static str, usize, f64)> {
+        let mut out = Vec::new();
+        for &(fast, slow) in SPEEDUP_PAIRS {
+            for n in self.sizes() {
+                if let Some(sp) = self.speedup(fast, slow, n) {
+                    out.push((fast, slow, n, sp));
+                }
+            }
+        }
+        out
+    }
+
+    /// Hand-rolled JSON (the image vendors no serde); schema is flat on
+    /// purpose so the trajectory stays diffable across PRs.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str("  \"bench\": \"kernels\",\n");
+        s.push_str(&format!("  \"d\": {},\n", self.d));
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let sep = if i + 1 == self.records.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"n\": {}, \"ns_per_op\": {:.0}, \"p50_ns\": {:.0}, \"iters\": {}}}{}\n",
+                r.name, r.n, r.mean_ns, r.p50_ns, r.iters, sep
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"speedups\": {\n");
+        let lines: Vec<String> = self
+            .speedups()
+            .iter()
+            .map(|(fast, slow, n, sp)| format!("    \"{fast}_vs_{slow}_n{n}\": {sp:.2}"))
+            .collect();
+        s.push_str(&lines.join(",\n"));
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Run the kernel perf trajectory suite: at each n, the PR-1 scalar-dot
+/// pipeline baseline (up to [`PR1_BASELINE_MAX_N`]), the
+/// register-blocked materialized pipeline, the fused O(n·tile)
+/// kernels, and the streamed linear-class forwards.  Shared by the
+/// `lln bench` subcommand and the `kernel_micro` bench target so both
+/// emit the same BENCH_kernels.json schema.
+pub fn run_kernel_bench(
+    b: &mut Bench,
+    sizes: &[usize],
+    d: usize,
+    params: crate::attention::BackendParams,
+) -> KernelReport {
+    use crate::attention::{backend_for, BackendParams, Method};
+    use crate::tensor::Mat;
+
+    let threads = crate::tensor::resolve_threads(params.threads);
+    let mut records: Vec<KernelRecord> = Vec::new();
+    let push = |records: &mut Vec<KernelRecord>, name: &'static str, n: usize, r: &BenchResult| {
+        records.push(KernelRecord {
+            name,
+            n,
+            mean_ns: r.mean() * 1e9,
+            p50_ns: r.percentile(50.0) * 1e9,
+            iters: r.samples.len(),
+        });
+    };
+
+    for &n in sizes {
+        let mut rng = crate::rng::Pcg64::seed(0x5EED ^ n as u64);
+        let q = Mat::gaussian(n, d, 1.0, &mut rng);
+        let k = Mat::gaussian(n, d, 1.0, &mut rng);
+        let v = Mat::gaussian(n, d, 1.0, &mut rng);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        if n <= PR1_BASELINE_MAX_N {
+            // The PR-1 pipeline this PR replaces: scalar-dot scores +
+            // row softmax + value matmul, all materializing n×n.
+            let r = b
+                .run(&format!("softmax_pipeline_pr1 n={n}"), 1.0, || {
+                    let mut s = q.par_matmul_t_ref(&k, params.threads);
+                    s.map_inplace(|x| x * scale);
+                    s.par_softmax_rows(params.threads);
+                    s.par_matmul(&v, params.threads)
+                })
+                .clone();
+            push(&mut records, "softmax_pipeline_pr1", n, &r);
+
+            let r = b
+                .run(&format!("matmul_t_pr1 n={n}"), 1.0, || q.par_matmul_t_ref(&k, params.threads))
+                .clone();
+            push(&mut records, "matmul_t_pr1", n, &r);
+
+            let r = b
+                .run(&format!("matmul_t_blocked n={n}"), 1.0, || q.par_matmul_t(&k, params.threads))
+                .clone();
+            push(&mut records, "matmul_t_blocked", n, &r);
+        }
+
+        let unfused = backend_for(Method::Softmax, BackendParams { fused: false, ..params });
+        let r = b
+            .run(&format!("softmax_pipeline_blocked n={n}"), 1.0, || unfused.forward(&q, &k, &v))
+            .clone();
+        push(&mut records, "softmax_pipeline_blocked", n, &r);
+
+        let fused = backend_for(Method::Softmax, params);
+        let r = b.run(&format!("softmax_fused n={n}"), 1.0, || fused.forward(&q, &k, &v)).clone();
+        push(&mut records, "softmax_fused", n, &r);
+
+        let quad = backend_for(Method::Quadratic, params);
+        let r = b.run(&format!("quadratic_fused n={n}"), 1.0, || quad.forward(&q, &k, &v)).clone();
+        push(&mut records, "quadratic_fused", n, &r);
+
+        let lln = backend_for(Method::Lln, BackendParams { alpha: 2.2, beta: 2.2, ..params });
+        let r = b.run(&format!("lln_streamed n={n}"), 1.0, || lln.forward(&q, &k, &v)).clone();
+        push(&mut records, "lln_streamed", n, &r);
+
+        let diag = backend_for(Method::LlnDiag, BackendParams { alpha: 2.2, beta: 2.2, ..params });
+        let r = b.run(&format!("lln_diag n={n}"), 1.0, || diag.forward(&q, &k, &v)).clone();
+        push(&mut records, "lln_diag", n, &r);
+    }
+
+    KernelReport { d, threads, records }
+}
+
+/// Minimal `--flag value` / `--flag=value` scan for the harness-less
+/// bench targets (`cargo bench -- --json path`); ignores everything it
+/// does not recognize (cargo itself passes `--bench`).
+pub fn bench_arg(name: &str) -> Option<String> {
+    let eq_prefix = format!("--{name}=");
+    let bare = format!("--{name}");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if let Some(v) = a.strip_prefix(&eq_prefix) {
+            return Some(v.to_string());
+        }
+        if a == bare {
+            return args.next();
+        }
+    }
+    None
+}
+
+/// [`bench_arg`] parsed as usize (None on absent or unparsable).
+pub fn bench_arg_usize(name: &str) -> Option<usize> {
+    bench_arg(name).and_then(|v| v.parse().ok())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +370,58 @@ mod tests {
         let mut b = Bench { warmup_iters: 0, min_iters: 1, max_iters: 3, time_budget_secs: 100.0, results: vec![] };
         let r = b.run("capped", 0.0, || ()).clone();
         assert!(r.samples.len() <= 3);
+    }
+
+    #[test]
+    fn kernel_report_speedups_and_json_shape() {
+        let rec = |name: &'static str, n: usize, mean_ns: f64| KernelRecord {
+            name,
+            n,
+            mean_ns,
+            p50_ns: mean_ns,
+            iters: 3,
+        };
+        let report = KernelReport {
+            d: 64,
+            threads: 4,
+            records: vec![
+                rec("softmax_pipeline_pr1", 4096, 8000.0),
+                rec("softmax_fused", 4096, 2000.0),
+                rec("softmax_fused", 8192, 9000.0),
+            ],
+        };
+        let sp = report.speedup("softmax_fused", "softmax_pipeline_pr1", 4096).unwrap();
+        assert!((sp - 4.0).abs() < 1e-9);
+        // No pr1 measurement at 8192 -> no derived pair there.
+        assert!(report.speedup("softmax_fused", "softmax_pipeline_pr1", 8192).is_none());
+        assert_eq!(report.speedups().len(), 1);
+        let json = report.to_json();
+        assert!(json.contains("\"bench\": \"kernels\""));
+        assert!(json.contains("\"softmax_fused_vs_softmax_pipeline_pr1_n4096\": 4.00"));
+        assert!(json.contains("\"name\": \"softmax_fused\", \"n\": 8192"));
+        // Balanced braces/brackets as a cheap well-formedness check.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn run_kernel_bench_produces_records_at_small_n() {
+        let mut b = Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, time_budget_secs: 0.01, results: vec![] };
+        let report = run_kernel_bench(&mut b, &[64], 8, crate::attention::BackendParams::default());
+        for name in [
+            "softmax_pipeline_pr1",
+            "softmax_pipeline_blocked",
+            "softmax_fused",
+            "quadratic_fused",
+            "lln_streamed",
+            "lln_diag",
+            "matmul_t_pr1",
+            "matmul_t_blocked",
+        ] {
+            assert!(report.mean_ns(name, 64).is_some(), "{name} missing");
+        }
+        assert!(report
+            .speedup("softmax_fused", "softmax_pipeline_pr1", 64)
+            .is_some());
     }
 }

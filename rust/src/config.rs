@@ -311,11 +311,19 @@ pub struct ComputeConfig {
     /// Streaming work-partition granularity: key/value rows are split
     /// across workers in multiples of this (0 = auto).
     pub chunk: usize,
+    /// K/V tile rows for the fused O(n·tile) exact-attention kernels
+    /// (0 = auto).  See docs/CONFIG.md §[compute].
+    pub tile: usize,
+    /// Query rows per register block in the fused kernels (0 = auto).
+    pub unroll: usize,
+    /// Route exact (Softmax / Quadratic) forwards through the fused
+    /// streaming kernels instead of materializing the n×n score matrix.
+    pub fused: bool,
 }
 
 impl Default for ComputeConfig {
     fn default() -> Self {
-        Self { threads: 0, block: 64, chunk: 0 }
+        Self { threads: 0, block: 64, chunk: 0, tile: 0, unroll: 0, fused: true }
     }
 }
 
@@ -326,6 +334,9 @@ impl ComputeConfig {
             threads: t.usize_or("compute.threads", d.threads),
             block: t.usize_or("compute.block", d.block),
             chunk: t.usize_or("compute.chunk", d.chunk),
+            tile: t.usize_or("compute.tile", d.tile),
+            unroll: t.usize_or("compute.unroll", d.unroll),
+            fused: t.bool_or("compute.fused", d.fused),
         }
     }
 
@@ -387,12 +398,29 @@ method = lln_diag
         assert_eq!(cc.block, 32);
         assert_eq!(cc.chunk, 0);
         assert_eq!(cc.resolved_threads(), 3);
+        // Fused-kernel knobs default to auto/on.
+        assert_eq!(cc.tile, 0);
+        assert_eq!(cc.unroll, 0);
+        assert!(cc.fused, "fused exact kernels must be the default");
         let auto = ComputeConfig::default();
         assert!(auto.resolved_threads() >= 1);
         // The serve config forwards the [compute] section to workers.
         let sc = ServeConfig::from_table(&t);
         assert_eq!(sc.compute.threads, 3);
         assert_eq!(sc.compute.block, 32);
+    }
+
+    #[test]
+    fn compute_config_fused_knobs_parse() {
+        let t = ConfigTable::parse("[compute]\ntile = 256\nunroll = 2\nfused = false").unwrap();
+        let cc = ComputeConfig::from_table(&t);
+        assert_eq!(cc.tile, 256);
+        assert_eq!(cc.unroll, 2);
+        assert!(!cc.fused);
+        // And they ride along into the serve config's compute section.
+        let sc = ServeConfig::from_table(&t);
+        assert_eq!(sc.compute.tile, 256);
+        assert!(!sc.compute.fused);
     }
 
     #[test]

@@ -154,13 +154,33 @@ mod tests {
         // threads=1, chunk=16 and a dividing block must be accepted and
         // still produce the same deterministic logits as defaults (the
         // kernels are parallelism-invariant).
-        let custom = ComputeConfig { threads: 1, block: 32, chunk: 16 };
+        let custom = ComputeConfig { threads: 1, block: 32, chunk: 16, ..Default::default() };
         let a = NativeEncoder::new(Method::Lln, 32, 4, 64, 9, &custom);
         let b = NativeEncoder::new(Method::Lln, 32, 4, 64, 9, &ComputeConfig::default());
         let tokens: Vec<i32> = (0..64).map(|i| (i % 11) + 4).collect();
         let (la, lb) = (a.infer(&tokens), b.infer(&tokens));
         for (x, y) in la.iter().zip(&lb) {
             assert!((x - y).abs() < 1e-4, "{la:?} vs {lb:?}");
+        }
+    }
+
+    #[test]
+    fn fused_softmax_bucket_matches_materialized_pipeline() {
+        // `[compute] fused` flips an exact-softmax bucket between the
+        // O(n·tile) streaming kernel and the materialized pipeline; the
+        // served logits must agree to kernel tolerance for every tile /
+        // unroll configuration a config file could set.
+        let tokens: Vec<i32> = (0..96).map(|i| (i % 23) + 4).collect();
+        let unfused_cc = ComputeConfig { fused: false, ..Default::default() };
+        let reference = NativeEncoder::new(Method::Softmax, 32, 4, 96, 5, &unfused_cc).infer(&tokens);
+        for (tile, unroll) in [(0usize, 0usize), (16, 1), (40, 2), (400, 8)] {
+            let cc = ComputeConfig { tile, unroll, ..Default::default() };
+            let enc = NativeEncoder::new(Method::Softmax, 32, 4, 96, 5, &cc);
+            assert_eq!(enc.backend_name(), "softmax");
+            let logits = enc.infer(&tokens);
+            for (x, y) in logits.iter().zip(&reference) {
+                assert!((x - y).abs() < 1e-3, "tile={tile} unroll={unroll}: {logits:?} vs {reference:?}");
+            }
         }
     }
 }

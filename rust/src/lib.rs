@@ -17,13 +17,16 @@
 //! [`attention::AttentionBackend`] (`forward` / `explicit_matrix` /
 //! `flops_model` / `name`), constructed from the
 //! [`attention::backend_for`] registry.  Backends implement the *fast*
-//! path — cache-blocked multi-threaded matmul/softmax
-//! ([`tensor::Mat::par_matmul`], [`tensor::Mat::par_matmul_t`],
-//! [`tensor::Mat::par_softmax_rows`]) and the chunked O(N) streaming
-//! linear-attention formulation
+//! path — fused tiled streaming-softmax for the exact class
+//! ([`attention::fused_softmax_attention`], O(n·tile) memory, no n×n
+//! score matrix), register-blocked multi-threaded matmul/softmax
+//! ([`tensor::micro`], [`tensor::Mat::par_matmul`],
+//! [`tensor::Mat::par_matmul_t`], [`tensor::Mat::par_softmax_rows`])
+//! and the chunked O(N) streaming linear-attention formulation
 //! ([`attention::linear_attention_streamed`]) that accumulates the
 //! (m, dv) KV state once instead of per row.  The single-threaded free
-//! functions in [`attention::kernels`] stay as the scalar reference; the
+//! functions in [`attention::kernels`] (and the `Mat::*_ref` scalar
+//! loops) stay as the reference; the
 //! property suite (`rust/tests/prop_kernels.rs`, built on [`testkit`])
 //! pins fast-vs-scalar parity, forward-vs-explicit-matrix parity, and
 //! row-stochasticity across random shapes.  The serving coordinator,

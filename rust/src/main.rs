@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use lln::cli::{flag, Cli, Command};
+use lln::cli::{flag, switch, Cli, Command};
 use lln::experiments;
 
 fn cli() -> Cli {
@@ -81,6 +81,23 @@ fn cli() -> Cli {
                 },
             },
             Command {
+                name: "bench",
+                about: "run the native kernel perf suite (fused vs pipeline) and record BENCH_kernels.json",
+                flags: {
+                    let mut f = common();
+                    f.extend([
+                        flag("json", "write the kernel report to this JSON path", None),
+                        flag("sizes", "comma-separated sequence lengths", Some("1024,4096,8192")),
+                        flag("d", "head dimension", Some("64")),
+                        flag("tile", "fused-kernel K/V tile rows (0 = auto)", Some("0")),
+                        flag("unroll", "fused-kernel query-row register block (0 = auto)", Some("0")),
+                        flag("threads", "worker threads (0 = auto)", Some("0")),
+                        switch("full", "full sampling budget (default: quick)"),
+                    ]);
+                    f
+                },
+            },
+            Command {
                 name: "analyze",
                 about: "print the paper's core analysis (temperature/entropy/gap/moment matching)",
                 flags: {
@@ -124,6 +141,7 @@ fn dispatch(args: &lln::cli::Args) -> Result<()> {
             experiments::run(name, args)
         }
         "train" => cmd_train(args),
+        "bench" => cmd_bench(args),
         "serve" => experiments::run("serve", args),
         "analyze" => cmd_analyze(args),
         "list" => cmd_list(args),
@@ -162,6 +180,41 @@ fn cmd_train(args: &lln::cli::Args) -> Result<()> {
         r.log.final_loss().unwrap_or(f32::NAN),
         r.log.max_grad_norm()
     );
+    Ok(())
+}
+
+fn cmd_bench(args: &lln::cli::Args) -> Result<()> {
+    use lln::attention::BackendParams;
+    use lln::bench::{run_kernel_bench, Bench};
+
+    let mut sizes = Vec::new();
+    for s in args.get_list("sizes", "1024,4096,8192") {
+        sizes.push(
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--sizes expects integers, got {s:?}"))?,
+        );
+    }
+    let d = args.get_usize("d", 64)?;
+    let params = BackendParams {
+        threads: args.get_usize("threads", 0)?,
+        tile: args.get_usize("tile", 0)?,
+        unroll: args.get_usize("unroll", 0)?,
+        ..Default::default()
+    };
+    let mut b = if args.get_bool("full") { Bench::new() } else { Bench::quick() };
+    println!(
+        "== kernel perf trajectory (d={d}, {} worker threads, sizes {sizes:?}) ==",
+        lln::tensor::resolve_threads(params.threads)
+    );
+    let report = run_kernel_bench(&mut b, &sizes, d, params);
+    println!("\n== derived speedups ==");
+    for (fast, slow, n, sp) in report.speedups() {
+        println!("{fast:<24} vs {slow:<26} n={n:<6} {sp:.2}x");
+    }
+    if let Some(path) = args.get("json") {
+        report.write_json(std::path::Path::new(path))?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }
 

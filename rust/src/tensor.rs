@@ -2,9 +2,12 @@
 //! attention baselines and the analysis instruments.
 //!
 //! Deliberately small: a 2-D owned matrix with the handful of BLAS-2/3
-//! operations the paper's math needs.  The matmul is cache-blocked with
-//! a k-panel inner loop that autovectorizes well; it is the hot path of
-//! the native analysis benches (see EXPERIMENTS.md §Perf).
+//! operations the paper's math needs.  The hot-path matmuls dispatch to
+//! the register-blocked microkernels in [`micro`] (MR×NR output tiles,
+//! LANES-wide independent accumulators the autovectorizer lifts to SIMD
+//! width); the original scalar loops survive as the `*_ref` reference
+//! implementations that the parity suites pin the blocked kernels
+//! against.
 
 use std::fmt;
 
@@ -29,6 +32,207 @@ pub fn resolve_threads(requested: usize) -> usize {
         default_threads()
     } else {
         requested
+    }
+}
+
+/// Split `rows` into at most `threads` contiguous, non-empty,
+/// near-equal `(start, len)` spans — the one row-partition rule every
+/// `par_*` kernel uses.  Never emits an empty span: when
+/// `rows < threads` the worker count clamps to `rows`, and the
+/// remainder is spread one row at a time so no worker carries more than
+/// one extra row (the former `div_ceil` chunking could hand the last
+/// worker a sliver, or spawn fewer workers than the clamp allowed).
+pub fn partition_rows(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let t = threads.max(1).min(rows);
+    let base = rows / t;
+    let extra = rows % t;
+    let mut spans = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        spans.push((start, len));
+        start += len;
+    }
+    spans
+}
+
+/// Run `work(row0, len, chunk)` over the [`partition_rows`] spans of a
+/// row-major buffer (`rows` rows of `row_len` values), one scoped
+/// worker thread per span — the shared harness behind every `par_*`
+/// kernel and the fused attention entry points.  `chunk` is the span's
+/// disjoint `len * row_len` slice of `buf`; `row0` is its first global
+/// row index.  `threads` is taken as already resolved; the span count
+/// clamps to `rows`.
+pub fn par_row_spans(
+    buf: &mut [f32],
+    rows: usize,
+    row_len: usize,
+    threads: usize,
+    work: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(buf.len(), rows * row_len);
+    std::thread::scope(|scope| {
+        let work = &work;
+        let mut rest = buf;
+        for (row0, len) in partition_rows(rows, threads) {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len * row_len);
+            rest = tail;
+            scope.spawn(move || work(row0, len, chunk));
+        }
+    });
+}
+
+/// Register-blocked microkernels shared by [`Mat`], the fused attention
+/// kernels, and the block-diagonal softmax tiles.  Operands are raw
+/// row-major slices with explicit shapes so callers can run them over
+/// sub-ranges (K/V tiles, diagonal blocks) without copying.
+///
+/// The point of the blocking is to break the serial floating-point
+/// dependency chain of a naive dot product: `LANES` independent
+/// accumulators per output let the autovectorizer emit SIMD FMAs, and
+/// the MR×NR output tiling reuses each loaded operand row across a
+/// whole register block.  Per-output floating-point order is a function
+/// of (k, LANES) alone — never of how rows are partitioned across
+/// threads — which keeps the scalar and row-partitioned entry points
+/// bitwise identical.
+pub mod micro {
+    /// Independent accumulator lanes per output scalar (8 f32 = one
+    /// 256-bit vector register; narrower targets split the lanes).
+    pub const LANES: usize = 8;
+    /// Output rows per register block.
+    pub const MR: usize = 4;
+    /// Output columns (B rows) per register block in the A·Bᵀ kernel.
+    pub const NR: usize = 4;
+    /// k-panel depth of the ikj kernel (matches the pre-blocking KB).
+    pub const KB: usize = 64;
+
+    /// Fixed-order pairwise fold of one lane accumulator — the same
+    /// reduction tree everywhere, so blocked and tail columns agree
+    /// bitwise.
+    #[inline(always)]
+    fn fold_lanes(v: [f32; LANES]) -> f32 {
+        ((v[0] + v[4]) + (v[2] + v[6])) + ((v[1] + v[5]) + (v[3] + v[7]))
+    }
+
+    /// Lane-blocked dot product (identical FP order to the NR-blocked
+    /// kernel body in [`matmul_t_block`]).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        debug_assert_eq!(k, b.len());
+        let mut acc = [0.0f32; LANES];
+        let mut kk = 0;
+        while kk + LANES <= k {
+            for l in 0..LANES {
+                acc[l] += a[kk + l] * b[kk + l];
+            }
+            kk += LANES;
+        }
+        let mut tail = 0.0f32;
+        while kk < k {
+            tail += a[kk] * b[kk];
+            kk += 1;
+        }
+        fold_lanes(acc) + tail
+    }
+
+    /// `out[m×n] = a[m×k] @ b[n×k]ᵀ` — the dot-product kernel behind
+    /// [`Mat::matmul_t`](super::Mat::matmul_t), the fused attention
+    /// score tiles, and the block-diagonal softmax tiles.  `out` is
+    /// fully overwritten.
+    pub fn matmul_t_block(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + NR <= n {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let b2 = &b[(j + 2) * k..(j + 3) * k];
+                let b3 = &b[(j + 3) * k..(j + 4) * k];
+                let mut acc = [[0.0f32; LANES]; NR];
+                let mut kk = 0;
+                while kk + LANES <= k {
+                    for l in 0..LANES {
+                        let av = arow[kk + l];
+                        acc[0][l] += av * b0[kk + l];
+                        acc[1][l] += av * b1[kk + l];
+                        acc[2][l] += av * b2[kk + l];
+                        acc[3][l] += av * b3[kk + l];
+                    }
+                    kk += LANES;
+                }
+                let mut tail = [0.0f32; NR];
+                while kk < k {
+                    let av = arow[kk];
+                    tail[0] += av * b0[kk];
+                    tail[1] += av * b1[kk];
+                    tail[2] += av * b2[kk];
+                    tail[3] += av * b3[kk];
+                    kk += 1;
+                }
+                for r in 0..NR {
+                    orow[j + r] = fold_lanes(acc[r]) + tail[r];
+                }
+                j += NR;
+            }
+            while j < n {
+                orow[j] = dot(arow, &b[j * k..(j + 1) * k]);
+                j += 1;
+            }
+        }
+    }
+
+    /// `out[m×n] += a[m×k] @ b[k×n]` — the ikj kernel behind
+    /// [`Mat::matmul`](super::Mat::matmul), with an MR-row register
+    /// block so each streamed `b` row feeds MR output rows.  The caller
+    /// zero-initializes `out`.
+    pub fn matmul_block(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            let mut i = 0;
+            while i + MR <= m {
+                let rows = &mut out[i * n..(i + MR) * n];
+                let (r0, rest) = rows.split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3) = rest.split_at_mut(n);
+                for kk in kb..kend {
+                    let a0 = a[i * k + kk];
+                    let a1 = a[(i + 1) * k + kk];
+                    let a2 = a[(i + 2) * k + kk];
+                    let a3 = a[(i + 3) * k + kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (j, &bj) in brow.iter().enumerate() {
+                        r0[j] += a0 * bj;
+                        r1[j] += a1 * bj;
+                        r2[j] += a2 * bj;
+                        r3[j] += a3 * bj;
+                    }
+                }
+                i += MR;
+            }
+            while i < m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bj) in orow.iter_mut().zip(brow) {
+                        *o += av * bj;
+                    }
+                }
+                i += 1;
+            }
+        }
     }
 }
 
@@ -124,13 +328,22 @@ impl Mat {
         out
     }
 
-    /// `self @ other` — cache-blocked ikj matmul.
+    /// `self @ other` — register-blocked ikj matmul (see [`micro`]).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        // ikj order: the inner j loop is a contiguous FMA over `other`'s
-        // row and `out`'s row — autovectorizes to the machine width.
+        micro::matmul_block(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// Reference `self @ other`: the original cache-blocked scalar ikj
+    /// loop, kept deliberately unoptimized so the parity suites can pin
+    /// [`Mat::matmul`] (and the `par_*` entry points) against it.
+    pub fn matmul_ref(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
         const KB: usize = 64;
         for kb in (0..k).step_by(KB) {
             let kend = (kb + KB).min(k);
@@ -153,10 +366,10 @@ impl Mat {
     }
 
     /// `self @ other` with the output rows partitioned across `threads`
-    /// scoped worker threads (0 = auto, see [`default_threads`]).  Each
-    /// worker runs the same cache-blocked ikj kernel as [`Mat::matmul`],
-    /// in the same per-row floating-point order, so results are bitwise
-    /// identical to the scalar path.
+    /// scoped worker threads (0 = auto, see [`default_threads`]) via
+    /// [`partition_rows`].  Each worker runs the same register-blocked
+    /// kernel as [`Mat::matmul`], in the same per-row floating-point
+    /// order, so results are bitwise identical to the scalar path.
     pub fn par_matmul(&self, other: &Mat, threads: usize) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
@@ -165,41 +378,28 @@ impl Mat {
             return self.matmul(other);
         }
         let mut out = Mat::zeros(m, n);
-        let rows_per = m.div_ceil(t);
         let a = self.data.as_slice();
         let b = other.data.as_slice();
-        std::thread::scope(|scope| {
-            for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
-                let row0 = ti * rows_per;
-                scope.spawn(move || {
-                    let rows_here = chunk.len() / n;
-                    const KB: usize = 64;
-                    for kb in (0..k).step_by(KB) {
-                        let kend = (kb + KB).min(k);
-                        for i in 0..rows_here {
-                            let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
-                            let orow = &mut chunk[i * n..(i + 1) * n];
-                            for kk in kb..kend {
-                                let av = arow[kk];
-                                if av == 0.0 {
-                                    continue;
-                                }
-                                let brow = &b[kk * n..(kk + 1) * n];
-                                for j in 0..n {
-                                    orow[j] += av * brow[j];
-                                }
-                            }
-                        }
-                    }
-                });
-            }
+        par_row_spans(&mut out.data, m, n, t, |row0, len, chunk| {
+            micro::matmul_block(&a[row0 * k..(row0 + len) * k], b, chunk, len, k, n);
         });
         out
     }
 
-    /// `self @ other^T` without materializing the transpose (dot-product
-    /// kernel; both operands stream row-contiguously).
+    /// `self @ other^T` without materializing the transpose —
+    /// register-blocked dot kernel (see [`micro::matmul_t_block`]).
     pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        micro::matmul_t_block(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// Reference `self @ other^T`: the original per-output scalar dot
+    /// product (a serial FP dependency chain the autovectorizer cannot
+    /// touch) — the parity anchor for [`Mat::matmul_t`].
+    pub fn matmul_t_ref(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Mat::zeros(m, n);
@@ -219,8 +419,9 @@ impl Mat {
     }
 
     /// `self @ other^T` with output rows partitioned across `threads`
-    /// scoped workers (0 = auto).  Per-row FP order matches
-    /// [`Mat::matmul_t`] exactly.
+    /// scoped workers (0 = auto) via [`partition_rows`].  Per-row FP
+    /// order matches [`Mat::matmul_t`] exactly (lane structure is fixed
+    /// by k alone), so results are bitwise identical to the scalar path.
     pub fn par_matmul_t(&self, other: &Mat, threads: usize) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
@@ -229,27 +430,40 @@ impl Mat {
             return self.matmul_t(other);
         }
         let mut out = Mat::zeros(m, n);
-        let rows_per = m.div_ceil(t);
         let a = self.data.as_slice();
         let b = other.data.as_slice();
-        std::thread::scope(|scope| {
-            for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
-                let row0 = ti * rows_per;
-                scope.spawn(move || {
-                    let rows_here = chunk.len() / n;
-                    for i in 0..rows_here {
-                        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
-                        let orow = &mut chunk[i * n..(i + 1) * n];
-                        for j in 0..n {
-                            let brow = &b[j * k..(j + 1) * k];
-                            let mut acc = 0.0f32;
-                            for kk in 0..k {
-                                acc += arow[kk] * brow[kk];
-                            }
-                            orow[j] = acc;
-                        }
+        par_row_spans(&mut out.data, m, n, t, |row0, len, chunk| {
+            micro::matmul_t_block(&a[row0 * k..(row0 + len) * k], b, chunk, len, k, n);
+        });
+        out
+    }
+
+    /// The PR-1 parallel `self @ other^T`: row-partitioned scalar dot
+    /// products (per-row FP order matches [`Mat::matmul_t_ref`]
+    /// bitwise).  Kept as the baseline the kernel perf trajectory
+    /// (`lln bench` / BENCH_kernels.json) measures speedups against.
+    pub fn par_matmul_t_ref(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let t = resolve_threads(threads).min(m.max(1));
+        if t <= 1 || m == 0 || n == 0 {
+            return self.matmul_t_ref(other);
+        }
+        let mut out = Mat::zeros(m, n);
+        let a = self.data.as_slice();
+        let b = other.data.as_slice();
+        par_row_spans(&mut out.data, m, n, t, |row0, len, chunk| {
+            for i in 0..len {
+                let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for j in 0..n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
                     }
-                });
+                    orow[j] = acc;
+                }
             }
         });
         out
@@ -308,8 +522,8 @@ impl Mat {
     }
 
     /// Row-wise softmax with rows partitioned across `threads` scoped
-    /// workers (0 = auto).  Rows are independent, so results are bitwise
-    /// identical to [`Mat::softmax_rows`].
+    /// workers (0 = auto) via [`partition_rows`].  Rows are independent,
+    /// so results are bitwise identical to [`Mat::softmax_rows`].
     pub fn par_softmax_rows(&mut self, threads: usize) {
         let (m, n) = (self.rows, self.cols);
         let t = resolve_threads(threads).min(m.max(1));
@@ -317,23 +531,18 @@ impl Mat {
             self.softmax_rows();
             return;
         }
-        let rows_per = m.div_ceil(t);
-        std::thread::scope(|scope| {
-            for chunk in self.data.chunks_mut(rows_per * n) {
-                scope.spawn(move || {
-                    for row in chunk.chunks_mut(n) {
-                        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                        let mut sum = 0.0f32;
-                        for x in row.iter_mut() {
-                            *x = (*x - max).exp();
-                            sum += *x;
-                        }
-                        let inv = 1.0 / sum;
-                        for x in row.iter_mut() {
-                            *x *= inv;
-                        }
-                    }
-                });
+        par_row_spans(&mut self.data, m, n, t, |_row0, _len, chunk| {
+            for row in chunk.chunks_mut(n) {
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for x in row.iter_mut() {
+                    *x = (*x - max).exp();
+                    sum += *x;
+                }
+                let inv = 1.0 / sum;
+                for x in row.iter_mut() {
+                    *x *= inv;
+                }
             }
         });
     }
@@ -580,5 +789,92 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn partition_rows_spans_are_balanced_and_cover() {
+        for rows in [0usize, 1, 2, 3, 7, 8, 9, 63, 64, 65, 1000] {
+            for threads in [0usize, 1, 2, 3, 8, 17, 2000] {
+                let spans = partition_rows(rows, threads);
+                if rows == 0 {
+                    assert!(spans.is_empty());
+                    continue;
+                }
+                // At most `threads` (clamped) spans, none empty.
+                assert!(spans.len() <= threads.max(1).min(rows));
+                assert!(spans.iter().all(|&(_, len)| len > 0), "rows={rows} t={threads}");
+                // Contiguous cover of 0..rows.
+                let mut next = 0;
+                for &(start, len) in &spans {
+                    assert_eq!(start, next);
+                    next += len;
+                }
+                assert_eq!(next, rows);
+                // Balanced: max span exceeds min span by at most one row.
+                let max = spans.iter().map(|&(_, l)| l).max().unwrap();
+                let min = spans.iter().map(|&(_, l)| l).min().unwrap();
+                assert!(max - min <= 1, "rows={rows} t={threads}: {min}..{max}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_kernels_handle_rows_fewer_than_threads() {
+        // Regression for the empty-chunk edge: every worker must get a
+        // non-empty span even when rows < threads.
+        let mut rng = Pcg64::seed(20);
+        for m in [1usize, 2, 3, 5] {
+            let a = Mat::gaussian(m, 9, 1.0, &mut rng);
+            let b = Mat::gaussian(9, 4, 1.0, &mut rng);
+            assert_eq!(a.matmul(&b).data(), a.par_matmul(&b, 16).data(), "m={m}");
+            let c = Mat::gaussian(7, 9, 1.0, &mut rng);
+            assert_eq!(a.matmul_t(&c).data(), a.par_matmul_t(&c, 16).data(), "m={m}");
+            let mut serial = a.clone();
+            serial.softmax_rows();
+            let mut par = a.clone();
+            par.par_softmax_rows(16);
+            assert_eq!(serial.data(), par.data(), "m={m}");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_reference() {
+        let mut rng = Pcg64::seed(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (65, 3, 2), (5, 130, 7)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(k, n, 1.0, &mut rng);
+            let err = a.matmul(&b).max_abs_diff(&a.matmul_ref(&b));
+            assert!(err < 1e-4, "m={m} k={k} n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_t_matches_reference() {
+        let mut rng = Pcg64::seed(22);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (19, 16, 31), (48, 64, 48), (7, 130, 9)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(n, k, 1.0, &mut rng);
+            let blocked = a.matmul_t(&b);
+            let reference = a.matmul_t_ref(&b);
+            let err = blocked.max_abs_diff(&reference);
+            assert!(err < 1e-4, "m={m} k={k} n={n}: {err}");
+            // The PR-1 parallel baseline stays bitwise-pinned to the
+            // scalar reference it row-partitions.
+            for t in [1usize, 3, 0] {
+                assert_eq!(reference.data(), a.par_matmul_t_ref(&b, t).data(), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn micro_dot_matches_f64_accumulation() {
+        let mut rng = Pcg64::seed(23);
+        for k in [1usize, 7, 8, 9, 16, 63, 64, 65, 200] {
+            let a = Mat::gaussian(1, k, 1.0, &mut rng);
+            let b = Mat::gaussian(1, k, 1.0, &mut rng);
+            let exact: f64 = vec_ops::dot(a.row(0), b.row(0));
+            let got = micro::dot(a.row(0), b.row(0)) as f64;
+            assert!((got - exact).abs() < 1e-3 * (1.0 + exact.abs()), "k={k}: {got} vs {exact}");
+        }
     }
 }

@@ -11,7 +11,12 @@
 //!      rows, which carry no mass at all;
 //!   3. the blocked/parallel kernels match the single-threaded scalar
 //!      reference (bitwise for the row-partitioned kernels, within a
-//!      scaled 1e-5 for the chunk-streamed reformulation).
+//!      scaled 1e-5 for the chunk-streamed reformulation);
+//!   4. the fused O(n·tile) exact kernels match the dense
+//!      `softmax_attention_matrix @ v` route within a scaled 1e-5 for
+//!      every tile/unroll/thread configuration — explicitly including
+//!      n not divisible by the tile and tile > n — while the register-
+//!      blocked matmuls stay pinned to the old scalar `*_ref` loops.
 //!
 //! Reproduce failures with `LLN_PROP_SEED=<seed> cargo test`.
 
@@ -131,6 +136,117 @@ fn parallel_matmuls_match_scalar_reference() {
 }
 
 #[test]
+fn blocked_matmuls_match_scalar_reference_paths() {
+    // The register-blocked kernels behind Mat::matmul / Mat::matmul_t
+    // reorder f32 sums into LANES-wide accumulators; they must stay
+    // within scaled epsilon of the original scalar loops (kept as
+    // matmul_ref / matmul_t_ref), and the PR-1 parallel baseline must
+    // stay bitwise-pinned to its scalar reference.
+    check(48, |g| {
+        let m = g.usize_in(1, 40);
+        let kdim = g.usize_in(1, 80);
+        let n = g.usize_in(1, 40);
+        let threads = g.usize_in(1, 4);
+        let a = gauss_mat(g, m, kdim, 1.0);
+        let b = gauss_mat(g, kdim, n, 1.0);
+        assert_close(
+            &a.matmul(&b),
+            &a.matmul_ref(&b),
+            1e-5,
+            &format!("matmul vs ref {m}x{kdim}x{n}"),
+        )?;
+        let c = gauss_mat(g, n, kdim, 1.0);
+        assert_close(
+            &a.matmul_t(&c),
+            &a.matmul_t_ref(&c),
+            1e-5,
+            &format!("matmul_t vs ref {m}x{kdim}x{n}"),
+        )?;
+        prop_assert(
+            a.par_matmul_t_ref(&c, threads).data() == a.matmul_t_ref(&c).data(),
+            format!("par_matmul_t_ref not bitwise vs scalar ref {m}x{kdim}x{n} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn fused_softmax_matches_dense_route() {
+    // Shapes are deliberately off-tile: n, nk free in [1, 97], tile
+    // drawn from a set that includes 1, non-divisors, and tile > n.
+    check(48, |g| {
+        let n = g.usize_in(1, 97);
+        let nk = g.usize_in(1, 97);
+        let d = g.usize_in(1, 24);
+        let dv = g.usize_in(1, 16);
+        let tile = *g.choose(&[1usize, 3, 8, 16, 33, 64, 128, 300]);
+        let unroll = g.usize_in(0, 5);
+        let threads = g.usize_in(1, 4);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, nk, d, 0.8);
+        let v = gauss_mat(g, nk, dv, 1.0);
+        let dense = att::softmax_attention_matrix(&q, &k).matmul(&v);
+        let fused = att::fused_softmax_attention(&q, &k, &v, tile, unroll, threads);
+        assert_close(
+            &fused,
+            &dense,
+            1e-5,
+            &format!("fused softmax n={n} nk={nk} d={d} dv={dv} tile={tile} u={unroll} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn fused_quadratic_matches_dense_route() {
+    check(32, |g| {
+        let n = g.usize_in(1, 64);
+        let nk = g.usize_in(1, 64);
+        let d = g.usize_in(1, 16);
+        let tile = *g.choose(&[1usize, 5, 16, 50, 200]);
+        let unroll = g.usize_in(0, 5);
+        let threads = g.usize_in(1, 4);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, nk, d, 0.8);
+        let v = gauss_mat(g, nk, d, 1.0);
+        let dense = att::quadratic_attention_matrix(&q, &k).matmul(&v);
+        let fused = att::fused_quadratic_attention(&q, &k, &v, tile, unroll, threads);
+        assert_close(
+            &fused,
+            &dense,
+            2e-5,
+            &format!("fused quadratic n={n} nk={nk} d={d} tile={tile} u={unroll} t={threads}"),
+        )
+    });
+}
+
+#[test]
+fn fused_and_unfused_exact_backends_agree() {
+    // The `fused` knob must be a pure perf/memory switch: Softmax and
+    // Quadratic forwards agree across it within streaming tolerance.
+    check(32, |g| {
+        let n = g.usize_in(1, 80);
+        let d = g.usize_in(2, 24);
+        let tile = *g.choose(&[0usize, 7, 32, 130]);
+        let unroll = g.usize_in(0, 5);
+        let threads = g.usize_in(1, 4);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in [Method::Softmax, Method::Quadratic] {
+            let fused_params =
+                BackendParams { tile, unroll, threads, ..Default::default() };
+            let unfused_params = BackendParams { fused: false, threads, ..Default::default() };
+            assert_close(
+                &backend_for(m, fused_params).forward(&q, &k, &v),
+                &backend_for(m, unfused_params).forward(&q, &k, &v),
+                2e-5,
+                &format!("{m:?} fused vs unfused n={n} d={d} tile={tile} u={unroll} t={threads}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn parallel_softmax_matches_scalar_reference() {
     check(64, |g| {
         let m = g.usize_in(1, 48);
@@ -185,8 +301,18 @@ fn backend_forwards_match_scalar_kernels() {
         let q = gauss_mat(g, n, d, 0.8);
         let k = gauss_mat(g, n, d, 0.8);
         let v = gauss_mat(g, n, d, 1.0);
-        let params =
-            BackendParams { alpha, beta: alpha, block: 8, threads, chunk, ..Default::default() };
+        // fused: false — this property pins the *materialized* pipeline
+        // to the scalar kernels; the fused path has its own dense-route
+        // parity property above.
+        let params = BackendParams {
+            alpha,
+            beta: alpha,
+            block: 8,
+            threads,
+            chunk,
+            fused: false,
+            ..Default::default()
+        };
 
         let sm = backend_for(Method::Softmax, params).forward(&q, &k, &v);
         prop_assert(
