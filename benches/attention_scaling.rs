@@ -10,7 +10,7 @@
 //! a skipped cell.  `--tile` / `--unroll` (after `--`) forward the
 //! `[compute]` fused-kernel knobs.
 
-use lln::attention::{backend_for, BackendParams, Method};
+use lln::attention::{backend_for, AttnSpec, BackendParams, Method};
 use lln::bench::{bench_arg_usize, run_attention_backend, Bench};
 use lln::rng::Pcg64;
 use lln::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
@@ -39,9 +39,25 @@ fn main() {
                 method,
                 BackendParams { alpha: 2.2, beta: 2.2, tile, unroll, ..Default::default() },
             );
-            let mean = run_attention_backend(&mut b, bk.as_ref(), n, d, n as u64);
-            let gflops = bk.flops_model(n, d) / mean / 1e9;
+            let mean = run_attention_backend(&mut b, bk.as_ref(), n, d, n as u64, &AttnSpec::FULL);
+            let gflops = bk.flops_model(n, d, &AttnSpec::FULL) / mean / 1e9;
             println!("    model: {:.1} GFLOP/s effective", gflops);
+        }
+    }
+
+    // Decoder-side rows: the fused causal softmax (prefix tiles only)
+    // and the causal prefix-state LLN, on the same probes.
+    println!("\n== causal (decoder) forwards ==");
+    for method in [Method::Softmax, Method::Lln] {
+        for n in [1024usize, 4096, 8192] {
+            let bk = backend_for(
+                method,
+                BackendParams { alpha: 2.2, beta: 2.2, tile, unroll, ..Default::default() },
+            );
+            let mean =
+                run_attention_backend(&mut b, bk.as_ref(), n, d, n as u64, &AttnSpec::CAUSAL);
+            let gflops = bk.flops_model(n, d, &AttnSpec::CAUSAL) / mean / 1e9;
+            println!("    model: {:.1} GFLOP/s effective (causal)", gflops);
         }
     }
 

@@ -16,7 +16,7 @@
 //!   --tile <n>      fused-kernel K/V tile rows (0 = auto)
 //!   --unroll <n>    fused-kernel query register block (0 = auto)
 
-use lln::attention::{self as att, backend_for, BackendParams, Method};
+use lln::attention::{self as att, backend_for, AttnSpec, BackendParams, Method};
 use lln::bench::{bench_arg, bench_arg_usize, run_attention_backend, run_kernel_bench, Bench};
 use lln::rng::Pcg64;
 use lln::tensor::{default_threads, Mat};
@@ -26,6 +26,7 @@ fn main() {
     let threads = default_threads();
     let tile = bench_arg_usize("tile").unwrap_or(0);
     let unroll = bench_arg_usize("unroll").unwrap_or(0);
+    let full = AttnSpec::FULL;
     let mut rng = Pcg64::seed(1);
     let mut b = Bench::new();
 
@@ -40,7 +41,7 @@ fn main() {
             b.run(&format!("scalar softmax n={n}"), n as f64, || att::softmax_attention(&q, &k, &v))
                 .mean();
         let sm = backend_for(Method::Softmax, BackendParams::default());
-        let t_sm_backend = run_attention_backend(&mut b, sm.as_ref(), n, d, 2);
+        let t_sm_backend = run_attention_backend(&mut b, sm.as_ref(), n, d, 2, &full);
         speedups.push(("softmax".into(), n, t_sm_scalar / t_sm_backend));
 
         let t_lln_scalar =
@@ -50,7 +51,7 @@ fn main() {
             Method::Lln,
             BackendParams { alpha: 2.2, beta: 2.2, ..Default::default() },
         );
-        let t_lln_backend = run_attention_backend(&mut b, lln.as_ref(), n, d, 3);
+        let t_lln_backend = run_attention_backend(&mut b, lln.as_ref(), n, d, 3, &full);
         speedups.push(("lln".into(), n, t_lln_scalar / t_lln_backend));
 
         let t_diag_scalar = b
@@ -62,16 +63,33 @@ fn main() {
             Method::LlnDiag,
             BackendParams { alpha: 2.2, beta: 2.2, ..Default::default() },
         );
-        let t_diag_backend = run_attention_backend(&mut b, diag.as_ref(), n, d, 4);
+        let t_diag_backend = run_attention_backend(&mut b, diag.as_ref(), n, d, 4, &full);
         speedups.push(("lln_diag".into(), n, t_diag_scalar / t_diag_backend));
 
         b.run(&format!("scalar elu n={n}"), n as f64, || att::elu_attention(&q, &k, &v));
-        run_attention_backend(&mut b, att::default_backend(Method::Elu).as_ref(), n, d, 5);
+        run_attention_backend(&mut b, att::default_backend(Method::Elu).as_ref(), n, d, 5, &full);
         if n <= 1024 {
             b.run(&format!("scalar nystrom n={n}"), n as f64, || {
                 att::nystrom_attention(&q, &k, &v, 32)
             });
         }
+
+        // Causal rows: fused prefix-tile softmax vs the masked dense
+        // materialized route (parallel, unfused backend), and the
+        // prefix-state LLN.
+        let causal = AttnSpec::CAUSAL;
+        let dense_causal = backend_for(
+            Method::Softmax,
+            BackendParams { fused: false, ..Default::default() },
+        );
+        let t_dense_causal = b
+            .run(&format!("masked dense causal softmax n={n}"), n as f64, || {
+                dense_causal.forward(&q, &k, &v, &causal)
+            })
+            .mean();
+        let t_fused_causal = run_attention_backend(&mut b, sm.as_ref(), n, d, 6, &causal);
+        speedups.push(("softmax_causal".into(), n, t_dense_causal / t_fused_causal));
+        run_attention_backend(&mut b, lln.as_ref(), n, d, 7, &causal);
     }
 
     println!("\n== tensor substrate: scalar vs blocked+threaded ==");
@@ -108,7 +126,7 @@ fn main() {
     println!("\n== backend vs scalar speedups ==");
     let mut ok = true;
     for (name, n, s) in &speedups {
-        println!("speedup {name:<10} n={n:<5} {s:.2}x (blocked+threaded backend vs scalar)");
+        println!("speedup {name:<14} n={n:<5} {s:.2}x (fast backend vs reference route)");
         if *n == 1024 && (name == "softmax" || name == "lln") && *s <= 1.0 {
             ok = false;
         }
@@ -135,6 +153,19 @@ fn main() {
         }
         Some(sp) => println!("WARN: fused softmax only {sp:.2}x vs PR-1 pipeline at n=4096"),
         None => println!("WARN: missing fused/pr1 measurement at n=4096"),
+    }
+    // Causal acceptance: fused causal must run in <= ~0.6x the time of
+    // the masked dense causal route (speedup >= 1/0.6 ≈ 1.67x).
+    match report.speedup("softmax_fused_causal", "softmax_masked_dense_causal", 4096) {
+        Some(sp) if sp >= 1.0 / 0.6 => println!(
+            "PASS: fused causal softmax runs in {:.2}x the masked-dense time (<= 0.6x) at n=4096",
+            1.0 / sp
+        ),
+        Some(sp) => println!(
+            "WARN: fused causal softmax at {:.2}x the masked-dense time (> 0.6x) at n=4096",
+            1.0 / sp
+        ),
+        None => println!("WARN: missing causal fused/dense measurement at n=4096"),
     }
     if let Some(path) = bench_arg("json") {
         report.write_json(std::path::Path::new(&path)).expect("write BENCH_kernels.json");

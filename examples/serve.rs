@@ -1,7 +1,15 @@
 //! Serving demo: start the coordinator (router + dynamic batcher +
-//! PJRT workers) with LLN+Diag encoders and drive mixed-length traffic.
+//! workers) with LLN+Diag encoders and drive mixed-length traffic —
+//! including causal (decoder-mask) requests when serving through the
+//! native backend path.  Requests are padded up to their bucket, and
+//! each request's live length rides along as its attention key mask,
+//! so batches mix variable-length and mixed-mask traffic.
 //!
-//!     make artifacts && cargo run --release --example serve -- [requests]
+//!     cargo run --release --example serve -- [requests]          # native
+//!     make artifacts && cargo run --release --example serve -- 120
+//!
+//! With artifacts present the PJRT executables serve full bidirectional
+//! attention (causal traffic is a native-path feature).
 
 use anyhow::Result;
 
@@ -9,21 +17,32 @@ use lln::config::ServeConfig;
 use lln::coordinator::Coordinator;
 use lln::data::tasks::{GlueGen, GlueTask};
 use lln::rng::Pcg64;
-use lln::runtime::artifacts_dir;
+use lln::runtime::{artifacts_available, artifacts_dir};
 
 fn main() -> Result<()> {
     let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
     let dir = artifacts_dir(None);
-    let cfg = ServeConfig::default();
+    let native = !artifacts_available(&dir);
+    let cfg = ServeConfig { native_fallback: native, ..ServeConfig::default() };
     println!(
-        "starting coordinator: method={} buckets={:?} max_batch={} queue={}",
-        cfg.method, cfg.buckets, cfg.max_batch, cfg.queue_capacity
+        "starting coordinator: method={} buckets={:?} max_batch={} queue={} ({})",
+        cfg.method,
+        cfg.buckets,
+        cfg.max_batch,
+        cfg.queue_capacity,
+        if native { "native backends" } else { "PJRT artifacts" }
     );
+    // Causal decode-style traffic only makes sense on the native path:
+    // the AOT executables are compiled as full bidirectional attention.
+    let causal_frac = if native { 0.25 } else { 0.0 };
     let coord = Coordinator::start(cfg, &dir)?;
     // Warm both buckets (first call compiles the executables).
     coord.infer(vec![lln::data::special::CLS; 64])?;
     coord.infer(vec![lln::data::special::CLS; 300])?;
-    println!("warmed up; sending {requests} requests (70% short / 30% long)...");
+    println!(
+        "warmed up; sending {requests} requests (70% short / 30% long, {:.0}% causal)...",
+        causal_frac * 100.0
+    );
 
     let mut short = GlueGen::new(GlueTask::Sst2, 512, 120, 1);
     let mut long = GlueGen::new(GlueTask::Qnli, 512, 480, 2);
@@ -32,7 +51,8 @@ fn main() -> Result<()> {
     let rxs: Vec<_> = (0..requests)
         .map(|_| {
             let tokens = if rng.f64() < 0.3 { long.example().0 } else { short.example().0 };
-            coord.submit(tokens)
+            let causal = rng.f64() < causal_frac;
+            coord.submit_with(tokens, causal)
         })
         .collect::<Result<_>>()?;
     let mut ok = 0usize;

@@ -20,13 +20,12 @@
 //! properties — see ROADMAP.md "Open items" for the checklist.
 
 use super::kernels::{
-    blockdiag_attention_matrix, elu_attention_matrix, elu_features, fused_quadratic_attention,
-    fused_softmax_attention, linear_attention_streamed, lln_attention_matrix,
-    lln_attention_streamed, nystrom_attention, par_blockdiag_attention,
-    performer_attention_matrix, performer_features, performer_projection,
-    quadratic_attention_matrix, relu_attention_matrix, softmax_attention_matrix,
+    blockdiag_attention_matrix_spec, elu_features, fused_quadratic_attention_spec,
+    fused_softmax_attention_spec, linear_attention_matrix_spec, linear_attention_spec,
+    lln_features, nystrom_attention, par_blockdiag_attention_spec, performer_features,
+    performer_projection, quadratic_attention_matrix_spec, softmax_attention_matrix_spec,
 };
-use super::Method;
+use super::{AttnSpec, Method};
 use crate::tensor::Mat;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -101,7 +100,16 @@ impl BackendParams {
     }
 }
 
-/// One attention method behind a uniform interface.
+/// One attention method behind a uniform interface.  Every entry point
+/// carries an [`AttnSpec`] — causal flag, optional key-length padding
+/// mask, score scale — so kernels, serving, benches, and the analysis
+/// sweeps speak one mask vocabulary; pass [`AttnSpec::FULL`] for the
+/// historical full-bidirectional behavior.
+///
+/// Methods whose structure cannot honor a mask (Nystrom, Linformer —
+/// see [`Method::supports_masking`]) panic on non-full specs rather
+/// than silently attending across the mask; callers that take
+/// user-supplied specs should gate on [`Method::supports_spec`] first.
 pub trait AttentionBackend: Send + Sync {
     /// The [`Method`] this backend implements.
     fn method(&self) -> Method;
@@ -111,18 +119,35 @@ pub trait AttentionBackend: Send + Sync {
         self.method().name()
     }
 
-    /// Fast-path forward pass: (n, d) q/k, (n, dv) v -> (n, dv).
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat;
+    /// Fast-path forward pass: (n, d) q/k, (n, dv) v -> (n, dv), under
+    /// the spec's mask.
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat;
 
-    /// Dense row-stochastic attention matrix, when the method has one
-    /// (None for Nystrom/Linformer, whose mixing is implicit).  For
-    /// every `Some`, `forward(q, k, v) ~= explicit_matrix(q, k) @ v` —
+    /// Dense row-stochastic attention matrix under the spec's mask,
+    /// when the method has one (None for Nystrom/Linformer, whose
+    /// mixing is implicit).  For every `Some`,
+    /// `forward(q, k, v, spec) ~= explicit_matrix(q, k, spec) @ v` —
     /// the parity invariant the property suite enforces.
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat>;
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat>;
 
     /// Analytic forward-pass flop count at sequence length `n`, head
-    /// dim `d` (the Table 2 "time" column's model).
-    fn flops_model(&self, n: usize, d: usize) -> f64;
+    /// dim `d` (the Table 2 "time" column's model).  Quadratic-class
+    /// models charge only the spec's live score pairs (~half under
+    /// causal); linear-class models charge every live key once (causal
+    /// changes nothing — the O(N) story — while `key_len` drops the
+    /// dead key rows).
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64;
+}
+
+/// Panic with a uniform message when a mask reaches a method that
+/// structurally cannot honor it.
+fn require_full_spec(method: Method, spec: &AttnSpec) {
+    assert!(
+        spec.is_full(),
+        "{} attention cannot honor causal/key_len masks (its mixing spans every position); \
+         gate on Method::supports_spec",
+        method.name()
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -135,26 +160,43 @@ impl AttentionBackend for SoftmaxBackend {
     fn method(&self) -> Method {
         Method::Softmax
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
         if self.0.fused {
             // O(n·tile) streaming-softmax path: never builds the n×n
             // score matrix, which is what lets exact softmax serve and
-            // bench honestly at 8k–16k tokens.
-            return fused_softmax_attention(q, k, v, self.0.tile, self.0.unroll, self.0.threads);
+            // bench honestly at 8k–16k tokens — under causal it also
+            // streams only the prefix tiles (~half the score work).
+            return fused_softmax_attention_spec(
+                q, k, v, spec, self.0.tile, self.0.unroll, self.0.threads,
+            );
         }
-        let d = q.cols();
+        if spec.is_full() && spec.scale.is_none() {
+            // The bitwise-reproducible materialized pipeline.
+            let d = q.cols();
+            let mut scores = q.par_matmul_t(k, self.0.threads);
+            let scale = 1.0 / (d as f32).sqrt();
+            scores.map_inplace(|x| x * scale);
+            scores.par_softmax_rows(self.0.threads);
+            return scores.par_matmul(v, self.0.threads);
+        }
+        // Masked materialized route: parallel score matmul, then the
+        // same per-row masked softmax the dense reference uses (rows
+        // partitioned across the same worker pool).
         let mut scores = q.par_matmul_t(k, self.0.threads);
-        let scale = 1.0 / (d as f32).sqrt();
-        scores.map_inplace(|x| x * scale);
-        scores.par_softmax_rows(self.0.threads);
+        super::kernels::par_masked_softmax_rows(
+            &mut scores,
+            k.rows(),
+            spec,
+            spec.resolve_scale(q.cols()),
+            self.0.threads,
+        );
         scores.par_matmul(v, self.0.threads)
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(softmax_attention_matrix(q, k))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        Some(softmax_attention_matrix_spec(q, k, spec))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let n = n as f64;
-        (4.0 * d as f64 + 5.0) * n * n
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        (4.0 * d as f64 + 5.0) * spec.masked_pairs(n, n)
     }
 }
 
@@ -164,16 +206,36 @@ impl AttentionBackend for LlnBackend {
     fn method(&self) -> Method {
         Method::Lln
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
-        lln_attention_streamed(q, k, v, self.0.alpha, self.0.beta, self.0.chunk, self.0.threads)
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
+        linear_attention_spec(
+            &lln_features(q, self.0.alpha),
+            &lln_features(k, self.0.beta),
+            v,
+            spec,
+            self.0.chunk,
+            self.0.threads,
+        )
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(lln_attention_matrix(q, k, self.0.alpha, self.0.beta))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        Some(linear_attention_matrix_spec(
+            &lln_features(q, self.0.alpha),
+            &lln_features(k, self.0.beta),
+            spec,
+        ))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let d = d as f64;
-        n as f64 * (4.0 * d * d + 6.0 * d)
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        linear_flops(n, d, spec)
     }
+}
+
+/// Linear-class flop model: the (2d² + 3d)·kl key-state build over the
+/// spec's live keys plus the (2d² + 3d)·n query read-back.  Causal
+/// masking leaves this unchanged (every live key is folded into the
+/// prefix state exactly once); `key_len` drops the dead key rows.
+fn linear_flops(n: usize, d: usize, spec: &AttnSpec) -> f64 {
+    let df = d as f64;
+    let kl = spec.key_limit(n) as f64;
+    (kl + n as f64) * (2.0 * df * df + 3.0 * df)
 }
 
 struct LlnDiagBackend(BackendParams);
@@ -193,29 +255,39 @@ impl AttentionBackend for LlnDiagBackend {
     fn method(&self) -> Method {
         Method::LlnDiag
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
-        let mut out =
-            lln_attention_streamed(q, k, v, self.0.alpha, self.0.beta, self.0.chunk, self.0.threads);
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
+        let mut out = linear_attention_spec(
+            &lln_features(q, self.0.alpha),
+            &lln_features(k, self.0.beta),
+            v,
+            spec,
+            self.0.chunk,
+            self.0.threads,
+        );
         if !self.tile_divides(q.rows()) {
             return out;
         }
-        let short = par_blockdiag_attention(q, k, v, self.0.block, self.0.threads);
+        let short = par_blockdiag_attention_spec(q, k, v, self.0.block, self.0.threads, spec);
         for (o, s) in out.data_mut().iter_mut().zip(short.data()) {
             *o = 0.5 * (*o + s);
         }
         out
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        let long = lln_attention_matrix(q, k, self.0.alpha, self.0.beta);
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        let long = linear_attention_matrix_spec(
+            &lln_features(q, self.0.alpha),
+            &lln_features(k, self.0.beta),
+            spec,
+        );
         if !self.tile_divides(q.rows()) {
             return Some(long);
         }
-        let short = blockdiag_attention_matrix(q, k, self.0.block);
+        let short = blockdiag_attention_matrix_spec(q, k, self.0.block, spec);
         Some(long.add(&short).scale(0.5))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let (nf, df, b) = (n as f64, d as f64, self.0.block as f64);
-        nf * (4.0 * df * df + 6.0 * df) + nf * b * (4.0 * df + 5.0)
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        linear_flops(n, d, spec)
+            + (4.0 * d as f64 + 5.0) * super::blockdiag_masked_pairs(n, self.0.block, spec)
     }
 }
 
@@ -225,21 +297,22 @@ impl AttentionBackend for EluBackend {
     fn method(&self) -> Method {
         Method::Elu
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
-        linear_attention_streamed(
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
+        linear_attention_spec(
             &elu_features(q),
             &elu_features(k),
             v,
+            spec,
             self.0.chunk,
             self.0.threads,
         )
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(elu_attention_matrix(q, k))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        Some(linear_attention_matrix_spec(&elu_features(q), &elu_features(k), spec))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let d = d as f64;
-        n as f64 * (4.0 * d * d + 4.0 * d)
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        let df = d as f64;
+        (spec.key_limit(n) + n) as f64 * (2.0 * df * df + 2.0 * df)
     }
 }
 
@@ -249,16 +322,17 @@ impl AttentionBackend for ReluBackend {
     fn method(&self) -> Method {
         Method::Relu
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
         let f = |m: &Mat| m.map(|x| x.max(0.0));
-        linear_attention_streamed(&f(q), &f(k), v, self.0.chunk, self.0.threads)
+        linear_attention_spec(&f(q), &f(k), v, spec, self.0.chunk, self.0.threads)
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(relu_attention_matrix(q, k))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        let f = |m: &Mat| m.map(|x| x.max(0.0));
+        Some(linear_attention_matrix_spec(&f(q), &f(k), spec))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let d = d as f64;
-        n as f64 * (4.0 * d * d + 4.0 * d)
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        let df = d as f64;
+        (spec.key_limit(n) + n) as f64 * (2.0 * df * df + 2.0 * df)
     }
 }
 
@@ -268,18 +342,19 @@ impl AttentionBackend for QuadraticBackend {
     fn method(&self) -> Method {
         Method::Quadratic
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
         if self.0.fused {
-            return fused_quadratic_attention(q, k, v, self.0.tile, self.0.unroll, self.0.threads);
+            return fused_quadratic_attention_spec(
+                q, k, v, spec, self.0.tile, self.0.unroll, self.0.threads,
+            );
         }
-        quadratic_attention_matrix(q, k).par_matmul(v, self.0.threads)
+        quadratic_attention_matrix_spec(q, k, spec).par_matmul(v, self.0.threads)
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(quadratic_attention_matrix(q, k))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        Some(quadratic_attention_matrix_spec(q, k, spec))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let n = n as f64;
-        (4.0 * d as f64 + 4.0) * n * n
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        (4.0 * d as f64 + 4.0) * spec.masked_pairs(n, n)
     }
 }
 
@@ -311,22 +386,31 @@ impl AttentionBackend for PerformerBackend {
     fn method(&self) -> Method {
         Method::Performer
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
         let proj = self.proj(q.cols());
-        linear_attention_streamed(
+        linear_attention_spec(
             &performer_features(q, proj.as_ref()),
             &performer_features(k, proj.as_ref()),
             v,
+            spec,
             self.p.chunk,
             self.p.threads,
         )
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(performer_attention_matrix(q, k, self.proj(q.cols()).as_ref()))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        let proj = self.proj(q.cols());
+        Some(linear_attention_matrix_spec(
+            &performer_features(q, proj.as_ref()),
+            &performer_features(k, proj.as_ref()),
+            spec,
+        ))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
         let (df, m) = (d as f64, if self.p.features == 0 { d } else { self.p.features } as f64);
-        n as f64 * (2.0 * df * m + 4.0 * m * df + 6.0 * m)
+        let (nf, kl) = (n as f64, spec.key_limit(n) as f64);
+        // Feature maps over q rows + live k rows, state over live keys,
+        // read-back over every query row.
+        (nf + kl) * df * m + kl * (2.0 * m * df + 3.0 * m) + nf * (2.0 * m * df + 3.0 * m)
     }
 }
 
@@ -336,13 +420,14 @@ impl AttentionBackend for NystromBackend {
     fn method(&self) -> Method {
         Method::Nystrom
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
+        require_full_spec(Method::Nystrom, spec);
         nystrom_attention(q, k, v, self.0.landmarks)
     }
-    fn explicit_matrix(&self, _q: &Mat, _k: &Mat) -> Option<Mat> {
+    fn explicit_matrix(&self, _q: &Mat, _k: &Mat, _spec: &AttnSpec) -> Option<Mat> {
         None
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
+    fn flops_model(&self, n: usize, d: usize, _spec: &AttnSpec) -> f64 {
         let (nf, df, m) = (n as f64, d as f64, self.0.landmarks.min(n) as f64);
         4.0 * nf * m * df + 12.0 * 4.0 * m * m * m + 2.0 * nf * m * m
     }
@@ -354,15 +439,14 @@ impl AttentionBackend for BlockDiagBackend {
     fn method(&self) -> Method {
         Method::BlockDiag
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
-        par_blockdiag_attention(q, k, v, self.0.block, self.0.threads)
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
+        par_blockdiag_attention_spec(q, k, v, self.0.block, self.0.threads, spec)
     }
-    fn explicit_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        Some(blockdiag_attention_matrix(q, k, self.0.block))
+    fn explicit_matrix(&self, q: &Mat, k: &Mat, spec: &AttnSpec) -> Option<Mat> {
+        Some(blockdiag_attention_matrix_spec(q, k, self.0.block, spec))
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
-        let (nf, df, b) = (n as f64, d as f64, self.0.block as f64);
-        nf * b * (4.0 * df + 5.0)
+    fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
+        (4.0 * d as f64 + 5.0) * super::blockdiag_masked_pairs(n, self.0.block, spec)
     }
 }
 
@@ -398,14 +482,15 @@ impl AttentionBackend for LinformerBackend {
     fn method(&self) -> Method {
         Method::Linformer
     }
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, spec: &AttnSpec) -> Mat {
+        require_full_spec(Method::Linformer, spec);
         let ef = self.projections(q.rows());
         super::kernels::linformer_attention(q, k, v, &ef.0, &ef.1)
     }
-    fn explicit_matrix(&self, _q: &Mat, _k: &Mat) -> Option<Mat> {
+    fn explicit_matrix(&self, _q: &Mat, _k: &Mat, _spec: &AttnSpec) -> Option<Mat> {
         None
     }
-    fn flops_model(&self, n: usize, d: usize) -> f64 {
+    fn flops_model(&self, n: usize, d: usize, _spec: &AttnSpec) -> f64 {
         let (nf, df, kp) = (n as f64, d as f64, self.p.kproj as f64);
         4.0 * nf * kp * df + (4.0 * df + 5.0) * nf * kp
     }
@@ -447,6 +532,8 @@ mod tests {
     use crate::attention::gaussian_qkv;
     use crate::rng::Pcg64;
 
+    const FULL: AttnSpec = AttnSpec::FULL;
+
     fn probe(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
         let mut rng = Pcg64::seed(seed);
         gaussian_qkv(n, d, 0.8, 0.8, &mut rng)
@@ -469,7 +556,7 @@ mod tests {
         // register-blocked microkernels in the same per-row FP order.
         let (q, k, v) = probe(64, 32, 1);
         let params = BackendParams { fused: false, ..Default::default() };
-        let fast = backend_for(Method::Softmax, params).forward(&q, &k, &v);
+        let fast = backend_for(Method::Softmax, params).forward(&q, &k, &v, &FULL);
         let slow = crate::attention::softmax_attention(&q, &k, &v);
         assert_eq!(fast.data(), slow.data(), "row-partitioned path must be bitwise identical");
     }
@@ -484,12 +571,12 @@ mod tests {
                 Method::Softmax,
                 BackendParams { tile, ..Default::default() },
             )
-            .forward(&q, &k, &v);
+            .forward(&q, &k, &v, &FULL);
             let unfused = backend_for(
                 Method::Softmax,
                 BackendParams { fused: false, ..Default::default() },
             )
-            .forward(&q, &k, &v);
+            .forward(&q, &k, &v, &FULL);
             let err = fused.max_abs_diff(&unfused);
             assert!(err < 1e-5, "tile={tile}: {err}");
         }
@@ -499,8 +586,8 @@ mod tests {
     fn fused_quadratic_backend_matches_matrix_route() {
         let (q, k, v) = probe(96, 16, 9);
         let bk = default_backend(Method::Quadratic);
-        let p = bk.explicit_matrix(&q, &k).unwrap();
-        let err = bk.forward(&q, &k, &v).max_abs_diff(&p.matmul(&v));
+        let p = bk.explicit_matrix(&q, &k, &FULL).unwrap();
+        let err = bk.forward(&q, &k, &v, &FULL).max_abs_diff(&p.matmul(&v));
         assert!(err < 1e-4, "fused quadratic vs matrix route: {err}");
     }
 
@@ -508,7 +595,7 @@ mod tests {
     fn lln_backend_matches_scalar_reference() {
         let (q, k, v) = probe(96, 32, 2);
         let params = BackendParams { alpha: 1.4, beta: 1.4, chunk: 17, ..Default::default() };
-        let fast = backend_for(Method::Lln, params).forward(&q, &k, &v);
+        let fast = backend_for(Method::Lln, params).forward(&q, &k, &v, &FULL);
         let slow = crate::attention::lln_attention(&q, &k, &v, 1.4, 1.4);
         let err = fast.max_abs_diff(&slow);
         assert!(err < 1e-4, "streamed vs scalar: {err}");
@@ -521,17 +608,68 @@ mod tests {
         let (q, k, v) = probe(64, 16, 3);
         for m in [Method::Softmax, Method::Lln, Method::LlnDiag, Method::Elu, Method::BlockDiag] {
             let bk = default_backend(m);
-            let p = bk.explicit_matrix(&q, &k).unwrap();
-            let err = bk.forward(&q, &k, &v).max_abs_diff(&p.matmul(&v));
+            let p = bk.explicit_matrix(&q, &k, &FULL).unwrap();
+            let err = bk.forward(&q, &k, &v, &FULL).max_abs_diff(&p.matmul(&v));
             assert!(err < 1e-3, "{}: forward vs matrix route: {err}", bk.name());
         }
+    }
+
+    #[test]
+    fn causal_forward_parity_with_explicit_matrix() {
+        // The same invariant under the causal and causal+padded masks,
+        // for every maskable method with a dense matrix.
+        let (q, k, v) = probe(64, 16, 11);
+        for spec in [AttnSpec::CAUSAL, AttnSpec::causal_padded(40), AttnSpec::padded(24)] {
+            for m in [
+                Method::Softmax,
+                Method::Lln,
+                Method::LlnDiag,
+                Method::Elu,
+                Method::Relu,
+                Method::Quadratic,
+                Method::Performer,
+                Method::BlockDiag,
+            ] {
+                let bk = default_backend(m);
+                let p = bk.explicit_matrix(&q, &k, &spec).unwrap();
+                let err = bk.forward(&q, &k, &v, &spec).max_abs_diff(&p.matmul(&v));
+                assert!(err < 1e-3, "{} {spec:?}: forward vs matrix route: {err}", bk.name());
+            }
+        }
+    }
+
+    #[test]
+    fn causal_explicit_matrices_have_no_future_mass() {
+        let (q, k, _) = probe(64, 16, 12);
+        for m in [Method::Softmax, Method::Lln, Method::Quadratic, Method::BlockDiag] {
+            let p = default_backend(m).explicit_matrix(&q, &k, &AttnSpec::CAUSAL).unwrap();
+            for i in 0..64 {
+                for j in (i + 1)..64 {
+                    assert_eq!(p.get(i, j), 0.0, "{m:?}: future mass at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot honor causal")]
+    fn nystrom_rejects_causal_spec() {
+        let (q, k, v) = probe(32, 16, 13);
+        default_backend(Method::Nystrom).forward(&q, &k, &v, &AttnSpec::CAUSAL);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot honor causal")]
+    fn linformer_rejects_padded_spec() {
+        let (q, k, v) = probe(32, 16, 14);
+        default_backend(Method::Linformer).forward(&q, &k, &v, &AttnSpec::padded(16));
     }
 
     #[test]
     fn explicit_matrices_are_stochastic() {
         let (q, k, _) = probe(64, 32, 4);
         for bk in all_backends() {
-            if let Some(p) = bk.explicit_matrix(&q, &k) {
+            if let Some(p) = bk.explicit_matrix(&q, &k, &FULL) {
                 assert!(p.is_stochastic(1e-3), "{} matrix not stochastic", bk.name());
             }
         }
@@ -550,7 +688,7 @@ mod tests {
         assert!(p.is_stochastic(1e-3));
         // forward must degrade the same way (no panic, parity intact).
         let bk = backend_for(Method::LlnDiag, BackendParams { alpha: 1.3, beta: 1.3, ..Default::default() });
-        let out = bk.forward(&q, &k, &v);
+        let out = bk.forward(&q, &k, &v, &FULL);
         let err = out.max_abs_diff(&p.matmul(&v));
         assert!(err < 1e-3, "degraded forward vs matrix route: {err}");
     }
@@ -559,7 +697,7 @@ mod tests {
     fn implicit_methods_report_no_matrix() {
         let (q, k, _) = probe(32, 16, 5);
         for m in [Method::Nystrom, Method::Linformer] {
-            assert!(default_backend(m).explicit_matrix(&q, &k).is_none());
+            assert!(default_backend(m).explicit_matrix(&q, &k, &FULL).is_none());
         }
     }
 
@@ -567,8 +705,8 @@ mod tests {
     fn flops_model_separates_quadratic_from_linear() {
         let d = 64;
         for bk in all_backends() {
-            let f1 = bk.flops_model(1024, d);
-            let f4 = bk.flops_model(4096, d);
+            let f1 = bk.flops_model(1024, d, &FULL);
+            let f4 = bk.flops_model(4096, d, &FULL);
             assert!(f1 > 0.0 && f4 > f1, "{}", bk.name());
             let growth = f4 / f1;
             if bk.method().is_linear() {
@@ -580,10 +718,46 @@ mod tests {
     }
 
     #[test]
+    fn flops_model_pinned_points_under_specs() {
+        let (n, d) = (1024usize, 64usize);
+        let (nf, df) = (n as f64, d as f64);
+        let sm = default_backend(Method::Softmax);
+        // Dense: (4d+5)·n²;  causal: (4d+5)·n(n+1)/2 — the halving.
+        assert_eq!(sm.flops_model(n, d, &FULL), (4.0 * df + 5.0) * nf * nf);
+        assert_eq!(
+            sm.flops_model(n, d, &AttnSpec::CAUSAL),
+            (4.0 * df + 5.0) * nf * (nf + 1.0) / 2.0
+        );
+        let ratio = sm.flops_model(n, d, &AttnSpec::CAUSAL) / sm.flops_model(n, d, &FULL);
+        assert!((ratio - 0.5).abs() < 1e-3, "causal must ~halve softmax flops: {ratio}");
+        // Padded: (4d+5)·n·kl.
+        assert_eq!(
+            sm.flops_model(n, d, &AttnSpec::padded(256)),
+            (4.0 * df + 5.0) * nf * 256.0
+        );
+        // Linear class: causal costs the same (the O(N) story), padding
+        // drops the dead key rows.
+        let lln = default_backend(Method::Lln);
+        assert_eq!(lln.flops_model(n, d, &FULL), 2.0 * nf * (2.0 * df * df + 3.0 * df));
+        assert_eq!(lln.flops_model(n, d, &AttnSpec::CAUSAL), lln.flops_model(n, d, &FULL));
+        assert_eq!(
+            lln.flops_model(n, d, &AttnSpec::padded(256)),
+            (nf + 256.0) * (2.0 * df * df + 3.0 * df)
+        );
+        // BlockDiag: n·b dense pairs, per-tile triangles under causal.
+        let bd = default_backend(Method::BlockDiag);
+        assert_eq!(bd.flops_model(n, d, &FULL), (4.0 * df + 5.0) * nf * 64.0);
+        assert_eq!(
+            bd.flops_model(n, d, &AttnSpec::CAUSAL),
+            (4.0 * df + 5.0) * (n / 64) as f64 * (64.0 * 65.0 / 2.0)
+        );
+    }
+
+    #[test]
     fn linformer_and_nystrom_forward_are_finite() {
         let (q, k, v) = probe(64, 16, 6);
         for m in [Method::Nystrom, Method::Linformer] {
-            let out = default_backend(m).forward(&q, &k, &v);
+            let out = default_backend(m).forward(&q, &k, &v, &FULL);
             assert_eq!(out.shape(), (64, 16));
             assert!(out.data().iter().all(|x| x.is_finite()), "{m:?}");
         }

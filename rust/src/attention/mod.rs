@@ -19,6 +19,100 @@ use crate::tensor::Mat;
 /// Matches ref.py's EXP_CLAMP: keeps exp() finite in f32.
 pub const EXP_CLAMP: f32 = 30.0;
 
+/// Which (query, key) score pairs a forward pass may use — the mask and
+/// scale contract carried by every [`AttentionBackend`] call.
+///
+/// * `causal` — autoregressive mask: query row `i` attends only to keys
+///   `j <= i` (decoder / LM serving).  Requires aligned q/k row indices.
+/// * `key_len` — right-padding mask: only keys `j < key_len` are valid
+///   (how `lln serve` batches variable-length requests padded up to a
+///   bucket).  `None` means every key row is live.
+/// * `scale` — score temperature override for the softmax-class
+///   kernels; `None` means the usual `1/sqrt(d)`.
+///
+/// [`AttnSpec::FULL`] reproduces the pre-spec behavior exactly — full
+/// bidirectional attention over every key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttnSpec {
+    pub causal: bool,
+    pub key_len: Option<usize>,
+    pub scale: Option<f32>,
+}
+
+impl Default for AttnSpec {
+    fn default() -> Self {
+        Self::FULL
+    }
+}
+
+impl AttnSpec {
+    /// Full bidirectional attention (the pre-spec default).
+    pub const FULL: AttnSpec = AttnSpec { causal: false, key_len: None, scale: None };
+    /// Autoregressive attention: row `i` sees keys `j <= i`.
+    pub const CAUSAL: AttnSpec = AttnSpec { causal: true, key_len: None, scale: None };
+
+    /// Causal with a right-padding mask (the serving shape: a decoder
+    /// request of `key_len` live tokens padded up to its bucket).
+    pub fn causal_padded(key_len: usize) -> Self {
+        AttnSpec { causal: true, key_len: Some(key_len), scale: None }
+    }
+
+    /// Bidirectional with a right-padding mask.
+    pub fn padded(key_len: usize) -> Self {
+        AttnSpec { causal: false, key_len: Some(key_len), scale: None }
+    }
+
+    /// True when no mask is in play (the fast unmasked kernels apply).
+    /// A `scale` override is not a mask — callers that only honor the
+    /// default scale must check [`AttnSpec::scale`] separately.
+    pub fn is_full(&self) -> bool {
+        !self.causal && self.key_len.is_none()
+    }
+
+    /// Valid key count for a key set of `nk` rows.
+    pub fn key_limit(&self, nk: usize) -> usize {
+        self.key_len.unwrap_or(nk).min(nk)
+    }
+
+    /// How many leading keys query row `i` may attend to.
+    pub fn row_limit(&self, i: usize, nk: usize) -> usize {
+        let kl = self.key_limit(nk);
+        if self.causal {
+            kl.min(i + 1)
+        } else {
+            kl
+        }
+    }
+
+    /// Score scale for head dim `d` (`1/sqrt(d)` unless overridden).
+    pub fn resolve_scale(&self, d: usize) -> f32 {
+        self.scale.unwrap_or(1.0 / (d as f32).sqrt())
+    }
+
+    /// Total live (query, key) score pairs — the unit the quadratic
+    /// flops/memory models charge.  Pure causal on a square n×n problem
+    /// gives n(n+1)/2 ≈ half the dense count.
+    pub fn masked_pairs(&self, nq: usize, nk: usize) -> f64 {
+        let kl = self.key_limit(nk);
+        if !self.causal {
+            return (nq * kl) as f64;
+        }
+        // Rows below kl see i+1 keys; rows at/past kl see all kl keys.
+        let tri_rows = nq.min(kl) as f64;
+        tri_rows * (tri_rows + 1.0) / 2.0 + (nq as f64 - tri_rows) * kl as f64
+    }
+
+    /// Fraction of the dense nq×nk score work this spec keeps (1.0 when
+    /// unmasked, ~0.5 under pure causal).
+    pub fn work_fraction(&self, nq: usize, nk: usize) -> f64 {
+        if nq == 0 || nk == 0 {
+            1.0
+        } else {
+            self.masked_pairs(nq, nk) / (nq as f64 * nk as f64)
+        }
+    }
+}
+
 /// Every attention method in the repo (paper Table 1/2 comparisons).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -71,33 +165,55 @@ impl Method {
     pub fn is_linear(&self) -> bool {
         !matches!(self, Method::Softmax | Method::Quadratic)
     }
+
+    /// Whether the method can honor causal / key-length masks at all.
+    /// Nystrom's segment-mean landmarks and Linformer's sequence-axis
+    /// projections mix every position (including future and padding) by
+    /// construction, so no per-pair mask exists for them.
+    pub fn supports_masking(&self) -> bool {
+        !matches!(self, Method::Nystrom | Method::Linformer)
+    }
+
+    /// Whether the method's backend can honor this spec exactly.
+    pub fn supports_spec(&self, spec: &AttnSpec) -> bool {
+        spec.is_full() || self.supports_masking()
+    }
 }
 
 /// Analytic memory model (bytes) for a single attention head's forward
 /// pass — the Table 2 "Memory" column, parameterized like the paper
-/// (the full matrix is kept for backward, so Softmax/Quadratic charge
-/// n×n here even though the native *inference* forwards now run the
-/// fused O(n·tile) kernels).  `n` sequence length, `d` head dim, f32
-/// everywhere.
-pub fn memory_model_bytes(method: Method, n: usize, d: usize) -> usize {
+/// (the stored score matrix is kept for backward, so Softmax/Quadratic
+/// charge every *live* score pair here even though the native
+/// *inference* forwards now run the fused O(n·tile) kernels).  `n`
+/// sequence length, `d` head dim, f32 everywhere.  The [`AttnSpec`]
+/// halves the stored-score charge under causal masking and drops the
+/// key-side terms for padded `key_len` (only `kl` key/value rows carry
+/// state); pass [`AttnSpec::FULL`] for the paper's dense numbers.
+pub fn memory_model_bytes(method: Method, n: usize, d: usize, spec: &AttnSpec) -> usize {
     let f = 4; // f32
     let io = 3 * n * d * f + n * d * f; // q, k, v, out
+    let kl = spec.key_limit(n);
     match method {
-        // Full N x N attention matrix is materialized for backward.
-        Method::Softmax | Method::Quadratic => io + n * n * f,
-        // Feature maps + (d x d) accumulator + normalizer.
-        Method::Lln | Method::Elu | Method::Relu => io + 2 * n * d * f + d * d * f + d * f,
-        // LLN + the block-diagonal tile stack (n/b blocks of b x b).
+        // Every live score pair is materialized for backward: n×n when
+        // unmasked, n(n+1)/2 under causal, n·kl under padding.
+        Method::Softmax | Method::Quadratic => io + spec.masked_pairs(n, n).ceil() as usize * f,
+        // Feature maps (q rows + live k rows) + (d x d) state + normalizer.
+        Method::Lln | Method::Elu | Method::Relu => io + (n + kl) * d * f + d * d * f + d * f,
+        // LLN + the block-diagonal tile stack (masked pairs inside the
+        // n/b diagonal b×b tiles).
         Method::LlnDiag => {
             let b = 64.min(n);
-            io + 2 * n * d * f + d * d * f + d * f + (n / b.max(1)) * b * b * f
+            io + (n + kl) * d * f + d * d * f + d * f + blockdiag_tile_bytes(n, b, spec, f)
         }
         Method::BlockDiag => {
             let b = 64.min(n);
-            io + (n / b.max(1)) * b * b * f
+            io + blockdiag_tile_bytes(n, b, spec, f)
         }
-        // m features / landmarks / projected length.
-        Method::Performer => io + 2 * n * d * f + d * d * f,
+        // Performer is maskable like the other linear-class methods:
+        // q features + live k features + state.
+        Method::Performer => io + (n + kl) * d * f + d * d * f,
+        // Nystrom/Linformer cannot be masked (Method::supports_masking
+        // is false) — their models ignore the spec.
         Method::Nystrom => {
             let m = 32.min(n);
             io + 2 * n * m * f + m * m * f
@@ -107,6 +223,38 @@ pub fn memory_model_bytes(method: Method, n: usize, d: usize) -> usize {
             io + 2 * k * d * f + n * k * f
         }
     }
+}
+
+/// Stored bytes of the block-diagonal softmax tile stack under a mask
+/// (`f` = bytes per element): the live pairs, costed.
+fn blockdiag_tile_bytes(n: usize, b: usize, spec: &AttnSpec, f: usize) -> usize {
+    (blockdiag_masked_pairs(n, b, spec) * f as f64).ceil() as usize
+}
+
+/// Live (query, key) pairs inside the diagonal b×b tiles of an n-row
+/// problem under a spec: each tile keeps only the pairs below its rows'
+/// global limits — n·b dense, roughly half that under causal, dead past
+/// `key_len`.  Shared by the memory model above and the BlockDiag /
+/// LLN+Diag flops models in [`backend`] so the two cost models can
+/// never drift apart.
+pub(crate) fn blockdiag_masked_pairs(n: usize, block: usize, spec: &AttnSpec) -> f64 {
+    let b = block.max(1);
+    let mut pairs = 0.0f64;
+    let mut b0 = 0;
+    // One code path for every spec (an unmasked row's limit is n, so a
+    // full tile contributes span² pairs): FULL and the semantically
+    // identical padded(n) can never report different costs.
+    while b0 < n {
+        let span = b.min(n - b0);
+        // Live pairs of the tile rows [b0, b0+span): per row i, keys in
+        // [b0, b0 + span) clipped by the spec's global row limit.
+        for i in b0..b0 + span {
+            let lim = spec.row_limit(i, n);
+            pairs += lim.saturating_sub(b0).min(span) as f64;
+        }
+        b0 += span;
+    }
+    pairs
 }
 
 /// Sample Gaussian q, k (and optionally v) with given stds — the probe
@@ -140,12 +288,13 @@ mod tests {
     #[test]
     fn memory_model_quadratic_vs_linear() {
         let d = 64;
+        let full = AttnSpec::FULL;
         // Quadratic methods blow up 16x when N quadruples; linear ~4x.
-        let sm_1k = memory_model_bytes(Method::Softmax, 1024, d) as f64;
-        let sm_4k = memory_model_bytes(Method::Softmax, 4096, d) as f64;
+        let sm_1k = memory_model_bytes(Method::Softmax, 1024, d, &full) as f64;
+        let sm_4k = memory_model_bytes(Method::Softmax, 4096, d, &full) as f64;
         assert!(sm_4k / sm_1k > 10.0);
-        let lln_1k = memory_model_bytes(Method::Lln, 1024, d) as f64;
-        let lln_4k = memory_model_bytes(Method::Lln, 4096, d) as f64;
+        let lln_1k = memory_model_bytes(Method::Lln, 1024, d, &full) as f64;
+        let lln_4k = memory_model_bytes(Method::Lln, 4096, d, &full) as f64;
         assert!(lln_4k / lln_1k < 5.0);
     }
 
@@ -154,5 +303,99 @@ mod tests {
         assert!(!Method::Softmax.is_linear());
         assert!(Method::Lln.is_linear());
         assert!(Method::LlnDiag.is_linear());
+    }
+
+    #[test]
+    fn spec_row_limits_and_pairs() {
+        let full = AttnSpec::FULL;
+        assert!(full.is_full());
+        assert_eq!(full.key_limit(64), 64);
+        assert_eq!(full.row_limit(10, 64), 64);
+        assert_eq!(full.masked_pairs(64, 64), 64.0 * 64.0);
+
+        let causal = AttnSpec::CAUSAL;
+        assert!(!causal.is_full());
+        assert_eq!(causal.row_limit(0, 64), 1);
+        assert_eq!(causal.row_limit(63, 64), 64);
+        // n(n+1)/2 pairs on a square causal problem.
+        assert_eq!(causal.masked_pairs(64, 64), 64.0 * 65.0 / 2.0);
+        assert!((causal.work_fraction(4096, 4096) - 0.5).abs() < 1e-3);
+
+        let padded = AttnSpec::padded(40);
+        assert_eq!(padded.key_limit(64), 40);
+        assert_eq!(padded.row_limit(63, 64), 40);
+        assert_eq!(padded.masked_pairs(64, 64), 64.0 * 40.0);
+
+        let cp = AttnSpec::causal_padded(40);
+        assert_eq!(cp.row_limit(10, 64), 11);
+        assert_eq!(cp.row_limit(50, 64), 40);
+        // 40·41/2 triangular pairs + 24 tail rows of 40 keys each.
+        assert_eq!(cp.masked_pairs(64, 64), 40.0 * 41.0 / 2.0 + 24.0 * 40.0);
+
+        // key_len larger than the key set clamps.
+        assert_eq!(AttnSpec::padded(1000).key_limit(64), 64);
+        // Scale override resolution.
+        assert_eq!(full.resolve_scale(64), 1.0 / 8.0);
+        let scaled = AttnSpec { scale: Some(0.25), ..AttnSpec::FULL };
+        assert_eq!(scaled.resolve_scale(64), 0.25);
+        assert!(scaled.is_full(), "scale override is not a mask");
+    }
+
+    #[test]
+    fn memory_model_pinned_points_under_specs() {
+        let f = 4usize;
+        let (n, d) = (1024usize, 64usize);
+        let io = 4 * n * d * f;
+        // Softmax, dense: io + n² scores.
+        assert_eq!(memory_model_bytes(Method::Softmax, n, d, &AttnSpec::FULL), io + n * n * f);
+        // Softmax, causal: io + n(n+1)/2 scores — the causal halving.
+        assert_eq!(
+            memory_model_bytes(Method::Softmax, n, d, &AttnSpec::CAUSAL),
+            io + n * (n + 1) / 2 * f
+        );
+        // Softmax, padded to 256 live keys: io + n·kl scores.
+        assert_eq!(
+            memory_model_bytes(Method::Softmax, n, d, &AttnSpec::padded(256)),
+            io + n * 256 * f
+        );
+        // LLN, dense: io + both feature maps + d² state + normalizer.
+        assert_eq!(
+            memory_model_bytes(Method::Lln, n, d, &AttnSpec::FULL),
+            io + 2 * n * d * f + d * d * f + d * f
+        );
+        // LLN, padded: only kl key-feature rows carry state; causal
+        // masking alone changes nothing (every key is processed once).
+        assert_eq!(
+            memory_model_bytes(Method::Lln, n, d, &AttnSpec::padded(256)),
+            io + (n + 256) * d * f + d * d * f + d * f
+        );
+        assert_eq!(
+            memory_model_bytes(Method::Lln, n, d, &AttnSpec::CAUSAL),
+            memory_model_bytes(Method::Lln, n, d, &AttnSpec::FULL)
+        );
+        // BlockDiag, causal: each 64×64 diagonal tile keeps its lower
+        // triangle — 65/128 of the dense tile stack.
+        let dense_tiles = (n / 64) * 64 * 64 * f;
+        let causal_tiles = (n / 64) * (64 * 65 / 2) * f;
+        assert_eq!(
+            memory_model_bytes(Method::BlockDiag, n, d, &AttnSpec::FULL),
+            io + dense_tiles
+        );
+        assert_eq!(
+            memory_model_bytes(Method::BlockDiag, n, d, &AttnSpec::CAUSAL),
+            io + causal_tiles
+        );
+    }
+
+    #[test]
+    fn masking_support_classification() {
+        for m in Method::ALL {
+            assert!(m.supports_spec(&AttnSpec::FULL), "{m:?} must accept full");
+            assert_eq!(m.supports_spec(&AttnSpec::CAUSAL), m.supports_masking(), "{m:?}");
+        }
+        assert!(!Method::Nystrom.supports_masking());
+        assert!(!Method::Linformer.supports_masking());
+        assert!(Method::Softmax.supports_masking());
+        assert!(Method::Lln.supports_masking());
     }
 }

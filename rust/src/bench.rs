@@ -114,8 +114,9 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 /// Bench one [`AttentionBackend`](crate::attention::AttentionBackend)
-/// forward at (n, d) on seeded Gaussian probes; returns the mean
-/// seconds per forward.  The shared entry point for `kernel_micro` and
+/// forward at (n, d) on seeded Gaussian probes under an
+/// [`AttnSpec`](crate::attention::AttnSpec); returns the mean seconds
+/// per forward.  The shared entry point for `kernel_micro` and
 /// `attention_scaling`, so every bench target times methods through the
 /// same registry dispatch the serving path uses.
 pub fn run_attention_backend(
@@ -124,13 +125,15 @@ pub fn run_attention_backend(
     n: usize,
     d: usize,
     seed: u64,
+    spec: &crate::attention::AttnSpec,
 ) -> f64 {
     let mut rng = crate::rng::Pcg64::seed(seed);
     let q = crate::tensor::Mat::gaussian(n, d, 1.0, &mut rng);
     let k = crate::tensor::Mat::gaussian(n, d, 1.0, &mut rng);
     let v = crate::tensor::Mat::gaussian(n, d, 1.0, &mut rng);
-    let name = format!("backend {} n={n}", backend.name());
-    b.run(&name, n as f64, || backend.forward(&q, &k, &v)).mean()
+    let tag = if spec.causal { " causal" } else { "" };
+    let name = format!("backend {}{tag} n={n}", backend.name());
+    b.run(&name, n as f64, || backend.forward(&q, &k, &v, spec)).mean()
 }
 
 // ---------------------------------------------------------------------------
@@ -159,10 +162,15 @@ pub struct KernelReport {
 
 /// (fast, slow) kernel pairs whose ratio the report derives whenever
 /// both were measured at the same n.  `softmax_fused` vs
-/// `softmax_pipeline_pr1` at n=4096 is the headline acceptance number.
+/// `softmax_pipeline_pr1` at n=4096 is the headline acceptance number;
+/// `softmax_fused_causal` vs `softmax_masked_dense_causal` is the
+/// causal-PR acceptance (fused causal must be ≤ ~0.6× the masked dense
+/// route's time at n=4096, i.e. speedup ≥ ~1.67×).
 const SPEEDUP_PAIRS: &[(&str, &str)] = &[
     ("softmax_fused", "softmax_pipeline_pr1"),
     ("softmax_fused", "softmax_pipeline_blocked"),
+    ("softmax_fused_causal", "softmax_masked_dense_causal"),
+    ("softmax_fused_causal", "softmax_fused"),
     ("matmul_t_blocked", "matmul_t_pr1"),
 ];
 
@@ -256,9 +264,11 @@ pub fn run_kernel_bench(
     d: usize,
     params: crate::attention::BackendParams,
 ) -> KernelReport {
-    use crate::attention::{backend_for, BackendParams, Method};
+    use crate::attention::{backend_for, AttnSpec, BackendParams, Method};
     use crate::tensor::Mat;
 
+    const FULL: AttnSpec = AttnSpec::FULL;
+    const CAUSAL: AttnSpec = AttnSpec::CAUSAL;
     let threads = crate::tensor::resolve_threads(params.threads);
     let mut records: Vec<KernelRecord> = Vec::new();
     let push = |records: &mut Vec<KernelRecord>, name: &'static str, n: usize, r: &BenchResult| {
@@ -300,28 +310,67 @@ pub fn run_kernel_bench(
                 .run(&format!("matmul_t_blocked n={n}"), 1.0, || q.par_matmul_t(&k, params.threads))
                 .clone();
             push(&mut records, "matmul_t_blocked", n, &r);
+
+            // The masked *dense* causal route (materialize all n×n
+            // scores in parallel, mask + softmax, value matmul — the
+            // unfused backend path) — the baseline the fused causal
+            // kernel must beat.  Capped like the PR-1 pipeline: it
+            // re-materializes the n×n matrix the fused path avoids.
+            let dense_causal =
+                backend_for(Method::Softmax, BackendParams { fused: false, ..params });
+            let r = b
+                .run(&format!("softmax_masked_dense_causal n={n}"), 1.0, || {
+                    dense_causal.forward(&q, &k, &v, &CAUSAL)
+                })
+                .clone();
+            push(&mut records, "softmax_masked_dense_causal", n, &r);
         }
 
         let unfused = backend_for(Method::Softmax, BackendParams { fused: false, ..params });
         let r = b
-            .run(&format!("softmax_pipeline_blocked n={n}"), 1.0, || unfused.forward(&q, &k, &v))
+            .run(&format!("softmax_pipeline_blocked n={n}"), 1.0, || {
+                unfused.forward(&q, &k, &v, &FULL)
+            })
             .clone();
         push(&mut records, "softmax_pipeline_blocked", n, &r);
 
         let fused = backend_for(Method::Softmax, params);
-        let r = b.run(&format!("softmax_fused n={n}"), 1.0, || fused.forward(&q, &k, &v)).clone();
+        let r = b
+            .run(&format!("softmax_fused n={n}"), 1.0, || fused.forward(&q, &k, &v, &FULL))
+            .clone();
         push(&mut records, "softmax_fused", n, &r);
 
+        // Fused causal streaming softmax: prefix tiles only (~half the
+        // score work of the full fused kernel).
+        let r = b
+            .run(&format!("softmax_fused_causal n={n}"), 1.0, || {
+                fused.forward(&q, &k, &v, &CAUSAL)
+            })
+            .clone();
+        push(&mut records, "softmax_fused_causal", n, &r);
+
         let quad = backend_for(Method::Quadratic, params);
-        let r = b.run(&format!("quadratic_fused n={n}"), 1.0, || quad.forward(&q, &k, &v)).clone();
+        let r = b
+            .run(&format!("quadratic_fused n={n}"), 1.0, || quad.forward(&q, &k, &v, &FULL))
+            .clone();
         push(&mut records, "quadratic_fused", n, &r);
 
         let lln = backend_for(Method::Lln, BackendParams { alpha: 2.2, beta: 2.2, ..params });
-        let r = b.run(&format!("lln_streamed n={n}"), 1.0, || lln.forward(&q, &k, &v)).clone();
+        let r = b
+            .run(&format!("lln_streamed n={n}"), 1.0, || lln.forward(&q, &k, &v, &FULL))
+            .clone();
         push(&mut records, "lln_streamed", n, &r);
 
+        // Causal O(N) prefix-state LLN: the decoder-side linear path.
+        let r = b
+            .run(&format!("lln_causal n={n}"), 1.0, || lln.forward(&q, &k, &v, &CAUSAL))
+            .clone();
+        push(&mut records, "lln_causal", n, &r);
+
         let diag = backend_for(Method::LlnDiag, BackendParams { alpha: 2.2, beta: 2.2, ..params });
-        let r = b.run(&format!("lln_diag n={n}"), 1.0, || diag.forward(&q, &k, &v)).clone();
+        let r = b
+            .run(&format!("lln_diag n={n}"), 1.0, || diag.forward(&q, &k, &v, &FULL))
+            .clone();
         push(&mut records, "lln_diag", n, &r);
     }
 
@@ -412,8 +461,11 @@ mod tests {
             "softmax_pipeline_pr1",
             "softmax_pipeline_blocked",
             "softmax_fused",
+            "softmax_fused_causal",
+            "softmax_masked_dense_causal",
             "quadratic_fused",
             "lln_streamed",
+            "lln_causal",
             "lln_diag",
             "matmul_t_pr1",
             "matmul_t_blocked",
@@ -422,6 +474,10 @@ mod tests {
         }
         assert!(report
             .speedup("softmax_fused", "softmax_pipeline_pr1", 64)
+            .is_some());
+        // The causal acceptance pair must be derivable from one run.
+        assert!(report
+            .speedup("softmax_fused_causal", "softmax_masked_dense_causal", 64)
             .is_some());
     }
 }

@@ -259,6 +259,11 @@ pub struct ServeConfig {
     /// the model) instead of failing the worker.  Off by default so a
     /// misconfigured artifacts path fails loudly in production.
     pub native_fallback: bool,
+    /// Skip PJRT entirely and serve through the native backend encoder
+    /// even when artifacts exist.  The AOT executables are compiled as
+    /// full bidirectional attention, so causal serving (`lln serve
+    /// --causal`, `[compute] causal`) needs this path.
+    pub force_native: bool,
     /// Kernel-compute knobs forwarded to the native backends.
     pub compute: ComputeConfig,
 }
@@ -273,6 +278,7 @@ impl Default for ServeConfig {
             workers: 1,
             buckets: vec![128, 512],
             native_fallback: false,
+            force_native: false,
             compute: ComputeConfig::default(),
         }
     }
@@ -293,6 +299,7 @@ impl ServeConfig {
             workers: t.usize_or("serve.workers", d.workers),
             buckets,
             native_fallback: t.bool_or("serve.native_fallback", d.native_fallback),
+            force_native: t.bool_or("serve.force_native", d.force_native),
             compute: ComputeConfig::from_table(t),
         }
     }
@@ -319,11 +326,16 @@ pub struct ComputeConfig {
     /// Route exact (Softmax / Quadratic) forwards through the fused
     /// streaming kernels instead of materializing the n×n score matrix.
     pub fused: bool,
+    /// Serve causal (autoregressive) attention by default: native
+    /// workers run every request under the causal mask unless the
+    /// request says otherwise.  Requests can also opt in per-call via
+    /// [`Coordinator::submit_with`](crate::coordinator::Coordinator::submit_with).
+    pub causal: bool,
 }
 
 impl Default for ComputeConfig {
     fn default() -> Self {
-        Self { threads: 0, block: 64, chunk: 0, tile: 0, unroll: 0, fused: true }
+        Self { threads: 0, block: 64, chunk: 0, tile: 0, unroll: 0, fused: true, causal: false }
     }
 }
 
@@ -337,6 +349,7 @@ impl ComputeConfig {
             tile: t.usize_or("compute.tile", d.tile),
             unroll: t.usize_or("compute.unroll", d.unroll),
             fused: t.bool_or("compute.fused", d.fused),
+            causal: t.bool_or("compute.causal", d.causal),
         }
     }
 
@@ -421,6 +434,25 @@ method = lln_diag
         let sc = ServeConfig::from_table(&t);
         assert_eq!(sc.compute.tile, 256);
         assert!(!sc.compute.fused);
+    }
+
+    #[test]
+    fn compute_config_causal_knob_parses() {
+        // Bidirectional by default (the pre-causal behavior).
+        assert!(!ComputeConfig::default().causal);
+        let t = ConfigTable::parse("[compute]\ncausal = true").unwrap();
+        let cc = ComputeConfig::from_table(&t);
+        assert!(cc.causal);
+        // And it reaches serving workers through the serve config.
+        let sc = ServeConfig::from_table(&t);
+        assert!(sc.compute.causal);
+    }
+
+    #[test]
+    fn serve_force_native_knob_parses() {
+        assert!(!ServeConfig::default().force_native);
+        let t = ConfigTable::parse("[serve]\nforce_native = true").unwrap();
+        assert!(ServeConfig::from_table(&t).force_native);
     }
 
     #[test]

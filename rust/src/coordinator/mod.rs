@@ -18,15 +18,23 @@ pub mod server;
 
 pub use batcher::{plan_batches, BatchPlan};
 pub use native::NativeEncoder;
-pub use server::{Coordinator, ServeStats};
+pub use server::{Coordinator, ReqSpec, ServeStats};
 
 use crate::data::special;
 
-/// A classification request: tokens in, logits out.
+/// A classification request: tokens in, logits out.  `tokens.len()` is
+/// the request's *live* length — the batcher pads it up to its bucket,
+/// and the native executors mask the padding out of attention via the
+/// per-request key length instead of attending PAD embeddings.
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// Run this request under the causal (autoregressive) mask.
+    /// Batches may freely mix causal and bidirectional members: the
+    /// native executor applies each request's own
+    /// [`AttnSpec`](crate::attention::AttnSpec) member by member.
+    pub causal: bool,
     pub enqueued_at: std::time::Instant,
     pub resp: std::sync::mpsc::Sender<Response>,
 }

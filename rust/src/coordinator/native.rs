@@ -11,7 +11,7 @@
 //! backpressure — with real attention compute, so the coordinator is
 //! testable and benchable in environments without artifacts.
 
-use crate::attention::{backend_for, AttentionBackend, BackendParams, Method};
+use crate::attention::{backend_for, AttentionBackend, AttnSpec, BackendParams, Method};
 use crate::rng::Pcg64;
 use crate::tensor::Mat;
 
@@ -38,6 +38,9 @@ pub struct NativeEncoder {
     num_classes: usize,
     head: Mat,
     embed_seed: u64,
+    /// `[compute] causal` — the default mask for requests that do not
+    /// carry their own spec.
+    default_causal: bool,
 }
 
 impl NativeEncoder {
@@ -60,7 +63,14 @@ impl NativeEncoder {
             BackendParams { alpha: 2.0, beta: 2.0, block, ..BackendParams::from_compute(compute) };
         let mut rng = Pcg64::new(seed, 0x4EAD);
         let head = Mat::gaussian(d_model, num_classes, (1.0 / d_model as f32).sqrt(), &mut rng);
-        Self { backend: backend_for(method, params), d_model, num_classes, head, embed_seed: seed }
+        Self {
+            backend: backend_for(method, params),
+            d_model,
+            num_classes,
+            head,
+            embed_seed: seed,
+            default_causal: compute.causal,
+        }
     }
 
     pub fn num_classes(&self) -> usize {
@@ -69,6 +79,12 @@ impl NativeEncoder {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The attention method this encoder serves (the coordinator gates
+    /// causal admission on `method().supports_masking()`).
+    pub fn method(&self) -> Method {
+        self.backend.method()
     }
 
     /// Deterministic per-(token, position) embedding.
@@ -83,18 +99,47 @@ impl NativeEncoder {
         x
     }
 
-    /// Logits for one (bucket-padded) token sequence.
+    /// Logits for one (bucket-padded) token sequence under the
+    /// configured default mask (no key-length mask — the pre-spec
+    /// behavior, kept for the full-bucket callers and tests).
     pub fn infer(&self, tokens: &[i32]) -> Vec<f32> {
+        let spec = if self.default_causal { AttnSpec::CAUSAL } else { AttnSpec::FULL };
+        self.infer_spec(tokens, &spec)
+    }
+
+    /// Logits for one bucket-padded token sequence under an explicit
+    /// [`AttnSpec`] — the serving entry point: `spec.key_len` is the
+    /// request's live length (padding rows never receive attention mass
+    /// and are excluded from the pooled representation), `spec.causal`
+    /// the request's mask.  Methods that cannot honor masks (see
+    /// [`Method::supports_masking`]) degrade the *key-padding* mask to
+    /// full attention over the padded bucket — exactly the pre-spec
+    /// serving behavior — but panic on a causal spec, matching the
+    /// backend policy (never silently attend the future).  Coordinator
+    /// traffic never trips that panic: `run_batch` rejects causal
+    /// members per request when the method cannot mask.
+    pub fn infer_spec(&self, tokens: &[i32], spec: &AttnSpec) -> Vec<f32> {
+        let method = self.backend.method();
+        assert!(
+            !spec.causal || method.supports_masking(),
+            "{} cannot honor the causal mask (coordinator admission rejects these per request)",
+            method.name()
+        );
+        let spec = if method.supports_spec(spec) { *spec } else { AttnSpec::FULL };
         let x = self.embed(tokens);
-        let out = self.backend.forward(&x, &x, &x);
-        let rows = out.rows().max(1);
+        let out = self.backend.forward(&x, &x, &x, &spec);
+        // Pool only the live rows: padded tail rows carry no signal
+        // once the key mask keeps attention off them.  key_limit is
+        // already bounded by the row count; max(1) only guards the
+        // divisor when there are no live rows.
+        let live = spec.key_limit(out.rows());
         let mut pooled = vec![0.0f32; self.d_model];
-        for i in 0..out.rows() {
+        for i in 0..live {
             for (p, &o) in pooled.iter_mut().zip(out.row(i)) {
                 *p += o;
             }
         }
-        let inv = 1.0 / rows as f32;
+        let inv = 1.0 / live.max(1) as f32;
         for p in pooled.iter_mut() {
             *p *= inv;
         }
@@ -162,6 +207,68 @@ mod tests {
         for (x, y) in la.iter().zip(&lb) {
             assert!((x - y).abs() < 1e-4, "{la:?} vs {lb:?}");
         }
+    }
+
+    #[test]
+    fn causal_config_changes_the_served_function() {
+        // `[compute] causal = true` must actually change attention, and
+        // stay deterministic.
+        let tokens: Vec<i32> = (0..64).map(|i| (i % 29) + 4).collect();
+        let bi = NativeEncoder::new(Method::Softmax, 32, 4, 64, 9, &ComputeConfig::default());
+        let causal_cc = ComputeConfig { causal: true, ..Default::default() };
+        let ca = NativeEncoder::new(Method::Softmax, 32, 4, 64, 9, &causal_cc);
+        assert_ne!(bi.infer(&tokens), ca.infer(&tokens));
+        assert_eq!(ca.infer(&tokens), ca.infer(&tokens));
+    }
+
+    #[test]
+    fn infer_spec_masks_padding_out_of_the_logits() {
+        // Two requests that differ only in their PAD tail must serve
+        // identical logits once key_len masks the padding.
+        let cc = ComputeConfig::default();
+        let enc = NativeEncoder::new(Method::Lln, 32, 4, 64, 9, &cc);
+        let live: Vec<i32> = (0..40).map(|i| (i % 13) + 4).collect();
+        let mut padded_a = live.clone();
+        padded_a.resize(64, crate::data::special::PAD);
+        let mut padded_b = live.clone();
+        padded_b.resize(64, 999); // garbage padding
+        let spec = AttnSpec::padded(40);
+        let a = enc.infer_spec(&padded_a, &spec);
+        let b = enc.infer_spec(&padded_b, &spec);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "padding leaked into logits: {a:?} vs {b:?}");
+        }
+        // Without the mask the garbage tail changes the answer.
+        let full_a = enc.infer_spec(&padded_a, &AttnSpec::FULL);
+        let full_b = enc.infer_spec(&padded_b, &AttnSpec::FULL);
+        assert_ne!(full_a, full_b);
+    }
+
+    #[test]
+    fn every_maskable_method_serves_causal_padded_requests() {
+        // Maskable methods honor causal+padded specs; Nystrom/Linformer
+        // still serve the padded spec (degrading the key mask to full,
+        // the pre-spec behavior) but refuse causal outright.
+        let cc = ComputeConfig::default();
+        for m in Method::ALL {
+            let enc = NativeEncoder::new(m, 16, 4, 64, 3, &cc);
+            let spec = if m.supports_masking() {
+                AttnSpec::causal_padded(50)
+            } else {
+                AttnSpec::padded(50)
+            };
+            let logits = enc.infer_spec(&vec![7i32; 64], &spec);
+            assert_eq!(logits.len(), 4, "{m:?}");
+            assert!(logits.iter().all(|x| x.is_finite()), "{m:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot honor the causal mask")]
+    fn unmaskable_encoder_refuses_causal_spec() {
+        let cc = ComputeConfig::default();
+        let enc = NativeEncoder::new(Method::Nystrom, 16, 4, 64, 3, &cc);
+        enc.infer_spec(&vec![7i32; 64], &AttnSpec::CAUSAL);
     }
 
     #[test]

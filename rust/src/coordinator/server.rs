@@ -108,15 +108,25 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request; returns the response receiver.  Errors on
-    /// over-length input or queue-full backpressure.
+    /// Submit a bidirectional request; returns the response receiver.
+    /// Errors on over-length input or queue-full backpressure.
     pub fn submit(&self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
+        self.submit_with(tokens, false)
+    }
+
+    /// Submit a request with an explicit causal flag.  The request's
+    /// live length rides along as its attention key mask: workers pad
+    /// to the bucket but mask the padding out of attention, so buckets
+    /// batch variable-length (and mixed causal/bidirectional) traffic
+    /// instead of assuming square full attention.
+    pub fn submit_with(&self, tokens: Vec<i32>, causal: bool) -> Result<mpsc::Receiver<Response>> {
         let bucket = pick_bucket(&self.cfg.buckets, tokens.len())
             .ok_or_else(|| anyhow!("sequence length {} exceeds all buckets", tokens.len()))?;
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
+            causal,
             enqueued_at: Instant::now(),
             resp: tx,
         };
@@ -134,6 +144,12 @@ impl Coordinator {
     /// Submit and block for the result.
     pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
         let rx = self.submit(tokens)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped response"))
+    }
+
+    /// Submit with a causal flag and block for the result.
+    pub fn infer_with(&self, tokens: Vec<i32>, causal: bool) -> Result<Response> {
+        let rx = self.submit_with(tokens, causal)?;
         rx.recv().map_err(|_| anyhow!("worker dropped response"))
     }
 
@@ -157,6 +173,16 @@ impl Coordinator {
     }
 }
 
+/// One member's attention shape inside a padded batch: its live token
+/// count (the key mask) and its causal flag.  Built per request by
+/// [`run_batch`] so a single bucket batch can mix variable-length and
+/// mixed-mask traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReqSpec {
+    pub key_len: usize,
+    pub causal: bool,
+}
+
 /// One worker's batch executor: given the bucket-padded token buffer,
 /// produce per-request logits rows.  The batching loop above is the
 /// same for every implementation.
@@ -165,10 +191,22 @@ trait BatchExec {
     /// the native path accepts any size up to `max_batch`).
     fn plan_capacity(&self, members: usize, max_batch: usize) -> usize;
 
+    /// Whether this executor can honor the causal mask.  [`run_batch`]
+    /// rejects causal members *individually* (their co-batched
+    /// bidirectional requests still run) when it cannot.
+    fn supports_causal(&self) -> bool;
+
     /// `tokens` holds `capacity * bucket` ids (`real` live rows, the
-    /// rest phantom padding).  Returns `real` logit rows.
-    fn run(&mut self, tokens: Vec<i32>, capacity: usize, real: usize, bucket: usize)
-        -> Result<Vec<Vec<f32>>>;
+    /// rest phantom padding); `specs` holds one [`ReqSpec`] per live
+    /// row.  Returns `real` logit rows.
+    fn run(
+        &mut self,
+        tokens: Vec<i32>,
+        specs: &[ReqSpec],
+        capacity: usize,
+        real: usize,
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>>;
 }
 
 /// PJRT path: resident params + the bucket's b1/bN executables.
@@ -210,13 +248,32 @@ impl BatchExec for PjrtExec {
         }
     }
 
+    fn supports_causal(&self) -> bool {
+        // The AOT executables are compiled as full bidirectional
+        // attention over the padded bucket (key-length padding keeps
+        // the historical attend-the-PAD-rows semantics): causal
+        // members are rejected per request by `run_batch`.
+        false
+    }
+
     fn run(
         &mut self,
         tokens: Vec<i32>,
+        specs: &[ReqSpec],
         capacity: usize,
         real: usize,
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>> {
+        // Defensive: run_batch filters causal members out before this
+        // executor sees them.
+        if let Some(s) = specs.iter().find(|s| s.causal) {
+            bail!(
+                "causal request (key_len {}) reached the PJRT executor: AOT serve artifacts are \
+                 full-attention only; serve causal traffic via the native backend path \
+                 (`[serve] force_native = true`)",
+                s.key_len
+            );
+        }
         let exe = if capacity == 1 { self.exe_b1.clone() } else { self.exe_bn.clone() };
         let tok_lit = HostTensor::I32 { shape: vec![capacity, bucket], data: tokens }.to_literal()?;
         let mut args: Vec<&Literal> = self.param_lits.iter().collect();
@@ -257,14 +314,30 @@ impl BatchExec for NativeExec {
         members
     }
 
+    fn supports_causal(&self) -> bool {
+        // Nystrom/Linformer structurally cannot be masked; their causal
+        // requests must be rejected, not silently served bidirectional.
+        self.encoder.method().supports_masking()
+    }
+
     fn run(
         &mut self,
         tokens: Vec<i32>,
+        specs: &[ReqSpec],
         _capacity: usize,
         real: usize,
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>> {
-        Ok((0..real).map(|i| self.encoder.infer(&tokens[i * bucket..(i + 1) * bucket])).collect())
+        Ok((0..real)
+            .map(|i| {
+                let spec = crate::attention::AttnSpec {
+                    causal: specs[i].causal,
+                    key_len: Some(specs[i].key_len),
+                    scale: None,
+                };
+                self.encoder.infer_spec(&tokens[i * bucket..(i + 1) * bucket], &spec)
+            })
+            .collect())
     }
 }
 
@@ -278,17 +351,23 @@ fn worker_loop(
     stats: Arc<Mutex<ServeStats>>,
     draining: Arc<AtomicBool>,
 ) -> Result<()> {
-    let mut exec: Box<dyn BatchExec> = match PjrtExec::new(&cfg, &dir, bucket) {
-        Ok(e) => Box::new(e),
-        Err(e) if cfg.native_fallback => {
-            eprintln!(
-                "worker n{bucket}: PJRT path unavailable ({e:#}); serving via native {} backend \
-                 (degraded: untrained weights)",
-                cfg.method
-            );
-            Box::new(NativeExec::new(&cfg, bucket)?)
+    let mut exec: Box<dyn BatchExec> = if cfg.force_native {
+        // Causal serving and mask-sensitive traffic skip PJRT outright:
+        // the AOT executables are full bidirectional attention.
+        Box::new(NativeExec::new(&cfg, bucket)?)
+    } else {
+        match PjrtExec::new(&cfg, &dir, bucket) {
+            Ok(e) => Box::new(e),
+            Err(e) if cfg.native_fallback => {
+                eprintln!(
+                    "worker n{bucket}: PJRT path unavailable ({e:#}); serving via native {} \
+                     backend (degraded: untrained weights)",
+                    cfg.method
+                );
+                Box::new(NativeExec::new(&cfg, bucket)?)
+            }
+            Err(e) => return Err(e),
         }
-        Err(e) => return Err(e),
     };
 
     let mut pending: Vec<Request> = Vec::new();
@@ -317,30 +396,72 @@ fn worker_loop(
         for plan in plan_batches(pending.len(), cfg.max_batch) {
             let batch: Vec<Request> = plan.members.iter().map(|_| pending.remove(0)).collect();
             let capacity = exec.plan_capacity(batch.len(), cfg.max_batch);
-            run_batch(exec.as_mut(), capacity, bucket, batch, &stats);
+            run_batch(exec.as_mut(), capacity, bucket, batch, cfg.compute.causal, &stats);
         }
         pending.clear();
     }
 }
 
 /// Execute one padded batch through the worker's executor and fan
-/// results back out.
+/// results back out.  `default_causal` (`[compute] causal`) is OR-ed
+/// with each request's own flag; causal members an executor cannot
+/// honor are rejected *individually* — their co-batched bidirectional
+/// requests still run.
 fn run_batch(
     exec: &mut dyn BatchExec,
     capacity: usize,
     bucket: usize,
     batch: Vec<Request>,
+    default_causal: bool,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
+    let mut batch = batch;
+    if !exec.supports_causal() {
+        let mut kept = Vec::with_capacity(batch.len());
+        for r in batch {
+            if r.causal || default_causal {
+                let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                stats.lock().unwrap().errors += 1;
+                r.resp
+                    .send(Response {
+                        id: r.id,
+                        result: Err(
+                            "causal attention is not available on this worker's executor \
+                             (AOT serve artifacts and the nystrom/linformer methods are \
+                             full-attention only); serve a maskable method with `[serve] \
+                             force_native = true`"
+                                .into(),
+                        ),
+                        latency_ms,
+                        batch_size: 0,
+                    })
+                    .ok();
+            } else {
+                kept.push(r);
+            }
+        }
+        batch = kept;
+        if batch.is_empty() {
+            return;
+        }
+    }
     let real = batch.len();
     let mut tokens = Vec::with_capacity(capacity * bucket);
+    // One attention spec per live row: the request's pre-padding length
+    // becomes its key mask, its causal flag (or the worker-wide
+    // default) rides along.
+    let mut specs = Vec::with_capacity(real);
     for r in &batch {
+        specs.push(ReqSpec {
+            key_len: r.tokens.len().min(bucket),
+            causal: r.causal || default_causal,
+        });
         tokens.extend(pad_to_bucket(&r.tokens, bucket));
     }
     // Pad phantom rows up to the executor's static batch.
     tokens.resize(capacity * bucket, crate::data::special::PAD);
 
-    let result = exec.run(tokens, capacity, real, bucket);
+    let result = exec.run(tokens, &specs, capacity, real, bucket);
 
     let mut st = stats.lock().unwrap();
     st.batch_sizes.push(real);
@@ -470,6 +591,104 @@ mod tests {
         let err = c.submit(vec![special::CLS; 1000]).unwrap_err();
         assert!(format!("{err}").contains("exceeds"));
         c.shutdown();
+    }
+
+    #[test]
+    fn force_native_skips_pjrt_entirely() {
+        // force_native must serve without ever probing the artifacts
+        // dir (no native_fallback needed).
+        let cfg = ServeConfig {
+            method: "lln_diag".into(),
+            force_native: true,
+            native_fallback: false,
+            buckets: vec![32],
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        let resp = c.infer_with(vec![special::CLS; 16], true).unwrap();
+        assert!(resp.result.is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_fallback_serves_causal_requests() {
+        let c = native_coordinator("lln", 1);
+        let tokens: Vec<i32> = (0..30).map(|i| 4 + i % 9).collect();
+        let causal = c.infer_with(tokens.clone(), true).unwrap().result.unwrap();
+        let bidi = c.infer_with(tokens.clone(), false).unwrap().result.unwrap();
+        assert_eq!(causal.len(), 4);
+        assert!(causal.iter().all(|x| x.is_finite()));
+        // The mask must actually change the served function...
+        assert_ne!(causal, bidi);
+        // ...deterministically.
+        assert_eq!(causal, c.infer_with(tokens, true).unwrap().result.unwrap());
+        c.shutdown();
+    }
+
+    #[test]
+    fn unmaskable_method_rejects_causal_requests_individually() {
+        // Nystrom cannot honor the causal mask: its causal members get
+        // a per-request error while bidirectional members in the same
+        // bucket still serve.
+        let c = native_coordinator("nystrom", 1);
+        let causal_rx = c.submit_with(vec![7i32; 32], true).unwrap();
+        let bidi_rx = c.submit_with(vec![7i32; 32], false).unwrap();
+        let causal = causal_rx.recv().unwrap();
+        let bidi = bidi_rx.recv().unwrap();
+        let err = causal.result.unwrap_err();
+        assert!(err.contains("causal"), "unexpected error: {err}");
+        assert!(bidi.result.is_ok(), "bidirectional co-request must still serve");
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.errors, 1);
+        assert_eq!(st.completed, 1);
+        drop(st);
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_fallback_batches_mixed_causal_and_lengths() {
+        // One bucket batch mixing causal/bidirectional members and
+        // different live lengths: every member gets its own mask.
+        let c = native_coordinator("softmax", 1);
+        let rxs: Vec<_> = (0..12)
+            .map(|i| {
+                let len = 8 + (i % 3) * 7;
+                c.submit_with(vec![5 + i as i32; len], i % 2 == 0).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok(), "{:?}", resp.result);
+        }
+        assert_eq!(c.stats().lock().unwrap().completed, 12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn padding_is_masked_out_of_native_serving() {
+        // The same live tokens served through different bucket sizes
+        // (32-pad vs 64-pad) must produce near-identical logits now
+        // that key_len masks the pad tail out of attention and pooling.
+        let mk = |buckets: Vec<usize>| {
+            let cfg = ServeConfig {
+                method: "lln".into(),
+                buckets,
+                native_fallback: true,
+                ..Default::default()
+            };
+            Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap()
+        };
+        let live: Vec<i32> = (0..20).map(|i| 4 + i % 11).collect();
+        let c32 = mk(vec![32]);
+        let small = c32.infer(live.clone()).unwrap().result.unwrap();
+        c32.shutdown();
+        let c64 = mk(vec![64]);
+        let big = c64.infer(live).unwrap().result.unwrap();
+        c64.shutdown();
+        for (x, y) in small.iter().zip(&big) {
+            assert!((x - y).abs() < 1e-4, "bucket choice leaked into logits: {small:?} vs {big:?}");
+        }
     }
 
     #[test]

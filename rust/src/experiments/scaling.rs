@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use super::maybe_write_csv;
-use crate::attention::{backend_for, memory_model_bytes, BackendParams, Method};
+use crate::attention::{backend_for, memory_model_bytes, AttnSpec, BackendParams, Method};
 use crate::cli::Args;
 use crate::rng::Pcg64;
 use crate::runtime::{artifacts_dir, Engine, HostTensor};
@@ -32,9 +32,10 @@ const METHODS: [(&str, Method); 5] = [
 
 /// Paper-scale memory extrapolation: RoBERTa-base-ish (L=12, H=12),
 /// fwd+bwd activation stash factor 3, + 4 GB parameter/optimizer floor
-/// (matches the paper's ~4 GB at N=512 baseline row).
+/// (matches the paper's ~4 GB at N=512 baseline row).  Full
+/// bidirectional attention — the paper's encoder setting.
 fn model_memory_gb(method: Method, n: usize) -> f64 {
-    let per_head = memory_model_bytes(method, n, 64) as f64;
+    let per_head = memory_model_bytes(method, n, 64, &AttnSpec::FULL) as f64;
     let layers_heads = 12.0 * 12.0;
     let stash = 3.0;
     4.0 + per_head * layers_heads * stash / 1e9
@@ -65,10 +66,10 @@ fn run_table2_native(args: &Args, iters: usize) -> Result<()> {
             let q = Mat::gaussian(n, d, 1.0, &mut rng);
             let k = Mat::gaussian(n, d, 1.0, &mut rng);
             let v = Mat::gaussian(n, d, 1.0, &mut rng);
-            bk.forward(&q, &k, &v); // warm
+            bk.forward(&q, &k, &v, &AttnSpec::FULL); // warm
             let sw = Stopwatch::start();
             for _ in 0..iters {
-                crate::bench::black_box(bk.forward(&q, &k, &v));
+                crate::bench::black_box(bk.forward(&q, &k, &v, &AttnSpec::FULL));
             }
             let secs = sw.elapsed_secs() / iters as f64;
             trow.push(if secs < 1.0 { format!("{:.0}ms", secs * 1e3) } else { format!("{secs:.2}s") });

@@ -22,8 +22,17 @@ pub fn run_serve(args: &Args) -> Result<()> {
     let methods = args.get_list("methods", "softmax,lln_diag");
     let rate = args.get_f64("rate", 200.0)?; // requests/second offered
     let long_frac = args.get_f64("long-frac", 0.3)?;
+    // Causal (decoder-mask) traffic: --causal masks every request,
+    // --causal-frac mixes a fraction into the stream.
+    let causal_all = args.get_bool("causal");
+    let causal_frac =
+        if causal_all { 1.0 } else { args.get_f64("causal-frac", 0.0)?.clamp(0.0, 1.0) };
 
-    println!("== Serving: coordinator throughput/latency ({requests} reqs, {rate}/s offered, {:.0}% long) ==\n", long_frac * 100.0);
+    println!(
+        "== Serving: coordinator throughput/latency ({requests} reqs, {rate}/s offered, {:.0}% long, {:.0}% causal) ==\n",
+        long_frac * 100.0,
+        causal_frac * 100.0
+    );
     // --config wires the [serve] / [compute] sections (queue, batching,
     // workers-per-bucket, kernel threads) into the coordinator.
     let base_cfg = match args.get("config") {
@@ -32,16 +41,25 @@ pub fn run_serve(args: &Args) -> Result<()> {
     };
     // Experiment harness (not production serving): explicitly opt into
     // the native-backend encoder when AOT artifacts are absent so the
-    // coordinator pipeline is still measurable.
+    // coordinator pipeline is still measurable.  Causal traffic forces
+    // the native path outright (`force_native`) — the AOT serve
+    // executables are compiled as full bidirectional attention.
     let native = base_cfg.native_fallback || !artifacts_available(&dir);
-    if native && !artifacts_available(&dir) {
+    let force_native = base_cfg.force_native || causal_frac > 0.0;
+    if !artifacts_available(&dir) {
         println!("(artifacts absent: serving via the native AttentionBackend encoder)\n");
+    } else if force_native {
+        println!("(causal traffic requested: serving via the native AttentionBackend encoder)\n");
     }
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     for method in &methods {
-        let cfg =
-            ServeConfig { method: method.clone(), native_fallback: native, ..base_cfg.clone() };
+        let cfg = ServeConfig {
+            method: method.clone(),
+            native_fallback: native,
+            force_native,
+            ..base_cfg.clone()
+        };
         let coord = Coordinator::start(cfg, &dir)?;
         // Warm both buckets (compile once) before timing.
         coord.infer(vec![crate::data::special::CLS; 64])?;
@@ -60,7 +78,8 @@ pub fn run_serve(args: &Args) -> Result<()> {
             } else {
                 gen_short.example().0
             };
-            match coord.submit(tokens) {
+            let causal = causal_frac > 0.0 && rng.f64() < causal_frac;
+            match coord.submit_with(tokens, causal) {
                 Ok(rx) => rxs.push(rx),
                 Err(_) => rejected += 1,
             }

@@ -16,30 +16,46 @@
 //! Every attention method is dispatched through one trait,
 //! [`attention::AttentionBackend`] (`forward` / `explicit_matrix` /
 //! `flops_model` / `name`), constructed from the
-//! [`attention::backend_for`] registry.  Backends implement the *fast*
+//! [`attention::backend_for`] registry.  Every entry point carries an
+//! [`attention::AttnSpec`] — `causal` flag, optional `key_len` padding
+//! mask, score `scale` — so kernels, serving, benches, and analysis
+//! speak one mask vocabulary ([`attention::AttnSpec::FULL`] is the
+//! bidirectional encoder setting).  Backends implement the *fast*
 //! path — fused tiled streaming-softmax for the exact class
-//! ([`attention::fused_softmax_attention`], O(n·tile) memory, no n×n
-//! score matrix), register-blocked multi-threaded matmul/softmax
-//! ([`tensor::micro`], [`tensor::Mat::par_matmul`],
-//! [`tensor::Mat::par_matmul_t`], [`tensor::Mat::par_softmax_rows`])
-//! and the chunked O(N) streaming linear-attention formulation
+//! ([`attention::fused_softmax_attention_spec`], O(n·tile) memory, no
+//! n×n score matrix; under causal it streams only the prefix tiles,
+//! ~half the score work), register-blocked multi-threaded
+//! matmul/softmax ([`tensor::micro`], [`tensor::Mat::par_matmul`],
+//! [`tensor::Mat::par_matmul_t`], [`tensor::Mat::par_softmax_rows`]),
+//! the chunked O(N) streaming linear-attention formulation
 //! ([`attention::linear_attention_streamed`]) that accumulates the
-//! (m, dv) KV state once instead of per row.  The single-threaded free
-//! functions in [`attention::kernels`] (and the `Mat::*_ref` scalar
-//! loops) stay as the reference; the
-//! property suite (`rust/tests/prop_kernels.rs`, built on [`testkit`])
-//! pins fast-vs-scalar parity, forward-vs-explicit-matrix parity, and
-//! row-stochasticity across random shapes.  The serving coordinator,
-//! the benches, and the experiment harnesses all call through the
-//! registry — the coordinator can fall back to a native-backend encoder
+//! (m, dv) KV state once instead of per row, and the causal O(N)
+//! prefix-state recurrence ([`attention::linear_attention_causal`],
+//! chunked with per-chunk state carry) for the decoder setting.  The
+//! single-threaded free functions in [`attention::kernels`] (and the
+//! `Mat::*_ref` scalar loops) stay as the reference, with
+//! [`attention::softmax_attention_matrix_spec`] /
+//! [`attention::linear_attention_matrix_spec`] as the dense *masked*
+//! references; the property suite (`rust/tests/prop_kernels.rs`, built
+//! on [`testkit`]) pins fast-vs-scalar parity,
+//! forward-vs-explicit-matrix parity (full and masked),
+//! row-stochasticity, and the future-keys-have-zero-influence causal
+//! invariant across random shapes.  The serving coordinator, the
+//! benches, and the experiment harnesses all call through the
+//! registry — the coordinator batches padded variable-length requests
+//! (each request's live length is its key mask; causal rides per
+//! request via `Coordinator::submit_with` or `[compute] causal`), and
+//! can fall back to a native-backend encoder
 //! ([`coordinator::NativeEncoder`]) when PJRT artifacts are absent
 //! (opt-in via `ServeConfig::native_fallback`; the `lln serve` demo and
 //! its benches opt in automatically when artifacts are missing).
 //!
 //! To add a method: add the [`attention::Method`] variant, implement
-//! `AttentionBackend`, register it in `backend_for`, and extend
-//! `EXPLICIT_METHODS` in `prop_kernels.rs` (or the implicit-method
-//! property if it has no dense matrix).  ROADMAP.md tracks this.
+//! `AttentionBackend` (honoring the spec, or `Method::supports_masking`
+//! = false if the structure cannot), register it in `backend_for`, and
+//! extend `EXPLICIT_METHODS` in `prop_kernels.rs` (or the
+//! implicit-method property if it has no dense matrix).  ROADMAP.md
+//! tracks this.
 //!
 //! The crate mirror of this image is offline, so several substrates that
 //! would normally be dependencies are implemented here (see DESIGN.md §3):

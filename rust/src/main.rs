@@ -75,6 +75,8 @@ fn cli() -> Cli {
                         flag("requests", "demo request count", Some("100")),
                         flag("rate", "offered req/s", Some("100")),
                         flag("long-frac", "fraction of long requests", Some("0.3")),
+                        flag("causal-frac", "fraction of causal (decoder-mask) requests", Some("0")),
+                        switch("causal", "serve every request under the causal mask (native path)"),
                         flag("config", "TOML file with [serve] / [compute] sections", None),
                     ]);
                     f

@@ -16,13 +16,27 @@
 //!      `softmax_attention_matrix @ v` route within a scaled 1e-5 for
 //!      every tile/unroll/thread configuration — explicitly including
 //!      n not divisible by the tile and tile > n — while the register-
-//!      blocked matmuls stay pinned to the old scalar `*_ref` loops.
+//!      blocked matmuls stay pinned to the old scalar `*_ref` loops;
+//!   5. the causal/masked [`AttnSpec`] kernels match their dense masked
+//!      references (fused-causal vs masked dense softmax, prefix-state
+//!      causal linear vs masked dense linear) across off-tile shapes,
+//!      and future keys have exactly zero influence on causal outputs.
 //!
 //! Reproduce failures with `LLN_PROP_SEED=<seed> cargo test`.
 
-use lln::attention::{self as att, backend_for, default_backend, BackendParams, Method};
+use lln::attention::{self as att, backend_for, default_backend, AttnSpec, BackendParams, Method};
 use lln::tensor::Mat;
 use lln::testkit::{check, prop_assert, Gen, PropResult};
+
+const FULL: AttnSpec = AttnSpec::FULL;
+
+/// Random mask spec: full / causal / padded / causal+padded, with the
+/// key length drawn around the key-set size (including 0 and over-long).
+fn gen_spec(g: &mut Gen, nk: usize) -> AttnSpec {
+    let causal = g.bool();
+    let key_len = if g.bool() { Some(g.usize_in(0, nk + 8)) } else { None };
+    AttnSpec { causal, key_len, scale: None }
+}
 
 fn gauss_mat(g: &mut Gen, rows: usize, cols: usize, std: f32) -> Mat {
     Mat::from_fn(rows, cols, |_, _| g.gauss_f32(std))
@@ -66,15 +80,62 @@ fn forward_matches_explicit_matrix_route() {
             let params =
                 BackendParams { alpha, beta: alpha, block, threads, chunk, ..Default::default() };
             let bk = backend_for(m, params);
-            let p = match bk.explicit_matrix(&q, &k) {
+            let p = match bk.explicit_matrix(&q, &k, &FULL) {
                 Some(p) => p,
                 None => return prop_assert(false, format!("{} lost its matrix", bk.name())),
             };
             assert_close(
-                &bk.forward(&q, &k, &v),
+                &bk.forward(&q, &k, &v, &FULL),
                 &p.matmul(&v),
                 5e-4,
                 &format!("{} n={n} d={d} a={alpha}", bk.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spec_forward_matches_explicit_matrix_route() {
+    // The forward-vs-matrix parity invariant under random causal /
+    // key_len masks, for every maskable method with a dense matrix.
+    check(48, |g| {
+        let block = *g.choose(&[4usize, 8, 16]);
+        let n = block * g.usize_in(1, 4);
+        let d = g.usize_in(4, 24);
+        let alpha = g.f32_in(0.5, 1.5);
+        let threads = g.usize_in(1, 4);
+        let chunk = g.usize_in(1, 40);
+        let spec = gen_spec(g, n);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in EXPLICIT_METHODS {
+            let params =
+                BackendParams { alpha, beta: alpha, block, threads, chunk, ..Default::default() };
+            let bk = backend_for(m, params);
+            let p = match bk.explicit_matrix(&q, &k, &spec) {
+                Some(p) => p,
+                None => return prop_assert(false, format!("{} lost its matrix", bk.name())),
+            };
+            // Masked rows of a stochastic matrix must never carry mass
+            // beyond their row limit.
+            for i in 0..n {
+                let lim = spec.row_limit(i, n);
+                for (j, &x) in p.row(i).iter().enumerate() {
+                    if j >= lim {
+                        prop_assert(
+                            x == 0.0,
+                            format!("{} {spec:?}: mass at masked ({i},{j})", bk.name()),
+                        )?;
+                    }
+                }
+            }
+            assert_close(
+                &bk.forward(&q, &k, &v, &spec),
+                &p.matmul(&v),
+                5e-4,
+                &format!("{} n={n} d={d} a={alpha} {spec:?}", bk.name()),
             )?;
         }
         Ok(())
@@ -93,7 +154,7 @@ fn explicit_matrices_are_row_stochastic() {
         let k = gauss_mat(g, n, d, sigma);
         for m in EXPLICIT_METHODS {
             let params = BackendParams { alpha, beta: alpha, block, ..Default::default() };
-            let p = backend_for(m, params).explicit_matrix(&q, &k).unwrap();
+            let p = backend_for(m, params).explicit_matrix(&q, &k, &FULL).unwrap();
             prop_assert(p.shape() == (n, n), format!("{m:?}: shape {:?}", p.shape()))?;
             for (ri, s) in p.row_sums().iter().enumerate() {
                 let row_max = p.row(ri).iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
@@ -231,15 +292,126 @@ fn fused_and_unfused_exact_backends_agree() {
         let q = gauss_mat(g, n, d, 0.8);
         let k = gauss_mat(g, n, d, 0.8);
         let v = gauss_mat(g, n, d, 1.0);
+        // The agreement must hold under any mask, not just full — the
+        // `fused` knob is a pure perf/memory switch in both regimes.
+        let spec = gen_spec(g, n);
         for m in [Method::Softmax, Method::Quadratic] {
             let fused_params =
                 BackendParams { tile, unroll, threads, ..Default::default() };
             let unfused_params = BackendParams { fused: false, threads, ..Default::default() };
             assert_close(
-                &backend_for(m, fused_params).forward(&q, &k, &v),
-                &backend_for(m, unfused_params).forward(&q, &k, &v),
+                &backend_for(m, fused_params).forward(&q, &k, &v, &spec),
+                &backend_for(m, unfused_params).forward(&q, &k, &v, &spec),
                 2e-5,
-                &format!("{m:?} fused vs unfused n={n} d={d} tile={tile} u={unroll} t={threads}"),
+                &format!("{m:?} fused vs unfused n={n} d={d} tile={tile} u={unroll} t={threads} {spec:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_causal_softmax_matches_masked_dense() {
+    // The fused causal streaming kernel vs the dense masked reference,
+    // over deliberately off-tile shapes: n, nk free in [1, 97], tile
+    // drawn from a set including 1, non-divisors, and tile > n, plus
+    // random key-length padding (0, partial, and over-long).
+    check(48, |g| {
+        let n = g.usize_in(1, 97);
+        let nk = g.usize_in(1, 97);
+        let d = g.usize_in(1, 24);
+        let dv = g.usize_in(1, 16);
+        let tile = *g.choose(&[1usize, 3, 8, 16, 33, 64, 128, 300]);
+        let unroll = g.usize_in(0, 5);
+        let threads = g.usize_in(1, 4);
+        let key_len = if g.bool() { Some(g.usize_in(0, nk + 8)) } else { None };
+        let spec = AttnSpec { causal: true, key_len, scale: None };
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, nk, d, 0.8);
+        let v = gauss_mat(g, nk, dv, 1.0);
+        let dense = att::softmax_attention_matrix_spec(&q, &k, &spec).matmul(&v);
+        let fused = att::fused_softmax_attention_spec(&q, &k, &v, &spec, tile, unroll, threads);
+        assert_close(
+            &fused,
+            &dense,
+            1e-5,
+            &format!(
+                "fused causal n={n} nk={nk} d={d} dv={dv} tile={tile} u={unroll} t={threads} kl={key_len:?}"
+            ),
+        )
+    });
+}
+
+#[test]
+fn causal_linear_matches_masked_dense_linear() {
+    // The O(N) prefix-state recurrence vs the dense masked linear
+    // matrix, across chunk/thread partitions and key paddings.
+    check(48, |g| {
+        let n = g.usize_in(1, 80);
+        let feat = g.usize_in(1, 16);
+        let dv = g.usize_in(1, 16);
+        let chunk = g.usize_in(1, 64);
+        let threads = g.usize_in(1, 4);
+        let alpha = g.f32_in(0.3, 1.2);
+        let key_len = if g.bool() { Some(g.usize_in(0, n + 8)) } else { None };
+        let spec = AttnSpec { causal: true, key_len, scale: None };
+        let pq = att::lln_features(&gauss_mat(g, n, feat, 0.8), alpha);
+        let pk = att::lln_features(&gauss_mat(g, n, feat, 0.8), alpha);
+        let v = gauss_mat(g, n, dv, 1.0);
+        let dense = att::linear_attention_matrix_spec(&pq, &pk, &spec).matmul(&v);
+        let fast = att::linear_attention_causal(&pq, &pk, &v, key_len, chunk, threads);
+        assert_close(
+            &fast,
+            &dense,
+            5e-5,
+            &format!("causal linear n={n} m={feat} dv={dv} chunk={chunk} t={threads} kl={key_len:?}"),
+        )
+    });
+}
+
+#[test]
+fn future_keys_have_zero_influence_on_causal_outputs() {
+    // Perturb every key/value row past a cut point: under the causal
+    // mask, outputs at or before the cut must be *bitwise* unchanged —
+    // the masked tiles are never read, not just small.
+    check(32, |g| {
+        let n = g.usize_in(2, 80);
+        let d = g.usize_in(2, 16);
+        let cut = g.usize_in(0, n - 1); // rows 0..=cut stay clean
+        let tile = *g.choose(&[1usize, 7, 16, 50, 130]);
+        let threads = g.usize_in(1, 4);
+        let chunk = g.usize_in(1, 32);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for i in (cut + 1)..n {
+            for j in 0..d {
+                k2.set(i, j, k2.get(i, j) + 7.5);
+                v2.set(i, j, v2.get(i, j) - 3.25);
+            }
+        }
+        let spec = AttnSpec::CAUSAL;
+        // Fused causal softmax.
+        let a = att::fused_softmax_attention_spec(&q, &k, &v, &spec, tile, 0, threads);
+        let b = att::fused_softmax_attention_spec(&q, &k2, &v2, &spec, tile, 0, threads);
+        for i in 0..=cut {
+            prop_assert(
+                a.row(i) == b.row(i),
+                format!("fused causal row {i} (cut {cut}, n={n}) saw future keys"),
+            )?;
+        }
+        // Prefix-state causal linear.
+        let pq = att::lln_features(&q, 1.1);
+        let pk = att::lln_features(&k, 1.1);
+        let pk2 = att::lln_features(&k2, 1.1);
+        let la = att::linear_attention_causal(&pq, &pk, &v, None, chunk, threads);
+        let lb = att::linear_attention_causal(&pq, &pk2, &v2, None, chunk, threads);
+        for i in 0..=cut {
+            prop_assert(
+                la.row(i) == lb.row(i),
+                format!("causal linear row {i} (cut {cut}, n={n}) saw future keys"),
             )?;
         }
         Ok(())
@@ -314,13 +486,13 @@ fn backend_forwards_match_scalar_kernels() {
             ..Default::default()
         };
 
-        let sm = backend_for(Method::Softmax, params).forward(&q, &k, &v);
+        let sm = backend_for(Method::Softmax, params).forward(&q, &k, &v, &FULL);
         prop_assert(
             sm.max_abs_diff(&att::softmax_attention(&q, &k, &v)) < 1e-6,
             format!("softmax backend diverged n={n} d={d} t={threads}"),
         )?;
 
-        let lln = backend_for(Method::Lln, params).forward(&q, &k, &v);
+        let lln = backend_for(Method::Lln, params).forward(&q, &k, &v, &FULL);
         assert_close(
             &lln,
             &att::lln_attention(&q, &k, &v, alpha, alpha),
@@ -328,7 +500,7 @@ fn backend_forwards_match_scalar_kernels() {
             &format!("lln backend n={n} d={d} t={threads} chunk={chunk}"),
         )?;
 
-        let bd = backend_for(Method::BlockDiag, params).forward(&q, &k, &v);
+        let bd = backend_for(Method::BlockDiag, params).forward(&q, &k, &v, &FULL);
         assert_close(
             &bd,
             &att::blockdiag_attention(&q, &k, &v, 8),
@@ -336,7 +508,7 @@ fn backend_forwards_match_scalar_kernels() {
             &format!("blockdiag backend n={n} t={threads}"),
         )?;
 
-        let diag = backend_for(Method::LlnDiag, params).forward(&q, &k, &v);
+        let diag = backend_for(Method::LlnDiag, params).forward(&q, &k, &v, &FULL);
         assert_close(
             &diag,
             &att::lln_diag_attention(&q, &k, &v, alpha, alpha, 8),
@@ -358,8 +530,8 @@ fn implicit_backends_produce_finite_shaped_outputs() {
         for m in [Method::Nystrom, Method::Linformer] {
             let params = BackendParams { landmarks: lm, kproj: n.min(8), ..Default::default() };
             let bk = backend_for(m, params);
-            prop_assert(bk.explicit_matrix(&q, &k).is_none(), format!("{m:?} grew a matrix"))?;
-            let out = bk.forward(&q, &k, &v);
+            prop_assert(bk.explicit_matrix(&q, &k, &FULL).is_none(), format!("{m:?} grew a matrix"))?;
+            let out = bk.forward(&q, &k, &v, &FULL);
             prop_assert(out.shape() == (n, d), format!("{m:?}: shape {:?}", out.shape()))?;
             prop_assert(
                 out.data().iter().all(|x| x.is_finite()),
@@ -377,10 +549,30 @@ fn flops_models_are_positive_and_monotone() {
         let n2 = n1 * g.usize_in(2, 8);
         let d = *g.choose(&[32usize, 64, 128]);
         for bk in att::all_backends() {
-            let (f1, f2) = (bk.flops_model(n1, d), bk.flops_model(n2, d));
+            let (f1, f2) = (bk.flops_model(n1, d, &FULL), bk.flops_model(n2, d, &FULL));
             prop_assert(
                 f1 > 0.0 && f2 > f1,
                 format!("{}: flops not monotone ({f1} -> {f2})", bk.name()),
+            )?;
+            // A mask can only remove work: causal/padded flops are
+            // positive and never exceed the dense model; causal halves
+            // (to leading order) the quadratic class.
+            let fc = bk.flops_model(n1, d, &AttnSpec::CAUSAL);
+            prop_assert(
+                fc > 0.0 && fc <= f1,
+                format!("{}: causal flops {fc} vs dense {f1}", bk.name()),
+            )?;
+            if !bk.method().is_linear() {
+                let ratio = fc / f1;
+                prop_assert(
+                    (0.4..=0.6).contains(&ratio),
+                    format!("{}: causal must ~halve quadratic flops ({ratio})", bk.name()),
+                )?;
+            }
+            let fp = bk.flops_model(n1, d, &AttnSpec::padded(n1 / 2));
+            prop_assert(
+                fp > 0.0 && fp <= f1,
+                format!("{}: padded flops {fp} vs dense {f1}", bk.name()),
             )?;
         }
         Ok(())
