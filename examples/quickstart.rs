@@ -1,19 +1,64 @@
 //! Quickstart: drive the native `AttentionBackend` registry through the
 //! `AttnSpec` mask API (full, padded, causal), demo moment matching and
-//! the causal prefix-state decode, then — when AOT artifacts are built —
-//! cross-check the PJRT LLN kernel against the native implementation.
+//! token-by-token decode sessions (`begin_decode` / `decode_step` at
+//! the kernel layer, `Coordinator::open_session` streaming at the
+//! serving layer), then — when AOT artifacts are built — cross-check
+//! the PJRT LLN kernel against the native implementation.
 //!
-//!     cargo run --release --example quickstart          # native only
+//!     cargo run --release --example quickstart                  # native only
+//!     cargo run --release --example quickstart -- --decode-smoke  # CI decode smoke
 //!     make artifacts && cargo run --release --example quickstart
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use lln::attention::{self, backend_for, AttnSpec, BackendParams, Method, MomentMatcher};
 use lln::rng::Pcg64;
 use lln::runtime::{artifacts_dir, Engine, HostTensor};
 use lln::tensor::Mat;
 
+/// Compact streaming-decode exerciser for CI: a native coordinator, one
+/// decode session co-batched with prefill traffic, logits streamed back
+/// in order.  Fails loudly if any step errors or the stream stalls.
+fn decode_smoke() -> Result<()> {
+    use lln::config::ServeConfig;
+    use lln::coordinator::Coordinator;
+
+    let cfg = ServeConfig {
+        method: "lln".into(),
+        force_native: true,
+        buckets: vec![64],
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, &artifacts_dir(None))?;
+    let mut session = coord.open_session(64)?;
+    let tokens: Vec<i32> = (0..32).map(|i| 4 + (i % 13)).collect();
+    // Co-batch a prefill request with the streaming session.
+    let prefill_rx = coord.submit(vec![9i32; 40])?;
+    let rx = session.stream(&tokens)?;
+    let mut streamed = 0usize;
+    for i in 0..tokens.len() {
+        let resp = rx.recv().map_err(|_| anyhow!("decode stream dropped at token {i}"))?;
+        let logits = resp.result.map_err(|e| anyhow!("decode step {i}: {e}"))?;
+        if !logits.iter().all(|x| x.is_finite()) {
+            anyhow::bail!("non-finite decode logits at token {i}");
+        }
+        streamed += 1;
+    }
+    prefill_rx
+        .recv()
+        .map_err(|_| anyhow!("prefill co-request dropped"))?
+        .result
+        .map_err(|e| anyhow!("prefill co-request: {e}"))?;
+    session.close();
+    coord.shutdown();
+    println!("decode smoke OK ({streamed} tokens streamed alongside a prefill request)");
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    if std::env::args().any(|a| a == "--decode-smoke") {
+        return decode_smoke();
+    }
     // 1. Moment matching (paper eq. 10): derive alpha/beta from live
     //    stats — the AOT-fitted constants when artifacts exist, the
     //    identity model otherwise.
@@ -46,32 +91,46 @@ fn main() -> Result<()> {
         padded.get(0, 0)
     );
 
-    // 3. Causal decoding: the prefix-state recurrence means token i sees
-    //    exactly tokens 0..=i — the last row of a causal forward over a
-    //    t-token prefix IS the decode step for token t.  Check the
-    //    first decode step against its closed form (one visible key),
-    //    and the full-causal forward against incremental prefixes.
-    let step0 = causal.row(0);
-    let expect: Vec<f32> = v.row(0).to_vec();
-    let err0: f32 = step0
-        .iter()
-        .zip(&expect)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0, f32::max);
-    println!("causal decode step 0 vs closed form (v[0]): max |diff| = {err0:.2e}");
-    assert!(err0 < 1e-5);
-    // Decoding t tokens = causal forward over the t-prefix; the causal
-    // key mask makes the two identical without re-slicing any matrix.
-    let t = 64usize;
-    let prefix = lln_bk.forward(&q, &k, &v, &AttnSpec::causal_padded(t));
-    let err_t: f32 = prefix
-        .row(t - 1)
-        .iter()
-        .zip(causal.row(t - 1))
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0, f32::max);
-    println!("causal decode step {t} vs full causal forward: max |diff| = {err_t:.2e}");
-    assert!(err_t < 1e-5);
+    // 3. Token-by-token generation: begin_decode opens an O(d²)
+    //    prefix-state session and decode_step appends one token at a
+    //    time — no re-running the causal prefill per token.  The
+    //    decoded rows are *bitwise* the causal batch forward's rows
+    //    (same chunked prefix-state carry).
+    let mut state = lln_bk.begin_decode(d, d).map_err(|e| anyhow!(e))?;
+    let mut decoded = Mat::zeros(n, d);
+    for i in 0..n {
+        let row = lln_bk.decode_step(&mut state, q.row(i), k.row(i), v.row(i));
+        decoded.row_mut(i).copy_from_slice(&row);
+    }
+    assert_eq!(
+        decoded.data(),
+        causal.data(),
+        "decode session must reproduce the causal forward bitwise"
+    );
+    println!(
+        "lln decode session: {n} steps == causal forward rows (bitwise), state = {} bytes (O(d²), \
+         flat in n)",
+        state.state_bytes()
+    );
+    // Exact softmax decodes too — a KV cache instead of a prefix state
+    // (O(t·d) per step), matching the fused causal forward to
+    // streaming-softmax tolerance.
+    let sm_decode_bk = backend_for(Method::Softmax, BackendParams::default());
+    let mut sm_state = sm_decode_bk.begin_decode(d, d).map_err(|e| anyhow!(e))?;
+    let sm_causal_ref = sm_decode_bk.forward(&q, &k, &v, &AttnSpec::CAUSAL);
+    let mut sm_err = 0.0f32;
+    for i in 0..n {
+        let row = sm_decode_bk.decode_step(&mut sm_state, q.row(i), k.row(i), v.row(i));
+        for (a, b) in row.iter().zip(sm_causal_ref.row(i)) {
+            sm_err = sm_err.max((a - b).abs());
+        }
+    }
+    println!(
+        "softmax decode session vs fused causal forward: max |diff| = {sm_err:.2e}, cache = {} \
+         bytes (grows with t)",
+        sm_state.state_bytes()
+    );
+    assert!(sm_err < 1e-5);
 
     // 4. Exact softmax under the same masks, through the fused
     //    O(n·tile) kernels — including the causal variant that streams

@@ -74,6 +74,38 @@ fn main() -> Result<()> {
         st.rejected
     );
     drop(st);
+
+    // Streaming decode sessions (native path only: the AOT executables
+    // are batch-prefill): two concurrent sessions pipeline tokens
+    // through the same bucket queues and read logits back as each token
+    // decodes — amortized O(1)/token state for the linear methods.
+    if native {
+        let d0 = std::time::Instant::now();
+        let per_session = 32usize;
+        let mut sessions = Vec::new();
+        let mut streams = Vec::new();
+        for s in 0..2 {
+            let mut session = coord.open_session(per_session)?;
+            let tokens: Vec<i32> = (0..per_session).map(|i| 4 + ((7 * s + i) % 19) as i32).collect();
+            streams.push(session.stream(&tokens)?);
+            sessions.push(session);
+        }
+        let mut streamed = 0usize;
+        for rx in &streams {
+            for _ in 0..per_session {
+                if rx.recv()?.result.is_ok() {
+                    streamed += 1;
+                }
+            }
+        }
+        for s in sessions {
+            s.close();
+        }
+        println!(
+            "decode sessions: streamed {streamed} tokens across 2 sessions in {:.1} ms",
+            d0.elapsed().as_secs_f64() * 1e3
+        );
+    }
     coord.shutdown();
     println!("serve demo OK");
     Ok(())

@@ -19,11 +19,13 @@
 //! [`backend_for`], add the `Method` variant, and extend the parity
 //! properties — see ROADMAP.md "Open items" for the checklist.
 
+use super::decode::{DecodeState, KvCache, PrefixState};
 use super::kernels::{
-    blockdiag_attention_matrix_spec, elu_features, fused_quadratic_attention_spec,
-    fused_softmax_attention_spec, linear_attention_matrix_spec, linear_attention_spec,
-    lln_features, nystrom_attention, par_blockdiag_attention_spec, performer_features,
-    performer_projection, quadratic_attention_matrix_spec, softmax_attention_matrix_spec,
+    blockdiag_attention_matrix_spec, blockdiag_decode_step, clamped_exp, elu_features,
+    fused_quadratic_attention_spec, fused_quadratic_decode_step, fused_softmax_attention_spec,
+    fused_softmax_decode_step, linear_attention_matrix_spec, linear_attention_spec, lln_features,
+    nystrom_attention, par_blockdiag_attention_spec, performer_features, performer_projection,
+    quadratic_attention_matrix_spec, softmax_attention_matrix_spec,
 };
 use super::{AttnSpec, Method};
 use crate::tensor::Mat;
@@ -137,6 +139,44 @@ pub trait AttentionBackend: Send + Sync {
     /// changes nothing — the O(N) story — while `key_len` drops the
     /// dead key rows).
     fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64;
+
+    /// Open an incremental causal decode session: the state that
+    /// [`decode_step`](Self::decode_step) advances one token at a time
+    /// (KV cache for the exact quadratic-cost class, the O(m·dv)
+    /// `Σ φ(k)vᵀ` prefix state for the linear class).  `d` is the q/k
+    /// head dim, `dv` the value dim.  Returns `Err` — never panics —
+    /// for methods that cannot honor the causal mask
+    /// ([`Method::supports_masking`] = false): the serving session
+    /// path surfaces this per request through the coordinator response.
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        let _ = (d, dv);
+        Err(format!(
+            "{} attention has no incremental decode form (its mixing spans every position, so \
+             it cannot honor the causal mask)",
+            self.name()
+        ))
+    }
+
+    /// Append token `t`'s (q, k, v) rows to the session state and
+    /// return its attention output over the inclusive prefix `0..=t` —
+    /// row `t` of the causal batch forward, without re-paying the
+    /// prefix.  For the linear class this is bitwise identical to the
+    /// chunked [`linear_attention_causal`](super::linear_attention_causal)
+    /// rows (same chunk carry); for the cache class it matches to
+    /// streaming-softmax tolerance.  Panics on a state built by a
+    /// different method class — states are not interchangeable.
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let _ = (state, q, k, v);
+        unreachable!("{}: decode_step without a decode state (begin_decode errs)", self.name())
+    }
+}
+
+/// Panic with a uniform message when a [`DecodeState`] reaches a
+/// backend of a different method class (a caller bug, not a request
+/// error — session states are created by `begin_decode` and must be
+/// stepped by the same backend).
+fn wrong_state(method: Method) -> ! {
+    panic!("{}: decode_step on a state of a different method class", method.name())
 }
 
 /// Panic with a uniform message when a mask reaches a method that
@@ -198,6 +238,24 @@ impl AttentionBackend for SoftmaxBackend {
     fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
         (4.0 * d as f64 + 5.0) * spec.masked_pairs(n, n)
     }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Cache(KvCache::new(d, dv)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Cache(cache) = state else { wrong_state(Method::Softmax) };
+        cache.push(k, v);
+        let scale = 1.0 / (q.len() as f32).sqrt();
+        fused_softmax_decode_step(
+            q,
+            cache.keys(),
+            cache.values(),
+            cache.len(),
+            cache.d(),
+            cache.dv(),
+            scale,
+            self.0.tile,
+        )
+    }
 }
 
 struct LlnBackend(BackendParams);
@@ -226,6 +284,25 @@ impl AttentionBackend for LlnBackend {
     fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
         linear_flops(n, d, spec)
     }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Prefix(PrefixState::new(d, dv, self.0.chunk)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Prefix(prefix) = state else { wrong_state(Method::Lln) };
+        prefix.push(&lln_features_row(k, self.0.beta), v);
+        prefix.read(&lln_features_row(q, self.0.alpha))
+    }
+}
+
+/// Row form of [`lln_features`] (same clamped-exp map per element) for
+/// the decode step's single-token feature lift.
+fn lln_features_row(x: &[f32], scale: f32) -> Vec<f32> {
+    x.iter().map(|&v| clamped_exp(scale * v)).collect()
+}
+
+/// Row form of [`elu_features`].
+fn elu_features_row(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| if v > 0.0 { v + 1.0 } else { v.exp() }).collect()
 }
 
 /// Linear-class flop model: the (2d² + 3d)·kl key-state build over the
@@ -289,6 +366,43 @@ impl AttentionBackend for LlnDiagBackend {
         linear_flops(n, d, spec)
             + (4.0 * d as f64 + 5.0) * super::blockdiag_masked_pairs(n, self.0.block, spec)
     }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Hybrid {
+            prefix: PrefixState::new(d, dv, self.0.chunk),
+            cache: KvCache::new(d, dv),
+        })
+    }
+    /// The decode session always applies the diagonal-tile correction
+    /// (a session has no final length for the batch forward's
+    /// tile-divides-N degrade check): step `t` matches the causal batch
+    /// forward's row `t` whenever the tile divides the decoded length.
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Hybrid { prefix, cache } = state else { wrong_state(Method::LlnDiag) };
+        prefix.push(&lln_features_row(k, self.0.beta), v);
+        let mut out = prefix.read(&lln_features_row(q, self.0.alpha));
+        let block = self.0.block.max(1);
+        // Same tile-window eviction as the BlockDiag session: the
+        // short-range half only ever reads the current diagonal tile.
+        if cache.len() > 0 && cache.len() % block == 0 {
+            cache.start_new_window();
+        }
+        cache.push(k, v);
+        let scale = 1.0 / (q.len() as f32).sqrt();
+        let short = blockdiag_decode_step(
+            q,
+            cache.keys(),
+            cache.values(),
+            cache.window_len(),
+            cache.d(),
+            cache.dv(),
+            scale,
+            block,
+        );
+        for (o, s) in out.iter_mut().zip(&short) {
+            *o = 0.5 * (*o + s);
+        }
+        out
+    }
 }
 
 struct EluBackend(BackendParams);
@@ -314,6 +428,14 @@ impl AttentionBackend for EluBackend {
         let df = d as f64;
         (spec.key_limit(n) + n) as f64 * (2.0 * df * df + 2.0 * df)
     }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Prefix(PrefixState::new(d, dv, self.0.chunk)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Prefix(prefix) = state else { wrong_state(Method::Elu) };
+        prefix.push(&elu_features_row(k), v);
+        prefix.read(&elu_features_row(q))
+    }
 }
 
 struct ReluBackend(BackendParams);
@@ -333,6 +455,15 @@ impl AttentionBackend for ReluBackend {
     fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
         let df = d as f64;
         (spec.key_limit(n) + n) as f64 * (2.0 * df * df + 2.0 * df)
+    }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Prefix(PrefixState::new(d, dv, self.0.chunk)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Prefix(prefix) = state else { wrong_state(Method::Relu) };
+        let relu = |x: &[f32]| x.iter().map(|&v| v.max(0.0)).collect::<Vec<f32>>();
+        prefix.push(&relu(k), v);
+        prefix.read(&relu(q))
     }
 }
 
@@ -355,6 +486,22 @@ impl AttentionBackend for QuadraticBackend {
     }
     fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
         (4.0 * d as f64 + 4.0) * spec.masked_pairs(n, n)
+    }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Cache(KvCache::new(d, dv)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Cache(cache) = state else { wrong_state(Method::Quadratic) };
+        cache.push(k, v);
+        fused_quadratic_decode_step(
+            q,
+            cache.keys(),
+            cache.values(),
+            cache.len(),
+            cache.d(),
+            cache.dv(),
+            self.0.tile,
+        )
     }
 }
 
@@ -412,6 +559,23 @@ impl AttentionBackend for PerformerBackend {
         // read-back over every query row.
         (nf + kl) * df * m + kl * (2.0 * m * df + 3.0 * m) + nf * (2.0 * m * df + 3.0 * m)
     }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        let m = self.proj(d).cols();
+        Ok(DecodeState::Prefix(PrefixState::new(m, dv, self.p.chunk)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Prefix(prefix) = state else { wrong_state(Method::Performer) };
+        let proj = self.proj(q.len());
+        // The FAVOR+ lift needs the projection matmul; per-row results
+        // are FP-identical to the batch feature map's rows.
+        let lift = |x: &[f32]| {
+            performer_features(&Mat::from_vec(1, x.len(), x.to_vec()), proj.as_ref())
+                .data()
+                .to_vec()
+        };
+        prefix.push(&lift(k), v);
+        prefix.read(&lift(q))
+    }
 }
 
 struct NystromBackend(BackendParams);
@@ -447,6 +611,31 @@ impl AttentionBackend for BlockDiagBackend {
     }
     fn flops_model(&self, n: usize, d: usize, spec: &AttnSpec) -> f64 {
         (4.0 * d as f64 + 5.0) * super::blockdiag_masked_pairs(n, self.0.block, spec)
+    }
+    fn begin_decode(&self, d: usize, dv: usize) -> Result<DecodeState, String> {
+        Ok(DecodeState::Cache(KvCache::new(d, dv)))
+    }
+    fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let DecodeState::Cache(cache) = state else { wrong_state(Method::BlockDiag) };
+        let block = self.0.block.max(1);
+        // A token whose global index starts a new diagonal tile never
+        // reads the previous tile's rows again: evict them so the
+        // resident cache stays bounded by the tile window.
+        if cache.len() > 0 && cache.len() % block == 0 {
+            cache.start_new_window();
+        }
+        cache.push(k, v);
+        let scale = 1.0 / (q.len() as f32).sqrt();
+        blockdiag_decode_step(
+            q,
+            cache.keys(),
+            cache.values(),
+            cache.window_len(),
+            cache.d(),
+            cache.dv(),
+            scale,
+            block,
+        )
     }
 }
 
@@ -691,6 +880,27 @@ mod tests {
         let out = bk.forward(&q, &k, &v, &FULL);
         let err = out.max_abs_diff(&p.matmul(&v));
         assert!(err < 1e-3, "degraded forward vs matrix route: {err}");
+    }
+
+    #[test]
+    fn blockdiag_decode_cache_is_bounded_by_the_tile_window() {
+        // The decode session must match the causal batch forward AND
+        // hold at most one diagonal tile of K/V rows at any time
+        // (completed tiles are never read again).
+        let (q, k, v) = probe(96, 16, 21);
+        let bk = backend_for(Method::BlockDiag, BackendParams { block: 16, ..Default::default() });
+        let full = bk.forward(&q, &k, &v, &AttnSpec::CAUSAL);
+        let mut st = bk.begin_decode(16, 16).unwrap();
+        let mut max_bytes = 0usize;
+        for i in 0..96 {
+            let row = bk.decode_step(&mut st, q.row(i), k.row(i), v.row(i));
+            let err =
+                row.iter().zip(full.row(i)).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(err < 1e-4, "step {i}: {err}");
+            max_bytes = max_bytes.max(st.state_bytes());
+        }
+        assert_eq!(st.len(), 96, "eviction must not rewind the session length");
+        assert!(max_bytes <= 2 * 16 * 16 * 4, "tile window leaked: {max_bytes} bytes");
     }
 
     #[test]

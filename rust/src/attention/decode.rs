@@ -1,0 +1,342 @@
+//! Incremental decode state: stateful O(1)-per-token causal attention.
+//!
+//! A batch causal forward pays the whole prefix for every row; a decode
+//! session carries the prefix *state* across calls so token `t` costs
+//! only its own step.  Two state shapes cover every maskable method:
+//!
+//! * [`KvCache`] — the appended K/V rows (Softmax / Quadratic /
+//!   BlockDiag).  Per-token step cost grows with the prefix (O(t·d)),
+//!   state is 2·t·d floats.
+//! * [`PrefixState`] — the running `Σ φ(k) vᵀ` / `Σ φ(k)` recurrence of
+//!   the linear class (LLN / ELU / ReLU / Performer).  Per-token step
+//!   cost and state are O(m·dv) — *independent of the prefix length*,
+//!   the paper's constant-state decode story.
+//!
+//! [`DecodeState`] wraps both (plus the LLN+Diag hybrid) behind the
+//! [`AttentionBackend::begin_decode`](super::AttentionBackend::begin_decode)
+//! / [`decode_step`](super::AttentionBackend::decode_step) entry points.
+//!
+//! `PrefixState` replicates the *chunk-carry* structure of
+//! [`linear_attention_causal`](super::kernels::linear_attention_causal)
+//! — completed chunks fold into a carry, the live chunk accumulates on
+//! top — so stepping a session token-by-token is **bitwise identical**
+//! to the batch kernel's rows for the same `chunk` parameter (the
+//! property suite pins this).
+
+use super::kernels::accumulate_state;
+
+const EPS: f32 = 1e-6;
+
+/// Appended K/V rows — the decode state of the exact quadratic-cost
+/// methods.  Rows append; the incremental fused-softmax / quadratic /
+/// block-diagonal step kernels stream them back per token.  Methods
+/// that only ever re-read a bounded suffix (BlockDiag's diagonal tile)
+/// call [`start_new_window`](Self::start_new_window) at tile
+/// boundaries, which evicts the dead prefix and keeps the resident
+/// state O(window) instead of O(t).
+pub struct KvCache {
+    d: usize,
+    dv: usize,
+    /// Total tokens ever appended (the session length).
+    len: usize,
+    /// Tokens evicted from the front; the buffers hold rows
+    /// `base..len`.
+    base: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(d: usize, dv: usize) -> Self {
+        Self { d, dv, len: 0, base: 0, k: Vec::new(), v: Vec::new() }
+    }
+
+    /// Appended token count (total, including evicted rows).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Key head dim.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Value dim.
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    /// Rows currently resident (the live window).
+    pub fn window_len(&self) -> usize {
+        self.len - self.base
+    }
+
+    /// Append one token's key/value rows.
+    pub fn push(&mut self, krow: &[f32], vrow: &[f32]) {
+        assert_eq!(krow.len(), self.d, "key row dim mismatch");
+        assert_eq!(vrow.len(), self.dv, "value row dim mismatch");
+        self.k.extend_from_slice(krow);
+        self.v.extend_from_slice(vrow);
+        self.len += 1;
+    }
+
+    /// Evict every resident row (they will never be read again): the
+    /// next pushes start a fresh window.  Buffer capacity is retained,
+    /// so a windowed cache settles at O(window) memory with no realloc
+    /// churn.
+    pub fn start_new_window(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.base = self.len;
+    }
+
+    /// The resident key rows, row-major (`window_len() * d` — rows
+    /// `base..len` of the sequence).
+    pub fn keys(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// The resident value rows, row-major (`window_len() * dv`).
+    pub fn values(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Resident state bytes: linear in the decoded length for the
+    /// full-prefix methods, bounded by the window for BlockDiag.
+    pub fn state_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// The linear-class running prefix state
+///
+/// ```text
+///   S_t = Σ_{j <= t} φ(k_j) v_jᵀ   (m × dv),   z_t = Σ_{j <= t} φ(k_j)
+/// ```
+///
+/// held in the same chunk-carry structure as the batch kernel
+/// [`linear_attention_causal`](super::kernels::linear_attention_causal):
+/// `carry` is the element-wise sum of completed chunk partials, `part`
+/// the live chunk's partial (accumulated from zero), and `state` the
+/// carry with the live chunk's rows replayed on top — exactly phase 2 /
+/// phase 3 of the batch kernel, so N [`push`](Self::push) +
+/// [`read`](Self::read) calls reproduce the batch rows bitwise for the
+/// same `chunk`.
+pub struct PrefixState {
+    m: usize,
+    dv: usize,
+    chunk: usize,
+    len: usize,
+    carry_kv: Vec<f32>,
+    carry_z: Vec<f32>,
+    part_kv: Vec<f32>,
+    part_z: Vec<f32>,
+    state_kv: Vec<f32>,
+    state_z: Vec<f32>,
+}
+
+impl PrefixState {
+    /// `m` feature dim, `dv` value dim, `chunk` the carry granularity
+    /// (0 = the batch kernel's default of 128).
+    pub fn new(m: usize, dv: usize, chunk: usize) -> Self {
+        let chunk = if chunk == 0 { 128 } else { chunk };
+        Self {
+            m,
+            dv,
+            chunk,
+            len: 0,
+            carry_kv: vec![0.0; m * dv],
+            carry_z: vec![0.0; m],
+            part_kv: vec![0.0; m * dv],
+            part_z: vec![0.0; m],
+            state_kv: vec![0.0; m * dv],
+            state_z: vec![0.0; m],
+        }
+    }
+
+    /// Appended token count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Feature dim.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Value dim.
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    /// Fold one token's `φ(k)` / value rows into the running state.
+    pub fn push(&mut self, phi_k: &[f32], vrow: &[f32]) {
+        assert_eq!(phi_k.len(), self.m, "feature row dim mismatch");
+        assert_eq!(vrow.len(), self.dv, "value row dim mismatch");
+        if self.len > 0 && self.len % self.chunk == 0 {
+            // Chunk boundary — the batch kernel's phase 2: the finished
+            // chunk's partial folds into the carry element-wise, and the
+            // new chunk replays from a fresh copy of that carry.
+            for (c, p) in self.carry_kv.iter_mut().zip(&self.part_kv) {
+                *c += *p;
+            }
+            for (c, p) in self.carry_z.iter_mut().zip(&self.part_z) {
+                *c += *p;
+            }
+            self.part_kv.fill(0.0);
+            self.part_z.fill(0.0);
+            self.state_kv.copy_from_slice(&self.carry_kv);
+            self.state_z.copy_from_slice(&self.carry_z);
+        }
+        accumulate_state(&mut self.part_kv, &mut self.part_z, phi_k, vrow, self.dv);
+        accumulate_state(&mut self.state_kv, &mut self.state_z, phi_k, vrow, self.dv);
+        self.len += 1;
+    }
+
+    /// Read the current token's output: `φ(q)ᵀ S / (φ(q)·z + ε)` — the
+    /// batch kernel's phase-3 read-back, in the same FP order.
+    pub fn read(&self, phi_q: &[f32]) -> Vec<f32> {
+        assert_eq!(phi_q.len(), self.m, "query feature row dim mismatch");
+        let mut out = vec![0.0f32; self.dv];
+        let mut den = 0.0f32;
+        for (f, &qf) in phi_q.iter().enumerate() {
+            den += qf * self.state_z[f];
+            if qf != 0.0 {
+                let krow = &self.state_kv[f * self.dv..(f + 1) * self.dv];
+                for (o, &kvv) in out.iter_mut().zip(krow) {
+                    *o += qf * kvv;
+                }
+            }
+        }
+        let inv = 1.0 / (den + EPS);
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+        out
+    }
+
+    /// Resident state bytes — constant in the decoded length (the
+    /// O(m·dv) story): three (kv, z) buffers.
+    pub fn state_bytes(&self) -> usize {
+        3 * (self.m * self.dv + self.m) * std::mem::size_of::<f32>()
+    }
+}
+
+/// One decode session's attention state, per method class.  Built by
+/// [`AttentionBackend::begin_decode`](super::AttentionBackend::begin_decode)
+/// and advanced one token at a time by
+/// [`AttentionBackend::decode_step`](super::AttentionBackend::decode_step).
+pub enum DecodeState {
+    /// Appended K/V rows (Softmax / Quadratic / BlockDiag).
+    Cache(KvCache),
+    /// Running `Σ φ(k)vᵀ` / `Σ φ(k)` prefix state (LLN / ELU / ReLU /
+    /// Performer).
+    Prefix(PrefixState),
+    /// LLN+Diag: prefix state for the long-range half plus a K/V cache
+    /// for the diagonal-tile softmax half.
+    Hybrid { prefix: PrefixState, cache: KvCache },
+}
+
+impl DecodeState {
+    /// Tokens decoded so far.
+    pub fn len(&self) -> usize {
+        match self {
+            DecodeState::Cache(c) => c.len(),
+            DecodeState::Prefix(p) => p.len(),
+            DecodeState::Hybrid { prefix, .. } => prefix.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident state bytes: O(t·d) for the cache class, O(m·dv)
+    /// constant for the prefix class (see docs/CONFIG.md for the
+    /// per-method formulas).
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            DecodeState::Cache(c) => c.state_bytes(),
+            DecodeState::Prefix(p) => p.state_bytes(),
+            DecodeState::Hybrid { prefix, cache } => prefix.state_bytes() + cache.state_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_cache_appends_rows() {
+        let mut c = KvCache::new(3, 2);
+        assert!(c.is_empty());
+        c.push(&[1.0, 2.0, 3.0], &[4.0, 5.0]);
+        c.push(&[6.0, 7.0, 8.0], &[9.0, 10.0]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.keys(), &[1.0, 2.0, 3.0, 6.0, 7.0, 8.0]);
+        assert_eq!(c.values(), &[4.0, 5.0, 9.0, 10.0]);
+        assert_eq!(c.state_bytes(), (6 + 4) * 4);
+    }
+
+    #[test]
+    fn prefix_state_is_constant_size() {
+        let mut p = PrefixState::new(4, 3, 2);
+        let bytes0 = p.state_bytes();
+        for i in 0..9 {
+            let f = i as f32;
+            p.push(&[0.1 + f, 0.2, 0.3, 0.4], &[1.0, f, -f]);
+        }
+        assert_eq!(p.len(), 9);
+        assert_eq!(p.state_bytes(), bytes0, "prefix state must not grow with length");
+        let out = p.read(&[1.0, 0.0, 0.5, 0.0]);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prefix_state_matches_direct_sum() {
+        // Irrespective of the chunk carry structure, the state read must
+        // equal the naive Σ φ(k)vᵀ / Σ φ(k) attention to f32 tolerance.
+        let m = 5;
+        let dv = 4;
+        let n = 23;
+        let mut rng = crate::rng::Pcg64::seed(9);
+        let phi_k = crate::tensor::Mat::gaussian(n, m, 0.5, &mut rng).map(|x| x.abs());
+        let v = crate::tensor::Mat::gaussian(n, dv, 1.0, &mut rng);
+        let phi_q = crate::tensor::Mat::gaussian(1, m, 0.5, &mut rng).map(|x| x.abs());
+        for chunk in [1usize, 3, 7, 0] {
+            let mut st = PrefixState::new(m, dv, chunk);
+            for i in 0..n {
+                st.push(phi_k.row(i), v.row(i));
+            }
+            let got = st.read(phi_q.row(0));
+            // Naive reference.
+            let mut num = vec![0.0f64; dv];
+            let mut den = 0.0f64;
+            for i in 0..n {
+                let w: f64 = phi_q
+                    .row(0)
+                    .iter()
+                    .zip(phi_k.row(i))
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                den += w;
+                for (o, &vv) in num.iter_mut().zip(v.row(i)) {
+                    *o += w * vv as f64;
+                }
+            }
+            for (g, want) in got.iter().zip(num.iter().map(|x| x / (den + EPS as f64))) {
+                assert!((*g as f64 - want).abs() < 1e-4, "chunk={chunk}: {g} vs {want}");
+            }
+        }
+    }
+}

@@ -12,7 +12,7 @@ use crate::tensor::Mat;
 const EPS: f32 = 1e-6;
 
 #[inline]
-fn clamped_exp(x: f32) -> f32 {
+pub(crate) fn clamped_exp(x: f32) -> f32 {
     x.clamp(-EXP_CLAMP, EXP_CLAMP).exp()
 }
 
@@ -495,6 +495,156 @@ fn fused_quadratic_rows(
 }
 
 // ---------------------------------------------------------------------------
+// Incremental decode steps (stateful O(1)-per-token causal attention)
+// ---------------------------------------------------------------------------
+
+/// One incremental fused-softmax decode step: softmax attention of a
+/// single query row over the `len` cached key/value rows, streamed in
+/// `tile`-row tiles with the same online row-max/row-sum recurrence
+/// (and the same [`micro::matmul_t_block`](crate::tensor::micro) score
+/// microkernel) as [`fused_softmax_attention_spec`] — this IS the
+/// causal forward's row `len - 1` when the cache holds keys `0..len`,
+/// computed against the cache instead of re-streaming the prefix per
+/// token.  O(len·d) time, O(tile + dv) scratch.
+pub fn fused_softmax_decode_step(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    len: usize,
+    d: usize,
+    dv: usize,
+    scale: f32,
+    tile: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), d, "query row dim mismatch");
+    assert!(keys.len() >= len * d && values.len() >= len * dv, "cache shorter than len");
+    let mut out = vec![0.0f32; dv];
+    if len == 0 || dv == 0 {
+        return out;
+    }
+    let tile = resolve_tile(tile).min(len);
+    let mut scores = vec![0.0f32; tile];
+    let mut row_max = f32::NEG_INFINITY;
+    let mut row_sum = 0.0f32;
+    let mut t0 = 0;
+    while t0 < len {
+        let tn = tile.min(len - t0);
+        let ktile = &keys[t0 * d..(t0 + tn) * d];
+        crate::tensor::micro::matmul_t_block(q, ktile, &mut scores[..tn], 1, d, tn);
+        let mut tile_max = f32::NEG_INFINITY;
+        for s in scores[..tn].iter_mut() {
+            *s *= scale;
+            tile_max = tile_max.max(*s);
+        }
+        let m_new = row_max.max(tile_max);
+        let correction = (row_max - m_new).exp();
+        if correction != 1.0 {
+            row_sum *= correction;
+            for a in out.iter_mut() {
+                *a *= correction;
+            }
+        }
+        let mut tile_sum = 0.0f32;
+        for (j, &s) in scores[..tn].iter().enumerate() {
+            let p = (s - m_new).exp();
+            tile_sum += p;
+            let vrow = &values[(t0 + j) * dv..(t0 + j + 1) * dv];
+            for (a, &vv) in out.iter_mut().zip(vrow) {
+                *a += p * vv;
+            }
+        }
+        row_sum += tile_sum;
+        row_max = m_new;
+        t0 += tn;
+    }
+    // len >= 1 puts the max score's exp(0) = 1 in the sum: no eps.
+    let inv = 1.0 / row_sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// One incremental quadratic-kernel decode step: κ(q,k) = (q·k)²
+/// weights over the cached rows with the same numerator/denominator
+/// accumulation (and EPS) as [`fused_quadratic_attention_spec`].
+pub fn fused_quadratic_decode_step(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    len: usize,
+    d: usize,
+    dv: usize,
+    tile: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), d, "query row dim mismatch");
+    assert!(keys.len() >= len * d && values.len() >= len * dv, "cache shorter than len");
+    let mut num = vec![0.0f32; dv];
+    if len == 0 || dv == 0 {
+        return num;
+    }
+    let tile = resolve_tile(tile).min(len);
+    let mut scores = vec![0.0f32; tile];
+    let mut den = 0.0f32;
+    let mut t0 = 0;
+    while t0 < len {
+        let tn = tile.min(len - t0);
+        let ktile = &keys[t0 * d..(t0 + tn) * d];
+        crate::tensor::micro::matmul_t_block(q, ktile, &mut scores[..tn], 1, d, tn);
+        for (j, &s) in scores[..tn].iter().enumerate() {
+            let w = s * s;
+            den += w;
+            let vrow = &values[(t0 + j) * dv..(t0 + j + 1) * dv];
+            for (o, &vv) in num.iter_mut().zip(vrow) {
+                *o += w * vv;
+            }
+        }
+        t0 += tn;
+    }
+    let inv = 1.0 / (den + EPS);
+    for o in num.iter_mut() {
+        *o *= inv;
+    }
+    num
+}
+
+/// One block-diagonal decode step: the new token (global index
+/// `len - 1`) attends its own diagonal `block`-tile's causal prefix —
+/// cached keys `[tile_start, len)` where `tile_start = ((len-1)/block)
+/// * block` — through the same [`masked_softmax_row`] the batch tiles
+/// use.  O(block·d) per token regardless of the decoded length.
+pub fn blockdiag_decode_step(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    len: usize,
+    d: usize,
+    dv: usize,
+    scale: f32,
+    block: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), d, "query row dim mismatch");
+    assert!(keys.len() >= len * d && values.len() >= len * dv, "cache shorter than len");
+    let mut out = vec![0.0f32; dv];
+    if len == 0 || dv == 0 {
+        return out;
+    }
+    let b0 = ((len - 1) / block.max(1)) * block.max(1);
+    let span = len - b0;
+    let mut scores = vec![0.0f32; span];
+    let ktile = &keys[b0 * d..(b0 + span) * d];
+    crate::tensor::micro::matmul_t_block(q, ktile, &mut scores, 1, d, span);
+    masked_softmax_row(&mut scores, span, scale);
+    for (j, &p) in scores.iter().enumerate() {
+        let vrow = &values[(b0 + j) * dv..(b0 + j + 1) * dv];
+        for (o, &vv) in out.iter_mut().zip(vrow) {
+            *o += p * vv;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Generic linearized attention (paper eq. 4)
 // ---------------------------------------------------------------------------
 
@@ -707,10 +857,12 @@ pub fn linear_attention_causal(
 }
 
 /// Fold one key/value row into a running (Σ φ(k) vᵀ, Σ φ(k)) state —
-/// shared by both phases of [`linear_attention_causal`] so their
-/// per-chunk summation orders are identical.
+/// shared by both phases of [`linear_attention_causal`] *and* by the
+/// decode-session [`PrefixState`](super::decode::PrefixState) so their
+/// per-chunk summation orders are identical (the bitwise
+/// decode-vs-batch parity depends on this).
 #[inline]
-fn accumulate_state(kv: &mut [f32], z: &mut [f32], krow: &[f32], vrow: &[f32], dv: usize) {
+pub(crate) fn accumulate_state(kv: &mut [f32], z: &mut [f32], krow: &[f32], vrow: &[f32], dv: usize) {
     for (f, &kf) in krow.iter().enumerate() {
         z[f] += kf;
         if kf != 0.0 {

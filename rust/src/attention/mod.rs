@@ -7,10 +7,12 @@
 //! kernels in integration tests.
 
 pub mod backend;
+pub mod decode;
 pub mod kernels;
 pub mod moment_matching;
 
 pub use backend::{all_backends, backend_for, default_backend, AttentionBackend, BackendParams};
+pub use decode::{DecodeState, KvCache, PrefixState};
 pub use kernels::*;
 pub use moment_matching::MomentMatcher;
 

@@ -172,6 +172,12 @@ const SPEEDUP_PAIRS: &[(&str, &str)] = &[
     ("softmax_fused_causal", "softmax_masked_dense_causal"),
     ("softmax_fused_causal", "softmax_fused"),
     ("matmul_t_blocked", "matmul_t_pr1"),
+    // Amortized decode-vs-prefill: the `*_decode_step` rows are ns per
+    // *token* while the causal rows are ns per *prefill*, so the ratio
+    // is exactly what a decode session saves over the naive
+    // re-run-the-whole-causal-forward-per-new-token serving loop.
+    ("softmax_decode_step", "softmax_fused_causal"),
+    ("lln_decode_step", "lln_causal"),
 ];
 
 /// The PR-1 scalar-dot baseline is only timed up to this n — it is the
@@ -367,6 +373,47 @@ pub fn run_kernel_bench(
             .clone();
         push(&mut records, "lln_causal", n, &r);
 
+        // Decode-session rows, recorded as amortized ns per *token*
+        // (one iteration steps a fresh session across all n tokens).
+        // The softmax KV-cache step pays O(t·d) at prefix t, so its
+        // per-token cost grows ~linearly with n (capped like the other
+        // quadratic baselines); the linear prefix-state step is O(d²)
+        // flat in n — the O(1)/token decode story made measurable.
+        let push_per_token =
+            |records: &mut Vec<KernelRecord>, name: &'static str, n: usize, r: &BenchResult| {
+                records.push(KernelRecord {
+                    name,
+                    n,
+                    mean_ns: r.mean() * 1e9 / n as f64,
+                    p50_ns: r.percentile(50.0) * 1e9 / n as f64,
+                    iters: r.samples.len(),
+                });
+            };
+        if n <= PR1_BASELINE_MAX_N {
+            let r = b
+                .run(&format!("softmax_decode_step n={n} (x{n} tokens)"), n as f64, || {
+                    let mut st = fused.begin_decode(d, d).expect("softmax decode session");
+                    let mut last = Vec::new();
+                    for i in 0..n {
+                        last = fused.decode_step(&mut st, q.row(i), k.row(i), v.row(i));
+                    }
+                    last
+                })
+                .clone();
+            push_per_token(&mut records, "softmax_decode_step", n, &r);
+        }
+        let r = b
+            .run(&format!("lln_decode_step n={n} (x{n} tokens)"), n as f64, || {
+                let mut st = lln.begin_decode(d, d).expect("lln decode session");
+                let mut last = Vec::new();
+                for i in 0..n {
+                    last = lln.decode_step(&mut st, q.row(i), k.row(i), v.row(i));
+                }
+                last
+            })
+            .clone();
+        push_per_token(&mut records, "lln_decode_step", n, &r);
+
         let diag = backend_for(Method::LlnDiag, BackendParams { alpha: 2.2, beta: 2.2, ..params });
         let r = b
             .run(&format!("lln_diag n={n}"), 1.0, || diag.forward(&q, &k, &v, &FULL))
@@ -466,6 +513,8 @@ mod tests {
             "quadratic_fused",
             "lln_streamed",
             "lln_causal",
+            "lln_decode_step",
+            "softmax_decode_step",
             "lln_diag",
             "matmul_t_pr1",
             "matmul_t_blocked",
@@ -479,5 +528,8 @@ mod tests {
         assert!(report
             .speedup("softmax_fused_causal", "softmax_masked_dense_causal", 64)
             .is_some());
+        // The amortized decode-vs-prefill pairs must be derivable too.
+        assert!(report.speedup("softmax_decode_step", "softmax_fused_causal", 64).is_some());
+        assert!(report.speedup("lln_decode_step", "lln_causal", 64).is_some());
     }
 }

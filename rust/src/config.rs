@@ -250,8 +250,20 @@ pub struct ServeConfig {
     /// engine AND its own resident parameter copy — the xla wrappers
     /// are thread-confined, so literals cannot be shared across
     /// workers — which is why the default stays 1: scaling this up
-    /// multiplies resident-parameter memory per bucket.
+    /// multiplies resident-parameter memory per bucket.  With the
+    /// autoscaling band unset this is the *fixed* count (the
+    /// historical behavior); with `min_workers`/`max_workers` set it
+    /// is only the `min_workers` fallback.
     pub workers: usize,
+    /// Autoscaling floor: workers each bucket always keeps alive.
+    /// `0` = use `workers` (the historical fixed count).
+    pub min_workers: usize,
+    /// Autoscaling ceiling: the per-bucket scaler spawns extra workers
+    /// from queue depth (one per `max_batch` of backlog — see
+    /// [`desired_workers`](crate::coordinator::desired_workers)) up to
+    /// this; idle extras retire back down to the floor.  `0` = no
+    /// autoscaling (the band collapses to the floor).
+    pub max_workers: usize,
     pub buckets: Vec<usize>,
     /// Opt-in: when PJRT artifacts are unavailable, serve through the
     /// native [`AttentionBackend`](crate::attention::AttentionBackend)
@@ -276,6 +288,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             batch_timeout_ms: 5,
             workers: 1,
+            min_workers: 0,
+            max_workers: 0,
             buckets: vec![128, 512],
             native_fallback: false,
             force_native: false,
@@ -297,11 +311,22 @@ impl ServeConfig {
             max_batch: t.usize_or("serve.max_batch", d.max_batch),
             batch_timeout_ms: t.usize_or("serve.batch_timeout_ms", d.batch_timeout_ms as usize) as u64,
             workers: t.usize_or("serve.workers", d.workers),
+            min_workers: t.usize_or("serve.min_workers", d.min_workers),
+            max_workers: t.usize_or("serve.max_workers", d.max_workers),
             buckets,
             native_fallback: t.bool_or("serve.native_fallback", d.native_fallback),
             force_native: t.bool_or("serve.force_native", d.force_native),
             compute: ComputeConfig::from_table(t),
         }
+    }
+
+    /// The resolved per-bucket autoscaling band `(min, max)`:
+    /// `min_workers` falls back to the historical `workers` count, and
+    /// the ceiling is never below the floor.  `min == max` means a
+    /// fixed worker pool (no scaler thread).
+    pub fn worker_band(&self) -> (usize, usize) {
+        let min = if self.min_workers == 0 { self.workers.max(1) } else { self.min_workers };
+        (min, self.max_workers.max(min))
     }
 }
 
@@ -453,6 +478,26 @@ method = lln_diag
         assert!(!ServeConfig::default().force_native);
         let t = ConfigTable::parse("[serve]\nforce_native = true").unwrap();
         assert!(ServeConfig::from_table(&t).force_native);
+    }
+
+    #[test]
+    fn serve_worker_band_resolution() {
+        // Defaults: fixed single worker (the historical behavior).
+        assert_eq!(ServeConfig::default().worker_band(), (1, 1));
+        // Legacy `workers` count stays the fixed pool when no band set.
+        let legacy = ServeConfig { workers: 3, ..Default::default() };
+        assert_eq!(legacy.worker_band(), (3, 3));
+        // Explicit band parses and resolves.
+        let t = ConfigTable::parse("[serve]\nmin_workers = 2\nmax_workers = 6").unwrap();
+        let sc = ServeConfig::from_table(&t);
+        assert_eq!((sc.min_workers, sc.max_workers), (2, 6));
+        assert_eq!(sc.worker_band(), (2, 6));
+        // Ceiling never below the floor.
+        let inverted = ServeConfig { min_workers: 4, max_workers: 2, ..Default::default() };
+        assert_eq!(inverted.worker_band(), (4, 4));
+        // max_workers alone scales up from the `workers` floor.
+        let up = ServeConfig { workers: 1, max_workers: 4, ..Default::default() };
+        assert_eq!(up.worker_band(), (1, 4));
     }
 
     #[test]

@@ -42,6 +42,23 @@ pub fn should_fire(queued: usize, max_batch: usize, oldest_wait_ms: f64, timeout
     queued >= max_batch || oldest_wait_ms >= timeout_ms || draining
 }
 
+/// The per-bucket autoscaling policy: how many workers a bucket wants
+/// for `queued` items of backlog — one worker per `max_batch` of queued
+/// work, clamped to the `[min_workers, max_workers]` band.
+///
+/// Invariants (property-tested below): always inside the band, monotone
+/// non-decreasing in `queued`, and exactly `min` on an empty queue.
+pub fn desired_workers(
+    queued: usize,
+    max_batch: usize,
+    min_workers: usize,
+    max_workers: usize,
+) -> usize {
+    let min = min_workers.max(1);
+    let max = max_workers.max(min);
+    queued.div_ceil(max_batch.max(1)).clamp(min, max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +147,44 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn desired_workers_stays_in_band_and_is_monotone() {
+        check(512, |g| {
+            let max_batch = g.usize_in(1, 16);
+            let min = g.usize_in(1, 4);
+            let max = min + g.usize_in(0, 6);
+            let queued = g.usize_in(0, 128);
+            let want = desired_workers(queued, max_batch, min, max);
+            prop_assert(want >= min && want <= max, format!("{want} outside [{min}, {max}]"))?;
+            prop_assert(
+                desired_workers(queued + 1, max_batch, min, max) >= want,
+                format!("not monotone at queued={queued}"),
+            )?;
+            prop_assert(
+                desired_workers(0, max_batch, min, max) == min,
+                "empty queue must idle at min",
+            )?;
+            // A backlog of w*max_batch wants at least min(w, max) workers.
+            let w = g.usize_in(1, 8);
+            prop_assert(
+                desired_workers(w * max_batch, max_batch, min, max) >= w.clamp(min, max).min(max),
+                format!("{w} full batches under-provisioned"),
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn desired_workers_degenerate_band() {
+        // min/max of 0 clamp to a sane single-worker band.
+        assert_eq!(desired_workers(100, 8, 0, 0), 1);
+        // max below min is lifted to min (config typo safety).
+        assert_eq!(desired_workers(100, 8, 3, 1), 3);
+        assert_eq!(desired_workers(0, 8, 2, 4), 2);
+        assert_eq!(desired_workers(9, 8, 1, 4), 2);
+        assert_eq!(desired_workers(1000, 8, 1, 4), 4);
     }
 
     #[test]

@@ -16,9 +16,9 @@ pub mod batcher;
 pub mod native;
 pub mod server;
 
-pub use batcher::{plan_batches, BatchPlan};
+pub use batcher::{desired_workers, plan_batches, BatchPlan};
 pub use native::NativeEncoder;
-pub use server::{Coordinator, ReqSpec, ServeStats};
+pub use server::{Coordinator, DecodeSession, ReqSpec, ServeStats};
 
 use crate::data::special;
 
@@ -39,7 +39,7 @@ pub struct Request {
     pub resp: std::sync::mpsc::Sender<Response>,
 }
 
-/// The reply for one request.
+/// The reply for one request (or one decode-session open/step).
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
@@ -48,6 +48,65 @@ pub struct Response {
     pub latency_ms: f64,
     /// Size of the batch this request rode in.
     pub batch_size: usize,
+}
+
+/// Ask a bucket worker to open an incremental decode session.  The
+/// worker validates its executor can decode (native path + maskable
+/// method), registers the session state, and replies — `Err` rides the
+/// same [`Response`] channel, so mask-incapable executors (PJRT
+/// artifacts, Nystrom/Linformer) reject opens loudly without panicking
+/// a worker thread.
+#[derive(Debug)]
+pub struct SessionOpen {
+    pub id: u64,
+    pub enqueued_at: std::time::Instant,
+    pub resp: std::sync::mpsc::Sender<Response>,
+}
+
+/// One token's decode step for an open session.  `pos` is the token's
+/// position (sessions replay strictly in order; the worker pool keeps
+/// steps of one session serialized even when several workers drain the
+/// same bucket queue).  The step's logits come back over `resp` — the
+/// streaming channel: [`DecodeSession::stream`] shares one sender
+/// across many steps so tokens arrive as they decode.
+#[derive(Debug)]
+pub struct SessionStep {
+    pub id: u64,
+    pub pos: usize,
+    pub token: i32,
+    pub enqueued_at: std::time::Instant,
+    pub resp: std::sync::mpsc::Sender<Response>,
+}
+
+/// Everything a bucket queue carries: prefill (classification) requests
+/// and decode-session traffic share the batcher, so one drained batch
+/// can mix both (`NativeEncoder` executes the prefill members batched
+/// and the decode steps statefully).  Session *close* does not ride the
+/// queue: [`DecodeSession`] removes its slot from the bucket registry
+/// directly, so a full queue can never leak server-side decode state.
+#[derive(Debug)]
+pub enum Work {
+    Infer(Request),
+    Open(SessionOpen),
+    Step(SessionStep),
+}
+
+impl Work {
+    /// Admission time, for batch-timeout accounting.
+    pub fn enqueued_at(&self) -> std::time::Instant {
+        match self {
+            Work::Infer(r) => r.enqueued_at,
+            Work::Open(o) => o.enqueued_at,
+            Work::Step(s) => s.enqueued_at,
+        }
+    }
+
+    /// Session items bypass the batch-timeout wait: a decode step is
+    /// single-token, latency-bound work that should never idle behind
+    /// the prefill batcher's fill timer.
+    pub fn is_session_work(&self) -> bool {
+        !matches!(self, Work::Infer(_))
+    }
 }
 
 /// Pick the smallest bucket that fits `len`; None if it exceeds all.

@@ -11,7 +11,7 @@
 //! backpressure — with real attention compute, so the coordinator is
 //! testable and benchable in environments without artifacts.
 
-use crate::attention::{backend_for, AttentionBackend, AttnSpec, BackendParams, Method};
+use crate::attention::{backend_for, AttentionBackend, AttnSpec, BackendParams, DecodeState, Method};
 use crate::rng::Pcg64;
 use crate::tensor::Mat;
 
@@ -92,11 +92,18 @@ impl NativeEncoder {
         let n = tokens.len();
         let mut x = Mat::zeros(n, self.d_model);
         for (pos, &tok) in tokens.iter().enumerate() {
-            let stream = (tok as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.embed_seed;
-            let mut rng = Pcg64::new(stream, pos as u64);
-            rng.fill_gaussian(x.row_mut(pos), 0.0, 0.5);
+            self.embed_row_into(tok, pos, x.row_mut(pos));
         }
         x
+    }
+
+    /// One (token, position) embedding row — shared by the batch
+    /// [`embed`](Self::embed) and the decode step so an incrementally
+    /// decoded token sees bitwise the same embedding as a prefill row.
+    fn embed_row_into(&self, tok: i32, pos: usize, out: &mut [f32]) {
+        let stream = (tok as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.embed_seed;
+        let mut rng = Pcg64::new(stream, pos as u64);
+        rng.fill_gaussian(out, 0.0, 0.5);
     }
 
     /// Logits for one (bucket-padded) token sequence under the
@@ -144,6 +151,37 @@ impl NativeEncoder {
             *p *= inv;
         }
         self.head.matvec_t(&pooled)
+    }
+
+    /// Open an incremental decode session for this encoder's method.
+    /// `Err` (never a panic) when the method cannot honor the causal
+    /// mask — the coordinator surfaces this through the session-open
+    /// response.
+    pub fn begin_decode(&self) -> Result<DecodeState, String> {
+        self.backend.begin_decode(self.d_model, self.d_model)
+    }
+
+    /// One decode-session step: embed `token` at `pos`, advance the
+    /// attention state by one token (q = k = v = the embedding row,
+    /// matching [`infer_spec`](Self::infer_spec)'s batch construction),
+    /// and return the new token's logits — the head applied to its
+    /// attention output row (per-token, no pooling: the streaming
+    /// decode signal).
+    pub fn decode_step(&self, state: &mut DecodeState, pos: usize, token: i32) -> Vec<f32> {
+        let mut x = vec![0.0f32; self.d_model];
+        self.embed_row_into(token, pos, &mut x);
+        let out = self.backend.decode_step(state, &x, &x, &x);
+        self.head.matvec_t(&out)
+    }
+
+    /// Reference for the decode path: per-token logits of a full causal
+    /// batch forward over `tokens` (the head applied to every attention
+    /// output row).  `decode_step` over the same tokens must reproduce
+    /// these — bitwise for the linear prefix-state class.
+    pub fn decode_logits_reference(&self, tokens: &[i32]) -> Vec<Vec<f32>> {
+        let x = self.embed(tokens);
+        let out = self.backend.forward(&x, &x, &x, &AttnSpec::CAUSAL);
+        (0..out.rows()).map(|i| self.head.matvec_t(out.row(i))).collect()
     }
 }
 
@@ -260,6 +298,48 @@ mod tests {
             let logits = enc.infer_spec(&vec![7i32; 64], &spec);
             assert_eq!(logits.len(), 4, "{m:?}");
             assert!(logits.iter().all(|x| x.is_finite()), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn decode_steps_reproduce_the_causal_forward_logits() {
+        // Token-by-token decode through the encoder must match the
+        // causal batch forward's per-row logits — bitwise for the
+        // linear prefix-state class, kernel tolerance for the caches.
+        let cc = ComputeConfig::default();
+        let tokens: Vec<i32> = (0..48).map(|i| (i % 17) + 4).collect();
+        for m in [Method::Lln, Method::Elu, Method::Softmax, Method::BlockDiag] {
+            let enc = NativeEncoder::new(m, 16, 4, 48, 3, &cc);
+            let want = enc.decode_logits_reference(&tokens);
+            let mut state = enc.begin_decode().unwrap();
+            for (pos, &tok) in tokens.iter().enumerate() {
+                let got = enc.decode_step(&mut state, pos, tok);
+                if matches!(m, Method::Lln | Method::Elu) {
+                    assert_eq!(got, want[pos], "{m:?} step {pos} not bitwise");
+                } else {
+                    for (g, w) in got.iter().zip(&want[pos]) {
+                        assert!((g - w).abs() < 1e-4, "{m:?} step {pos}: {got:?} vs {:?}", want[pos]);
+                    }
+                }
+            }
+            assert_eq!(state.len(), tokens.len());
+        }
+    }
+
+    #[test]
+    fn unmaskable_encoder_rejects_decode_sessions_as_err() {
+        // begin_decode must be a clean Err (the session path never
+        // panics a worker), for both unmaskable methods.
+        let cc = ComputeConfig::default();
+        for m in [Method::Nystrom, Method::Linformer] {
+            let enc = NativeEncoder::new(m, 16, 4, 64, 3, &cc);
+            let err = enc.begin_decode().unwrap_err();
+            assert!(err.contains("causal"), "{m:?}: {err}");
+        }
+        // Maskable methods all open.
+        for m in Method::ALL.iter().filter(|m| m.supports_masking()) {
+            let enc = NativeEncoder::new(*m, 16, 4, 64, 3, &cc);
+            assert!(enc.begin_decode().is_ok(), "{m:?} must open a decode session");
         }
     }
 

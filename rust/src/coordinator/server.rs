@@ -4,8 +4,26 @@
 //! path (AOT artifacts) or the native [`AttentionBackend`] encoder
 //! ([`super::native`]) when artifacts/PJRT are unavailable — so the
 //! batching loop, stats, and backpressure behave identically on both.
+//!
+//! Beyond batch prefill, the coordinator runs **incremental decode
+//! sessions** ([`Coordinator::open_session`] → [`DecodeSession`]):
+//! token-by-token causal attention whose per-session state (KV cache or
+//! linear prefix state — see [`crate::attention::DecodeState`]) lives
+//! in a per-bucket registry shared by all of the bucket's workers, so
+//! concurrent sessions' single-token steps co-batch with prefill
+//! traffic through the same queues and stream their logits back over
+//! per-session channels.  Executors that cannot decode (PJRT artifacts
+//! are batch-prefill full-attention only; Nystrom/Linformer cannot be
+//! masked) reject session opens with an `Err` response — never a
+//! worker panic.
+//!
+//! Worker pools autoscale per bucket: `ServeConfig::worker_band()`
+//! gives a `[min, max]` band, a scaler thread spawns extra workers from
+//! queue depth ([`desired_workers`]), and idle extras retire back to
+//! the floor.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -13,13 +31,27 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
-use super::batcher::{plan_batches, should_fire};
+use super::batcher::{desired_workers, plan_batches, should_fire};
 use super::native::NativeEncoder;
-use super::{pad_to_bucket, pick_bucket, Request, Response};
-use crate::attention::Method;
+use super::{pad_to_bucket, pick_bucket, Request, Response, SessionOpen, SessionStep, Work};
+use crate::attention::{DecodeState, Method};
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, HostTensor, ParamStore};
 use crate::util::pool::{Channel, SendError};
+
+/// How long an idle surplus worker lingers before retiring back to the
+/// bucket's `min_workers` floor.
+const IDLE_RETIRE: Duration = Duration::from_millis(250);
+/// How long a decode step waits for its predecessor (another worker may
+/// still be executing the session's previous position) before erroring.
+const STEP_ORDER_TIMEOUT: Duration = Duration::from_secs(5);
+/// Latency samples kept for the percentile stats: a bounded window
+/// (old samples are overwritten round-robin) so a long-lived streaming
+/// server — one sample per decoded token — holds O(1) stats memory.
+const LATENCY_WINDOW: usize = 65_536;
+/// Backoff between scaler spawn attempts after a worker death, so a
+/// persistently failing executor cannot drive a spawn/die hot loop.
+const SPAWN_BACKOFF: Duration = Duration::from_millis(500);
 
 /// Rolling serving metrics (shared across workers).
 #[derive(Default)]
@@ -29,6 +61,13 @@ pub struct ServeStats {
     pub errors: u64,
     pub latencies_ms: Vec<f64>,
     pub batch_sizes: Vec<usize>,
+    /// Decode sessions successfully opened.
+    pub sessions_opened: u64,
+    /// Decode-session steps successfully served (also counted in
+    /// `completed` / `latencies_ms`).
+    pub decode_steps: u64,
+    /// Workers spawned by the per-bucket autoscaler beyond the floor.
+    pub workers_spawned: u64,
 }
 
 impl ServeStats {
@@ -46,6 +85,15 @@ impl ServeStats {
             crate::stats::percentile(&self.latencies_ms, 95.0)
         }
     }
+    /// Record one completion latency into the bounded sample window.
+    pub fn record_latency(&mut self, ms: f64) {
+        if self.latencies_ms.len() < LATENCY_WINDOW {
+            self.latencies_ms.push(ms);
+        } else {
+            self.latencies_ms[(self.completed as usize) % LATENCY_WINDOW] = ms;
+        }
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             0.0
@@ -55,57 +103,122 @@ impl ServeStats {
     }
 }
 
-/// The running coordinator: submit requests, read stats, shut down.
+/// One open decode session's server-side state: the attention state,
+/// the next expected position, and a poison marker so a failed step
+/// fails the session's tail loudly instead of silently decoding on a
+/// stale state.
+struct SessionSlot {
+    state: DecodeState,
+    pos: usize,
+    failed: Option<String>,
+}
+
+/// Per-bucket registry of open sessions.  Any worker of the bucket can
+/// step any session (native executors of a bucket are deterministic
+/// replicas), so the registry — not a worker — owns the state.
+type SessionMap = Arc<Mutex<HashMap<u64, Arc<Mutex<SessionSlot>>>>>;
+
+/// The running coordinator: submit requests, open decode sessions, read
+/// stats, shut down.
 pub struct Coordinator {
     cfg: ServeConfig,
-    queues: Vec<(usize, Channel<Request>)>, // (bucket_len, queue)
-    workers: Vec<JoinHandle<()>>,
+    queues: Vec<(usize, Channel<Work>)>, // (bucket_len, queue)
+    /// Per-bucket decode-session registries (shared with the bucket's
+    /// workers; session handles remove themselves here on close).
+    sessions: Vec<(usize, SessionMap)>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
     stats: Arc<Mutex<ServeStats>>,
     next_id: AtomicU64,
     draining: Arc<AtomicBool>,
     started_at: Instant,
 }
 
+/// Everything one worker thread needs; cheap to clone for dynamically
+/// scaled-up workers.
+#[derive(Clone)]
+struct WorkerCtx {
+    cfg: ServeConfig,
+    dir: std::path::PathBuf,
+    bucket: usize,
+    queue: Channel<Work>,
+    stats: Arc<Mutex<ServeStats>>,
+    draining: Arc<AtomicBool>,
+    sessions: SessionMap,
+    /// Live worker count of this bucket (autoscaler reads, retiring
+    /// workers CAS-decrement).
+    live: Arc<AtomicUsize>,
+    /// Workers of this bucket that died abnormally (executor
+    /// construction/runtime failure) — the scaler backs off on growth.
+    deaths: Arc<AtomicUsize>,
+    min_workers: usize,
+}
+
 impl Coordinator {
-    /// Spawn `cfg.workers` workers per bucket.  Each worker owns its
-    /// executor — a PJRT engine with the bucket's executables + resident
-    /// params, or the native-backend encoder fallback — and all workers
-    /// of a bucket drain the same MPMC queue.
+    /// Spawn each bucket's worker-pool floor (`worker_band().0`) and,
+    /// when the band allows scaling, a per-bucket scaler thread that
+    /// grows the pool from queue depth up to the ceiling.  Each worker
+    /// owns its executor — a PJRT engine with the bucket's executables
+    /// + resident params, or the native-backend encoder fallback — and
+    /// all workers of a bucket drain the same MPMC queue and share the
+    /// bucket's decode-session registry.
     pub fn start(cfg: ServeConfig, artifacts: &std::path::Path) -> Result<Self> {
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let draining = Arc::new(AtomicBool::new(false));
+        let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let (min_w, max_w) = cfg.worker_band();
         let mut queues = Vec::new();
-        let mut workers = Vec::new();
+        let mut session_maps: Vec<(usize, SessionMap)> = Vec::new();
         for &bucket in &cfg.buckets {
-            let q: Channel<Request> = Channel::bounded(cfg.queue_capacity);
+            let q: Channel<Work> = Channel::bounded(cfg.queue_capacity);
             queues.push((bucket, q.clone()));
-            for w in 0..cfg.workers.max(1) {
-                let cfgc = cfg.clone();
-                let dir = artifacts.to_path_buf();
-                let statsc = Arc::clone(&stats);
-                let drainc = Arc::clone(&draining);
-                let qc = q.clone();
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(format!("lln-worker-n{bucket}-{w}"))
-                        .spawn(move || {
-                            if let Err(e) = worker_loop(cfgc, dir, bucket, qc, statsc, drainc) {
-                                eprintln!("worker n{bucket}-{w} died: {e:#}");
-                            }
-                        })
-                        .expect("spawn worker"),
-                );
+            let bucket_sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+            session_maps.push((bucket, Arc::clone(&bucket_sessions)));
+            let ctx = WorkerCtx {
+                cfg: cfg.clone(),
+                dir: artifacts.to_path_buf(),
+                bucket,
+                queue: q.clone(),
+                stats: Arc::clone(&stats),
+                draining: Arc::clone(&draining),
+                sessions: bucket_sessions,
+                live: Arc::new(AtomicUsize::new(min_w)),
+                deaths: Arc::new(AtomicUsize::new(0)),
+                min_workers: min_w,
+            };
+            for w in 0..min_w {
+                workers.lock().unwrap().push(spawn_worker(ctx.clone(), w));
+            }
+            if max_w > min_w {
+                workers.lock().unwrap().push(spawn_scaler(ctx, max_w, Arc::clone(&workers)));
             }
         }
         Ok(Self {
             cfg,
             queues,
+            sessions: session_maps,
             workers,
             stats,
             next_id: AtomicU64::new(1),
             draining,
             started_at: Instant::now(),
         })
+    }
+
+    fn queue_for(&self, len: usize) -> Result<(usize, &Channel<Work>)> {
+        let bucket = pick_bucket(&self.cfg.buckets, len)
+            .ok_or_else(|| anyhow!("sequence length {len} exceeds all buckets"))?;
+        Ok((bucket, &self.queues.iter().find(|(b, _)| *b == bucket).unwrap().1))
+    }
+
+    fn enqueue(&self, queue: &Channel<Work>, bucket: usize, work: Work) -> Result<()> {
+        match queue.try_send(work) {
+            Ok(()) => Ok(()),
+            Err(SendError::Full(_)) => {
+                self.stats.lock().unwrap().rejected += 1;
+                bail!("backpressure: bucket n{bucket} queue full")
+            }
+            Err(SendError::Closed(_)) => bail!("coordinator shutting down"),
+        }
     }
 
     /// Submit a bidirectional request; returns the response receiver.
@@ -120,8 +233,7 @@ impl Coordinator {
     /// batch variable-length (and mixed causal/bidirectional) traffic
     /// instead of assuming square full attention.
     pub fn submit_with(&self, tokens: Vec<i32>, causal: bool) -> Result<mpsc::Receiver<Response>> {
-        let bucket = pick_bucket(&self.cfg.buckets, tokens.len())
-            .ok_or_else(|| anyhow!("sequence length {} exceeds all buckets", tokens.len()))?;
+        let (bucket, queue) = self.queue_for(tokens.len())?;
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -130,15 +242,8 @@ impl Coordinator {
             enqueued_at: Instant::now(),
             resp: tx,
         };
-        let queue = &self.queues.iter().find(|(b, _)| *b == bucket).unwrap().1;
-        match queue.try_send(req) {
-            Ok(()) => Ok(rx),
-            Err(SendError::Full(_)) => {
-                self.stats.lock().unwrap().rejected += 1;
-                bail!("backpressure: bucket n{bucket} queue full")
-            }
-            Err(SendError::Closed(_)) => bail!("coordinator shutting down"),
-        }
+        self.enqueue(queue, bucket, Work::Infer(req))?;
+        Ok(rx)
     }
 
     /// Submit and block for the result.
@@ -153,6 +258,34 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("worker dropped response"))
     }
 
+    /// Open an incremental decode session that can grow to `max_len`
+    /// tokens: the session routes to the smallest bucket that fits and
+    /// holds O(1)-per-token attention state there (KV cache for the
+    /// exact class, the `Σ φ(k)vᵀ` prefix state for the linear class).
+    /// Blocks until a worker accepts; errors loudly when the bucket's
+    /// executor cannot decode — PJRT artifacts (batch-prefill,
+    /// full-attention only) and unmaskable methods (Nystrom/Linformer)
+    /// — or on backpressure.
+    pub fn open_session(&self, max_len: usize) -> Result<DecodeSession> {
+        let (bucket, queue) = self.queue_for(max_len)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let open = SessionOpen { id, enqueued_at: Instant::now(), resp: tx };
+        self.enqueue(queue, bucket, Work::Open(open))?;
+        let resp = rx.recv().map_err(|_| anyhow!("worker dropped session-open response"))?;
+        resp.result.map_err(|e| anyhow!(e))?;
+        let sessions = Arc::clone(&self.sessions.iter().find(|(b, _)| *b == bucket).unwrap().1);
+        Ok(DecodeSession {
+            id,
+            bucket,
+            queue: queue.clone(),
+            sessions,
+            stats: Arc::clone(&self.stats),
+            next_pos: 0,
+            closed: false,
+        })
+    }
+
     pub fn stats(&self) -> Arc<Mutex<ServeStats>> {
         Arc::clone(&self.stats)
     }
@@ -161,15 +294,160 @@ impl Coordinator {
         self.started_at.elapsed().as_secs_f64()
     }
 
-    /// Drain queues and join workers.
-    pub fn shutdown(mut self) {
+    /// Drain queues and join workers (including scaler threads and any
+    /// autoscaled extras).
+    pub fn shutdown(self) {
         self.draining.store(true, Ordering::SeqCst);
         for (_, q) in &self.queues {
             q.close();
         }
-        for w in self.workers.drain(..) {
-            w.join().ok();
+        loop {
+            // Scalers may still be pushing handles while we join; drain
+            // until the registry stays empty.
+            let batch: Vec<JoinHandle<()>> = {
+                let mut w = self.workers.lock().unwrap();
+                w.drain(..).collect()
+            };
+            if batch.is_empty() {
+                break;
+            }
+            for h in batch {
+                h.join().ok();
+            }
         }
+    }
+}
+
+/// A client handle to one incremental decode session: submit tokens one
+/// at a time ([`step`](Self::step)) or pipeline a whole stretch and
+/// read the logits back as they decode ([`stream`](Self::stream)).
+/// Steps are serialized per session server-side; the handle enforces
+/// the bucket-length cap client-side.  Dropping the handle closes the
+/// session (releases its server-side state).
+pub struct DecodeSession {
+    id: u64,
+    bucket: usize,
+    queue: Channel<Work>,
+    sessions: SessionMap,
+    stats: Arc<Mutex<ServeStats>>,
+    next_pos: usize,
+    closed: bool,
+}
+
+impl DecodeSession {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The bucket length this session can grow to.
+    pub fn capacity(&self) -> usize {
+        self.bucket
+    }
+
+    /// Tokens submitted so far.
+    pub fn len(&self) -> usize {
+        self.next_pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.next_pos == 0
+    }
+
+    /// `block_on_full` selects the backpressure mode: `false` fails
+    /// fast (the prefill-style 429 semantics), `true` blocks until the
+    /// workers drain a slot — how [`stream`](Self::stream) pipelines
+    /// stretches longer than the bucket queue without losing steps.
+    fn enqueue_step(
+        &mut self,
+        token: i32,
+        resp: mpsc::Sender<Response>,
+        block_on_full: bool,
+    ) -> Result<()> {
+        if self.closed {
+            bail!("decode session already closed");
+        }
+        if self.next_pos >= self.bucket {
+            bail!("decode session reached its bucket length n{}", self.bucket);
+        }
+        let step = SessionStep {
+            id: self.id,
+            pos: self.next_pos,
+            token,
+            enqueued_at: Instant::now(),
+            resp,
+        };
+        let sent = if block_on_full {
+            // Channel::send only errors when closed; Full blocks until
+            // a worker drains (workers always make progress on session
+            // items, so this terminates unless the pool is gone).
+            self.queue.send(Work::Step(step)).map_err(|_| anyhow!("coordinator shutting down"))
+        } else {
+            match self.queue.try_send(Work::Step(step)) {
+                Ok(()) => Ok(()),
+                Err(SendError::Full(_)) => {
+                    // Same 429 accounting as prefill backpressure.
+                    self.stats.lock().unwrap().rejected += 1;
+                    Err(anyhow!("backpressure: bucket n{} queue full", self.bucket))
+                }
+                Err(SendError::Closed(_)) => Err(anyhow!("coordinator shutting down")),
+            }
+        };
+        sent?;
+        self.next_pos += 1;
+        Ok(())
+    }
+
+    /// Submit one token without waiting; the step's logits arrive on
+    /// the returned receiver.  Fails fast on a full bucket queue
+    /// (backpressure), like prefill submission.
+    pub fn submit_step(&mut self, token: i32) -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        self.enqueue_step(token, tx, false)?;
+        Ok(rx)
+    }
+
+    /// Submit one token and block for its logits.
+    pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        let rx = self.submit_step(token)?;
+        let resp = rx.recv().map_err(|_| anyhow!("worker dropped decode response"))?;
+        resp.result.map_err(|e| anyhow!(e))
+    }
+
+    /// Pipeline a stretch of tokens and stream the per-token responses
+    /// back in decode order over one channel — the streaming serving
+    /// path.  Enqueueing blocks when the bucket queue fills (flow
+    /// control: responses buffer unboundedly on the returned channel,
+    /// so stretches longer than the queue capacity pipeline cleanly).
+    /// Consume the receiver fully before closing the session.
+    pub fn stream(&mut self, tokens: &[i32]) -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        for &t in tokens {
+            self.enqueue_step(t, tx.clone(), true)?;
+        }
+        Ok(rx)
+    }
+
+    /// Close the session, releasing its server-side state.  (Dropping
+    /// the handle does the same.)
+    pub fn close(mut self) {
+        self.send_close();
+    }
+
+    fn send_close(&mut self) {
+        if !self.closed {
+            // Remove the slot from the bucket registry directly — a
+            // full queue must never be able to leak server-side decode
+            // state.  In-flight steps keep the slot alive through their
+            // own Arc; steps still queued reply "unknown session".
+            self.sessions.lock().unwrap().remove(&self.id);
+            self.closed = true;
+        }
+    }
+}
+
+impl Drop for DecodeSession {
+    fn drop(&mut self) {
+        self.send_close();
     }
 }
 
@@ -207,6 +485,21 @@ trait BatchExec {
         real: usize,
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>>;
+
+    /// Open a decode-session attention state.  `Err` — never a panic —
+    /// when this executor cannot decode (PJRT batch artifacts,
+    /// unmaskable methods): the message rides the session-open
+    /// response.
+    fn begin_decode(&self) -> Result<DecodeState, String>;
+
+    /// One decode-session step: embed `token` at `pos` and advance the
+    /// state by one token, returning the token's logits.
+    fn decode_step(
+        &mut self,
+        state: &mut DecodeState,
+        pos: usize,
+        token: i32,
+    ) -> Result<Vec<f32>, String>;
 }
 
 /// PJRT path: resident params + the bucket's b1/bN executables.
@@ -283,6 +576,22 @@ impl BatchExec for PjrtExec {
         let nc = self.num_classes;
         Ok((0..real).map(|i| logits[i * nc..(i + 1) * nc].to_vec()).collect())
     }
+
+    fn begin_decode(&self) -> Result<DecodeState, String> {
+        Err("decode sessions require the native backend path: the AOT serve artifacts are \
+             batch-prefill, full-attention executables with no incremental state; set `[serve] \
+             force_native = true` (with a maskable method) to serve decode sessions"
+            .into())
+    }
+
+    fn decode_step(
+        &mut self,
+        _state: &mut DecodeState,
+        _pos: usize,
+        _token: i32,
+    ) -> Result<Vec<f32>, String> {
+        Err("decode step reached the PJRT executor (sessions cannot be opened here)".into())
+    }
 }
 
 /// Native path: the [`AttentionBackend`](crate::attention::AttentionBackend)
@@ -339,18 +648,119 @@ impl BatchExec for NativeExec {
             })
             .collect())
     }
+
+    fn begin_decode(&self) -> Result<DecodeState, String> {
+        // Unmaskable methods (Nystrom/Linformer) reject here with the
+        // backend's own message — an Err response, not a panic.
+        self.encoder.begin_decode()
+    }
+
+    fn decode_step(
+        &mut self,
+        state: &mut DecodeState,
+        pos: usize,
+        token: i32,
+    ) -> Result<Vec<f32>, String> {
+        Ok(self.encoder.decode_step(state, pos, token))
+    }
+}
+
+/// Run `f` with panics converted to `Err` — backend capability and
+/// shape asserts reached from a worker thread become per-request error
+/// responses through the coordinator instead of killing the worker.
+fn catch_panic<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    // The default hook still prints the panic to stderr (useful when
+    // debugging a worker); the point here is that the thread survives
+    // and the requester gets the message instead of a dropped channel.
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|payload| {
+        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "unknown panic payload".to_string()
+        };
+        format!("worker panicked: {msg}")
+    })
+}
+
+fn spawn_worker(ctx: WorkerCtx, index: usize) -> JoinHandle<()> {
+    let bucket = ctx.bucket;
+    let live = Arc::clone(&ctx.live);
+    let deaths = Arc::clone(&ctx.deaths);
+    std::thread::Builder::new()
+        .name(format!("lln-worker-n{bucket}-{index}"))
+        .spawn(move || {
+            if let Err(e) = worker_loop(ctx) {
+                // A worker that dies (e.g. executor construction
+                // failure) must release its live-count slot, or the
+                // autoscaler would count phantom workers forever — and
+                // the death is recorded so the scaler backs off instead
+                // of hot-respawning a doomed executor.
+                live.fetch_sub(1, Ordering::SeqCst);
+                deaths.fetch_add(1, Ordering::SeqCst);
+                eprintln!("worker n{bucket}-{index} died: {e:#}");
+            }
+        })
+        .expect("spawn worker")
+}
+
+/// Per-bucket autoscaler: polls queue depth and grows the worker pool
+/// toward [`desired_workers`] (idle extras retire themselves in
+/// [`worker_loop`]).  Exits when the coordinator drains.
+fn spawn_scaler(
+    ctx: WorkerCtx,
+    max_workers: usize,
+    registry: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("lln-scaler-n{}", ctx.bucket))
+        .spawn(move || {
+            let poll = Duration::from_millis(ctx.cfg.batch_timeout_ms.clamp(1, 20));
+            let mut seq = ctx.min_workers;
+            let mut deaths_seen = 0usize;
+            while !ctx.draining.load(Ordering::SeqCst) {
+                // Back off growth whenever a worker died since the last
+                // poll (persistently failing executors must not drive a
+                // spawn/die hot loop at the poll rate).
+                let deaths_now = ctx.deaths.load(Ordering::SeqCst);
+                if deaths_now > deaths_seen {
+                    deaths_seen = deaths_now;
+                    std::thread::sleep(SPAWN_BACKOFF);
+                    continue;
+                }
+                let depth = ctx.queue.len();
+                let want =
+                    desired_workers(depth, ctx.cfg.max_batch, ctx.min_workers, max_workers);
+                let cur = ctx.live.load(Ordering::SeqCst);
+                // Only grow beyond a *healthy* floor: when floor
+                // workers have died (cur < min — e.g. persistent
+                // executor-construction failure), respawning here would
+                // hot-loop spawn/die at the poll rate; dead floors stay
+                // dead, exactly like the pre-autoscaler behavior.
+                if cur >= ctx.min_workers && want > cur {
+                    for _ in cur..want {
+                        ctx.live.fetch_add(1, Ordering::SeqCst);
+                        ctx.stats.lock().unwrap().workers_spawned += 1;
+                        registry.lock().unwrap().push(spawn_worker(ctx.clone(), seq));
+                        seq += 1;
+                    }
+                }
+                // Reap retired workers' handles (dropping a finished
+                // thread's handle detaches a dead thread) so spawn /
+                // retire churn never grows the registry unboundedly.
+                registry.lock().unwrap().retain(|h| !h.is_finished());
+                std::thread::sleep(poll);
+            }
+        })
+        .expect("spawn scaler")
 }
 
 /// Per-bucket worker: owns its executor and loops batching until the
-/// queue closes.
-fn worker_loop(
-    cfg: ServeConfig,
-    dir: std::path::PathBuf,
-    bucket: usize,
-    queue: Channel<Request>,
-    stats: Arc<Mutex<ServeStats>>,
-    draining: Arc<AtomicBool>,
-) -> Result<()> {
+/// queue closes (or, for autoscaled extras, until idle long enough to
+/// retire back to the bucket's floor).
+fn worker_loop(ctx: WorkerCtx) -> Result<()> {
+    let WorkerCtx { cfg, dir, bucket, queue, stats, draining, sessions, live, min_workers } = ctx;
     let mut exec: Box<dyn BatchExec> = if cfg.force_native {
         // Causal serving and mask-sensitive traffic skip PJRT outright:
         // the AOT executables are full bidirectional attention.
@@ -370,7 +780,8 @@ fn worker_loop(
         }
     };
 
-    let mut pending: Vec<Request> = Vec::new();
+    let mut pending: Vec<Work> = Vec::new();
+    let mut idle_since: Option<Instant> = None;
     loop {
         // Top up the pending set.
         let drain = draining.load(Ordering::SeqCst);
@@ -386,19 +797,166 @@ fn worker_loop(
                 Err(_) => {}
             }
         }
-        let oldest_ms = pending
-            .first()
-            .map(|r| r.enqueued_at.elapsed().as_secs_f64() * 1e3)
-            .unwrap_or(0.0);
-        if !should_fire(pending.len(), cfg.max_batch, oldest_ms, cfg.batch_timeout_ms as f64, drain) {
+        if pending.is_empty() {
+            // Surplus (autoscaled) workers retire after lingering idle;
+            // the floor never shrinks below min_workers.
+            let idle = *idle_since.get_or_insert_with(Instant::now);
+            if idle.elapsed() >= IDLE_RETIRE {
+                let mut cur = live.load(Ordering::SeqCst);
+                while cur > min_workers {
+                    match live.compare_exchange(
+                        cur,
+                        cur - 1,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    ) {
+                        Ok(_) => return Ok(()),
+                        Err(now) => cur = now,
+                    }
+                }
+                idle_since = None;
+            }
             continue;
         }
-        for plan in plan_batches(pending.len(), cfg.max_batch) {
-            let batch: Vec<Request> = plan.members.iter().map(|_| pending.remove(0)).collect();
+        idle_since = None;
+        // Session work (single-token decode steps, opens, closes) never
+        // waits out the prefill batcher's fill timer.
+        let has_session_work = pending.iter().any(Work::is_session_work);
+        let infer_count = pending.iter().filter(|w| !w.is_session_work()).count();
+        let oldest_ms = pending
+            .iter()
+            .map(|w| w.enqueued_at().elapsed().as_secs_f64() * 1e3)
+            .fold(0.0, f64::max);
+        if !has_session_work
+            && !should_fire(infer_count, cfg.max_batch, oldest_ms, cfg.batch_timeout_ms as f64, drain)
+        {
+            continue;
+        }
+        // One drained set can mix prefill and decode traffic: session
+        // items run statefully in arrival order, prefill members batch
+        // through the executor as before.
+        let mut infers: Vec<Request> = Vec::new();
+        for work in pending.drain(..) {
+            match work {
+                Work::Infer(r) => infers.push(r),
+                Work::Open(open) => run_session_open(exec.as_mut(), &sessions, open, &stats),
+                Work::Step(step) => run_session_step(exec.as_mut(), &sessions, step, &stats),
+            }
+        }
+        for plan in plan_batches(infers.len(), cfg.max_batch) {
+            let batch: Vec<Request> = infers.drain(..plan.members.len()).collect();
             let capacity = exec.plan_capacity(batch.len(), cfg.max_batch);
             run_batch(exec.as_mut(), capacity, bucket, batch, cfg.compute.causal, &stats);
         }
-        pending.clear();
+    }
+}
+
+/// Open one decode session on this worker's executor: validate, stash
+/// the state in the bucket registry, reply.  Capability failures are
+/// `Err` responses, never panics.
+fn run_session_open(
+    exec: &mut dyn BatchExec,
+    sessions: &SessionMap,
+    open: SessionOpen,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let latency_ms = open.enqueued_at.elapsed().as_secs_f64() * 1e3;
+    match catch_panic(|| exec.begin_decode()).and_then(|r| r) {
+        Ok(state) => {
+            sessions
+                .lock()
+                .unwrap()
+                .insert(open.id, Arc::new(Mutex::new(SessionSlot { state, pos: 0, failed: None })));
+            stats.lock().unwrap().sessions_opened += 1;
+            open.resp
+                .send(Response { id: open.id, result: Ok(Vec::new()), latency_ms, batch_size: 1 })
+                .ok();
+        }
+        Err(e) => {
+            stats.lock().unwrap().errors += 1;
+            open.resp
+                .send(Response { id: open.id, result: Err(e), latency_ms, batch_size: 0 })
+                .ok();
+        }
+    }
+}
+
+/// Execute one decode step against the session registry.  Steps of one
+/// session are serialized on the slot's position counter — a worker
+/// holding position `t` waits (bounded) for `t-1` to land when another
+/// worker still runs it — so co-batched concurrent sessions never
+/// contaminate each other's state and a session's own steps never
+/// reorder.
+fn run_session_step(
+    exec: &mut dyn BatchExec,
+    sessions: &SessionMap,
+    step: SessionStep,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let reply_err = |msg: String| {
+        stats.lock().unwrap().errors += 1;
+        let latency_ms = step.enqueued_at.elapsed().as_secs_f64() * 1e3;
+        step.resp
+            .send(Response { id: step.id, result: Err(msg), latency_ms, batch_size: 0 })
+            .ok();
+    };
+    let slot = sessions.lock().unwrap().get(&step.id).cloned();
+    let Some(slot) = slot else {
+        return reply_err(format!("unknown decode session {} (closed or never opened)", step.id));
+    };
+    let deadline = Instant::now() + STEP_ORDER_TIMEOUT;
+    let mut guard = slot.lock().unwrap();
+    while guard.pos < step.pos {
+        // The deadline check runs while holding the lock with pos still
+        // behind, so a predecessor landing at the last instant is never
+        // mistaken for a timeout (we simply loop and execute).  On a
+        // real timeout, poison AND advance pos so the pipelined tail
+        // fails fast instead of each successor re-waiting the full
+        // timeout (a late-landing predecessor then errors as stale).
+        if Instant::now() >= deadline {
+            let msg =
+                format!("decode step {} timed out waiting for its predecessor", step.pos);
+            guard.failed = Some(msg.clone());
+            guard.pos = step.pos + 1;
+            drop(guard);
+            return reply_err(msg);
+        }
+        drop(guard);
+        std::thread::sleep(Duration::from_micros(100));
+        guard = slot.lock().unwrap();
+    }
+    if let Some(e) = &guard.failed {
+        return reply_err(format!("decode session poisoned by an earlier failure: {e}"));
+    }
+    if guard.pos > step.pos {
+        return reply_err(format!(
+            "stale decode step: position {} already advanced past {}",
+            guard.pos, step.pos
+        ));
+    }
+    let slot_ref = &mut *guard;
+    let result =
+        catch_panic(|| exec.decode_step(&mut slot_ref.state, step.pos, step.token)).and_then(|r| r);
+    match result {
+        Ok(logits) => {
+            guard.pos += 1;
+            let latency_ms = step.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            let mut st = stats.lock().unwrap();
+            st.completed += 1;
+            st.decode_steps += 1;
+            st.record_latency(latency_ms);
+            drop(st);
+            step.resp
+                .send(Response { id: step.id, result: Ok(logits), latency_ms, batch_size: 1 })
+                .ok();
+        }
+        Err(e) => {
+            // Poison the session: its state did not advance, so letting
+            // later steps run would silently decode on a stale prefix.
+            guard.pos += 1;
+            guard.failed = Some(e.clone());
+            reply_err(e);
+        }
     }
 }
 
@@ -406,7 +964,8 @@ fn worker_loop(
 /// results back out.  `default_causal` (`[compute] causal`) is OR-ed
 /// with each request's own flag; causal members an executor cannot
 /// honor are rejected *individually* — their co-batched bidirectional
-/// requests still run.
+/// requests still run.  Executor panics are caught and routed back as
+/// per-request error responses (the worker thread survives).
 fn run_batch(
     exec: &mut dyn BatchExec,
     capacity: usize,
@@ -461,7 +1020,10 @@ fn run_batch(
     // Pad phantom rows up to the executor's static batch.
     tokens.resize(capacity * bucket, crate::data::special::PAD);
 
-    let result = exec.run(tokens, &specs, capacity, real, bucket);
+    let result = match catch_panic(|| exec.run(tokens, &specs, capacity, real, bucket)) {
+        Ok(r) => r,
+        Err(panic_msg) => Err(anyhow!(panic_msg)),
+    };
 
     let mut st = stats.lock().unwrap();
     st.batch_sizes.push(real);
@@ -470,7 +1032,7 @@ fn run_batch(
             for (r, row) in batch.into_iter().zip(rows) {
                 let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
                 st.completed += 1;
-                st.latencies_ms.push(latency_ms);
+                st.record_latency(latency_ms);
                 r.resp
                     .send(Response { id: r.id, result: Ok(row), latency_ms, batch_size: real })
                     .ok();
@@ -691,6 +1253,183 @@ mod tests {
         }
     }
 
+    // -- decode sessions ----------------------------------------------------
+
+    #[test]
+    fn decode_session_streams_tokens_matching_the_causal_forward() {
+        // Stepping a session token-by-token must reproduce the per-row
+        // logits of the full causal batch forward over the same tokens
+        // (bitwise for LLN's prefix-state path).
+        let c = native_coordinator("lln", 1);
+        let tokens: Vec<i32> = (0..24).map(|i| 4 + (i % 13) as i32).collect();
+        let mut session = c.open_session(32).unwrap();
+        let rx = session.stream(&tokens).unwrap();
+        let got: Vec<Vec<f32>> = (0..tokens.len())
+            .map(|i| {
+                let resp = rx.recv().unwrap();
+                resp.result.unwrap_or_else(|e| panic!("step {i}: {e}"))
+            })
+            .collect();
+        // Reference: the same encoder the bucket-32 workers built.
+        let enc = NativeEncoder::new(
+            Method::Lln,
+            super::super::native::NATIVE_D_MODEL,
+            super::super::native::NATIVE_NUM_CLASSES,
+            32,
+            super::super::native::NATIVE_SEED,
+            &crate::config::ComputeConfig::default(),
+        );
+        let want = enc.decode_logits_reference(&tokens);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "decode step {i} diverged from the causal forward row");
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.sessions_opened, 1);
+        assert_eq!(st.decode_steps, tokens.len() as u64);
+        drop(st);
+        session.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn interleaved_sessions_do_not_contaminate_each_other() {
+        // Two co-batched sessions stepped in lockstep must produce
+        // exactly what each produces when decoded alone.
+        let toks_a: Vec<i32> = (0..16).map(|i| 5 + (i % 7) as i32).collect();
+        let toks_b: Vec<i32> = (0..16).map(|i| 40 + (i % 11) as i32).collect();
+
+        let solo = |tokens: &[i32]| -> Vec<Vec<f32>> {
+            let c = native_coordinator("lln", 1);
+            let mut s = c.open_session(32).unwrap();
+            let out = tokens.iter().map(|&t| s.step(t).unwrap()).collect();
+            s.close();
+            c.shutdown();
+            out
+        };
+        let want_a = solo(&toks_a);
+        let want_b = solo(&toks_b);
+
+        // Interleave through one coordinator with two workers draining
+        // the same bucket queue.
+        let c = native_coordinator("lln", 2);
+        let mut sa = c.open_session(32).unwrap();
+        let mut sb = c.open_session(32).unwrap();
+        for i in 0..toks_a.len() {
+            let la = sa.step(toks_a[i]).unwrap();
+            let lb = sb.step(toks_b[i]).unwrap();
+            assert_eq!(la, want_a[i], "session A step {i} contaminated");
+            assert_eq!(lb, want_b[i], "session B step {i} contaminated");
+        }
+        sa.close();
+        sb.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn decode_sessions_co_batch_with_prefill_traffic() {
+        // Mixed traffic: a decode session streaming while prefill
+        // requests flow through the same bucket queue.
+        let c = native_coordinator("softmax", 1);
+        let mut session = c.open_session(30).unwrap();
+        let mut rxs = Vec::new();
+        let mut step_rxs = Vec::new();
+        for i in 0..10 {
+            rxs.push(c.submit(vec![4 + i as i32; 20]).unwrap());
+            step_rxs.push(session.submit_step(7 + i as i32).unwrap());
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        for (i, rx) in step_rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            let logits = resp.result.unwrap_or_else(|e| panic!("step {i}: {e}"));
+            assert_eq!(logits.len(), 4);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.completed, 20);
+        assert_eq!(st.decode_steps, 10);
+        drop(st);
+        session.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn unmaskable_method_rejects_session_open_as_err() {
+        // Nystrom cannot decode causally: the open must come back as a
+        // clean Err response (no worker panic), and the worker must
+        // keep serving afterwards.
+        let c = native_coordinator("nystrom", 1);
+        let err = c.open_session(32).unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("causal") || msg.contains("decode"),
+            "unexpected open error: {msg}"
+        );
+        // The same worker still serves bidirectional prefill traffic.
+        let resp = c.infer(vec![7i32; 32]).unwrap();
+        assert!(resp.result.is_ok(), "worker died after rejecting a session open");
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_respects_bucket_capacity_client_side() {
+        let c = native_coordinator("elu", 1);
+        let mut s = c.open_session(8).unwrap(); // routes to bucket 32
+        assert_eq!(s.capacity(), 32);
+        for i in 0..32 {
+            s.step(4 + i as i32).unwrap();
+        }
+        let err = s.step(5).unwrap_err();
+        assert!(format!("{err}").contains("bucket length"), "{err}");
+        s.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn autoscaler_serves_bursts_within_the_band() {
+        // A burst through a [1, 3] band: everything completes, any
+        // scale-ups stay within the ceiling.
+        let cfg = ServeConfig {
+            method: "lln".into(),
+            queue_capacity: 128,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            max_workers: 3,
+            buckets: vec![32],
+            native_fallback: true,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        let rxs: Vec<_> = (0..40).map(|i| c.submit(vec![4 + i as i32 % 9; 24]).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.completed, 40);
+        // The scaler can only ever add up to ceiling - floor workers at
+        // a time, but retirements may free room for later spawns; the
+        // invariant worth pinning without timing races is that scaling
+        // happened within the configured band's reach.
+        assert!(st.workers_spawned <= 40, "runaway scaler: {}", st.workers_spawned);
+        drop(st);
+        c.shutdown();
+    }
+
+    #[test]
+    fn catch_panic_routes_payloads_as_errors() {
+        assert_eq!(catch_panic(|| 7).unwrap(), 7);
+        let e = catch_panic(|| panic!("boom {}", 3)).unwrap_err();
+        assert!(e.contains("boom 3"), "{e}");
+        let e = catch_panic(|| panic!("static boom")).unwrap_err();
+        assert!(e.contains("static boom"), "{e}");
+    }
+
     #[test]
     fn serves_single_request() {
         let Some(c) = coordinator() else { return };
@@ -734,6 +1473,14 @@ mod tests {
         let Some(c) = coordinator() else { return };
         let err = c.submit(vec![special::CLS; 1000]).unwrap_err();
         assert!(format!("{err}").contains("exceeds"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn pjrt_path_rejects_session_opens_loudly() {
+        let Some(c) = coordinator() else { return };
+        let err = c.open_session(64).unwrap_err();
+        assert!(format!("{err}").contains("force_native"), "{err}");
         c.shutdown();
     }
 }

@@ -27,6 +27,11 @@ pub fn run_serve(args: &Args) -> Result<()> {
     let causal_all = args.get_bool("causal");
     let causal_frac =
         if causal_all { 1.0 } else { args.get_f64("causal-frac", 0.0)?.clamp(0.0, 1.0) };
+    // Streaming decode sessions: --sessions opens N concurrent
+    // token-by-token sessions per method and streams --decode-tokens
+    // through each, co-batched with the prefill traffic's buckets.
+    let sessions = args.get_usize("sessions", 0)?;
+    let decode_tokens = args.get_usize("decode-tokens", 48)?.max(1);
 
     println!(
         "== Serving: coordinator throughput/latency ({requests} reqs, {rate}/s offered, {:.0}% long, {:.0}% causal) ==\n",
@@ -45,11 +50,11 @@ pub fn run_serve(args: &Args) -> Result<()> {
     // the native path outright (`force_native`) — the AOT serve
     // executables are compiled as full bidirectional attention.
     let native = base_cfg.native_fallback || !artifacts_available(&dir);
-    let force_native = base_cfg.force_native || causal_frac > 0.0;
+    let force_native = base_cfg.force_native || causal_frac > 0.0 || sessions > 0;
     if !artifacts_available(&dir) {
         println!("(artifacts absent: serving via the native AttentionBackend encoder)\n");
     } else if force_native {
-        println!("(causal traffic requested: serving via the native AttentionBackend encoder)\n");
+        println!("(causal/decode traffic requested: serving via the native AttentionBackend encoder)\n");
     }
     let mut rows = Vec::new();
     let mut csv = Vec::new();
@@ -95,30 +100,79 @@ pub fn run_serve(args: &Args) -> Result<()> {
             latencies.push(resp.latency_ms);
         }
         let wall = t0.elapsed().as_secs_f64();
-        let stats_arc = coord.stats();
-        let st = stats_arc.lock().unwrap();
-        let throughput = st.completed as f64 / wall;
+        // Snapshot the prefill-phase stats before any decode-session
+        // traffic lands: the shared latency buffer would otherwise mix
+        // sub-millisecond decode-step latencies into the prefill
+        // percentiles.
+        let (prefill_completed, p50, p95, mean_batch) = {
+            let stats_arc = coord.stats();
+            let st = stats_arc.lock().unwrap();
+            (st.completed, st.p50_latency(), st.p95_latency(), st.mean_batch_size())
+        };
+
+        // Streaming decode sessions, co-batched through the same
+        // coordinator: open N sessions, pipeline decode_tokens through
+        // each, and drain the streams (tokens arrive as they decode).
+        let decode_cell = if sessions == 0 {
+            "-".to_string()
+        } else if !crate::attention::Method::parse(method)
+            .map(|m| m.supports_masking())
+            .unwrap_or(false)
+        {
+            "n/a".to_string()
+        } else {
+            let d0 = Instant::now();
+            let mut handles = Vec::new();
+            let mut streams = Vec::new();
+            for s in 0..sessions {
+                let mut session = coord.open_session(decode_tokens)?;
+                let toks: Vec<i32> =
+                    (0..decode_tokens).map(|i| 4 + ((s * 31 + i) % 97) as i32).collect();
+                streams.push(session.stream(&toks)?);
+                handles.push(session);
+            }
+            let mut streamed = 0usize;
+            for rx in &streams {
+                for _ in 0..decode_tokens {
+                    if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+                        streamed += 1;
+                    }
+                }
+            }
+            for s in handles {
+                s.close();
+            }
+            let tok_s = streamed as f64 / d0.elapsed().as_secs_f64();
+            format!("{tok_s:.0}")
+        };
+
+        let throughput = prefill_completed as f64 / wall;
         rows.push(vec![
             method.to_string(),
             format!("{throughput:.1}"),
-            format!("{:.1}", st.p50_latency()),
-            format!("{:.1}", st.p95_latency()),
-            format!("{:.2}", st.mean_batch_size()),
+            format!("{p50:.1}"),
+            format!("{p95:.1}"),
+            format!("{mean_batch:.2}"),
             format!("{rejected}"),
+            decode_cell.clone(),
         ]);
-        csv.push(format!(
-            "{method},{throughput},{},{},{},{rejected}",
-            st.p50_latency(), st.p95_latency(), st.mean_batch_size()
-        ));
-        drop(st);
+        csv.push(format!("{method},{throughput},{p50},{p95},{mean_batch},{rejected},{decode_cell}"));
         coord.shutdown();
     }
     print_table(
-        &["method", "throughput [req/s]", "p50 [ms]", "p95 [ms]", "mean batch", "rejected"],
+        &[
+            "method",
+            "throughput [req/s]",
+            "p50 [ms]",
+            "p95 [ms]",
+            "mean batch",
+            "rejected",
+            "decode [tok/s]",
+        ],
         &rows,
     );
     println!("\nshape: lln_diag sustains long-sequence traffic at lower p95 than");
     println!("softmax (quadratic N=512 forwards dominate SA's tail).");
-    maybe_write_csv(args, "serve", "method,throughput,p50,p95,mean_batch,rejected", &csv)?;
+    maybe_write_csv(args, "serve", "method,throughput,p50,p95,mean_batch,rejected,decode_tok_s", &csv)?;
     Ok(())
 }

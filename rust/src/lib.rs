@@ -44,8 +44,16 @@
 //! benches, and the experiment harnesses all call through the
 //! registry — the coordinator batches padded variable-length requests
 //! (each request's live length is its key mask; causal rides per
-//! request via `Coordinator::submit_with` or `[compute] causal`), and
-//! can fall back to a native-backend encoder
+//! request via `Coordinator::submit_with` or `[compute] causal`), runs
+//! token-by-token **decode sessions**
+//! ([`coordinator::Coordinator::open_session`] →
+//! [`coordinator::DecodeSession`], built on
+//! [`attention::AttentionBackend::begin_decode`] /
+//! [`attention::DecodeState`]: a KV cache for the exact class, the
+//! O(d²) `Σ φ(k)vᵀ` prefix state for the linear class — O(1)/token,
+//! bitwise-consistent with the chunked causal kernel), autoscales each
+//! bucket's worker pool inside the `[serve] min_workers`/`max_workers`
+//! band, and can fall back to a native-backend encoder
 //! ([`coordinator::NativeEncoder`]) when PJRT artifacts are absent
 //! (opt-in via `ServeConfig::native_fallback`; the `lln serve` demo and
 //! its benches opt in automatically when artifacts are missing).

@@ -77,6 +77,8 @@ fn cli() -> Cli {
                         flag("long-frac", "fraction of long requests", Some("0.3")),
                         flag("causal-frac", "fraction of causal (decoder-mask) requests", Some("0")),
                         switch("causal", "serve every request under the causal mask (native path)"),
+                        flag("sessions", "concurrent decode sessions to stream (native path)", Some("0")),
+                        flag("decode-tokens", "tokens to stream per decode session", Some("48")),
                         flag("config", "TOML file with [serve] / [compute] sections", None),
                     ]);
                     f

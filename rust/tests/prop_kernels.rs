@@ -20,7 +20,13 @@
 //!   5. the causal/masked [`AttnSpec`] kernels match their dense masked
 //!      references (fused-causal vs masked dense softmax, prefix-state
 //!      causal linear vs masked dense linear) across off-tile shapes,
-//!      and future keys have exactly zero influence on causal outputs.
+//!      and future keys have exactly zero influence on causal outputs;
+//!   6. decode sessions replay the causal forward: for every maskable
+//!      method, N `begin_decode` + `decode_step` calls reproduce the
+//!      batch causal forward's rows — *bitwise* for the linear
+//!      prefix-state path (the chunk-carry structure is shared with
+//!      `linear_attention_causal`), within streaming tolerance for the
+//!      KV-cache path — and interleaved sessions stay independent.
 //!
 //! Reproduce failures with `LLN_PROP_SEED=<seed> cargo test`.
 
@@ -577,6 +583,168 @@ fn flops_models_are_positive_and_monotone() {
         }
         Ok(())
     });
+}
+
+/// Every maskable method (the decode-capable set).
+const MASKABLE_METHODS: [Method; 8] = [
+    Method::Softmax,
+    Method::Lln,
+    Method::LlnDiag,
+    Method::Elu,
+    Method::Relu,
+    Method::Quadratic,
+    Method::Performer,
+    Method::BlockDiag,
+];
+
+#[test]
+fn decode_steps_replay_the_causal_forward() {
+    // For every maskable method: stepping a decode session token by
+    // token reproduces the batch causal forward's rows on the same
+    // Q/K/V.  Bitwise for the linear prefix-state class (LLN/ELU/ReLU —
+    // the session shares the chunk-carry structure and FP order of
+    // linear_attention_causal); within tolerance for the KV-cache class
+    // and Performer's projected features.
+    check(24, |g| {
+        let block = *g.choose(&[4usize, 8, 16]);
+        let n = block * g.usize_in(1, 5);
+        let d = g.usize_in(4, 20);
+        let alpha = g.f32_in(0.5, 1.4);
+        let threads = g.usize_in(1, 4);
+        let chunk = g.usize_in(1, 40);
+        let tile = *g.choose(&[0usize, 7, 16, 33, 130]);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in MASKABLE_METHODS {
+            let params = BackendParams {
+                alpha,
+                beta: alpha,
+                block,
+                threads,
+                chunk,
+                tile,
+                ..Default::default()
+            };
+            let bk = backend_for(m, params);
+            let full = bk.forward(&q, &k, &v, &AttnSpec::CAUSAL);
+            let mut state = match bk.begin_decode(d, d) {
+                Ok(s) => s,
+                Err(e) => return prop_assert(false, format!("{m:?} refused decode: {e}")),
+            };
+            for i in 0..n {
+                let row = bk.decode_step(&mut state, q.row(i), k.row(i), v.row(i));
+                if matches!(m, Method::Lln | Method::Elu | Method::Relu) {
+                    prop_assert(
+                        row == full.row(i),
+                        format!(
+                            "{m:?} n={n} d={d} chunk={chunk}: decode step {i} not bitwise \
+                             vs causal forward"
+                        ),
+                    )?;
+                } else {
+                    let scale =
+                        full.row(i).iter().fold(0.0f32, |mx, &x| mx.max(x.abs())).max(1.0);
+                    for (a, b) in row.iter().zip(full.row(i)) {
+                        prop_assert(
+                            (a - b).abs() <= 5e-4 * scale,
+                            format!(
+                                "{m:?} n={n} d={d} tile={tile}: decode step {i} diverged \
+                                 ({a} vs {b})"
+                            ),
+                        )?;
+                    }
+                }
+            }
+            prop_assert(
+                state.len() == n,
+                format!("{m:?}: state len {} after {n} steps", state.len()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decode_state_is_flat_for_linear_methods_and_grows_for_caches() {
+    // The acceptance shape of the memory story: prefix-state sessions
+    // hold O(m·dv) bytes independent of the decoded length, cache
+    // sessions grow linearly.
+    check(8, |g| {
+        let d = g.usize_in(4, 16);
+        let steps = g.usize_in(8, 40);
+        let q = gauss_mat(g, steps, d, 0.8);
+        let k = gauss_mat(g, steps, d, 0.8);
+        let v = gauss_mat(g, steps, d, 1.0);
+        for m in MASKABLE_METHODS {
+            let bk = backend_for(m, BackendParams::default());
+            let mut state = bk.begin_decode(d, d).expect("maskable method must decode");
+            let mut bytes_at_1 = 0usize;
+            for i in 0..steps {
+                bk.decode_step(&mut state, q.row(i), k.row(i), v.row(i));
+                if i == 0 {
+                    bytes_at_1 = state.state_bytes();
+                }
+            }
+            let linear_state = matches!(m, Method::Lln | Method::Elu | Method::Relu | Method::Performer);
+            if linear_state {
+                prop_assert(
+                    state.state_bytes() == bytes_at_1,
+                    format!("{m:?}: prefix state grew {bytes_at_1} -> {}", state.state_bytes()),
+                )?;
+            } else {
+                prop_assert(
+                    state.state_bytes() > bytes_at_1,
+                    format!("{m:?}: cache state did not grow ({bytes_at_1})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn interleaved_decode_sessions_are_independent() {
+    // Two sessions stepped in lockstep through the same backend must
+    // produce exactly what each produces alone — no shared state.
+    check(16, |g| {
+        let n = 8 * g.usize_in(1, 4);
+        let d = g.usize_in(4, 16);
+        let q1 = gauss_mat(g, n, d, 0.8);
+        let k1 = gauss_mat(g, n, d, 0.8);
+        let v1 = gauss_mat(g, n, d, 1.0);
+        let q2 = gauss_mat(g, n, d, 0.8);
+        let k2 = gauss_mat(g, n, d, 0.8);
+        let v2 = gauss_mat(g, n, d, 1.0);
+        for m in [Method::Lln, Method::Softmax, Method::LlnDiag] {
+            let bk = backend_for(m, BackendParams { block: 8, ..Default::default() });
+            // Solo runs.
+            let mut sa = bk.begin_decode(d, d).unwrap();
+            let solo_a: Vec<Vec<f32>> =
+                (0..n).map(|i| bk.decode_step(&mut sa, q1.row(i), k1.row(i), v1.row(i))).collect();
+            let mut sb = bk.begin_decode(d, d).unwrap();
+            let solo_b: Vec<Vec<f32>> =
+                (0..n).map(|i| bk.decode_step(&mut sb, q2.row(i), k2.row(i), v2.row(i))).collect();
+            // Interleaved.
+            let mut ia = bk.begin_decode(d, d).unwrap();
+            let mut ib = bk.begin_decode(d, d).unwrap();
+            for i in 0..n {
+                let ra = bk.decode_step(&mut ia, q1.row(i), k1.row(i), v1.row(i));
+                let rb = bk.decode_step(&mut ib, q2.row(i), k2.row(i), v2.row(i));
+                prop_assert(ra == solo_a[i], format!("{m:?}: session A step {i} contaminated"))?;
+                prop_assert(rb == solo_b[i], format!("{m:?}: session B step {i} contaminated"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unmaskable_methods_refuse_decode_without_panicking() {
+    for m in [Method::Nystrom, Method::Linformer] {
+        let err = default_backend(m).begin_decode(16, 16).unwrap_err();
+        assert!(err.contains("causal"), "{m:?}: {err}");
+    }
 }
 
 #[test]
