@@ -1,9 +1,11 @@
 //! End-to-end validation driver (DESIGN.md deliverable): pretrain the
 //! RoBERTa-lite MLM model with BOTH softmax and LLN attention on the
-//! synthetic corpus, through all three layers (Rust driver -> AOT HLO ->
-//! Pallas-lowered kernels), and report the fig-8-style loss comparison.
+//! synthetic corpus, and report the fig-8-style loss comparison.
+//! Steps run through the AOT train artifacts when `artifacts/` exists
+//! (`make artifacts`), else through the native backprop trainer — the
+//! fig. 8 pipeline no longer needs artifacts at all.
 //!
-//!     make artifacts && cargo run --release --example train_mlm -- [steps]
+//!     cargo run --release --example train_mlm -- [steps]
 //!
 //! The run is recorded in EXPERIMENTS.md §Fig8.
 
@@ -11,13 +13,12 @@ use anyhow::Result;
 
 use lln::config::TrainConfig;
 use lln::experiments::pretrain::pretrain;
-use lln::runtime::{artifacts_dir, Engine};
+use lln::runtime::artifacts_dir;
 use lln::training::metrics::sparkline;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
     let dir = artifacts_dir(None);
-    let mut engine = Engine::new(&dir)?;
     let cfg = TrainConfig {
         lr: 5e-4,
         warmup: steps / 10,
@@ -31,7 +32,7 @@ fn main() -> Result<()> {
     for method in ["softmax", "lln"] {
         println!("\n--- {method} ---");
         let out = std::path::Path::new("runs").join(format!("train_mlm_{method}.jsonl"));
-        let r = pretrain(&mut engine, &dir, method, "mlm", steps, &cfg, Some(&out))?;
+        let r = pretrain(&dir, method, "mlm", steps, &cfg, Some(&out), false)?;
         println!("   metrics -> {}", out.display());
         results.push(r);
     }

@@ -20,6 +20,7 @@
 //! properties — see ROADMAP.md "Open items" for the checklist.
 
 use super::decode::{DecodeState, KvCache, PrefixState};
+use super::grad;
 use super::kernels::{
     blockdiag_attention_matrix_spec, blockdiag_decode_step, clamped_exp, elu_features,
     fused_quadratic_attention_spec, fused_quadratic_decode_step, fused_softmax_attention_spec,
@@ -102,6 +103,35 @@ impl BackendParams {
     }
 }
 
+/// Activations a training forward saves for its backward — the
+/// recompute-light counterpart of the stored n×n score matrix (fused
+/// softmax keeps only the per-row online statistics; the linear class
+/// keeps the lifted feature maps).  Produced by
+/// [`AttentionBackend::forward_train`], consumed by
+/// [`AttentionBackend::backward`]; the variants are method-class
+/// specific and not interchangeable.
+pub enum AttnCache {
+    /// Fused softmax: per-row online max / sum + the forward output.
+    Softmax { row_max: Vec<f32>, row_sum: Vec<f32>, out: Mat },
+    /// Linear class: the lifted feature maps + the forward output.
+    Linear { phi_q: Mat, phi_k: Mat, out: Mat },
+    /// Quadratic kernel: per-row denominators + the forward output.
+    Quadratic { den: Vec<f32>, out: Mat },
+}
+
+/// Input-side gradients of one attention forward, as returned by
+/// [`AttentionBackend::backward`].  `dalpha`/`dbeta` are the LLN
+/// feature-map exponent gradients (exactly 0.0 for every other
+/// method), which is how the native trainer learns the paper's fig. 9
+/// alpha/beta trajectories.
+pub struct AttnGrads {
+    pub dq: Mat,
+    pub dk: Mat,
+    pub dv: Mat,
+    pub dalpha: f32,
+    pub dbeta: f32,
+}
+
 /// One attention method behind a uniform interface.  Every entry point
 /// carries an [`AttnSpec`] — causal flag, optional key-length padding
 /// mask, score scale — so kernels, serving, benches, and the analysis
@@ -169,6 +199,73 @@ pub trait AttentionBackend: Send + Sync {
         let _ = (state, q, k, v);
         unreachable!("{}: decode_step without a decode state (begin_decode errs)", self.name())
     }
+
+    /// Training forward: like [`forward`](Self::forward) but also
+    /// returns the [`AttnCache`] its [`backward`](Self::backward)
+    /// needs.  Returns `Err` — never panics — for methods with no
+    /// native backward yet (Nystrom/Linformer structurally, plus the
+    /// composite/projection methods): the native trainer surfaces the
+    /// message instead of killing a training run, mirroring
+    /// [`begin_decode`](Self::begin_decode).
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let _ = (q, k, v, spec);
+        Err(format!(
+            "{} attention has no native backward pass; train it through AOT artifacts, or pick \
+             one of softmax/lln/elu/relu/quadratic",
+            self.name()
+        ))
+    }
+
+    /// Backward of [`forward_train`](Self::forward_train): input-side
+    /// gradients given the saved cache and the output cotangent.
+    /// `Err` for methods without a native backward, and for a cache of
+    /// the wrong method class.
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let _ = (q, k, v, spec, cache, d_out);
+        Err(format!(
+            "{} attention has no native backward pass; train it through AOT artifacts, or pick \
+             one of softmax/lln/elu/relu/quadratic",
+            self.name()
+        ))
+    }
+}
+
+/// Uniform `Err` for a [`AttnCache`] that reaches a backward of a
+/// different method class.
+fn wrong_cache(method: Method) -> String {
+    format!("{}: backward on a cache of a different method class", method.name())
+}
+
+/// Shared linear-class backward: φ-space reverse sweep + a per-method
+/// feature chain rule mapping `dφ` back to the raw inputs.
+fn linear_backward(
+    method: Method,
+    v: &Mat,
+    spec: &AttnSpec,
+    cache: &AttnCache,
+    d_out: &Mat,
+    chain: impl Fn(&Mat, &Mat, &Mat, &Mat) -> (Mat, Mat, f32, f32),
+) -> Result<AttnGrads, String> {
+    let AttnCache::Linear { phi_q, phi_k, out } = cache else {
+        return Err(wrong_cache(method));
+    };
+    let (d_phi_q, d_phi_k, dv) = grad::linear_attention_spec_bwd(phi_q, phi_k, v, spec, out, d_out);
+    let (dq, dk, dalpha, dbeta) = chain(phi_q, phi_k, &d_phi_q, &d_phi_k);
+    Ok(AttnGrads { dq, dk, dv, dalpha, dbeta })
 }
 
 /// Panic with a uniform message when a [`DecodeState`] reaches a
@@ -256,6 +353,34 @@ impl AttentionBackend for SoftmaxBackend {
             self.0.tile,
         )
     }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let (out, row_max, row_sum) =
+            grad::fused_softmax_attention_spec_fwd_train(q, k, v, spec, self.0.tile);
+        Ok((out.clone(), AttnCache::Softmax { row_max, row_sum, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let AttnCache::Softmax { row_max, row_sum, out } = cache else {
+            return Err(wrong_cache(Method::Softmax));
+        };
+        let (dq, dk, dv) = grad::fused_softmax_attention_spec_bwd(
+            q, k, v, spec, out, row_max, row_sum, d_out, self.0.tile,
+        );
+        Ok(AttnGrads { dq, dk, dv, dalpha: 0.0, dbeta: 0.0 })
+    }
 }
 
 struct LlnBackend(BackendParams);
@@ -291,6 +416,36 @@ impl AttentionBackend for LlnBackend {
         let DecodeState::Prefix(prefix) = state else { wrong_state(Method::Lln) };
         prefix.push(&lln_features_row(k, self.0.beta), v);
         prefix.read(&lln_features_row(q, self.0.alpha))
+    }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let phi_q = lln_features(q, self.0.alpha);
+        let phi_k = lln_features(k, self.0.beta);
+        let out = linear_attention_spec(&phi_q, &phi_k, v, spec, self.0.chunk, self.0.threads);
+        Ok((out.clone(), AttnCache::Linear { phi_q, phi_k, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let (alpha, beta) = (self.0.alpha, self.0.beta);
+        linear_backward(Method::Lln, v, spec, cache, d_out, |phi_q, phi_k, dpq, dpk| {
+            // The clamped-exp chain rule also produces dα/dβ — the
+            // hooks that let alpha/beta be *learned* natively (fig. 9).
+            let (dq, dalpha) = grad::lln_feature_bwd(q, phi_q, dpq, alpha);
+            let (dk, dbeta) = grad::lln_feature_bwd(k, phi_k, dpk, beta);
+            (dq, dk, dalpha, dbeta)
+        })
     }
 }
 
@@ -436,6 +591,31 @@ impl AttentionBackend for EluBackend {
         prefix.push(&elu_features_row(k), v);
         prefix.read(&elu_features_row(q))
     }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let phi_q = elu_features(q);
+        let phi_k = elu_features(k);
+        let out = linear_attention_spec(&phi_q, &phi_k, v, spec, self.0.chunk, self.0.threads);
+        Ok((out.clone(), AttnCache::Linear { phi_q, phi_k, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        linear_backward(Method::Elu, v, spec, cache, d_out, |_, _, dpq, dpk| {
+            (grad::elu_feature_bwd(q, dpq), grad::elu_feature_bwd(k, dpk), 0.0, 0.0)
+        })
+    }
 }
 
 struct ReluBackend(BackendParams);
@@ -464,6 +644,32 @@ impl AttentionBackend for ReluBackend {
         let relu = |x: &[f32]| x.iter().map(|&v| v.max(0.0)).collect::<Vec<f32>>();
         prefix.push(&relu(k), v);
         prefix.read(&relu(q))
+    }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let f = |m: &Mat| m.map(|x| x.max(0.0));
+        let phi_q = f(q);
+        let phi_k = f(k);
+        let out = linear_attention_spec(&phi_q, &phi_k, v, spec, self.0.chunk, self.0.threads);
+        Ok((out.clone(), AttnCache::Linear { phi_q, phi_k, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        linear_backward(Method::Relu, v, spec, cache, d_out, |_, _, dpq, dpk| {
+            (grad::relu_feature_bwd(q, dpq), grad::relu_feature_bwd(k, dpk), 0.0, 0.0)
+        })
     }
 }
 
@@ -502,6 +708,32 @@ impl AttentionBackend for QuadraticBackend {
             cache.dv(),
             self.0.tile,
         )
+    }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let (out, den) = grad::fused_quadratic_attention_spec_fwd_train(q, k, v, spec, self.0.tile);
+        Ok((out.clone(), AttnCache::Quadratic { den, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let AttnCache::Quadratic { den, out } = cache else {
+            return Err(wrong_cache(Method::Quadratic));
+        };
+        let (dq, dk, dv) =
+            grad::fused_quadratic_attention_spec_bwd(q, k, v, spec, out, den, d_out, self.0.tile);
+        Ok(AttnGrads { dq, dk, dv, dalpha: 0.0, dbeta: 0.0 })
     }
 }
 
@@ -961,6 +1193,62 @@ mod tests {
             bd.flops_model(n, d, &AttnSpec::CAUSAL),
             (4.0 * df + 5.0) * (n / 64) as f64 * (64.0 * 65.0 / 2.0)
         );
+    }
+
+    #[test]
+    fn forward_train_matches_inference_forward() {
+        let (q, k, v) = probe(48, 16, 30);
+        for spec in [FULL, AttnSpec::CAUSAL, AttnSpec::causal_padded(20)] {
+            for m in [Method::Softmax, Method::Lln, Method::Elu, Method::Relu, Method::Quadratic] {
+                let bk = backend_for(m, BackendParams { alpha: 1.2, beta: 1.2, ..Default::default() });
+                let (out, _cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+                let fwd = bk.forward(&q, &k, &v, &spec);
+                let err = out.max_abs_diff(&fwd);
+                assert!(err < 1e-4, "{m:?} {spec:?}: train-forward vs forward {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_produces_shaped_finite_grads_and_lln_alpha_flows() {
+        let (q, k, v) = probe(32, 12, 31);
+        let mut rng = Pcg64::seed(32);
+        let d_out = Mat::gaussian(32, 12, 1.0, &mut rng);
+        for m in [Method::Softmax, Method::Lln, Method::Elu, Method::Relu, Method::Quadratic] {
+            let bk = backend_for(m, BackendParams { alpha: 1.1, beta: 0.9, ..Default::default() });
+            let (_, cache) = bk.forward_train(&q, &k, &v, &AttnSpec::CAUSAL).unwrap();
+            let g = bk.backward(&q, &k, &v, &AttnSpec::CAUSAL, &cache, &d_out).unwrap();
+            assert_eq!(g.dq.shape(), q.shape(), "{m:?}");
+            assert_eq!(g.dk.shape(), k.shape(), "{m:?}");
+            assert_eq!(g.dv.shape(), v.shape(), "{m:?}");
+            for mat in [&g.dq, &g.dk, &g.dv] {
+                assert!(mat.data().iter().all(|x| x.is_finite()), "{m:?}");
+            }
+            if m == Method::Lln {
+                assert!(g.dalpha != 0.0 && g.dbeta != 0.0, "lln exponents must receive grads");
+            } else {
+                assert_eq!((g.dalpha, g.dbeta), (0.0, 0.0), "{m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn untrainable_methods_refuse_forward_train_as_err() {
+        let (q, k, v) = probe(32, 16, 33);
+        for m in [Method::Nystrom, Method::Linformer, Method::LlnDiag, Method::Performer, Method::BlockDiag] {
+            let err = default_backend(m).forward_train(&q, &k, &v, &FULL).unwrap_err();
+            assert!(err.contains("backward"), "{m:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn backward_rejects_mismatched_cache() {
+        let (q, k, v) = probe(16, 8, 34);
+        let sm = default_backend(Method::Softmax);
+        let lln = default_backend(Method::Lln);
+        let (_, lln_cache) = lln.forward_train(&q, &k, &v, &FULL).unwrap();
+        let err = sm.backward(&q, &k, &v, &FULL, &lln_cache, &v).unwrap_err();
+        assert!(err.contains("different method class"), "{err}");
     }
 
     #[test]

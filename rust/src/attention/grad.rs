@@ -1,0 +1,826 @@
+//! Backward kernels for the native training loop (ROADMAP: "fused
+//! backward pass (recompute-based, flash-style)").
+//!
+//! Two kernel classes, mirroring the forward split:
+//!
+//! * **Fused softmax / quadratic backward** — FlashAttention-style
+//!   recompute: the forward saves only the per-row online-softmax
+//!   statistics (`row_max`, `row_sum`) and the output; the backward
+//!   re-streams the K/V tiles at or below each query row (causal +
+//!   `key_len` masks honored through [`AttnSpec::row_limit`], exactly
+//!   like the fused forward) and rebuilds each probability tile from
+//!   the saved statistics.  The n×n score matrix is never
+//!   materialized: the working set is O(tile) per query row, so the
+//!   O(n·tile) memory story of the forward survives training.
+//!
+//! * **Linear-class backward** — the reverse-sweep counterpart of
+//!   [`linear_attention_causal`](super::linear_attention_causal)'s
+//!   prefix-state recurrence: a forward sweep replays the
+//!   `(Σ φ(k)vᵀ, Σ φ(k))` prefix state to produce `dφ(q)` rows and the
+//!   per-row denominators, and a reverse sweep accumulates the
+//!   *suffix* state `(Σ φ(q)·dnumᵀ, Σ dden·φ(q))` to produce `dφ(k)`
+//!   and `dv` rows — O(m·dv) state, never an n×n buffer.  Feature-map
+//!   chain rules ([`lln_feature_bwd`], [`elu_feature_bwd`],
+//!   [`relu_feature_bwd`]) lift the φ-space gradients back to q/k —
+//!   including `dα`/`dβ` for LLN's `exp(α·q)` / `exp(β·k)` maps, which
+//!   is what lets the native trainer learn the paper's fig. 9
+//!   alpha/beta trajectories.
+//!
+//! The dense references ([`softmax_attention_spec_bwd_dense`]) and the
+//! finite-difference properties in `rust/tests/prop_kernels.rs` pin
+//! every kernel here; [`super::backend`] exposes them through
+//! `AttentionBackend::{forward_train, backward}`.
+
+use super::kernels::{self, softmax_attention_matrix_spec};
+use super::{AttnSpec, EXP_CLAMP};
+use crate::tensor::Mat;
+
+// ---------------------------------------------------------------------------
+// Fused softmax: recompute forward + backward
+// ---------------------------------------------------------------------------
+
+/// Fused softmax forward that also returns the per-row online-softmax
+/// statistics the recompute backward needs: `(out, row_max, row_sum)`.
+/// Same masking, scale, and O(n·tile) streaming as
+/// [`fused_softmax_attention_spec`](super::fused_softmax_attention_spec)
+/// (values agree to streaming tolerance; this variant walks rows
+/// serially so the statistics land in one pass).  Fully masked rows
+/// (`row_limit == 0`) report `row_sum == 0` and a zero output row.
+pub fn fused_softmax_attention_spec_fwd_train(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    tile: usize,
+) -> (Mat, Vec<f32>, Vec<f32>) {
+    assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
+    assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
+    let (nq, d) = q.shape();
+    let nk = k.rows();
+    let dv = v.cols();
+    let mut out = Mat::zeros(nq, dv);
+    let mut row_max = vec![f32::NEG_INFINITY; nq];
+    let mut row_sum = vec![0.0f32; nq];
+    if nq == 0 || nk == 0 || dv == 0 {
+        return (out, row_max, row_sum);
+    }
+    let scale = spec.resolve_scale(d);
+    let tile = kernels::resolve_tile(tile).min(nk);
+    let mut scores = vec![0.0f32; tile];
+    let (kd, vd) = (k.data(), v.data());
+    for i in 0..nq {
+        let lim = spec.row_limit(i, nk);
+        let qrow = q.row(i);
+        let orow = out.row_mut(i);
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        let mut t0 = 0;
+        while t0 < lim {
+            let tn = tile.min(lim - t0);
+            let ktile = &kd[t0 * d..(t0 + tn) * d];
+            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+            let mut tile_max = f32::NEG_INFINITY;
+            for s in scores[..tn].iter_mut() {
+                *s *= scale;
+                tile_max = tile_max.max(*s);
+            }
+            let m_new = m.max(tile_max);
+            let correction = (m - m_new).exp();
+            if correction != 1.0 {
+                l *= correction;
+                for a in orow.iter_mut() {
+                    *a *= correction;
+                }
+            }
+            let mut tile_sum = 0.0f32;
+            for (j, &s) in scores[..tn].iter().enumerate() {
+                let p = (s - m_new).exp();
+                tile_sum += p;
+                let vrow = &vd[(t0 + j) * dv..(t0 + j + 1) * dv];
+                for (a, &vv) in orow.iter_mut().zip(vrow) {
+                    *a += p * vv;
+                }
+            }
+            l += tile_sum;
+            m = m_new;
+            t0 += tn;
+        }
+        if l > 0.0 {
+            let inv = 1.0 / l;
+            for a in orow.iter_mut() {
+                *a *= inv;
+            }
+        } else {
+            orow.fill(0.0);
+        }
+        row_max[i] = m;
+        row_sum[i] = l;
+    }
+    (out, row_max, row_sum)
+}
+
+/// Flash-style recompute backward of the fused softmax forward.
+///
+/// Inputs are the forward operands plus what
+/// [`fused_softmax_attention_spec_fwd_train`] saved (`out`, `row_max`,
+/// `row_sum`) and the output cotangent `d_out`; returns `(dq, dk, dv)`.
+/// Per query row the K/V tiles below its [`AttnSpec::row_limit`] are
+/// re-streamed, each probability rebuilt as
+/// `p_ij = exp(scale·q_i·k_j − m_i) / l_i`, and the standard softmax
+/// VJP applied:
+///
+/// ```text
+/// δ_i   = dO_i · O_i                        (row dot)
+/// dS_ij = p_ij (dO_i · v_j − δ_i)
+/// dq_i  = scale · Σ_j dS_ij k_j ;  dk_j += scale · dS_ij q_i
+/// dv_j += p_ij dO_i
+/// ```
+///
+/// Working set: one O(tile) score buffer — no n×n matrix at any
+/// length.  Fully masked rows (`row_sum == 0`) contribute nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_softmax_attention_spec_bwd(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    row_max: &[f32],
+    row_sum: &[f32],
+    d_out: &Mat,
+    tile: usize,
+) -> (Mat, Mat, Mat) {
+    assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
+    assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
+    assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
+    assert_eq!(out.shape(), (q.rows(), v.cols()), "out shape mismatch");
+    assert!(row_max.len() >= q.rows() && row_sum.len() >= q.rows(), "saved stats too short");
+    let (nq, d) = q.shape();
+    let nk = k.rows();
+    let dv = v.cols();
+    let mut dq = Mat::zeros(nq, d);
+    let mut dk = Mat::zeros(nk, d);
+    let mut dv_g = Mat::zeros(nk, dv);
+    if nq == 0 || nk == 0 || dv == 0 {
+        return (dq, dk, dv_g);
+    }
+    let scale = spec.resolve_scale(d);
+    let tile = kernels::resolve_tile(tile).min(nk);
+    let mut scores = vec![0.0f32; tile];
+    let mut dqrow = vec![0.0f32; d];
+    let kd = k.data();
+    for i in 0..nq {
+        let lim = spec.row_limit(i, nk);
+        if lim == 0 || row_sum[i] <= 0.0 {
+            continue;
+        }
+        let inv_l = 1.0 / row_sum[i];
+        let m = row_max[i];
+        let qrow = q.row(i);
+        let dorow = d_out.row(i);
+        // δ_i = dO_i · O_i = Σ_j p_ij (dO_i · v_j), accumulated in f64
+        // so the subtraction below stays well-conditioned.
+        let mut delta = 0.0f64;
+        for (a, b) in dorow.iter().zip(out.row(i)) {
+            delta += *a as f64 * *b as f64;
+        }
+        let delta = delta as f32;
+        dqrow.fill(0.0);
+        let mut t0 = 0;
+        while t0 < lim {
+            let tn = tile.min(lim - t0);
+            let ktile = &kd[t0 * d..(t0 + tn) * d];
+            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+            for j in 0..tn {
+                let kj = t0 + j;
+                let p = (scores[j] * scale - m).exp() * inv_l;
+                let vrow = v.row(kj);
+                let mut dp = 0.0f32;
+                for (a, b) in dorow.iter().zip(vrow) {
+                    dp += a * b;
+                }
+                let ds = p * (dp - delta) * scale;
+                let krow = k.row(kj);
+                for (o, &x) in dqrow.iter_mut().zip(krow) {
+                    *o += ds * x;
+                }
+                let dkrow = dk.row_mut(kj);
+                for (o, &x) in dkrow.iter_mut().zip(qrow) {
+                    *o += ds * x;
+                }
+                let dvrow = dv_g.row_mut(kj);
+                for (o, &x) in dvrow.iter_mut().zip(dorow) {
+                    *o += p * x;
+                }
+            }
+            t0 += tn;
+        }
+        dq.row_mut(i).copy_from_slice(&dqrow);
+    }
+    (dq, dk, dv_g)
+}
+
+/// Dense reference backward of masked softmax attention: materializes
+/// the row-stochastic matrix from
+/// [`softmax_attention_matrix_spec`](super::softmax_attention_matrix_spec)
+/// and applies the softmax VJP with full matrices.  O(n²) memory — the
+/// parity anchor the fused recompute backward is property-tested
+/// against, never a training path.
+pub fn softmax_attention_spec_bwd_dense(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    d_out: &Mat,
+) -> (Mat, Mat, Mat) {
+    let p = softmax_attention_matrix_spec(q, k, spec);
+    let dv = p.transpose().matmul(d_out);
+    // ds_ij = p_ij (dp_ij − δ_i),  dp = dO Vᵀ,  δ_i = Σ_j p_ij dp_ij.
+    let mut ds = d_out.matmul_t(v);
+    for i in 0..p.rows() {
+        let prow = p.row(i);
+        let dsrow = ds.row_mut(i);
+        let mut delta = 0.0f64;
+        for (a, b) in prow.iter().zip(dsrow.iter()) {
+            delta += *a as f64 * *b as f64;
+        }
+        let delta = delta as f32;
+        for (o, &pv) in dsrow.iter_mut().zip(prow) {
+            *o = pv * (*o - delta);
+        }
+    }
+    let scale = spec.resolve_scale(q.cols());
+    let dq = ds.matmul(k).scale(scale);
+    let dk = ds.transpose().matmul(q).scale(scale);
+    (dq, dk, dv)
+}
+
+// ---------------------------------------------------------------------------
+// Linear class: reverse-sweep prefix-state backward
+// ---------------------------------------------------------------------------
+
+/// One query row's φ(q) gradient plus its `(1/den, dden)` pair, given
+/// the prefix state `(S, z)` visible to that row:
+///
+/// ```text
+/// den   = φq·z + ε          dnum = dO / den
+/// dden  = −(O · dO) / den   dφq[f] = S[f,:]·dnum + dden·z[f]
+/// ```
+#[allow(clippy::too_many_arguments)]
+fn row_linear_bwd_q(
+    qrow: &[f32],
+    dorow: &[f32],
+    orow: &[f32],
+    s_state: &[f32],
+    z_state: &[f32],
+    dv: usize,
+    dqrow: &mut [f32],
+    inv_den_out: &mut f32,
+    dden_out: &mut f32,
+) {
+    let mut den = 0.0f32;
+    for (&qf, &zf) in qrow.iter().zip(z_state) {
+        den += qf * zf;
+    }
+    let inv = 1.0 / (den + kernels::EPS);
+    let mut od = 0.0f32;
+    for (a, b) in orow.iter().zip(dorow) {
+        od += a * b;
+    }
+    let dden = -od * inv;
+    for (f, dqf) in dqrow.iter_mut().enumerate() {
+        let srow = &s_state[f * dv..(f + 1) * dv];
+        let mut acc = 0.0f32;
+        for (s, &go) in srow.iter().zip(dorow) {
+            acc += s * go;
+        }
+        *dqf = acc * inv + dden * z_state[f];
+    }
+    *inv_den_out = inv;
+    *dden_out = dden;
+}
+
+/// Fold one query row's cotangent into the reverse-suffix state:
+/// `G[f,:] += φq[f] · dnum`, `h[f] += dden · φq[f]` with
+/// `dnum = dO / den`.
+fn accumulate_reverse_state(
+    g_state: &mut [f32],
+    h_state: &mut [f32],
+    qrow: &[f32],
+    dorow: &[f32],
+    inv_den: f32,
+    dden: f32,
+    dv: usize,
+) {
+    for (f, &qf) in qrow.iter().enumerate() {
+        h_state[f] += dden * qf;
+        if qf != 0.0 {
+            let dst = &mut g_state[f * dv..(f + 1) * dv];
+            for (o, &go) in dst.iter_mut().zip(dorow) {
+                *o += qf * go * inv_den;
+            }
+        }
+    }
+}
+
+/// One live key row's `(dφk, dv)` from the suffix state `(G, h)` of
+/// the queries that can see it: `dφk[f] = G[f,:]·v + h[f]`,
+/// `dv += Σ_f φk[f]·G[f,:]`.
+fn row_linear_bwd_k(
+    krow: &[f32],
+    vrow: &[f32],
+    g_state: &[f32],
+    h_state: &[f32],
+    dv: usize,
+    dkrow: &mut [f32],
+    dvrow: &mut [f32],
+) {
+    for (f, dkf) in dkrow.iter_mut().enumerate() {
+        let grow = &g_state[f * dv..(f + 1) * dv];
+        let mut acc = 0.0f32;
+        for (g, b) in grow.iter().zip(vrow) {
+            acc += g * b;
+        }
+        *dkf = acc + h_state[f];
+        let kf = krow[f];
+        if kf != 0.0 {
+            for (o, &g) in dvrow.iter_mut().zip(grow) {
+                *o += kf * g;
+            }
+        }
+    }
+}
+
+/// Backward of [`linear_attention_spec`](super::linear_attention_spec)
+/// in feature space: given the lifted maps `φ(q)`, `φ(k)`, the values,
+/// the saved forward output, and the cotangent `d_out`, returns
+/// `(dφ(q), dφ(k), dv)`.
+///
+/// Causal specs run the reverse-sweep prefix-state recurrence (the
+/// mirror of `linear_attention_causal`): a forward pass replays the
+/// `(Σ φ(k)vᵀ, Σ φ(k))` prefix to emit each `dφ(q)` row and the
+/// per-row denominators, then a reverse pass accumulates the suffix
+/// state `(Σ φ(q)·dnumᵀ, Σ dden·φ(q))` — the state key row `j` needs
+/// is exactly the queries `i ≥ j` — to emit `dφ(k)` / `dv` rows.
+/// O(m·dv) state either way; no n×n buffer.  `key_len`-dead key rows
+/// receive exact-zero gradients (they never entered the forward
+/// state), and `spec.scale` is ignored exactly as the forward ignores
+/// it.
+pub fn linear_attention_spec_bwd(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    d_out: &Mat,
+) -> (Mat, Mat, Mat) {
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_k.rows(), v.rows(), "key/value row mismatch");
+    assert_eq!(out.shape(), (phi_q.rows(), v.cols()), "out shape mismatch");
+    assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
+    let (nq, m) = phi_q.shape();
+    let nk = phi_k.rows();
+    let dv = v.cols();
+    let mut d_phi_q = Mat::zeros(nq, m);
+    let mut d_phi_k = Mat::zeros(nk, m);
+    let mut d_v = Mat::zeros(nk, dv);
+    if nq == 0 || dv == 0 || m == 0 {
+        return (d_phi_q, d_phi_k, d_v);
+    }
+    let kl = spec.key_limit(nk);
+    let mut inv_den = vec![0.0f32; nq];
+    let mut dden = vec![0.0f32; nq];
+
+    if spec.causal {
+        assert_eq!(nq, nk, "causal linear backward requires aligned q/k row counts");
+        // Forward prefix sweep: dφq rows + per-row denominators.
+        let mut s_state = vec![0.0f32; m * dv];
+        let mut z_state = vec![0.0f32; m];
+        for i in 0..nq {
+            if i < kl {
+                kernels::accumulate_state(&mut s_state, &mut z_state, phi_k.row(i), v.row(i), dv);
+            }
+            let (iv, dd) = (&mut inv_den[i], &mut dden[i]);
+            row_linear_bwd_q(
+                phi_q.row(i),
+                d_out.row(i),
+                out.row(i),
+                &s_state,
+                &z_state,
+                dv,
+                d_phi_q.row_mut(i),
+                iv,
+                dd,
+            );
+        }
+        // Reverse suffix sweep: key row j reads the queries i >= j.
+        let mut g_state = vec![0.0f32; m * dv];
+        let mut h_state = vec![0.0f32; m];
+        for i in (0..nq).rev() {
+            accumulate_reverse_state(
+                &mut g_state,
+                &mut h_state,
+                phi_q.row(i),
+                d_out.row(i),
+                inv_den[i],
+                dden[i],
+                dv,
+            );
+            if i < kl {
+                row_linear_bwd_k(
+                    phi_k.row(i),
+                    v.row(i),
+                    &g_state,
+                    &h_state,
+                    dv,
+                    d_phi_k.row_mut(i),
+                    d_v.row_mut(i),
+                );
+            }
+        }
+    } else {
+        // Bidirectional: every query reads the same state over the
+        // live key prefix, and every live key reads every query.
+        let mut s_state = vec![0.0f32; m * dv];
+        let mut z_state = vec![0.0f32; m];
+        for j in 0..kl {
+            kernels::accumulate_state(&mut s_state, &mut z_state, phi_k.row(j), v.row(j), dv);
+        }
+        let mut g_state = vec![0.0f32; m * dv];
+        let mut h_state = vec![0.0f32; m];
+        for i in 0..nq {
+            let (iv, dd) = (&mut inv_den[i], &mut dden[i]);
+            row_linear_bwd_q(
+                phi_q.row(i),
+                d_out.row(i),
+                out.row(i),
+                &s_state,
+                &z_state,
+                dv,
+                d_phi_q.row_mut(i),
+                iv,
+                dd,
+            );
+            accumulate_reverse_state(
+                &mut g_state,
+                &mut h_state,
+                phi_q.row(i),
+                d_out.row(i),
+                inv_den[i],
+                dden[i],
+                dv,
+            );
+        }
+        for j in 0..kl {
+            row_linear_bwd_k(
+                phi_k.row(j),
+                v.row(j),
+                &g_state,
+                &h_state,
+                dv,
+                d_phi_k.row_mut(j),
+                d_v.row_mut(j),
+            );
+        }
+    }
+    (d_phi_q, d_phi_k, d_v)
+}
+
+// ---------------------------------------------------------------------------
+// Feature-map chain rules (φ-space gradients -> q/k space)
+// ---------------------------------------------------------------------------
+
+/// Chain rule through LLN's clamped-exp feature map
+/// `φ(x) = exp(clamp(s·x))`: returns `(dx, ds)` given the input `x`,
+/// the forward features `φ`, their cotangent `dφ`, and the exponent
+/// `s` (alpha for queries, beta for keys).  Inside the clamp,
+/// `dφ/dx = s·φ` and `dφ/ds = x·φ`; at saturation the derivative is
+/// exactly zero (the clamp is flat there), which also keeps the
+/// trained exponents from being pushed by saturated features.
+pub fn lln_feature_bwd(x: &Mat, phi: &Mat, d_phi: &Mat, s: f32) -> (Mat, f32) {
+    assert_eq!(x.shape(), phi.shape(), "x/phi shape mismatch");
+    assert_eq!(x.shape(), d_phi.shape(), "x/d_phi shape mismatch");
+    let mut dx = Mat::zeros(x.rows(), x.cols());
+    let mut dscale = 0.0f64;
+    for ((o, &xv), (&pv, &dp)) in dx
+        .data_mut()
+        .iter_mut()
+        .zip(x.data())
+        .zip(phi.data().iter().zip(d_phi.data()))
+    {
+        if (s * xv).abs() < EXP_CLAMP {
+            *o = s * pv * dp;
+            dscale += (xv * pv * dp) as f64;
+        }
+    }
+    (dx, dscale as f32)
+}
+
+/// Chain rule through the ELU feature map
+/// `φ(x) = x + 1 (x > 0) | exp(x) (x ≤ 0)`:
+/// `dφ/dx = 1 (x > 0) | exp(x) (x ≤ 0)` — continuous at 0.
+pub fn elu_feature_bwd(x: &Mat, d_phi: &Mat) -> Mat {
+    assert_eq!(x.shape(), d_phi.shape(), "x/d_phi shape mismatch");
+    let mut dx = d_phi.clone();
+    for (o, &xv) in dx.data_mut().iter_mut().zip(x.data()) {
+        if xv <= 0.0 {
+            *o *= xv.exp();
+        }
+    }
+    dx
+}
+
+/// Chain rule through the ReLU feature map: pass where `x > 0`.
+pub fn relu_feature_bwd(x: &Mat, d_phi: &Mat) -> Mat {
+    assert_eq!(x.shape(), d_phi.shape(), "x/d_phi shape mismatch");
+    let mut dx = d_phi.clone();
+    for (o, &xv) in dx.data_mut().iter_mut().zip(x.data()) {
+        if xv <= 0.0 {
+            *o = 0.0;
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Quadratic kernel: recompute forward + backward
+// ---------------------------------------------------------------------------
+
+/// Fused quadratic forward that also returns the per-row denominators
+/// `Σ_j (q_i·k_j)²` (pre-ε) the backward needs.  Same masking and
+/// streaming as
+/// [`fused_quadratic_attention_spec`](super::fused_quadratic_attention_spec).
+pub fn fused_quadratic_attention_spec_fwd_train(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    tile: usize,
+) -> (Mat, Vec<f32>) {
+    assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
+    assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
+    let (nq, d) = q.shape();
+    let nk = k.rows();
+    let dv = v.cols();
+    let mut out = Mat::zeros(nq, dv);
+    let mut den = vec![0.0f32; nq];
+    if nq == 0 || nk == 0 || dv == 0 {
+        return (out, den);
+    }
+    let tile = kernels::resolve_tile(tile).min(nk);
+    let mut scores = vec![0.0f32; tile];
+    let (kd, vd) = (k.data(), v.data());
+    for i in 0..nq {
+        let lim = spec.row_limit(i, nk);
+        let qrow = q.row(i);
+        let orow = out.row_mut(i);
+        let mut den_i = 0.0f32;
+        let mut t0 = 0;
+        while t0 < lim {
+            let tn = tile.min(lim - t0);
+            let ktile = &kd[t0 * d..(t0 + tn) * d];
+            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+            for (j, &s) in scores[..tn].iter().enumerate() {
+                let w = s * s;
+                den_i += w;
+                let vrow = &vd[(t0 + j) * dv..(t0 + j + 1) * dv];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+            t0 += tn;
+        }
+        let inv = 1.0 / (den_i + kernels::EPS);
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+        den[i] = den_i;
+    }
+    (out, den)
+}
+
+/// Recompute backward of the fused quadratic-kernel forward: same
+/// tile streaming as [`fused_softmax_attention_spec_bwd`] with the
+/// κ(q,k) = (q·k)² weight VJP (`dw_ij = dO_i·v_j / denε − δ_i / denε`,
+/// `ds_ij = 2 s_ij dw_ij`, `denε = den_i + ε`).  O(tile) working set.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_quadratic_attention_spec_bwd(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    den: &[f32],
+    d_out: &Mat,
+    tile: usize,
+) -> (Mat, Mat, Mat) {
+    assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
+    assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
+    assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
+    assert!(den.len() >= q.rows(), "saved denominators too short");
+    let (nq, d) = q.shape();
+    let nk = k.rows();
+    let dv = v.cols();
+    let mut dq = Mat::zeros(nq, d);
+    let mut dk = Mat::zeros(nk, d);
+    let mut dv_g = Mat::zeros(nk, dv);
+    if nq == 0 || nk == 0 || dv == 0 {
+        return (dq, dk, dv_g);
+    }
+    let tile = kernels::resolve_tile(tile).min(nk);
+    let mut scores = vec![0.0f32; tile];
+    let mut dqrow = vec![0.0f32; d];
+    let kd = k.data();
+    for i in 0..nq {
+        let lim = spec.row_limit(i, nk);
+        if lim == 0 {
+            continue;
+        }
+        let inv = 1.0 / (den[i] + kernels::EPS);
+        let qrow = q.row(i);
+        let dorow = d_out.row(i);
+        let mut delta = 0.0f64;
+        for (a, b) in dorow.iter().zip(out.row(i)) {
+            delta += *a as f64 * *b as f64;
+        }
+        // dden_i = −(O_i · dO_i) / denε — the normalizer's pullback.
+        let dden = -(delta as f32) * inv;
+        dqrow.fill(0.0);
+        let mut t0 = 0;
+        while t0 < lim {
+            let tn = tile.min(lim - t0);
+            let ktile = &kd[t0 * d..(t0 + tn) * d];
+            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+            for j in 0..tn {
+                let kj = t0 + j;
+                let s = scores[j];
+                let vrow = v.row(kj);
+                let mut dp = 0.0f32;
+                for (a, b) in dorow.iter().zip(vrow) {
+                    dp += a * b;
+                }
+                let dw = dp * inv + dden;
+                let ds = 2.0 * s * dw;
+                let w = s * s;
+                let krow = k.row(kj);
+                for (o, &x) in dqrow.iter_mut().zip(krow) {
+                    *o += ds * x;
+                }
+                let dkrow = dk.row_mut(kj);
+                for (o, &x) in dkrow.iter_mut().zip(qrow) {
+                    *o += ds * x;
+                }
+                let dvrow = dv_g.row_mut(kj);
+                for (o, &x) in dvrow.iter_mut().zip(dorow) {
+                    *o += w * inv * x;
+                }
+            }
+            t0 += tn;
+        }
+        dq.row_mut(i).copy_from_slice(&dqrow);
+    }
+    (dq, dk, dv_g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::kernels::{
+        fused_quadratic_attention_spec, fused_softmax_attention_spec, lln_features,
+    };
+    use crate::rng::Pcg64;
+
+    fn probe(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg64::seed(seed);
+        crate::attention::gaussian_qkv(n, d, 0.8, 0.8, &mut rng)
+    }
+
+    #[test]
+    fn fwd_train_matches_fused_forward_under_specs() {
+        let (q, k, v) = probe(48, 12, 1);
+        for spec in [
+            AttnSpec::FULL,
+            AttnSpec::CAUSAL,
+            AttnSpec::causal_padded(20),
+            AttnSpec::padded(0),
+            AttnSpec { scale: Some(0.2), ..AttnSpec::FULL },
+        ] {
+            for tile in [1usize, 7, 0, 200] {
+                let fused = fused_softmax_attention_spec(&q, &k, &v, &spec, tile, 0, 1);
+                let (out, m, l) = fused_softmax_attention_spec_fwd_train(&q, &k, &v, &spec, tile);
+                let err = out.max_abs_diff(&fused);
+                assert!(err < 1e-5, "{spec:?} tile={tile}: {err}");
+                assert_eq!(m.len(), 48);
+                assert_eq!(l.len(), 48);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_softmax_backward_matches_dense_reference() {
+        let (q, k, v) = probe(40, 10, 2);
+        let mut rng = Pcg64::seed(3);
+        let d_out = Mat::gaussian(40, 10, 1.0, &mut rng);
+        for spec in [AttnSpec::FULL, AttnSpec::CAUSAL, AttnSpec::causal_padded(17)] {
+            for tile in [1usize, 9, 0] {
+                let (out, m, l) = fused_softmax_attention_spec_fwd_train(&q, &k, &v, &spec, tile);
+                let (dq, dk, dv) =
+                    fused_softmax_attention_spec_bwd(&q, &k, &v, &spec, &out, &m, &l, &d_out, tile);
+                let (dq2, dk2, dv2) = softmax_attention_spec_bwd_dense(&q, &k, &v, &spec, &d_out);
+                assert!(dq.max_abs_diff(&dq2) < 1e-4, "{spec:?} tile={tile} dq");
+                assert!(dk.max_abs_diff(&dk2) < 1e-4, "{spec:?} tile={tile} dk");
+                assert!(dv.max_abs_diff(&dv2) < 1e-4, "{spec:?} tile={tile} dv");
+            }
+        }
+    }
+
+    #[test]
+    fn quadratic_fwd_train_matches_fused_forward() {
+        let (q, k, v) = probe(36, 8, 4);
+        for spec in [AttnSpec::FULL, AttnSpec::CAUSAL, AttnSpec::padded(11)] {
+            let fused = fused_quadratic_attention_spec(&q, &k, &v, &spec, 13, 0, 1);
+            let (out, den) = fused_quadratic_attention_spec_fwd_train(&q, &k, &v, &spec, 13);
+            assert!(out.max_abs_diff(&fused) < 1e-4, "{spec:?}");
+            assert!(den.iter().all(|x| x.is_finite() && *x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn linear_backward_zeroes_dead_key_rows() {
+        let (q, k, v) = probe(32, 8, 5);
+        let pq = lln_features(&q, 1.1);
+        let pk = lln_features(&k, 1.1);
+        let mut rng = Pcg64::seed(6);
+        let d_out = Mat::gaussian(32, 8, 1.0, &mut rng);
+        for spec in [AttnSpec::causal_padded(10), AttnSpec::padded(10)] {
+            let out = crate::attention::linear_attention_spec(&pq, &pk, &v, &spec, 7, 1);
+            let (dpq, dpk, dv) = linear_attention_spec_bwd(&pq, &pk, &v, &spec, &out, &d_out);
+            assert_eq!(dpq.shape(), pq.shape());
+            for j in 10..32 {
+                assert!(dpk.row(j).iter().all(|&x| x == 0.0), "{spec:?}: dead dphi_k row {j}");
+                assert!(dv.row(j).iter().all(|&x| x == 0.0), "{spec:?}: dead dv row {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn lln_feature_chain_rule_saturates_to_zero() {
+        let x = Mat::from_vec(1, 3, vec![0.5, 40.0, -40.0]);
+        let phi = lln_features(&x, 1.0);
+        let d_phi = Mat::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        let (dx, ds) = lln_feature_bwd(&x, &phi, &d_phi, 1.0);
+        // In-range entry: dφ/dx = φ.
+        assert!((dx.get(0, 0) - phi.get(0, 0)).abs() < 1e-6);
+        // Saturated entries: exactly zero.
+        assert_eq!(dx.get(0, 1), 0.0);
+        assert_eq!(dx.get(0, 2), 0.0);
+        // dα only sees the live entry: x·φ·dφ = 0.5·e^0.5.
+        assert!((ds - 0.5 * 0.5f32.exp()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn backward_kernels_handle_degenerate_shapes() {
+        let q = Mat::zeros(0, 4);
+        let k = Mat::zeros(3, 4);
+        let v = Mat::zeros(3, 2);
+        let out = Mat::zeros(0, 2);
+        let (dq, dk, dv) = fused_softmax_attention_spec_bwd(
+            &q,
+            &k,
+            &v,
+            &AttnSpec::FULL,
+            &out,
+            &[],
+            &[],
+            &out,
+            0,
+        );
+        assert_eq!(dq.shape(), (0, 4));
+        assert_eq!(dk.shape(), (3, 4));
+        assert_eq!(dv.shape(), (3, 2));
+    }
+
+    #[test]
+    fn fused_backward_long_causal_runs_in_tile_memory() {
+        // The acceptance smoke: a causal fused backward at n=4096 never
+        // touches an n×n buffer (working set is O(tile) by
+        // construction) — this would OOM/crawl if it materialized
+        // 4096² scores.
+        let n = 4096;
+        let mut rng = Pcg64::seed(7);
+        let q = Mat::gaussian(n, 4, 0.8, &mut rng);
+        let k = Mat::gaussian(n, 4, 0.8, &mut rng);
+        let v = Mat::gaussian(n, 2, 1.0, &mut rng);
+        let d_out = Mat::gaussian(n, 2, 1.0, &mut rng);
+        let spec = AttnSpec::CAUSAL;
+        let (out, m, l) = fused_softmax_attention_spec_fwd_train(&q, &k, &v, &spec, 256);
+        let (dq, dk, dv) =
+            fused_softmax_attention_spec_bwd(&q, &k, &v, &spec, &out, &m, &l, &d_out, 256);
+        assert!(dq.data().iter().all(|x| x.is_finite()));
+        assert!(dk.data().iter().all(|x| x.is_finite()));
+        assert!(dv.data().iter().all(|x| x.is_finite()));
+        // Row 0's softmax is over a single key (p = 1 whatever q_0 is),
+        // so its query gradient must vanish.
+        assert!(dq.row(0).iter().all(|&x| x.abs() < 1e-5), "{:?}", dq.row(0));
+    }
+}

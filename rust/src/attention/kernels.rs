@@ -9,7 +9,7 @@ use super::{AttnSpec, EXP_CLAMP};
 use crate::rng::Pcg64;
 use crate::tensor::Mat;
 
-const EPS: f32 = 1e-6;
+pub(crate) const EPS: f32 = 1e-6;
 
 #[inline]
 pub(crate) fn clamped_exp(x: f32) -> f32 {
@@ -129,7 +129,7 @@ pub const DEFAULT_FUSED_UNROLL: usize = 4;
 /// score buffer stops paying for itself.
 pub const MAX_FUSED_UNROLL: usize = 8;
 
-fn resolve_tile(tile: usize) -> usize {
+pub(crate) fn resolve_tile(tile: usize) -> usize {
     if tile == 0 {
         DEFAULT_FUSED_TILE
     } else {

@@ -8,10 +8,14 @@
 
 pub mod backend;
 pub mod decode;
+pub mod grad;
 pub mod kernels;
 pub mod moment_matching;
 
-pub use backend::{all_backends, backend_for, default_backend, AttentionBackend, BackendParams};
+pub use backend::{
+    all_backends, backend_for, default_backend, AttentionBackend, AttnCache, AttnGrads,
+    BackendParams,
+};
 pub use decode::{DecodeState, KvCache, PrefixState};
 pub use kernels::*;
 pub use moment_matching::MomentMatcher;

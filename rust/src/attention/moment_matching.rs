@@ -44,10 +44,28 @@ impl MomentMatcher {
         Some(Self { a: v.get("a")?.as_f64()?, b: v.get("b")?.as_f64()? })
     }
 
-    /// Paper eq. 10.
+    /// Whether the fitted broad-regime line is usable by eq. 10: the
+    /// slope must be positive (variance grows with s~²) and both
+    /// constants finite.  A degenerate fit (possible on adversarial
+    /// seeds / tiny probe budgets) would otherwise push a *negative*
+    /// `s2_tilde` through the pre-clamp division and emit garbage
+    /// alpha/beta.
+    pub fn is_valid(&self) -> bool {
+        self.a.is_finite() && self.b.is_finite() && self.a > 1e-9
+    }
+
+    /// Paper eq. 10.  A degenerate fit (see [`is_valid`](Self::is_valid))
+    /// falls back to identity matching (`a = 1, b = 0`, i.e.
+    /// `s~² = σq²σk²`) instead of dividing by a non-positive slope —
+    /// the resulting exponents are then merely un-matched, never
+    /// negative, non-finite, or clamped-to-epsilon garbage.
     pub fn alpha_beta(&self, sigma_q: f64, sigma_k: f64) -> (f32, f32) {
         let s2_sm = sigma_q * sigma_q * sigma_k * sigma_k;
-        let s2_tilde = ((s2_sm - self.b) / self.a).max(1e-4);
+        let s2_tilde = if self.is_valid() {
+            ((s2_sm - self.b) / self.a).max(1e-4)
+        } else {
+            s2_sm.max(1e-4)
+        };
         let s_tilde = s2_tilde.sqrt();
         let inv_sqrt2 = std::f64::consts::FRAC_1_SQRT_2;
         (
@@ -127,6 +145,37 @@ mod tests {
         let naive = stats::log_variance(&lln_attention_matrix(&q, &k, 1.0, 1.0), 1e-30);
         let sm = stats::log_variance(&softmax_attention_matrix(&q, &k), 1e-30);
         assert!(naive < 0.25 * sm, "naive={naive} sm={sm}");
+    }
+
+    #[test]
+    fn degenerate_fit_falls_back_to_identity_matching() {
+        // Regression: a non-positive or non-finite slope used to flow
+        // straight into `(s2_sm - b) / a`, yielding a negative (or
+        // NaN) s2_tilde whose 1e-4 clamp produced near-zero alpha/beta
+        // garbage.  Each degenerate matcher must now report invalid
+        // and produce the identity-matched exponents instead.
+        let identity = MomentMatcher { a: 1.0, b: 0.0 };
+        assert!(identity.is_valid());
+        let want = identity.alpha_beta(1.2, 1.2);
+        for mm in [
+            MomentMatcher { a: 0.0, b: 0.1 },
+            MomentMatcher { a: -0.5, b: 0.1 },
+            MomentMatcher { a: f64::NAN, b: 0.1 },
+            MomentMatcher { a: 2.0, b: f64::INFINITY },
+        ] {
+            assert!(!mm.is_valid(), "{mm:?} must be flagged degenerate");
+            let (a, b) = mm.alpha_beta(1.2, 1.2);
+            assert!(a.is_finite() && b.is_finite(), "{mm:?}: non-finite exponents");
+            assert!(a > 0.1 && b > 0.1, "{mm:?}: clamped-to-epsilon garbage ({a}, {b})");
+            assert_eq!((a, b), want, "{mm:?}: must match the identity fallback");
+        }
+        // A healthy fit is untouched by the guard.
+        let healthy = MomentMatcher { a: 2.0, b: 0.5 };
+        assert!(healthy.is_valid());
+        let (a, _) = healthy.alpha_beta(1.5, 1.5);
+        let s2 = (1.5f64.powi(4) - 0.5) / 2.0;
+        let expect = (s2.sqrt() * std::f64::consts::FRAC_1_SQRT_2 / 1.5) as f32;
+        assert!((a - expect).abs() < 1e-6);
     }
 
     #[test]

@@ -16,18 +16,33 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Mean seconds per iteration; 0.0 (never NaN) on an empty sample
+    /// set (an interrupted or zero-budget run).
     pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
     pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         crate::stats::percentile(&self.samples, q)
     }
     pub fn std(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         let m = self.mean();
         (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / self.samples.len() as f64).sqrt()
     }
     pub fn throughput(&self) -> f64 {
-        self.units_per_iter / self.mean()
+        let m = self.mean();
+        if m <= 0.0 {
+            return 0.0;
+        }
+        self.units_per_iter / m
     }
 
     pub fn report_line(&self) -> String {
@@ -81,13 +96,16 @@ impl Bench {
     }
 
     /// Time `f`, preventing dead-code elimination via the returned value.
+    /// Always takes at least one sample — a zero `min_iters`/budget
+    /// configuration (or an interrupted run's leftovers) must never
+    /// produce an empty result that panics downstream stats.
     pub fn run<T>(&mut self, name: &str, units_per_iter: f64, mut f: impl FnMut() -> T) -> &BenchResult {
         for _ in 0..self.warmup_iters {
             black_box(f());
         }
         let mut samples = Vec::new();
         let budget_start = Instant::now();
-        while samples.len() < self.min_iters
+        while samples.len() < self.min_iters.max(1)
             || (samples.len() < self.max_iters
                 && budget_start.elapsed().as_secs_f64() < self.time_budget_secs)
         {
@@ -95,8 +113,9 @@ impl Bench {
             black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
         }
+        let idx = self.results.len();
         self.results.push(BenchResult { name: name.to_string(), samples, units_per_iter });
-        let r = self.results.last().unwrap();
+        let r = &self.results[idx];
         println!("{}", r.report_line());
         r
     }
@@ -178,6 +197,10 @@ const SPEEDUP_PAIRS: &[(&str, &str)] = &[
     // re-run-the-whole-causal-forward-per-new-token serving loop.
     ("softmax_decode_step", "softmax_fused_causal"),
     ("lln_decode_step", "lln_causal"),
+    // Backward-vs-forward cost ratios: the flash-style recompute
+    // backward classically lands at ~2-2.5x its forward.
+    ("softmax_fused", "softmax_fused_bwd"),
+    ("lln_streamed", "lln_bwd"),
 ];
 
 /// The PR-1 scalar-dot baseline is only timed up to this n — it is the
@@ -237,14 +260,21 @@ impl KernelReport {
             ));
         }
         s.push_str("  ],\n");
-        s.push_str("  \"speedups\": {\n");
+        // Sparse reports (a capped method row, an interrupted run)
+        // simply have fewer — possibly zero — derivable pairs; absent
+        // pairs are skipped, never unwrapped.
         let lines: Vec<String> = self
             .speedups()
             .iter()
             .map(|(fast, slow, n, sp)| format!("    \"{fast}_vs_{slow}_n{n}\": {sp:.2}"))
             .collect();
-        s.push_str(&lines.join(",\n"));
-        s.push_str("\n  }\n}\n");
+        if lines.is_empty() {
+            s.push_str("  \"speedups\": {}\n}\n");
+        } else {
+            s.push_str("  \"speedups\": {\n");
+            s.push_str(&lines.join(",\n"));
+            s.push_str("\n  }\n}\n");
+        }
         s
     }
 
@@ -419,6 +449,42 @@ pub fn run_kernel_bench(
             .run(&format!("lln_diag n={n}"), 1.0, || diag.forward(&q, &k, &v, &FULL))
             .clone();
         push(&mut records, "lln_diag", n, &r);
+
+        // Backward rows (the native-training hot path): flash-style
+        // recompute softmax backward — O(live pairs) like the forward,
+        // capped with the other quadratic-cost baselines — and the
+        // linear-class reverse-sweep backward (O(n·d²), every n).  The
+        // forward statistics are saved once outside the timer, exactly
+        // as a training step would hold them.
+        let d_out = Mat::gaussian(n, d, 1.0, &mut rng);
+        if n <= PR1_BASELINE_MAX_N {
+            let (o, rm, rs) = crate::attention::grad::fused_softmax_attention_spec_fwd_train(
+                &q, &k, &v, &FULL, params.tile,
+            );
+            let r = b
+                .run(&format!("softmax_fused_bwd n={n}"), 1.0, || {
+                    crate::attention::grad::fused_softmax_attention_spec_bwd(
+                        &q, &k, &v, &FULL, &o, &rm, &rs, &d_out, params.tile,
+                    )
+                })
+                .clone();
+            push(&mut records, "softmax_fused_bwd", n, &r);
+        }
+        {
+            let pq = crate::attention::lln_features(&q, 2.2);
+            let pk = crate::attention::lln_features(&k, 2.2);
+            let lout = crate::attention::linear_attention_spec(
+                &pq, &pk, &v, &FULL, params.chunk, params.threads,
+            );
+            let r = b
+                .run(&format!("lln_bwd n={n}"), 1.0, || {
+                    crate::attention::grad::linear_attention_spec_bwd(
+                        &pq, &pk, &v, &FULL, &lout, &d_out,
+                    )
+                })
+                .clone();
+            push(&mut records, "lln_bwd", n, &r);
+        }
     }
 
     KernelReport { d, threads, records }
@@ -518,6 +584,8 @@ mod tests {
             "lln_diag",
             "matmul_t_pr1",
             "matmul_t_blocked",
+            "softmax_fused_bwd",
+            "lln_bwd",
         ] {
             assert!(report.mean_ns(name, 64).is_some(), "{name} missing");
         }
@@ -531,5 +599,71 @@ mod tests {
         // The amortized decode-vs-prefill pairs must be derivable too.
         assert!(report.speedup("softmax_decode_step", "softmax_fused_causal", 64).is_some());
         assert!(report.speedup("lln_decode_step", "lln_causal", 64).is_some());
+        // And the new backward-vs-forward cost pairs.
+        assert!(report.speedup("softmax_fused", "softmax_fused_bwd", 64).is_some());
+        assert!(report.speedup("lln_streamed", "lln_bwd", 64).is_some());
+    }
+
+    #[test]
+    fn zero_budget_bench_still_yields_a_sample() {
+        // Regression: a zero-iteration configuration used to produce an
+        // empty sample set whose mean/percentile were NaN (and whose
+        // report line could panic an interrupted `lln bench --json`).
+        let mut b = Bench {
+            warmup_iters: 0,
+            min_iters: 0,
+            max_iters: 0,
+            time_budget_secs: 0.0,
+            results: vec![],
+        };
+        let r = b.run("starved", 1.0, || 1u32).clone();
+        assert!(!r.samples.is_empty(), "must take at least one sample");
+        assert!(r.mean().is_finite() && r.percentile(50.0).is_finite());
+        assert!(r.throughput().is_finite());
+        // A genuinely empty result (interrupted run artifact) reports
+        // zeros, never NaN or a panic.
+        let empty = BenchResult { name: "empty".into(), samples: vec![], units_per_iter: 1.0 };
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.percentile(95.0), 0.0);
+        assert_eq!(empty.std(), 0.0);
+        assert_eq!(empty.throughput(), 0.0);
+        let _ = empty.report_line();
+    }
+
+    #[test]
+    fn sparse_report_json_skips_absent_pairs() {
+        // Regression: a report whose baseline rows are capped (softmax
+        // stops at n=4096) or missing (interrupted run) must emit
+        // well-formed JSON with only the derivable pairs — `lln bench
+        // --json` used to be crashable on absent pair lookups.
+        let rec = |name: &'static str, n: usize, mean_ns: f64| KernelRecord {
+            name,
+            n,
+            mean_ns,
+            p50_ns: mean_ns,
+            iters: 1,
+        };
+        // Only one method measured: no pair is derivable at all.
+        let lonely = KernelReport { d: 64, threads: 2, records: vec![rec("lln_streamed", 8192, 5e5)] };
+        assert!(lonely.speedups().is_empty());
+        assert!(lonely.speedup("softmax_fused", "softmax_pipeline_pr1", 8192).is_none());
+        let json = lonely.to_json();
+        assert!(crate::util::json::Json::parse(&json).is_ok(), "unparsable JSON:\n{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        // Mixed: the fast row exists at 8192 where the capped baseline
+        // does not — that pair is skipped, the 4096 pair survives.
+        let mixed = KernelReport {
+            d: 64,
+            threads: 2,
+            records: vec![
+                rec("softmax_fused", 4096, 1e6),
+                rec("softmax_fused", 8192, 4e6),
+                rec("softmax_fused_bwd", 4096, 2.5e6),
+            ],
+        };
+        let pairs = mixed.speedups();
+        assert_eq!(pairs.len(), 1);
+        assert_eq!((pairs[0].0, pairs[0].1, pairs[0].2), ("softmax_fused", "softmax_fused_bwd", 4096));
+        assert!(crate::util::json::Json::parse(&mixed.to_json()).is_ok());
     }
 }

@@ -196,6 +196,15 @@ pub struct TrainConfig {
     pub log_every: usize,
     pub eval_every: usize,
     pub out_dir: String,
+    /// Batch size override for the native trainer (0 = the model
+    /// size's default; the artifact path always uses the AOT batch).
+    pub batch: usize,
+    /// Sequence length override for the native trainer (0 = default).
+    pub seqlen: usize,
+    /// Force the native backprop trainer even when AOT artifacts
+    /// exist (`lln train --native`).  With no artifacts directory the
+    /// native path is picked automatically regardless of this flag.
+    pub native: bool,
 }
 
 impl Default for TrainConfig {
@@ -209,6 +218,9 @@ impl Default for TrainConfig {
             log_every: 10,
             eval_every: 50,
             out_dir: "runs".into(),
+            batch: 0,
+            seqlen: 0,
+            native: false,
         }
     }
 }
@@ -225,6 +237,9 @@ impl TrainConfig {
             log_every: t.usize_or("train.log_every", d.log_every),
             eval_every: t.usize_or("train.eval_every", d.eval_every),
             out_dir: t.str_or("train.out_dir", &d.out_dir),
+            batch: t.usize_or("train.batch", d.batch),
+            seqlen: t.usize_or("train.seqlen", d.seqlen),
+            native: t.bool_or("train.native", d.native),
         }
     }
 
@@ -414,6 +429,18 @@ method = lln_diag
             Value::Array(xs) => assert_eq!(xs.len(), 2),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn train_config_native_knobs_parse() {
+        // Defaults: artifact path, auto batch/seqlen.
+        let d = TrainConfig::default();
+        assert!(!d.native);
+        assert_eq!((d.batch, d.seqlen), (0, 0));
+        let t = ConfigTable::parse("[train]\nnative = true\nbatch = 2\nseqlen = 32").unwrap();
+        let tc = TrainConfig::from_table(&t);
+        assert!(tc.native);
+        assert_eq!((tc.batch, tc.seqlen), (2, 32));
     }
 
     #[test]

@@ -35,6 +35,15 @@ pub struct Request {
     /// native executor applies each request's own
     /// [`AttnSpec`](crate::attention::AttnSpec) member by member.
     pub causal: bool,
+    /// Per-request score-temperature override (the
+    /// [`AttnSpec::scale`](crate::attention::AttnSpec) field); `None`
+    /// = the method's default `1/sqrt(d)`.  Honored by the native
+    /// executors for maskable methods (linear-class kernels without a
+    /// score temperature ignore it, like the kernels do); rejected per
+    /// request by the PJRT path (its AOT executables bake the default
+    /// in) and by Nystrom/Linformer (their encoders degrade non-full
+    /// specs wholesale, which would drop it silently).
+    pub scale: Option<f32>,
     pub enqueued_at: std::time::Instant,
     pub resp: std::sync::mpsc::Sender<Response>,
 }

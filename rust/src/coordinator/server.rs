@@ -233,12 +233,29 @@ impl Coordinator {
     /// batch variable-length (and mixed causal/bidirectional) traffic
     /// instead of assuming square full attention.
     pub fn submit_with(&self, tokens: Vec<i32>, causal: bool) -> Result<mpsc::Receiver<Response>> {
+        self.submit_spec(tokens, causal, None)
+    }
+
+    /// Submit a request carrying its full per-request attention spec:
+    /// causal flag plus an optional score-temperature override.  The
+    /// request's own spec always wins over the worker-wide `[compute]
+    /// causal` default's implied fields — in particular the scale
+    /// rides all the way into the executor's
+    /// [`AttnSpec`](crate::attention::AttnSpec) instead of being
+    /// silently dropped when the worker default flips masks.
+    pub fn submit_spec(
+        &self,
+        tokens: Vec<i32>,
+        causal: bool,
+        scale: Option<f32>,
+    ) -> Result<mpsc::Receiver<Response>> {
         let (bucket, queue) = self.queue_for(tokens.len())?;
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             tokens,
             causal,
+            scale,
             enqueued_at: Instant::now(),
             resp: tx,
         };
@@ -255,6 +272,17 @@ impl Coordinator {
     /// Submit with a causal flag and block for the result.
     pub fn infer_with(&self, tokens: Vec<i32>, causal: bool) -> Result<Response> {
         let rx = self.submit_with(tokens, causal)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped response"))
+    }
+
+    /// Submit with an explicit spec (causal + scale) and block.
+    pub fn infer_spec(
+        &self,
+        tokens: Vec<i32>,
+        causal: bool,
+        scale: Option<f32>,
+    ) -> Result<Response> {
+        let rx = self.submit_spec(tokens, causal, scale)?;
         rx.recv().map_err(|_| anyhow!("worker dropped response"))
     }
 
@@ -452,13 +480,18 @@ impl Drop for DecodeSession {
 }
 
 /// One member's attention shape inside a padded batch: its live token
-/// count (the key mask) and its causal flag.  Built per request by
-/// [`run_batch`] so a single bucket batch can mix variable-length and
-/// mixed-mask traffic.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// count (the key mask), its causal flag, and its optional score
+/// scale.  Built per request by [`run_batch`] so a single bucket batch
+/// can mix variable-length, mixed-mask, and mixed-scale traffic.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ReqSpec {
     pub key_len: usize,
     pub causal: bool,
+    /// The request's score-temperature override — carried verbatim
+    /// into the member's [`AttnSpec`](crate::attention::AttnSpec)
+    /// (regression: this used to be dropped to `None` by the native
+    /// executor, so a request's scale was silently ignored).
+    pub scale: Option<f32>,
 }
 
 /// One worker's batch executor: given the bucket-padded token buffer,
@@ -473,6 +506,12 @@ trait BatchExec {
     /// rejects causal members *individually* (their co-batched
     /// bidirectional requests still run) when it cannot.
     fn supports_causal(&self) -> bool;
+
+    /// Whether this executor can honor a per-request score-scale
+    /// override.  Like the causal capability, members carrying a scale
+    /// are rejected individually when it cannot (the PJRT executables
+    /// bake the default `1/sqrt(d)` in).
+    fn supports_scale(&self) -> bool;
 
     /// `tokens` holds `capacity * bucket` ids (`real` live rows, the
     /// rest phantom padding); `specs` holds one [`ReqSpec`] per live
@@ -546,6 +585,12 @@ impl BatchExec for PjrtExec {
         // attention over the padded bucket (key-length padding keeps
         // the historical attend-the-PAD-rows semantics): causal
         // members are rejected per request by `run_batch`.
+        false
+    }
+
+    fn supports_scale(&self) -> bool {
+        // The default 1/sqrt(d) scale is baked into the AOT HLO; a
+        // per-request override cannot be honored here.
         false
     }
 
@@ -629,6 +674,17 @@ impl BatchExec for NativeExec {
         self.encoder.method().supports_masking()
     }
 
+    fn supports_scale(&self) -> bool {
+        // Maskable methods take the scale through the AttnSpec
+        // (linear-class kernels without a score temperature ignore it,
+        // exactly like the kernels themselves — that is the AttnSpec
+        // contract, not a drop).  Nystrom/Linformer cannot: the
+        // encoder degrades their non-full specs wholesale to FULL
+        // (`NativeEncoder::infer_spec`), which would *silently* discard
+        // the override — reject those members per request instead.
+        self.encoder.method().supports_masking()
+    }
+
     fn run(
         &mut self,
         tokens: Vec<i32>,
@@ -642,7 +698,7 @@ impl BatchExec for NativeExec {
                 let spec = crate::attention::AttnSpec {
                     causal: specs[i].causal,
                     key_len: Some(specs[i].key_len),
-                    scale: None,
+                    scale: specs[i].scale,
                 };
                 self.encoder.infer_spec(&tokens[i * bucket..(i + 1) * bucket], &spec)
             })
@@ -1004,16 +1060,47 @@ fn run_batch(
             return;
         }
     }
+    if !exec.supports_scale() {
+        let mut kept = Vec::with_capacity(batch.len());
+        for r in batch {
+            if r.scale.is_some() {
+                let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                stats.lock().unwrap().errors += 1;
+                r.resp
+                    .send(Response {
+                        id: r.id,
+                        result: Err(
+                            "per-request attention scale is not available on this worker's \
+                             executor (AOT serve artifacts bake the default 1/sqrt(d) in, and \
+                             the nystrom/linformer encoders drop non-full specs wholesale); \
+                             serve a maskable method with `[serve] force_native = true`"
+                                .into(),
+                        ),
+                        latency_ms,
+                        batch_size: 0,
+                    })
+                    .ok();
+            } else {
+                kept.push(r);
+            }
+        }
+        batch = kept;
+        if batch.is_empty() {
+            return;
+        }
+    }
     let real = batch.len();
     let mut tokens = Vec::with_capacity(capacity * bucket);
     // One attention spec per live row: the request's pre-padding length
     // becomes its key mask, its causal flag (or the worker-wide
-    // default) rides along.
+    // default) and its scale override ride along — the request's own
+    // spec always wins over what the worker default implies.
     let mut specs = Vec::with_capacity(real);
     for r in &batch {
         specs.push(ReqSpec {
             key_len: r.tokens.len().min(bucket),
             causal: r.causal || default_causal,
+            scale: r.scale,
         });
         tokens.extend(pad_to_bucket(&r.tokens, bucket));
     }
@@ -1224,6 +1311,61 @@ mod tests {
             assert!(resp.result.is_ok(), "{:?}", resp.result);
         }
         assert_eq!(c.stats().lock().unwrap().completed, 12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mixed_scale_batch_honors_each_requests_spec() {
+        // Regression: the native executor used to rebuild every
+        // member's AttnSpec with `scale: None`, silently dropping a
+        // request's score-temperature override — most visibly when
+        // `[compute] causal = true` flipped the worker default and the
+        // spec was rebuilt server-side.  Each member's own spec must
+        // win.
+        let cfg = ServeConfig {
+            method: "softmax".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            buckets: vec![32],
+            native_fallback: true,
+            compute: crate::config::ComputeConfig { causal: true, ..Default::default() },
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        let tokens: Vec<i32> = (0..24).map(|i| 4 + i % 9).collect();
+        let base_rx = c.submit_spec(tokens.clone(), false, None).unwrap();
+        let hot_rx = c.submit_spec(tokens.clone(), false, Some(0.02)).unwrap();
+        // The explicit default scale must serve exactly like None.
+        let pinned = 1.0 / (super::super::native::NATIVE_D_MODEL as f32).sqrt();
+        let pinned_rx = c.submit_spec(tokens.clone(), false, Some(pinned)).unwrap();
+        let base = base_rx.recv().unwrap().result.unwrap();
+        let hot = hot_rx.recv().unwrap().result.unwrap();
+        let pinned_logits = pinned_rx.recv().unwrap().result.unwrap();
+        assert!(base.iter().all(|x| x.is_finite()));
+        assert_ne!(base, hot, "per-request scale override was dropped");
+        assert_eq!(base, pinned_logits, "explicit default scale must match None");
+        // And the blocking helper carries the spec too.
+        let again = c.infer_spec(tokens, false, Some(0.02)).unwrap().result.unwrap();
+        assert_eq!(again, hot);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unmaskable_method_rejects_scale_override_individually() {
+        // Nystrom's encoder degrades non-full specs wholesale to FULL,
+        // which would silently drop a per-request scale — such members
+        // must be rejected per request (their scale-free co-requests
+        // still serve), mirroring the causal rejection policy.
+        let c = native_coordinator("nystrom", 1);
+        let scaled_rx = c.submit_spec(vec![7i32; 32], false, Some(0.05)).unwrap();
+        let plain_rx = c.submit_with(vec![7i32; 32], false).unwrap();
+        let scaled = scaled_rx.recv().unwrap();
+        let plain = plain_rx.recv().unwrap();
+        let err = scaled.result.unwrap_err();
+        assert!(err.contains("scale"), "unexpected error: {err}");
+        assert!(plain.result.is_ok(), "scale-free co-request must still serve");
         c.shutdown();
     }
 

@@ -2,20 +2,25 @@
 //! synthetic corpus — the repo's end-to-end driver (examples/train_mlm.rs
 //! wraps this runner).
 //!
-//! For each method we train the "small" RoBERTa-lite (~5M params, B=8,
-//! N=128) with the AOT train step, logging train loss, held-out eval
-//! loss, grad-norm (fig 8b's loss-scale proxy) and per-layer alpha/beta
-//! (fig 9).  Python is not involved at any point.
+//! For each method we train the RoBERTa-lite MLM model, logging train
+//! loss, held-out eval loss, grad-norm (fig 8b's loss-scale proxy) and
+//! per-layer alpha/beta (fig 9).  The step executes through a
+//! [`TrainStep`]: the AOT artifact driver when `artifacts/` exists, or
+//! the **native** backprop trainer ([`NativeStep`], fused recompute
+//! backward through the attention backends) when it does not — so the
+//! fig. 8 pipeline runs artifact-free end to end.  `--native` (or
+//! `TrainConfig::native`) forces the native path even with artifacts
+//! present.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::maybe_write_csv;
 use crate::cli::Args;
 use crate::config::TrainConfig;
 use crate::data::Corpus;
-use crate::runtime::{artifacts_dir, Engine, HostTensor};
-use crate::training::driver::TrainDriver;
+use crate::runtime::{artifacts_available, artifacts_dir};
 use crate::training::metrics::{sparkline, MetricsLog, Record};
+use crate::training::native::{ArtifactStep, NativeShape, NativeStep, TrainStep};
 use crate::util::print_table;
 
 pub struct PretrainResult {
@@ -25,32 +30,50 @@ pub struct PretrainResult {
     pub alpha_series: Vec<(usize, f32)>,
 }
 
-/// Train one method's MLM artifact for `steps`; returns full telemetry.
+/// Build the [`TrainStep`] for a `(method, size)` pair: the AOT
+/// artifact driver when artifacts exist and `force_native` is off,
+/// else the native backprop trainer.
+pub fn build_step(
+    dir: &std::path::Path,
+    method: &str,
+    size: &str,
+    force_native: bool,
+    cfg: &TrainConfig,
+) -> Result<Box<dyn TrainStep>> {
+    if !force_native && !cfg.native && artifacts_available(dir) {
+        let artifact = format!("train_{size}_{method}");
+        return Ok(Box::new(ArtifactStep::new(dir, &artifact)?));
+    }
+    let m = crate::attention::Method::parse(method)
+        .ok_or_else(|| anyhow!("unknown attention method {method:?}"))?;
+    let mut shape = NativeShape::for_size(size);
+    if cfg.batch != 0 {
+        shape.batch = cfg.batch;
+    }
+    if cfg.seqlen != 0 {
+        shape.seqlen = cfg.seqlen;
+    }
+    shape.seed = cfg.seed;
+    Ok(Box::new(NativeStep::new(m, shape)?))
+}
+
+/// Train one method's MLM model for `steps`; returns full telemetry.
+/// `force_native` skips the artifact path even when artifacts exist
+/// (`lln train --native`); with no artifacts directory the native
+/// trainer is picked automatically.
 pub fn pretrain(
-    engine: &mut Engine,
     dir: &std::path::Path,
     method: &str,
     size: &str,
     steps: usize,
     cfg: &TrainConfig,
     log_path: Option<&std::path::Path>,
+    force_native: bool,
 ) -> Result<PretrainResult> {
-    let artifact = format!("train_{size}_{method}");
-    let spec = engine.manifest().artifact(&artifact)?.clone();
-    let (b, n) = (
-        spec.meta_usize("batch").unwrap_or(8),
-        spec.meta_usize("seqlen").unwrap_or(128),
-    );
-    let model_tag = spec.meta.get("model").cloned().unwrap_or_default();
-    let vocab: usize = engine
-        .manifest()
-        .model(&model_tag)?
-        .config
-        .get("vocab_size")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8192);
-
-    let mut driver = TrainDriver::new(engine, dir, &artifact)?;
+    let mut step_exec = build_step(dir, method, size, force_native, cfg)?;
+    eprintln!("   [{method}] stepping via {}", step_exec.name());
+    let (b, n) = step_exec.batch_shape();
+    let vocab = step_exec.vocab();
     let mut corpus = Corpus::new(vocab, cfg.seed);
     let mut eval_corpus = Corpus::new(vocab, cfg.seed ^ 0xE7A1);
     // Fixed held-out batch: comparable eval losses across methods.
@@ -66,15 +89,7 @@ pub fn pretrain(
     for step in 0..steps {
         let batch = corpus.mlm_batch(b, n, 0.15);
         let lr = cfg.lr_at(step);
-        let out = driver.step(
-            engine,
-            lr,
-            &[
-                HostTensor::I32 { shape: vec![b, n], data: batch.tokens },
-                HostTensor::I32 { shape: vec![b, n], data: batch.labels },
-                HostTensor::F32 { shape: vec![b, n], data: batch.weights },
-            ],
-        )?;
+        let out = step_exec.step(lr, &batch)?;
         let (alpha, beta) = out
             .layer_stats
             .first()
@@ -93,15 +108,7 @@ pub fn pretrain(
             extra: vec![],
         })?;
         if (step + 1) % cfg.eval_every.max(1) == 0 || step + 1 == steps {
-            let outs = driver.eval(
-                engine,
-                &[
-                    HostTensor::I32 { shape: vec![b, n], data: eval_batch.tokens.clone() },
-                    HostTensor::I32 { shape: vec![b, n], data: eval_batch.labels.clone() },
-                    HostTensor::F32 { shape: vec![b, n], data: eval_batch.weights.clone() },
-                ],
-            )?;
-            eval_losses.push((step + 1, outs[0].first_f32()?));
+            eval_losses.push((step + 1, step_exec.eval_loss(&eval_batch)?));
         }
         if (step + 1) % cfg.log_every.max(1) == 0 {
             eprintln!(
@@ -122,6 +129,7 @@ pub fn run_fig8(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 150)?;
     let size = args.get_or("size", "mlm"); // "mlm" (small) or "tinymlm"
     let methods = args.get_list("methods", "softmax,lln");
+    let native = args.get_bool("native");
     let cfg = TrainConfig {
         lr: args.get_f64("lr", 5e-4)?,
         warmup: steps / 10,
@@ -130,15 +138,15 @@ pub fn run_fig8(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
         ..Default::default()
     };
-    let mut engine = Engine::new(&dir)?;
 
-    println!("== Fig 8: MLM pretraining on the synthetic corpus ({steps} steps) ==\n");
+    let tag = if native || !artifacts_available(&dir) { " [native]" } else { "" };
+    println!("== Fig 8: MLM pretraining on the synthetic corpus ({steps} steps){tag} ==\n");
     let mut results = Vec::new();
     for method in &methods {
         let log_path = args
             .get("out")
             .map(|o| std::path::Path::new(o).join(format!("fig8_{method}.jsonl")));
-        let r = pretrain(&mut engine, &dir, method, size, steps, &cfg, log_path.as_deref())?;
+        let r = pretrain(&dir, method, size, steps, &cfg, log_path.as_deref(), native)?;
         results.push(r);
     }
 

@@ -1,25 +1,62 @@
 //! Fig 1: temperature, entropy, and spectral gap of every layer's
 //! attention matrix over the course of training.
 //!
-//! Uses the probe artifacts (`probe_<method>`): at intervals during MLM
-//! training the probe executes the current parameters on a fixed batch
-//! and returns the per-layer stochastic matrices + sigma stats; the Rust
-//! analysis instruments then compute the fig. 1 series.
+//! Two probe routes share the reporting:
+//!
+//! * **Artifact** — the probe executables (`probe_<method>`) execute
+//!   the current parameters on a fixed batch and return the per-layer
+//!   stochastic matrices + sigma stats;
+//! * **Native** — when no artifacts directory exists (or `--native`),
+//!   training runs through [`NativeStep`] (backprop through the native
+//!   backends) and the probe reads each layer's `explicit_matrix`
+//!   directly from the forward activations.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::maybe_write_csv;
-use crate::analysis::layer_dynamics;
+use crate::analysis::{layer_dynamics, LayerDynamics};
 use crate::cli::Args;
 use crate::config::TrainConfig;
 use crate::data::Corpus;
-use crate::runtime::{artifacts_dir, Engine, HostTensor};
+use crate::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
 use crate::tensor::Mat;
 use crate::training::driver::TrainDriver;
+use crate::training::native::{NativeShape, NativeStep, TrainStep};
 use crate::util::print_table;
+
+/// Render the per-layer metric tables shared by both probe routes.
+fn print_dynamics_tables(checkpoints: &[(usize, Vec<LayerDynamics>)], n_layers: usize) {
+    for metric in ["temperature", "entropy", "spectral gap"] {
+        println!("\n-- {metric} per layer over training --");
+        let mut rows = Vec::new();
+        for l in 0..n_layers {
+            let mut row = vec![format!("layer {l}")];
+            for (_, dyns) in checkpoints {
+                let d = &dyns[l];
+                let v = match metric {
+                    "temperature" => d.temperature,
+                    "entropy" => d.entropy,
+                    _ => d.spectral_gap,
+                };
+                row.push(format!("{v:.3}"));
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["".to_string()];
+        headers.extend(checkpoints.iter().map(|(s, _)| format!("step {s}")));
+        let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        print_table(&hrefs, &rows);
+    }
+    println!("\npaper shape: temperature and entropy fall as training concentrates");
+    println!("attention; mid layers concentrate hardest; the spectral gap separates");
+    println!("biased from unbiased concentration (it can rise while entropy falls).");
+}
 
 pub fn run_fig1(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args.get("artifacts"));
+    if args.get_bool("native") || !artifacts_available(&dir) {
+        return run_fig1_native(args);
+    }
     let steps = args.get_usize("steps", 120)?;
     let probe_every = args.get_usize("probe-every", 30)?;
     let method = args.get_or("method", "softmax").to_string();
@@ -40,17 +77,17 @@ pub fn run_fig1(args: &Args) -> Result<()> {
     let probe_tokens: Vec<i32> = corpus.mlm_batch(2, n, 0.0).labels; // unmasked text
 
     let mut csv = Vec::new();
-    let mut checkpoints: Vec<(usize, Vec<crate::analysis::LayerDynamics>)> = Vec::new();
+    let mut checkpoints: Vec<(usize, Vec<LayerDynamics>)> = Vec::new();
 
-    let probe = |driver: &TrainDriver, engine: &mut Engine, step: usize, csv: &mut Vec<String>| -> Result<Vec<crate::analysis::LayerDynamics>> {
+    let probe = |driver: &TrainDriver, engine: &mut Engine, step: usize, csv: &mut Vec<String>| -> Result<Vec<LayerDynamics>> {
         // probe inputs: p:* + tokens
         let mut inputs = driver.params().to_literals()?;
         inputs.push(
             HostTensor::I32 { shape: vec![2, n], data: probe_tokens.clone() }.to_literal()?,
         );
         let outs = engine.execute_literals(&probe_artifact, &inputs)?;
-        let mats_flat = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let stats = outs[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mats_flat = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let stats = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
         let mats: Vec<Mat> = (0..n_layers)
             .map(|l| Mat::from_vec(n, n, mats_flat[l * n * n..(l + 1) * n * n].to_vec()))
             .collect();
@@ -85,30 +122,58 @@ pub fn run_fig1(args: &Args) -> Result<()> {
         }
     }
 
-    for metric in ["temperature", "entropy", "spectral gap"] {
-        println!("\n-- {metric} per layer over training --");
-        let mut rows = Vec::new();
-        for l in 0..n_layers {
-            let mut row = vec![format!("layer {l}")];
-            for (_, dyns) in &checkpoints {
-                let d = &dyns[l];
-                let v = match metric {
-                    "temperature" => d.temperature,
-                    "entropy" => d.entropy,
-                    _ => d.spectral_gap,
-                };
-                row.push(format!("{v:.3}"));
-            }
-            rows.push(row);
+    print_dynamics_tables(&checkpoints, n_layers);
+    maybe_write_csv(args, "fig1", "step,layer,temperature,entropy,spectral_gap", &csv)?;
+    Ok(())
+}
+
+/// Fig 1 without artifacts: train a [`NativeStep`] and probe each
+/// layer's dense attention matrix from the live forward activations.
+fn run_fig1_native(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 60)?;
+    let probe_every = args.get_usize("probe-every", 20)?;
+    let method_name = args.get_or("method", "softmax").to_string();
+    let method = crate::attention::Method::parse(&method_name)
+        .ok_or_else(|| anyhow!("unknown attention method {method_name:?}"))?;
+    let cfg = TrainConfig { lr: args.get_f64("lr", 3e-3)?, warmup: steps / 10, ..Default::default() };
+    let mut shape = NativeShape::for_size("tinymlm");
+    shape.seed = args.get_usize("seed", 0)? as u64;
+    let mut stepper = NativeStep::new(method, shape)?;
+    let (b, n) = stepper.batch_shape();
+    let n_layers = shape.layers;
+    let mut corpus = Corpus::new(stepper.vocab(), shape.seed);
+    let probe_tokens: Vec<i32> = corpus.mlm_batch(1, n, 0.0).labels; // unmasked text
+
+    println!("== Fig 1 (native): attention dynamics during {method_name} MLM training ==");
+    println!("   probing every {probe_every} steps; {n_layers} layers, N={n}\n");
+
+    let mut csv = Vec::new();
+    let mut checkpoints: Vec<(usize, Vec<LayerDynamics>)> = Vec::new();
+    let probe = |stepper: &NativeStep, step: usize, csv: &mut Vec<String>| -> Result<Vec<LayerDynamics>> {
+        let probed = stepper.probe_layers(&probe_tokens)?;
+        let mats: Vec<Mat> = probed.iter().map(|(m, _)| m.clone()).collect();
+        let sigmas: Vec<(f64, f64)> = probed.iter().map(|(_, s)| *s).collect();
+        let dyns = layer_dynamics(&mats, &sigmas);
+        for d in &dyns {
+            csv.push(format!(
+                "{step},{},{:.4},{:.4},{:.4}",
+                d.layer, d.temperature, d.entropy, d.spectral_gap
+            ));
         }
-        let mut headers = vec!["".to_string()];
-        headers.extend(checkpoints.iter().map(|(s, _)| format!("step {s}")));
-        let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
-        print_table(&hrefs, &rows);
+        Ok(dyns)
+    };
+
+    checkpoints.push((0, probe(&stepper, 0, &mut csv)?));
+    for step in 0..steps {
+        let batch = corpus.mlm_batch(b, n, 0.15);
+        stepper.step(cfg.lr_at(step), &batch)?;
+        if (step + 1) % probe_every == 0 || step + 1 == steps {
+            eprintln!("   probe @ step {}", step + 1);
+            checkpoints.push((step + 1, probe(&stepper, step + 1, &mut csv)?));
+        }
     }
-    println!("\npaper shape: temperature and entropy fall as training concentrates");
-    println!("attention; mid layers concentrate hardest; the spectral gap separates");
-    println!("biased from unbiased concentration (it can rise while entropy falls).");
+
+    print_dynamics_tables(&checkpoints, n_layers);
     maybe_write_csv(args, "fig1", "step,layer,temperature,entropy,spectral_gap", &csv)?;
     Ok(())
 }

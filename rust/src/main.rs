@@ -43,23 +43,29 @@ fn cli() -> Cli {
                         flag("requests", "request count (serve)", None),
                         flag("rate", "offered request rate /s (serve)", None),
                         flag("long-frac", "fraction of long requests (serve)", None),
+                        switch("native", "force the native backprop trainer (fig1/fig8)"),
                     ]);
                     f
                 },
             },
             Command {
                 name: "train",
-                about: "train an AOT artifact (MLM pretraining driver)",
+                about: "MLM pretraining driver (AOT artifact, or native backprop when artifacts are absent / --native)",
                 flags: {
                     let mut f = common();
                     f.extend([
                         flag("method", "attention method", Some("lln")),
                         flag("size", "mlm | tinymlm", Some("mlm")),
-                        flag("steps", "optimizer steps", Some("150")),
-                        flag("lr", "peak learning rate", Some("5e-4")),
-                        flag("eval-every", "eval interval", Some("25")),
-                        flag("log-every", "log interval", Some("10")),
+                        flag("steps", "optimizer steps (default 150)", None),
+                        flag("lr", "peak learning rate (default 5e-4)", None),
+                        flag("eval-every", "eval interval (default 25)", None),
+                        flag("log-every", "log interval (default 10)", None),
+                        flag("batch", "native-path batch override (0 = model default)", None),
+                        flag("seq", "native-path seqlen override (0 = model default)", None),
+                        flag("config", "TOML file with a [train] section (CLI flags override it)", None),
                         flag("checkpoint", "path to write final params", None),
+                        switch("native", "backprop through the native backends even when artifacts exist"),
+                        switch("check", "exit nonzero unless the final loss beats the first (CI smoke)"),
                     ]);
                     f
                 },
@@ -154,36 +160,59 @@ fn dispatch(args: &lln::cli::Args) -> Result<()> {
 }
 
 fn cmd_train(args: &lln::cli::Args) -> Result<()> {
-    use lln::config::TrainConfig;
+    use lln::config::{ConfigTable, TrainConfig};
     use lln::experiments::pretrain::pretrain;
-    use lln::runtime::{artifacts_dir, Engine};
+    use lln::runtime::{artifacts_available, artifacts_dir};
 
     let dir = artifacts_dir(args.get("artifacts"));
-    let mut engine = Engine::new(&dir)?;
     let method = args.get_or("method", "lln").to_string();
     let size = match args.get_or("size", "mlm") {
         "mlm" => "mlm",
         _ => "tinymlm",
     };
-    let steps = args.get_usize("steps", 150)?;
+    // Precedence: explicit CLI flag > [train] config-file key > the
+    // launcher's built-in default (the train flags carry no CLI-side
+    // defaults, so an absent flag falls through to the file).
+    let file = args
+        .get("config")
+        .map(|p| -> Result<TrainConfig> {
+            let t = ConfigTable::load(std::path::Path::new(p)).map_err(|e| anyhow::anyhow!("{e}"))?;
+            Ok(TrainConfig::from_table(&t))
+        })
+        .transpose()?;
+    let f = file.as_ref();
+    let steps = args.get_usize("steps", f.map(|c| c.steps).unwrap_or(150))?;
+    let native = args.get_bool("native")
+        || f.map(|c| c.native).unwrap_or(false)
+        || !artifacts_available(&dir);
     let cfg = TrainConfig {
-        lr: args.get_f64("lr", 5e-4)?,
+        lr: args.get_f64("lr", f.map(|c| c.lr).unwrap_or(5e-4))?,
         warmup: steps / 10,
-        eval_every: args.get_usize("eval-every", 25)?,
-        log_every: args.get_usize("log-every", 10)?,
+        eval_every: args.get_usize("eval-every", f.map(|c| c.eval_every).unwrap_or(25))?,
+        log_every: args.get_usize("log-every", f.map(|c| c.log_every).unwrap_or(10))?,
         seed: args.get_usize("seed", 0)? as u64,
+        batch: args.get_usize("batch", f.map(|c| c.batch).unwrap_or(0))?,
+        seqlen: args.get_usize("seq", f.map(|c| c.seqlen).unwrap_or(0))?,
         ..Default::default()
     };
     let log_path = args
         .get("out")
         .map(|o| std::path::Path::new(o).join(format!("train_{method}.jsonl")));
-    println!("training train_{size}_{method} for {steps} steps (lr {:.1e})", cfg.lr);
-    let r = pretrain(&mut engine, &dir, &method, size, steps, &cfg, log_path.as_deref())?;
+    let mode = if native { "native backprop" } else { "AOT artifact" };
+    println!("training {size}/{method} for {steps} steps (lr {:.1e}, {mode})", cfg.lr);
+    let r = pretrain(&dir, &method, size, steps, &cfg, log_path.as_deref(), native)?;
+    let first = r.log.history.first().map(|rec| rec.loss).unwrap_or(f32::NAN);
+    let last = r.log.final_loss().unwrap_or(f32::NAN);
     println!(
-        "done: final loss {:.3}, max grad-norm {:.2}",
-        r.log.final_loss().unwrap_or(f32::NAN),
+        "done: loss {first:.3} -> {last:.3}, max grad-norm {:.2}",
         r.log.max_grad_norm()
     );
+    if args.get_bool("check") {
+        if !(last.is_finite() && first.is_finite() && last < first) {
+            anyhow::bail!("training smoke failed: loss did not decrease ({first:.3} -> {last:.3})");
+        }
+        println!("check passed: final loss beats the first");
+    }
     Ok(())
 }
 

@@ -1,8 +1,16 @@
-//! Training orchestration: the Rust-side loop around the AOT train-step
-//! executables (paper figs. 8/9 pipelines; Table 1/3/4 task training).
+//! Training orchestration: the Rust-side loop around either the AOT
+//! train-step executables or the native backprop trainer (paper figs.
+//! 8/9 pipelines; Table 1/3/4 task training).
+//!
+//! [`native::TrainStep`] is the seam: [`native::ArtifactStep`] wraps
+//! the PJRT [`TrainDriver`] path, [`native::NativeStep`] backprops
+//! through the native attention backends (fused recompute kernels, no
+//! artifacts), and the experiment harnesses pick automatically.
 
 pub mod driver;
 pub mod metrics;
+pub mod native;
 
 pub use driver::{StepTelemetry, TrainDriver};
 pub use metrics::MetricsLog;
+pub use native::{Adam, ArtifactStep, NativeShape, NativeStep, Tape, TrainStep};

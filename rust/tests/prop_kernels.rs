@@ -759,3 +759,366 @@ fn default_backends_cover_every_method() {
         assert_eq!(default_backend(m).method(), m);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Backward kernels: finite-difference gradient checks + fused-vs-dense parity
+// ---------------------------------------------------------------------------
+//
+// The f32 backward kernels are checked against central differences of
+// *f64 reference forwards* implementing the same math (same masks via
+// AttnSpec::row_limit, same EPS/clamp constants): the FD of the f64
+// function is the true gradient to ~1e-10, so the measured error is
+// the f32 analytic backward's own — the acceptance bound is a
+// norm-wise relative error < 1e-3.
+
+fn to_f64(m: &Mat) -> Vec<f64> {
+    m.data().iter().map(|&x| x as f64).collect()
+}
+
+/// Norm-wise relative error between an analytic f32 gradient and an
+/// f64 finite-difference estimate.
+fn grad_rel_err(analytic: &[f32], fd: &[f64]) -> f64 {
+    assert_eq!(analytic.len(), fd.len());
+    let mut d2 = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nf = 0.0f64;
+    for (&a, &b) in analytic.iter().zip(fd) {
+        let a = a as f64;
+        d2 += (a - b) * (a - b);
+        na += a * a;
+        nf += b * b;
+    }
+    d2.sqrt() / (na.sqrt() + nf.sqrt() + 1e-12)
+}
+
+/// Central differences of `f` over every coordinate of `x`.
+fn central_diff(x: &mut [f64], mut f: impl FnMut(&[f64]) -> f64, h: f64) -> Vec<f64> {
+    (0..x.len())
+        .map(|i| {
+            let orig = x[i];
+            x[i] = orig + h;
+            let fp = f(x);
+            x[i] = orig - h;
+            let fm = f(x);
+            x[i] = orig;
+            (fp - fm) / (2.0 * h)
+        })
+        .collect()
+}
+
+/// f64 reference loss `Σ w ∘ softmax_attention(q, k, v)` under a spec
+/// (masked rows carry no mass; fully masked rows are zero).
+#[allow(clippy::too_many_arguments)]
+fn softmax_loss_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    w: &[f64],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    dv: usize,
+    scale: f64,
+    spec: &AttnSpec,
+) -> f64 {
+    let mut loss = 0.0f64;
+    for i in 0..nq {
+        let lim = spec.row_limit(i, nk);
+        if lim == 0 {
+            continue;
+        }
+        let qrow = &q[i * d..(i + 1) * d];
+        let mut scores = Vec::with_capacity(lim);
+        let mut m = f64::NEG_INFINITY;
+        for j in 0..lim {
+            let krow = &k[j * d..(j + 1) * d];
+            let s: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f64>() * scale;
+            m = m.max(s);
+            scores.push(s);
+        }
+        let mut sum = 0.0f64;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            sum += *s;
+        }
+        for t in 0..dv {
+            let mut o = 0.0f64;
+            for (j, p) in scores.iter().enumerate() {
+                o += p * v[j * dv + t];
+            }
+            loss += w[i * dv + t] * o / sum;
+        }
+    }
+    loss
+}
+
+/// f64 reference loss for linearized attention with explicit feature
+/// maps (EPS = 1e-6 in the denominator, like the f32 kernels); q/k
+/// rows are aligned (n x n problem).
+#[allow(clippy::too_many_arguments)]
+fn linear_loss_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    w: &[f64],
+    n: usize,
+    d: usize,
+    dv: usize,
+    spec: &AttnSpec,
+    fq: &dyn Fn(f64) -> f64,
+    fk: &dyn Fn(f64) -> f64,
+) -> f64 {
+    const EPS: f64 = 1e-6;
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        let lim = spec.row_limit(i, n);
+        let pq: Vec<f64> = q[i * d..(i + 1) * d].iter().map(|&x| fq(x)).collect();
+        let mut den = EPS;
+        let mut num = vec![0.0f64; dv];
+        for j in 0..lim {
+            let pk: Vec<f64> = k[j * d..(j + 1) * d].iter().map(|&x| fk(x)).collect();
+            let dot: f64 = pq.iter().zip(&pk).map(|(a, b)| a * b).sum();
+            den += dot;
+            for (o, &vv) in num.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
+                *o += dot * vv;
+            }
+        }
+        for t in 0..dv {
+            loss += w[i * dv + t] * num[t] / den;
+        }
+    }
+    loss
+}
+
+/// f64 reference loss for the quadratic kernel κ(q,k) = (q·k)².
+#[allow(clippy::too_many_arguments)]
+fn quadratic_loss_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    w: &[f64],
+    n: usize,
+    d: usize,
+    dv: usize,
+    spec: &AttnSpec,
+) -> f64 {
+    const EPS: f64 = 1e-6;
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        let lim = spec.row_limit(i, n);
+        let qrow = &q[i * d..(i + 1) * d];
+        let mut den = EPS;
+        let mut num = vec![0.0f64; dv];
+        for j in 0..lim {
+            let krow = &k[j * d..(j + 1) * d];
+            let s: f64 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+            let wgt = s * s;
+            den += wgt;
+            for (o, &vv) in num.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
+                *o += wgt * vv;
+            }
+        }
+        for t in 0..dv {
+            loss += w[i * dv + t] * num[t] / den;
+        }
+    }
+    loss
+}
+
+/// f64 twin of the kernels' clamped exp (EXP_CLAMP = 30).
+fn cexp64(x: f64) -> f64 {
+    x.clamp(-30.0, 30.0).exp()
+}
+
+/// The specs every gradient check runs under: full, causal, and both
+/// key_len paddings — the acceptance matrix.
+fn gradcheck_specs(n: usize) -> [AttnSpec; 4] {
+    [
+        AttnSpec::FULL,
+        AttnSpec::CAUSAL,
+        AttnSpec::causal_padded(n / 2 + 1),
+        AttnSpec::padded(n - 2),
+    ]
+}
+
+#[test]
+fn softmax_backward_matches_f64_finite_differences() {
+    let (n, d, dv) = (8usize, 5usize, 4usize);
+    let mut rng = lln::rng::Pcg64::seed(0xFD01);
+    let q = Mat::gaussian(n, d, 0.7, &mut rng);
+    let k = Mat::gaussian(n, d, 0.7, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = default_backend(Method::Softmax);
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let scale = spec.resolve_scale(d) as f64;
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let fd_q = central_diff(&mut qf.clone(), |x| {
+            softmax_loss_f64(x, &kf, &vf, &wf, n, n, d, dv, scale, &spec)
+        }, h);
+        let fd_k = central_diff(&mut kf.clone(), |x| {
+            softmax_loss_f64(&qf, x, &vf, &wf, n, n, d, dv, scale, &spec)
+        }, h);
+        let fd_v = central_diff(&mut vf.clone(), |x| {
+            softmax_loss_f64(&qf, &kf, x, &wf, n, n, d, dv, scale, &spec)
+        }, h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "softmax {spec:?} {name}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn lln_backward_matches_f64_finite_differences_including_alpha_beta() {
+    let (n, d, dv) = (8usize, 5usize, 4usize);
+    let (alpha, beta) = (1.2f32, 0.9f32);
+    let mut rng = lln::rng::Pcg64::seed(0xFD02);
+    let q = Mat::gaussian(n, d, 0.6, &mut rng);
+    let k = Mat::gaussian(n, d, 0.6, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = backend_for(
+            Method::Lln,
+            BackendParams { alpha, beta, threads: 1, chunk: 3, ..Default::default() },
+        );
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let (a64, b64) = (alpha as f64, beta as f64);
+        let loss = |qx: &[f64], kx: &[f64], vx: &[f64], a: f64, b: f64| {
+            linear_loss_f64(qx, kx, vx, &wf, n, d, dv, &spec, &|x| cexp64(a * x), &|x| {
+                cexp64(b * x)
+            })
+        };
+        let fd_q = central_diff(&mut qf.clone(), |x| loss(x, &kf, &vf, a64, b64), h);
+        let fd_k = central_diff(&mut kf.clone(), |x| loss(&qf, x, &vf, a64, b64), h);
+        let fd_v = central_diff(&mut vf.clone(), |x| loss(&qf, &kf, x, a64, b64), h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "lln {spec:?} {name}: rel err {err}");
+        }
+        // dα / dβ: perturb the exponents themselves.
+        let mut ab = vec![a64, b64];
+        let fd_ab = central_diff(&mut ab, |x| loss(&qf, &kf, &vf, x[0], x[1]), h);
+        let err_a = grad_rel_err(&[g.dalpha], &fd_ab[..1]);
+        let err_b = grad_rel_err(&[g.dbeta], &fd_ab[1..]);
+        assert!(err_a < 1e-3, "lln {spec:?} dalpha: rel err {err_a}");
+        assert!(err_b < 1e-3, "lln {spec:?} dbeta: rel err {err_b}");
+    }
+}
+
+#[test]
+fn elu_backward_matches_f64_finite_differences() {
+    let (n, d, dv) = (7usize, 4usize, 3usize);
+    let mut rng = lln::rng::Pcg64::seed(0xFD03);
+    let q = Mat::gaussian(n, d, 0.8, &mut rng);
+    let k = Mat::gaussian(n, d, 0.8, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    let elu64 = |x: f64| if x > 0.0 { x + 1.0 } else { x.exp() };
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = backend_for(Method::Elu, BackendParams { threads: 1, ..Default::default() });
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let fd_q = central_diff(&mut qf.clone(), |x| {
+            linear_loss_f64(x, &kf, &vf, &wf, n, d, dv, &spec, &elu64, &elu64)
+        }, h);
+        let fd_k = central_diff(&mut kf.clone(), |x| {
+            linear_loss_f64(&qf, x, &vf, &wf, n, d, dv, &spec, &elu64, &elu64)
+        }, h);
+        let fd_v = central_diff(&mut vf.clone(), |x| {
+            linear_loss_f64(&qf, &kf, x, &wf, n, d, dv, &spec, &elu64, &elu64)
+        }, h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "elu {spec:?} {name}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn quadratic_backward_matches_f64_finite_differences() {
+    let (n, d, dv) = (8usize, 4usize, 3usize);
+    let mut rng = lln::rng::Pcg64::seed(0xFD04);
+    let q = Mat::gaussian(n, d, 0.8, &mut rng);
+    let k = Mat::gaussian(n, d, 0.8, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = default_backend(Method::Quadratic);
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let fd_q = central_diff(&mut qf.clone(), |x| {
+            quadratic_loss_f64(x, &kf, &vf, &wf, n, d, dv, &spec)
+        }, h);
+        let fd_k = central_diff(&mut kf.clone(), |x| {
+            quadratic_loss_f64(&qf, x, &vf, &wf, n, d, dv, &spec)
+        }, h);
+        let fd_v = central_diff(&mut vf.clone(), |x| {
+            quadratic_loss_f64(&qf, &kf, x, &wf, n, d, dv, &spec)
+        }, h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "quadratic {spec:?} {name}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn fused_softmax_backward_matches_dense_masked_backward() {
+    // The fused O(n·tile) recompute backward vs the dense masked
+    // reference backward, across random shapes, masks, scales, and
+    // tiles (including tile = 1 and tile > n).
+    check(32, |g| {
+        let causal = g.bool();
+        let nq = g.usize_in(1, 40);
+        let nk = if causal { nq } else { g.usize_in(1, 40) };
+        let spec = AttnSpec {
+            causal,
+            key_len: if g.bool() { Some(g.usize_in(0, nk + 5)) } else { None },
+            scale: if g.bool() { Some(g.f32_in(0.05, 0.6)) } else { None },
+        };
+        let d = g.usize_in(2, 16);
+        let dv = g.usize_in(1, 12);
+        let tile = *g.choose(&[1usize, 5, 16, 0, 200]);
+        let q = gauss_mat(g, nq, d, 0.8);
+        let k = gauss_mat(g, nk, d, 0.8);
+        let v = gauss_mat(g, nk, dv, 1.0);
+        let d_out = gauss_mat(g, nq, dv, 1.0);
+        let (out, rm, rs) = att::grad::fused_softmax_attention_spec_fwd_train(&q, &k, &v, &spec, tile);
+        let (dq, dk, dvm) = att::grad::fused_softmax_attention_spec_bwd(
+            &q, &k, &v, &spec, &out, &rm, &rs, &d_out, tile,
+        );
+        let (dq2, dk2, dv2) = att::grad::softmax_attention_spec_bwd_dense(&q, &k, &v, &spec, &d_out);
+        let what = format!("nq={nq} nk={nk} d={d} dv={dv} tile={tile} {spec:?}");
+        assert_close(&dq, &dq2, 5e-4, &format!("fused-vs-dense bwd dq {what}"))?;
+        assert_close(&dk, &dk2, 5e-4, &format!("fused-vs-dense bwd dk {what}"))?;
+        assert_close(&dvm, &dv2, 5e-4, &format!("fused-vs-dense bwd dv {what}"))
+    });
+}

@@ -80,11 +80,21 @@ impl<T> Context<T> for Option<T> {
     }
 }
 
-/// Build an [`Error`] from a format string.
+/// Build an [`Error`] from a message or format string — the upstream
+/// macro's arm structure: a lone literal formats (keeping inline
+/// captures), a lone non-literal expression is taken as a displayable
+/// message (`anyhow!(err_string)`), and a format string with arguments
+/// formats.
 #[macro_export]
 macro_rules! anyhow {
-    ($($arg:tt)*) => {
-        $crate::Error::new(format!($($arg)*))
+    ($msg:literal $(,)?) => {
+        $crate::Error::new(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::new(format!($fmt, $($arg)*))
     };
 }
 
