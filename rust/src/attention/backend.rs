@@ -339,19 +339,31 @@ impl AttentionBackend for SoftmaxBackend {
         Ok(DecodeState::Cache(KvCache::new(d, dv)))
     }
     fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
-        let DecodeState::Cache(cache) = state else { wrong_state(Method::Softmax) };
-        cache.push(k, v);
         let scale = 1.0 / (q.len() as f32).sqrt();
-        fused_softmax_decode_step(
-            q,
-            cache.keys(),
-            cache.values(),
-            cache.len(),
-            cache.d(),
-            cache.dv(),
-            scale,
-            self.0.tile,
-        )
+        match state {
+            DecodeState::Cache(cache) => {
+                cache.push(k, v);
+                fused_softmax_decode_step(
+                    q,
+                    cache.keys(),
+                    cache.values(),
+                    cache.len(),
+                    cache.d(),
+                    cache.dv(),
+                    scale,
+                    self.0.tile,
+                )
+            }
+            // Paged sessions gather their pages into contiguous scratch
+            // and run the identical kernel — bitwise equal to Cache.
+            DecodeState::Paged(cache) => {
+                cache.push(k, v);
+                let (len, d, dv, tile) = (cache.len(), cache.d(), cache.dv(), self.0.tile);
+                let (keys, values) = cache.gather();
+                fused_softmax_decode_step(q, keys, values, len, d, dv, scale, tile)
+            }
+            _ => wrong_state(Method::Softmax),
+        }
     }
     fn forward_train(
         &self,
@@ -697,17 +709,27 @@ impl AttentionBackend for QuadraticBackend {
         Ok(DecodeState::Cache(KvCache::new(d, dv)))
     }
     fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
-        let DecodeState::Cache(cache) = state else { wrong_state(Method::Quadratic) };
-        cache.push(k, v);
-        fused_quadratic_decode_step(
-            q,
-            cache.keys(),
-            cache.values(),
-            cache.len(),
-            cache.d(),
-            cache.dv(),
-            self.0.tile,
-        )
+        match state {
+            DecodeState::Cache(cache) => {
+                cache.push(k, v);
+                fused_quadratic_decode_step(
+                    q,
+                    cache.keys(),
+                    cache.values(),
+                    cache.len(),
+                    cache.d(),
+                    cache.dv(),
+                    self.0.tile,
+                )
+            }
+            DecodeState::Paged(cache) => {
+                cache.push(k, v);
+                let (len, d, dv, tile) = (cache.len(), cache.d(), cache.dv(), self.0.tile);
+                let (keys, values) = cache.gather();
+                fused_quadratic_decode_step(q, keys, values, len, d, dv, tile)
+            }
+            _ => wrong_state(Method::Quadratic),
+        }
     }
     fn forward_train(
         &self,
@@ -848,26 +870,39 @@ impl AttentionBackend for BlockDiagBackend {
         Ok(DecodeState::Cache(KvCache::new(d, dv)))
     }
     fn decode_step(&self, state: &mut DecodeState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
-        let DecodeState::Cache(cache) = state else { wrong_state(Method::BlockDiag) };
         let block = self.0.block.max(1);
-        // A token whose global index starts a new diagonal tile never
-        // reads the previous tile's rows again: evict them so the
-        // resident cache stays bounded by the tile window.
-        if cache.len() > 0 && cache.len() % block == 0 {
-            cache.start_new_window();
-        }
-        cache.push(k, v);
         let scale = 1.0 / (q.len() as f32).sqrt();
-        blockdiag_decode_step(
-            q,
-            cache.keys(),
-            cache.values(),
-            cache.window_len(),
-            cache.d(),
-            cache.dv(),
-            scale,
-            block,
-        )
+        match state {
+            DecodeState::Cache(cache) => {
+                // A token whose global index starts a new diagonal tile
+                // never reads the previous tile's rows again: evict them
+                // so the resident cache stays bounded by the tile window.
+                if cache.len() > 0 && cache.len() % block == 0 {
+                    cache.start_new_window();
+                }
+                cache.push(k, v);
+                blockdiag_decode_step(
+                    q,
+                    cache.keys(),
+                    cache.values(),
+                    cache.window_len(),
+                    cache.d(),
+                    cache.dv(),
+                    scale,
+                    block,
+                )
+            }
+            DecodeState::Paged(cache) => {
+                if cache.len() > 0 && cache.len() % block == 0 {
+                    cache.start_new_window();
+                }
+                cache.push(k, v);
+                let (wl, d, dv) = (cache.window_len(), cache.d(), cache.dv());
+                let (keys, values) = cache.gather();
+                blockdiag_decode_step(q, keys, values, wl, d, dv, scale, block)
+            }
+            _ => wrong_state(Method::BlockDiag),
+        }
     }
 }
 

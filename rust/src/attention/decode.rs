@@ -243,6 +243,10 @@ pub enum DecodeState {
     /// LLN+Diag: prefix state for the long-range half plus a K/V cache
     /// for the diagonal-tile softmax half.
     Hybrid { prefix: PrefixState, cache: KvCache },
+    /// [`KvCache`] semantics over pool-backed fixed-size pages: rows
+    /// may be evicted under memory pressure and recomputed on the next
+    /// step (see [`super::paged`]).
+    Paged(super::paged::PagedKvCache),
 }
 
 impl DecodeState {
@@ -252,6 +256,7 @@ impl DecodeState {
             DecodeState::Cache(c) => c.len(),
             DecodeState::Prefix(p) => p.len(),
             DecodeState::Hybrid { prefix, .. } => prefix.len(),
+            DecodeState::Paged(c) => c.len(),
         }
     }
 
@@ -267,6 +272,7 @@ impl DecodeState {
             DecodeState::Cache(c) => c.state_bytes(),
             DecodeState::Prefix(p) => p.state_bytes(),
             DecodeState::Hybrid { prefix, cache } => prefix.state_bytes() + cache.state_bytes(),
+            DecodeState::Paged(c) => c.state_bytes(),
         }
     }
 }

@@ -11,12 +11,14 @@ pub mod decode;
 pub mod grad;
 pub mod kernels;
 pub mod moment_matching;
+pub mod paged;
 
 pub use backend::{
     all_backends, backend_for, default_backend, AttentionBackend, AttnCache, AttnGrads,
     BackendParams,
 };
 pub use decode::{DecodeState, KvCache, PrefixState};
+pub use paged::{PageCounters, PagePool, PagedKvCache};
 pub use kernels::*;
 pub use moment_matching::MomentMatcher;
 

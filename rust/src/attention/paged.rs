@@ -1,0 +1,518 @@
+//! Paged KV cache: fixed-size pages from a shared slab pool.
+//!
+//! Long-lived softmax/quadratic/blockdiag decode sessions each grow a
+//! `KvCache` linearly with generated tokens; with many concurrent
+//! sessions that is an OOM, not a budget.  This module caps the total
+//! KV footprint: every session's K/V rows live in fixed-size pages
+//! drawn from one `PagePool` with a hard page budget.  When the pool is
+//! full, the least-recently-stepped session loses a page (LRU across
+//! sessions, never the session currently stepping); the owner
+//! transparently recomputes the page from its token history on its next
+//! step (recompute-on-miss), so eviction costs latency, not
+//! correctness.  Gathered windows are bit-identical to an unpaged
+//! `KvCache` because pages are copied back into one contiguous scratch
+//! buffer before the (unchanged) decode kernels run.
+//!
+//! Memory: resident + recycled pages never exceed the budget, so
+//! `bytes <= budget_pages * page_tokens * (d + dv) * 4`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Pool-wide counters (eviction/recompute telemetry for ServeStats).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PageCounters {
+    /// Pages evicted from idle sessions to satisfy another allocation.
+    pub evicted: u64,
+    /// Pages refilled from token history after an eviction.
+    pub recomputed: u64,
+}
+
+struct PoolInner {
+    /// Resident pages, keyed by (session id, page index).
+    resident: HashMap<(u64, usize), Box<[f32]>>,
+    /// Recycled page buffers awaiting reuse (resident + free <= budget).
+    free: Vec<Box<[f32]>>,
+    /// Last-step logical clock per session (LRU victim selection).
+    touch: HashMap<u64, u64>,
+    /// Sessions currently mid-step; never eviction victims.
+    pinned: HashMap<u64, usize>,
+    clock: u64,
+    counters: PageCounters,
+}
+
+/// Shared slab allocator of fixed-size KV pages (clone freely; all
+/// clones share the same budget and residency map).
+pub struct PagePool {
+    inner: Arc<Mutex<PoolInner>>,
+    budget_pages: usize,
+    page_tokens: usize,
+    d: usize,
+    dv: usize,
+}
+
+impl Clone for PagePool {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+            budget_pages: self.budget_pages,
+            page_tokens: self.page_tokens,
+            d: self.d,
+            dv: self.dv,
+        }
+    }
+}
+
+impl PagePool {
+    /// Poison-tolerant lock: a panic surfaced through `push`/`gather`
+    /// (pool exhaustion mid-step) leaves the maps consistent, so later
+    /// session drops must still be able to release their pages.
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn new(budget_pages: usize, page_tokens: usize, d: usize, dv: usize) -> Self {
+        assert!(budget_pages > 0, "page pool needs a nonzero budget");
+        assert!(page_tokens > 0 && d > 0 && dv > 0);
+        Self {
+            inner: Arc::new(Mutex::new(PoolInner {
+                resident: HashMap::new(),
+                free: Vec::new(),
+                touch: HashMap::new(),
+                pinned: HashMap::new(),
+                clock: 0,
+                counters: PageCounters::default(),
+            })),
+            budget_pages,
+            page_tokens,
+            d,
+            dv,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+    pub fn budget_pages(&self) -> usize {
+        self.budget_pages
+    }
+    /// Key-row width every cache on this pool must use.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+    /// Value-row width every cache on this pool must use.
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+    /// Floats per page: `page_tokens` K rows then `page_tokens` V rows.
+    fn page_floats(&self) -> usize {
+        self.page_tokens * (self.d + self.dv)
+    }
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats() * std::mem::size_of::<f32>()
+    }
+    /// Hard ceiling on pool memory (resident + recycled buffers).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_pages * self.page_bytes()
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.lock().resident.len()
+    }
+    /// Bytes currently held by the pool (resident + free-list buffers);
+    /// by construction never exceeds `budget_bytes()`.
+    pub fn held_bytes(&self) -> usize {
+        let inner = self.lock();
+        (inner.resident.len() + inner.free.len()) * self.page_bytes()
+    }
+    pub fn counters(&self) -> PageCounters {
+        self.lock().counters
+    }
+
+    /// Pin `sid` for the duration of a decode step: its pages cannot be
+    /// evicted while the guard lives (the step's ensure/push/gather
+    /// sequence spans several pool calls).
+    pub fn pin(&self, sid: u64) -> PinGuard {
+        self.lock().pinned.entry(sid).and_modify(|c| *c += 1).or_insert(1);
+        PinGuard { pool: self.clone(), sid }
+    }
+
+    /// Advance the LRU clock for `sid` (call once per decode step).
+    pub fn touch(&self, sid: u64) {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let t = inner.clock;
+        inner.touch.insert(sid, t);
+    }
+
+    /// Ensure a writable page exists for (sid, idx), evicting the
+    /// oldest-idle unpinned session's lowest page if the budget is full.
+    /// Returns true if the page was already resident.
+    fn acquire(inner: &mut PoolInner, budget: usize, floats: usize, sid: u64, idx: usize) -> Result<bool, String> {
+        if inner.resident.contains_key(&(sid, idx)) {
+            return Ok(true);
+        }
+        let buf = if let Some(buf) = inner.free.pop() {
+            buf
+        } else if inner.resident.len() < budget {
+            vec![0.0f32; floats].into_boxed_slice()
+        } else {
+            // Budget full: evict one page from the oldest-idle unpinned
+            // session (never the allocating session, never a pinned one).
+            let victim_sid = inner
+                .resident
+                .keys()
+                .map(|&(s, _)| s)
+                .filter(|&s| s != sid && !inner.pinned.contains_key(&s))
+                .min_by_key(|&s| (inner.touch.get(&s).copied().unwrap_or(0), s));
+            let Some(vs) = victim_sid else {
+                return Err(format!(
+                    "page pool exhausted: {} pages resident, all pinned or owned by session {sid} \
+                     (raise [serve] page_pool_pages)",
+                    inner.resident.len()
+                ));
+            };
+            let victim_idx = inner
+                .resident
+                .keys()
+                .filter(|&&(s, _)| s == vs)
+                .map(|&(_, i)| i)
+                .min()
+                .expect("victim session owns at least one page");
+            let buf = inner.resident.remove(&(vs, victim_idx)).unwrap();
+            inner.counters.evicted += 1;
+            buf
+        };
+        inner.resident.insert((sid, idx), buf);
+        Ok(false)
+    }
+
+    fn unpin(&self, sid: u64) {
+        let mut inner = self.lock();
+        if let Some(c) = inner.pinned.get_mut(&sid) {
+            *c -= 1;
+            if *c == 0 {
+                inner.pinned.remove(&sid);
+            }
+        }
+    }
+
+    /// Drop every page owned by `sid` (session close / retirement).
+    pub fn release_session(&self, sid: u64) {
+        let mut inner = self.lock();
+        let keys: Vec<(u64, usize)> = inner.resident.keys().filter(|&&(s, _)| s == sid).copied().collect();
+        for k in keys {
+            let buf = inner.resident.remove(&k).unwrap();
+            inner.free.push(buf);
+        }
+        inner.touch.remove(&sid);
+    }
+}
+
+/// RAII un-pin for a stepping session.
+pub struct PinGuard {
+    pool: PagePool,
+    sid: u64,
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.pool.unpin(self.sid);
+    }
+}
+
+/// A session's view of the pool: same push/gather surface as `KvCache`,
+/// but rows live in pool pages and may be evicted between steps.
+pub struct PagedKvCache {
+    pool: PagePool,
+    sid: u64,
+    d: usize,
+    dv: usize,
+    /// Total rows pushed (cache length).
+    len: usize,
+    /// Window start (blockdiag resets this; softmax/quadratic keep 0).
+    base: usize,
+    k_scratch: Vec<f32>,
+    v_scratch: Vec<f32>,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: &PagePool, sid: u64, d: usize, dv: usize) -> Self {
+        assert_eq!(d, pool.d, "page pool was sized for d={}", pool.d);
+        assert_eq!(dv, pool.dv, "page pool was sized for dv={}", pool.dv);
+        Self {
+            pool: pool.clone(),
+            sid,
+            d,
+            dv,
+            len: 0,
+            base: 0,
+            k_scratch: Vec::new(),
+            v_scratch: Vec::new(),
+        }
+    }
+
+    pub fn session_id(&self) -> u64 {
+        self.sid
+    }
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    pub fn window_len(&self) -> usize {
+        self.len - self.base
+    }
+    pub fn d(&self) -> usize {
+        self.d
+    }
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+    /// Bytes resident in the pool for this session right now.
+    pub fn state_bytes(&self) -> usize {
+        let inner = self.pool.lock();
+        inner.resident.keys().filter(|&&(s, _)| s == self.sid).count() * self.pool.page_bytes()
+    }
+
+    /// Advance the pool LRU clock for this session (once per step).
+    pub fn touch(&self) {
+        self.pool.touch(self.sid);
+    }
+
+    /// Ensure every page covering the live window `[base, len)` is
+    /// resident, refilling evicted pages row-by-row via `refill(pos,
+    /// k_row, v_row)` (deterministic recompute from token history).
+    /// Returns the number of pages recomputed.
+    pub fn ensure_resident(
+        &mut self,
+        mut refill: impl FnMut(usize, &mut [f32], &mut [f32]) -> Result<(), String>,
+    ) -> Result<usize, String> {
+        if self.len == self.base {
+            return Ok(0);
+        }
+        let pt = self.pool.page_tokens;
+        let floats = self.pool.page_floats();
+        let budget = self.pool.budget_pages;
+        let (first, last) = (self.base / pt, (self.len - 1) / pt);
+        let mut inner = self.pool.lock();
+        let mut recomputed = 0usize;
+        for idx in first..=last {
+            if PagePool::acquire(&mut inner, budget, floats, self.sid, idx)? {
+                continue; // already resident
+            }
+            // Freshly (re)acquired: refill the live rows of this page.
+            let lo = (idx * pt).max(self.base);
+            let hi = ((idx + 1) * pt).min(self.len);
+            let page = inner.resident.get_mut(&(self.sid, idx)).unwrap();
+            for pos in lo..hi {
+                let slot = pos % pt;
+                let (kpart, vpart) = page.split_at_mut(pt * self.d);
+                refill(
+                    pos,
+                    &mut kpart[slot * self.d..(slot + 1) * self.d],
+                    &mut vpart[slot * self.dv..(slot + 1) * self.dv],
+                )?;
+            }
+            recomputed += 1;
+        }
+        inner.counters.recomputed += recomputed as u64;
+        Ok(recomputed)
+    }
+
+    /// Append one K/V row at position `len` (the page is acquired on
+    /// demand; panics only if the pool budget cannot fit one page for a
+    /// pinned session — surfaced by the coordinator as a request error).
+    pub fn push(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d, "key row dim mismatch");
+        assert_eq!(v.len(), self.dv, "value row dim mismatch");
+        let pt = self.pool.page_tokens;
+        let (idx, slot) = (self.len / pt, self.len % pt);
+        let floats = self.pool.page_floats();
+        let budget = self.pool.budget_pages;
+        let mut inner = self.pool.lock();
+        if let Err(e) = PagePool::acquire(&mut inner, budget, floats, self.sid, idx) {
+            panic!("{e}");
+        }
+        let page = inner.resident.get_mut(&(self.sid, idx)).unwrap();
+        let (kpart, vpart) = page.split_at_mut(pt * self.d);
+        kpart[slot * self.d..(slot + 1) * self.d].copy_from_slice(k);
+        vpart[slot * self.dv..(slot + 1) * self.dv].copy_from_slice(v);
+        drop(inner);
+        self.len += 1;
+    }
+
+    /// Start a fresh window (blockdiag block boundary): rows before
+    /// `len` become dead, and fully-dead pages return to the free list.
+    pub fn start_new_window(&mut self) {
+        self.base = self.len;
+        let pt = self.pool.page_tokens;
+        let first_live = self.base / pt;
+        let mut inner = self.pool.lock();
+        let dead: Vec<(u64, usize)> = inner
+            .resident
+            .keys()
+            .filter(|&&(s, i)| s == self.sid && i < first_live)
+            .copied()
+            .collect();
+        for k in dead {
+            let buf = inner.resident.remove(&k).unwrap();
+            inner.free.push(buf);
+        }
+    }
+
+    /// Copy the live window `[base, len)` into contiguous scratch and
+    /// return `(keys, values)` — byte-identical to `KvCache::keys()` /
+    /// `values()` for the same pushed rows.  Panics if a live page is
+    /// not resident (the coordinator pins + ensures before stepping).
+    pub fn gather(&mut self) -> (&[f32], &[f32]) {
+        let rows = self.len - self.base;
+        self.k_scratch.resize(rows * self.d, 0.0);
+        self.v_scratch.resize(rows * self.dv, 0.0);
+        let pt = self.pool.page_tokens;
+        let inner = self.pool.lock();
+        for (r, pos) in (self.base..self.len).enumerate() {
+            let (idx, slot) = (pos / pt, pos % pt);
+            let page = inner
+                .resident
+                .get(&(self.sid, idx))
+                .unwrap_or_else(|| panic!("KV page ({}, {idx}) evicted mid-step (pin before gather)", self.sid));
+            let (kpart, vpart) = page.split_at(pt * self.d);
+            self.k_scratch[r * self.d..(r + 1) * self.d]
+                .copy_from_slice(&kpart[slot * self.d..(slot + 1) * self.d]);
+            self.v_scratch[r * self.dv..(r + 1) * self.dv]
+                .copy_from_slice(&vpart[slot * self.dv..(slot + 1) * self.dv]);
+        }
+        drop(inner);
+        (&self.k_scratch, &self.v_scratch)
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        self.pool.release_session(self.sid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(seed: f32, d: usize) -> Vec<f32> {
+        (0..d).map(|i| seed + i as f32 * 0.25).collect()
+    }
+
+    #[test]
+    fn paged_gather_matches_unpaged_cache() {
+        let pool = PagePool::new(8, 3, 4, 4);
+        let mut paged = PagedKvCache::new(&pool, 1, 4, 4);
+        let mut flat_k = Vec::new();
+        let mut flat_v = Vec::new();
+        for t in 0..10 {
+            let k = row(t as f32, 4);
+            let v = row(100.0 + t as f32, 4);
+            paged.push(&k, &v);
+            flat_k.extend_from_slice(&k);
+            flat_v.extend_from_slice(&v);
+        }
+        let (ks, vs) = paged.gather();
+        assert_eq!(ks, &flat_k[..], "gathered keys must be bitwise identical");
+        assert_eq!(vs, &flat_v[..], "gathered values must be bitwise identical");
+    }
+
+    #[test]
+    fn lru_evicts_the_idle_session_and_recompute_restores_it() {
+        // Budget of 2 pages, 2 tokens each: two sessions cannot both
+        // keep a full 4-token history resident.
+        let pool = PagePool::new(2, 2, 2, 2);
+        let mut a = PagedKvCache::new(&pool, 1, 2, 2);
+        let mut b = PagedKvCache::new(&pool, 2, 2, 2);
+        a.touch();
+        a.push(&[1.0, 2.0], &[3.0, 4.0]);
+        a.push(&[5.0, 6.0], &[7.0, 8.0]); // a owns page 0 (full)
+        b.touch();
+        b.push(&[9.0, 9.5], &[9.6, 9.7]);
+        b.push(&[9.8, 9.9], &[10.0, 10.1]); // pool full: a=1 page, b=1 page
+        b.push(&[11.0, 11.5], &[11.6, 11.7]); // b needs page 1 -> evicts a's page
+        assert_eq!(pool.counters().evicted, 1);
+        assert_eq!(a.state_bytes(), 0, "idle session lost its page");
+        assert!(pool.held_bytes() <= pool.budget_bytes());
+
+        // a steps again: pin, recompute the lost page, gather bitwise.
+        b.release_now_for_test();
+        let _pin = pool.pin(1);
+        a.touch();
+        let rows = [([1.0f32, 2.0], [3.0f32, 4.0]), ([5.0, 6.0], [7.0, 8.0])];
+        let n = a
+            .ensure_resident(|pos, k, v| {
+                k.copy_from_slice(&rows[pos].0);
+                v.copy_from_slice(&rows[pos].1);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(n, 1, "exactly the evicted page is recomputed");
+        let (ks, _) = a.gather();
+        assert_eq!(ks, &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(pool.counters().recomputed, 1);
+    }
+
+    impl PagedKvCache {
+        fn release_now_for_test(&mut self) {
+            self.pool.release_session(self.sid);
+            self.len = 0;
+            self.base = 0;
+        }
+    }
+
+    #[test]
+    fn pool_never_exceeds_budget_under_churn() {
+        let pool = PagePool::new(3, 2, 2, 2);
+        let mut sessions: Vec<PagedKvCache> =
+            (0..4).map(|s| PagedKvCache::new(&pool, s as u64, 2, 2)).collect();
+        for t in 0..6 {
+            for s in sessions.iter_mut() {
+                s.touch();
+                s.push(&[t as f32, 0.5], &[1.0, t as f32]);
+                assert!(pool.held_bytes() <= pool.budget_bytes(), "budget is a hard ceiling");
+            }
+        }
+        assert!(pool.counters().evicted > 0, "churn at 4 sessions x 6 tokens must evict");
+        drop(sessions.pop());
+        assert!(pool.held_bytes() <= pool.budget_bytes());
+    }
+
+    #[test]
+    fn start_new_window_frees_dead_pages() {
+        let pool = PagePool::new(8, 2, 2, 2);
+        let mut c = PagedKvCache::new(&pool, 7, 2, 2);
+        for t in 0..4 {
+            c.push(&[t as f32, 0.0], &[0.0, t as f32]);
+        }
+        assert_eq!(pool.resident_pages(), 2);
+        c.start_new_window();
+        assert_eq!(c.window_len(), 0);
+        assert_eq!(pool.resident_pages(), 0, "fully-dead pages return to the free list");
+        c.push(&[9.0, 9.0], &[9.0, 9.0]);
+        let (ks, _) = c.gather();
+        assert_eq!(ks, &[9.0, 9.0], "window restarts cleanly mid-history");
+    }
+
+    #[test]
+    fn pinned_sessions_are_never_victims() {
+        let pool = PagePool::new(1, 2, 2, 2);
+        let mut a = PagedKvCache::new(&pool, 1, 2, 2);
+        let _pin = pool.pin(1);
+        a.push(&[1.0, 1.0], &[1.0, 1.0]);
+        let mut b = PagedKvCache::new(&pool, 2, 2, 2);
+        // The only resident page belongs to pinned session 1: b's push
+        // must fail loudly rather than corrupt a mid-step session.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            b.push(&[2.0, 2.0], &[2.0, 2.0]);
+        }));
+        assert!(r.is_err(), "allocation against an all-pinned pool must fail");
+    }
+}

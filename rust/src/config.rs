@@ -291,6 +291,35 @@ pub struct ServeConfig {
     /// full bidirectional attention, so causal serving (`lln serve
     /// --causal`, `[compute] causal`) needs this path.
     pub force_native: bool,
+    /// Coordinator shards: each shard owns its own per-bucket queues,
+    /// worker pools, and session registries; sessions pin to a shard
+    /// via the consistent-hash router, prefill goes to the
+    /// least-loaded shard, and idle workers steal prefill (never
+    /// session steps) from sibling shards' same-bucket queues.  `1` =
+    /// the historical single-front coordinator.
+    pub shards: usize,
+    /// Page budget for the paged KV cache backing softmax / quadratic
+    /// / blockdiag decode sessions: total pages the pool may hold
+    /// (`bytes = page_pool_pages * page_tokens * (d + dv) * 4`).
+    /// `0` = unpaged sessions (each grows its own `KvCache`).
+    pub page_pool_pages: usize,
+    /// Tokens per KV page.
+    pub page_tokens: usize,
+    /// Refill LRU-evicted pages from the session's token history on
+    /// its next step (deterministic re-embedding — bitwise identical).
+    /// When off, a session that lost a page fails its next step.
+    pub recompute_on_miss: bool,
+    /// Live decode-session slot budget; opening past it evicts the
+    /// oldest-idle session (a session holds its slot while stepping).
+    /// `0` = unlimited.
+    pub max_sessions: usize,
+    /// Admission token budgets per payload class, in tokens/second
+    /// with a one-second burst capacity (`0` = unlimited).  Decode
+    /// steps are exempt: a live session already holds its slot.
+    pub short_tokens_per_s: f64,
+    pub long_tokens_per_s: f64,
+    /// Session opens per second (each open costs 1).
+    pub opens_per_s: f64,
     /// Kernel-compute knobs forwarded to the native backends.
     pub compute: ComputeConfig,
 }
@@ -308,6 +337,14 @@ impl Default for ServeConfig {
             buckets: vec![128, 512],
             native_fallback: false,
             force_native: false,
+            shards: 1,
+            page_pool_pages: 0,
+            page_tokens: 16,
+            recompute_on_miss: true,
+            max_sessions: 0,
+            short_tokens_per_s: 0.0,
+            long_tokens_per_s: 0.0,
+            opens_per_s: 0.0,
             compute: ComputeConfig::default(),
         }
     }
@@ -331,6 +368,14 @@ impl ServeConfig {
             buckets,
             native_fallback: t.bool_or("serve.native_fallback", d.native_fallback),
             force_native: t.bool_or("serve.force_native", d.force_native),
+            shards: t.usize_or("serve.shards", d.shards),
+            page_pool_pages: t.usize_or("serve.page_pool_pages", d.page_pool_pages),
+            page_tokens: t.usize_or("serve.page_tokens", d.page_tokens),
+            recompute_on_miss: t.bool_or("serve.recompute_on_miss", d.recompute_on_miss),
+            max_sessions: t.usize_or("serve.max_sessions", d.max_sessions),
+            short_tokens_per_s: t.f64_or("serve.short_tokens_per_s", d.short_tokens_per_s),
+            long_tokens_per_s: t.f64_or("serve.long_tokens_per_s", d.long_tokens_per_s),
+            opens_per_s: t.f64_or("serve.opens_per_s", d.opens_per_s),
             compute: ComputeConfig::from_table(t),
         }
     }

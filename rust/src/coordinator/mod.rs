@@ -14,11 +14,13 @@
 
 pub mod batcher;
 pub mod native;
+pub mod router;
 pub mod server;
 
 pub use batcher::{desired_workers, plan_batches, BatchPlan};
 pub use native::NativeEncoder;
-pub use server::{Coordinator, DecodeSession, ReqSpec, ServeStats};
+pub use router::HashRing;
+pub use server::{ClassWindow, Coordinator, DecodeSession, ReqSpec, ServeStats};
 
 use crate::data::special;
 
@@ -115,6 +117,43 @@ impl Work {
     /// the prefill batcher's fill timer.
     pub fn is_session_work(&self) -> bool {
         !matches!(self, Work::Infer(_))
+    }
+}
+
+/// SLO payload classes: every completion is accounted to exactly one,
+/// each with its own bounded latency window — mixed traffic no longer
+/// smears sub-millisecond decode steps into the prefill percentiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PayloadClass {
+    /// Prefill riding the smallest configured bucket.
+    PrefillShort,
+    /// Prefill in any larger bucket.
+    PrefillLong,
+    /// One decode-session token step.
+    DecodeStep,
+    /// Session open (state allocation + registration).
+    SessionOpen,
+}
+
+impl PayloadClass {
+    pub const ALL: [PayloadClass; 4] = [
+        PayloadClass::PrefillShort,
+        PayloadClass::PrefillLong,
+        PayloadClass::DecodeStep,
+        PayloadClass::SessionOpen,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadClass::PrefillShort => "prefill-short",
+            PayloadClass::PrefillLong => "prefill-long",
+            PayloadClass::DecodeStep => "decode-step",
+            PayloadClass::SessionOpen => "session-open",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
     }
 }
 

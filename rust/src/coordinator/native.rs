@@ -174,6 +174,18 @@ impl NativeEncoder {
         self.head.matvec_t(&out)
     }
 
+    /// Recompute the K/V rows a paged decode session pushed at `pos`
+    /// for `token` — the embedding row itself on both sides (this
+    /// encoder steps with q = k = v), and deterministic in (token,
+    /// pos, seed), so a page refilled after LRU eviction is bitwise
+    /// identical to the one that was evicted.
+    pub fn recompute_kv_rows(&self, token: i32, pos: usize, k: &mut [f32], v: &mut [f32]) {
+        assert_eq!(k.len(), self.d_model, "recompute key row dim mismatch");
+        assert_eq!(v.len(), self.d_model, "recompute value row dim mismatch");
+        self.embed_row_into(token, pos, k);
+        v.copy_from_slice(k);
+    }
+
     /// Reference for the decode path: per-token logits of a full causal
     /// batch forward over `tokens` (the head applied to every attention
     /// output row).  `decode_step` over the same tokens must reproduce

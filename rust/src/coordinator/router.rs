@@ -1,0 +1,120 @@
+//! Consistent-hash session router for the sharded coordinator front.
+//!
+//! Sessions are pinned to a shard for their lifetime (their decode
+//! state lives in that shard's registry), so the router must be stable:
+//! when the shard count grows from `n` to `n+1`, only the keys whose
+//! ring arc the new shard claims may move — and every moved key lands
+//! on the *new* shard.  A plain `key % n` would reshuffle nearly
+//! everything.  Each shard contributes `replicas` virtual points to a
+//! sorted ring; a key routes to the first point clockwise of its hash.
+
+/// SplitMix64 finalizer: cheap, well-mixed 64-bit hash for ring points
+/// and keys (session ids are sequential, so mixing matters).
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Immutable consistent-hash ring over `shards` shards.
+pub struct HashRing {
+    /// (point hash, shard) sorted by hash.
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+/// Virtual points per shard; enough to keep the load split within a few
+/// percent of uniform at single-digit shard counts.
+pub const RING_REPLICAS: usize = 64;
+
+impl HashRing {
+    pub fn new(shards: usize) -> Self {
+        Self::with_replicas(shards, RING_REPLICAS)
+    }
+
+    pub fn with_replicas(shards: usize, replicas: usize) -> Self {
+        let shards = shards.max(1);
+        let replicas = replicas.max(1);
+        let mut points = Vec::with_capacity(shards * replicas);
+        for s in 0..shards {
+            for r in 0..replicas {
+                points.push((mix(((s as u64) << 32) | r as u64), s));
+            }
+        }
+        points.sort_unstable();
+        Self { points, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard owning `key`: first ring point clockwise of `mix(key)`.
+    pub fn route(&self, key: u64) -> usize {
+        let h = mix(key);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[if i == self.points.len() { 0 } else { i }].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        let ring = HashRing::new(1);
+        for k in 0..1000u64 {
+            assert_eq!(ring.route(k), 0);
+        }
+    }
+
+    #[test]
+    fn load_is_roughly_uniform() {
+        let ring = HashRing::new(4);
+        let mut counts = [0usize; 4];
+        for k in 0..40_000u64 {
+            counts[ring.route(k)] += 1;
+        }
+        for &c in &counts {
+            // Within 30% of the uniform 10k per shard.
+            assert!((7_000..=13_000).contains(&c), "skewed shard load: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_only_remaps_onto_the_new_shard() {
+        // The consistency property the session registry depends on:
+        // adding shard n never moves a key between two old shards.
+        for n in 1..6usize {
+            let old = HashRing::new(n);
+            let new = HashRing::new(n + 1);
+            let mut moved = 0usize;
+            for k in 0..20_000u64 {
+                let (a, b) = (old.route(k), new.route(k));
+                if a != b {
+                    assert_eq!(b, n, "key {k} remapped {a}->{b}, not to the new shard {n}");
+                    moved += 1;
+                }
+            }
+            // The new shard claims roughly 1/(n+1) of the keyspace.
+            let expect = 20_000 / (n + 1);
+            assert!(
+                moved < 2 * expect,
+                "shard growth {n}->{} moved {moved} keys (expected ~{expect})",
+                n + 1
+            );
+            assert!(moved > 0, "the new shard must claim some keys");
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let a = HashRing::new(3);
+        let b = HashRing::new(3);
+        for k in 0..512u64 {
+            assert_eq!(a.route(k), b.route(k));
+        }
+    }
+}

@@ -33,7 +33,11 @@ use xla::Literal;
 
 use super::batcher::{desired_workers, plan_batches, should_fire};
 use super::native::NativeEncoder;
-use super::{pad_to_bucket, pick_bucket, Request, Response, SessionOpen, SessionStep, Work};
+use super::router::HashRing;
+use super::{
+    pad_to_bucket, pick_bucket, PayloadClass, Request, Response, SessionOpen, SessionStep, Work,
+};
+use crate::attention::paged::{PagePool, PagedKvCache};
 use crate::attention::{DecodeState, Method};
 use crate::config::ServeConfig;
 use crate::runtime::{Engine, HostTensor, ParamStore};
@@ -45,61 +49,180 @@ const IDLE_RETIRE: Duration = Duration::from_millis(250);
 /// How long a decode step waits for its predecessor (another worker may
 /// still be executing the session's previous position) before erroring.
 const STEP_ORDER_TIMEOUT: Duration = Duration::from_secs(5);
-/// Latency samples kept for the percentile stats: a bounded window
-/// (old samples are overwritten round-robin) so a long-lived streaming
+/// Latency samples kept per payload class: a bounded window (old
+/// samples are overwritten round-robin) so a long-lived streaming
 /// server — one sample per decoded token — holds O(1) stats memory.
 const LATENCY_WINDOW: usize = 65_536;
+/// Recent batch sizes kept (bounded, like the latency windows — the
+/// flat vector used to grow one `usize` per batch forever).
+const BATCH_WINDOW: usize = 4_096;
 /// Backoff between scaler spawn attempts after a worker death, so a
 /// persistently failing executor cannot drive a spawn/die hot loop.
 const SPAWN_BACKOFF: Duration = Duration::from_millis(500);
 
-/// Rolling serving metrics (shared across workers).
-#[derive(Default)]
+/// One payload class's bounded latency window.  The ring has its *own*
+/// wrapping cursor: the old implementation indexed by the shared
+/// `completed` counter, which also advances on paths that never record
+/// a sample, so once full the overwrites were uneven and could clobber
+/// the same slot repeatedly.
+#[derive(Clone, Debug)]
+pub struct ClassWindow {
+    samples: Vec<f64>,
+    cursor: usize,
+    cap: usize,
+    /// Completions accounted to this class (lifetime, not windowed).
+    pub completed: u64,
+}
+
+impl Default for ClassWindow {
+    fn default() -> Self {
+        Self::with_capacity(LATENCY_WINDOW)
+    }
+}
+
+impl ClassWindow {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { samples: Vec::new(), cursor: 0, cap: cap.max(1), completed: 0 }
+    }
+
+    /// Record one completion latency (overwrites the oldest sample once
+    /// the window fills — every slot is overwritten evenly).
+    pub fn record(&mut self, ms: f64) {
+        self.completed += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(ms);
+        } else {
+            self.samples[self.cursor] = ms;
+        }
+        self.cursor = (self.cursor + 1) % self.cap;
+    }
+
+    /// The windowed samples (unordered ring contents).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Windowed latency percentile; 0.0 with no traffic.
+    pub fn percentile(&self, q: f64) -> f64 {
+        crate::stats::percentile(&self.samples, q)
+    }
+}
+
+/// Rolling serving metrics (shared across all shards' workers).
 pub struct ServeStats {
+    /// Total completions across every payload class (prefill requests,
+    /// decode steps, and session opens).
     pub completed: u64,
     pub rejected: u64,
     pub errors: u64,
-    pub latencies_ms: Vec<f64>,
+    /// Per-[`PayloadClass`] latency windows, indexed by
+    /// `PayloadClass::index()`.
+    pub classes: [ClassWindow; 4],
+    /// Recent batch sizes (bounded ring; see `batches` /
+    /// `batch_members` for the exact lifetime mean).
     pub batch_sizes: Vec<usize>,
+    batch_cursor: usize,
+    /// Batches executed (lifetime).
+    pub batches: u64,
+    /// Live members across all batches (lifetime).
+    pub batch_members: u64,
     /// Decode sessions successfully opened.
     pub sessions_opened: u64,
+    /// Session slots reclaimed from oldest-idle sessions by admission.
+    pub sessions_evicted: u64,
     /// Decode-session steps successfully served (also counted in
-    /// `completed` / `latencies_ms`).
+    /// `completed` / the decode-step class window).
     pub decode_steps: u64,
     /// Workers spawned by the per-bucket autoscaler beyond the floor.
     pub workers_spawned: u64,
+    /// Prefill items stolen from sibling shards' same-bucket queues.
+    pub steals: u64,
+    /// KV pages evicted from idle sessions under the pool budget.
+    pub pages_evicted: u64,
+    /// KV pages refilled from token history (recompute-on-miss).
+    pub pages_recomputed: u64,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self {
+            completed: 0,
+            rejected: 0,
+            errors: 0,
+            classes: std::array::from_fn(|_| ClassWindow::default()),
+            batch_sizes: Vec::new(),
+            batch_cursor: 0,
+            batches: 0,
+            batch_members: 0,
+            sessions_opened: 0,
+            sessions_evicted: 0,
+            decode_steps: 0,
+            workers_spawned: 0,
+            steals: 0,
+            pages_evicted: 0,
+            pages_recomputed: 0,
+        }
+    }
 }
 
 impl ServeStats {
+    /// Account one completion to its payload class.
+    pub fn record(&mut self, class: PayloadClass, ms: f64) {
+        self.completed += 1;
+        self.classes[class.index()].record(ms);
+    }
+
+    /// One class's window.
+    pub fn class(&self, class: PayloadClass) -> &ClassWindow {
+        &self.classes[class.index()]
+    }
+
+    /// Windowed percentile for one payload class; 0.0 with no traffic.
+    pub fn class_percentile(&self, class: PayloadClass, q: f64) -> f64 {
+        self.classes[class.index()].percentile(q)
+    }
+
+    /// Mixed-traffic percentile over every class's window (the legacy
+    /// single-number view; per-class numbers are the honest ones).
+    pub fn mixed_percentile(&self, q: f64) -> f64 {
+        let all: Vec<f64> =
+            self.classes.iter().flat_map(|c| c.samples().iter().copied()).collect();
+        crate::stats::percentile(&all, q)
+    }
+
     pub fn p50_latency(&self) -> f64 {
-        if self.latencies_ms.is_empty() {
-            0.0
-        } else {
-            crate::stats::percentile(&self.latencies_ms, 50.0)
-        }
+        self.mixed_percentile(50.0)
     }
     pub fn p95_latency(&self) -> f64 {
-        if self.latencies_ms.is_empty() {
+        self.mixed_percentile(95.0)
+    }
+
+    /// Record one executed batch's live-member count (bounded ring +
+    /// exact lifetime counters).
+    pub fn record_batch(&mut self, real: usize) {
+        self.batches += 1;
+        self.batch_members += real as u64;
+        if self.batch_sizes.len() < BATCH_WINDOW {
+            self.batch_sizes.push(real);
+        } else {
+            self.batch_sizes[self.batch_cursor] = real;
+        }
+        self.batch_cursor = (self.batch_cursor + 1) % BATCH_WINDOW;
+    }
+
+    /// Exact lifetime mean batch size (counters, not the window).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
             0.0
         } else {
-            crate::stats::percentile(&self.latencies_ms, 95.0)
-        }
-    }
-    /// Record one completion latency into the bounded sample window.
-    pub fn record_latency(&mut self, ms: f64) {
-        if self.latencies_ms.len() < LATENCY_WINDOW {
-            self.latencies_ms.push(ms);
-        } else {
-            self.latencies_ms[(self.completed as usize) % LATENCY_WINDOW] = ms;
+            self.batch_members as f64 / self.batches as f64
         }
     }
 
-    pub fn mean_batch_size(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
-            0.0
-        } else {
-            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
-        }
+    /// Zero every counter and window (serve_bench calls this after
+    /// warmup so compile/first-touch requests don't skew percentiles).
+    pub fn reset(&mut self) {
+        *self = ServeStats::default();
     }
 }
 
@@ -111,21 +234,102 @@ struct SessionSlot {
     state: DecodeState,
     pos: usize,
     failed: Option<String>,
+    /// Token history, recorded only for paged states: the deterministic
+    /// input recompute-on-miss re-embeds evicted pages from (4 bytes
+    /// per token, bounded by the bucket length).
+    tokens: Vec<i32>,
 }
 
-/// Per-bucket registry of open sessions.  Any worker of the bucket can
-/// step any session (native executors of a bucket are deterministic
-/// replicas), so the registry — not a worker — owns the state.
+/// Per-(shard, bucket) registry of open sessions.  Any worker of the
+/// shard's bucket can step any of its sessions (native executors of a
+/// bucket are deterministic replicas), so the registry — not a worker —
+/// owns the state.
 type SessionMap = Arc<Mutex<HashMap<u64, Arc<Mutex<SessionSlot>>>>>;
+
+/// Where one live session lives (for slot eviction and close): its
+/// shard/bucket registry plus its last-touch tick for oldest-idle
+/// selection.
+struct SessionMeta {
+    sessions: SessionMap,
+    touched: Arc<AtomicU64>,
+}
+
+/// Coordinator-wide registry of live sessions (slot budget + eviction).
+type SessionRegistry = Arc<Mutex<HashMap<u64, SessionMeta>>>;
+
+/// A token bucket: `rate` units/second refill with a one-second burst
+/// capacity.  `rate == 0` disables the budget entirely.  A request
+/// costing more than the capacity can never be admitted — rejected
+/// deterministically, not "after waiting".
+struct TokenBucket {
+    rate: f64,
+    state: Mutex<(f64, Instant)>, // (tokens, last refill)
+}
+
+impl TokenBucket {
+    fn new(rate: f64) -> Self {
+        Self { rate, state: Mutex::new((rate.max(0.0), Instant::now())) }
+    }
+
+    fn admit(&self, cost: f64) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        let (ref mut tokens, ref mut last) = *st;
+        *tokens = (*tokens + now.duration_since(*last).as_secs_f64() * self.rate).min(self.rate);
+        *last = now;
+        if *tokens >= cost {
+            *tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-class admission budgets (the priority mechanism: decode steps
+/// are exempt because a live session already holds its slot; everything
+/// else competes for its class's token budget).
+struct Admission {
+    short: TokenBucket,
+    long: TokenBucket,
+    opens: TokenBucket,
+}
+
+/// One shard of the front: its own per-bucket queues and session
+/// registries.  Workers are per (shard, bucket); sessions pin here via
+/// the consistent-hash router.
+struct Shard {
+    queues: Vec<(usize, Channel<Work>)>, // (bucket_len, queue)
+    sessions: Vec<(usize, SessionMap)>,
+}
+
+impl Shard {
+    fn queue(&self, bucket: usize) -> &Channel<Work> {
+        &self.queues.iter().find(|(b, _)| *b == bucket).unwrap().1
+    }
+    fn session_map(&self, bucket: usize) -> &SessionMap {
+        &self.sessions.iter().find(|(b, _)| *b == bucket).unwrap().1
+    }
+}
 
 /// The running coordinator: submit requests, open decode sessions, read
 /// stats, shut down.
 pub struct Coordinator {
     cfg: ServeConfig,
-    queues: Vec<(usize, Channel<Work>)>, // (bucket_len, queue)
-    /// Per-bucket decode-session registries (shared with the bucket's
-    /// workers; session handles remove themselves here on close).
-    sessions: Vec<(usize, SessionMap)>,
+    shards: Vec<Shard>,
+    /// Consistent-hash session router (stable under shard growth).
+    ring: HashRing,
+    /// Live-session registry for the slot budget / oldest-idle eviction.
+    registry: SessionRegistry,
+    /// Logical touch clock: sessions stamp their last activity from it.
+    touch_clock: Arc<AtomicU64>,
+    /// Per-class admission budgets (stateful token buckets).
+    admission: Admission,
+    /// Shared KV page pool (None = unpaged legacy sessions).
+    pool: Option<PagePool>,
     workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
     stats: Arc<Mutex<ServeStats>>,
     next_id: AtomicU64,
@@ -139,15 +343,25 @@ pub struct Coordinator {
 struct WorkerCtx {
     cfg: ServeConfig,
     dir: std::path::PathBuf,
+    shard: usize,
     bucket: usize,
     queue: Channel<Work>,
+    /// Same-bucket queues of the *other* shards: an idle worker steals
+    /// queued prefill (never session work — sessions are shard-pinned)
+    /// from these.
+    victims: Vec<Channel<Work>>,
     stats: Arc<Mutex<ServeStats>>,
     draining: Arc<AtomicBool>,
     sessions: SessionMap,
-    /// Live worker count of this bucket (autoscaler reads, retiring
-    /// workers CAS-decrement).
+    /// Shared KV page pool (None = unpaged legacy sessions).
+    pool: Option<PagePool>,
+    /// This bucket is the smallest configured bucket (its prefill is
+    /// the `PrefillShort` class; larger buckets are `PrefillLong`).
+    short_bucket: bool,
+    /// Live worker count of this (shard, bucket) — autoscaler reads,
+    /// retiring workers CAS-decrement.
     live: Arc<AtomicUsize>,
-    /// Workers of this bucket that died abnormally (executor
+    /// Workers of this (shard, bucket) that died abnormally (executor
     /// construction/runtime failure) — the scaler backs off on growth.
     deaths: Arc<AtomicUsize>,
     min_workers: usize,
@@ -166,36 +380,82 @@ impl Coordinator {
         let draining = Arc::new(AtomicBool::new(false));
         let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let (min_w, max_w) = cfg.worker_band();
-        let mut queues = Vec::new();
-        let mut session_maps: Vec<(usize, SessionMap)> = Vec::new();
-        for &bucket in &cfg.buckets {
-            let q: Channel<Work> = Channel::bounded(cfg.queue_capacity);
-            queues.push((bucket, q.clone()));
-            let bucket_sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
-            session_maps.push((bucket, Arc::clone(&bucket_sessions)));
-            let ctx = WorkerCtx {
-                cfg: cfg.clone(),
-                dir: artifacts.to_path_buf(),
-                bucket,
-                queue: q.clone(),
-                stats: Arc::clone(&stats),
-                draining: Arc::clone(&draining),
-                sessions: bucket_sessions,
-                live: Arc::new(AtomicUsize::new(min_w)),
-                deaths: Arc::new(AtomicUsize::new(0)),
-                min_workers: min_w,
-            };
-            for w in 0..min_w {
-                workers.lock().unwrap().push(spawn_worker(ctx.clone(), w));
+        let n_shards = cfg.shards.max(1);
+        let short_len = cfg.buckets.iter().copied().min().unwrap_or(0);
+        // One shared page pool across every shard and bucket: paging is
+        // a *global* memory budget, so sessions on any shard compete
+        // for the same pages.  Native decode states are all
+        // NATIVE_D_MODEL-dimensional.
+        let pool = if cfg.page_pool_pages > 0 {
+            Some(PagePool::new(
+                cfg.page_pool_pages,
+                cfg.page_tokens.max(1),
+                super::native::NATIVE_D_MODEL,
+                super::native::NATIVE_D_MODEL,
+            ))
+        } else {
+            None
+        };
+        // Two passes: queues/registries first so every worker can see
+        // every sibling shard's same-bucket queue as a steal victim.
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let mut queues = Vec::new();
+            let mut session_maps: Vec<(usize, SessionMap)> = Vec::new();
+            for &bucket in &cfg.buckets {
+                queues.push((bucket, Channel::bounded(cfg.queue_capacity)));
+                session_maps.push((bucket, Arc::new(Mutex::new(HashMap::new()))));
             }
-            if max_w > min_w {
-                workers.lock().unwrap().push(spawn_scaler(ctx, max_w, Arc::clone(&workers)));
+            shards.push(Shard { queues, sessions: session_maps });
+        }
+        for (s, shard) in shards.iter().enumerate() {
+            for &bucket in &cfg.buckets {
+                let victims: Vec<Channel<Work>> = shards
+                    .iter()
+                    .enumerate()
+                    .filter(|&(o, _)| o != s)
+                    .map(|(_, other)| other.queue(bucket).clone())
+                    .collect();
+                let ctx = WorkerCtx {
+                    cfg: cfg.clone(),
+                    dir: artifacts.to_path_buf(),
+                    shard: s,
+                    bucket,
+                    queue: shard.queue(bucket).clone(),
+                    victims,
+                    stats: Arc::clone(&stats),
+                    draining: Arc::clone(&draining),
+                    sessions: Arc::clone(shard.session_map(bucket)),
+                    pool: pool.clone(),
+                    short_bucket: bucket == short_len,
+                    live: Arc::new(AtomicUsize::new(min_w)),
+                    deaths: Arc::new(AtomicUsize::new(0)),
+                    min_workers: min_w,
+                };
+                for w in 0..min_w {
+                    workers.lock().unwrap().push(spawn_worker(ctx.clone(), w));
+                }
+                if max_w > min_w {
+                    workers
+                        .lock()
+                        .unwrap()
+                        .push(spawn_scaler(ctx, max_w, Arc::clone(&workers)));
+                }
             }
         }
+        let admission = Admission {
+            short: TokenBucket::new(cfg.short_tokens_per_s),
+            long: TokenBucket::new(cfg.long_tokens_per_s),
+            opens: TokenBucket::new(cfg.opens_per_s),
+        };
         Ok(Self {
             cfg,
-            queues,
-            sessions: session_maps,
+            shards,
+            ring: HashRing::new(n_shards),
+            registry: Arc::new(Mutex::new(HashMap::new())),
+            touch_clock: Arc::new(AtomicU64::new(1)),
+            admission,
+            pool,
             workers,
             stats,
             next_id: AtomicU64::new(1),
@@ -204,10 +464,27 @@ impl Coordinator {
         })
     }
 
-    fn queue_for(&self, len: usize) -> Result<(usize, &Channel<Work>)> {
-        let bucket = pick_bucket(&self.cfg.buckets, len)
-            .ok_or_else(|| anyhow!("sequence length {len} exceeds all buckets"))?;
-        Ok((bucket, &self.queues.iter().find(|(b, _)| *b == bucket).unwrap().1))
+    fn bucket_for(&self, len: usize) -> Result<usize> {
+        pick_bucket(&self.cfg.buckets, len)
+            .ok_or_else(|| anyhow!("sequence length {len} exceeds all buckets"))
+    }
+
+    /// Prefill shard choice: least-loaded same-bucket queue (work
+    /// stealing rebalances whatever this heuristic gets wrong).
+    fn least_loaded_shard(&self, bucket: usize) -> usize {
+        (0..self.shards.len())
+            .min_by_key(|&s| self.shards[s].queue(bucket).len())
+            .unwrap_or(0)
+    }
+
+    /// The shard/bucket the admission token budgets classify `len` as.
+    fn prefill_class(&self, bucket: usize) -> PayloadClass {
+        let short_len = self.cfg.buckets.iter().copied().min().unwrap_or(0);
+        if bucket == short_len {
+            PayloadClass::PrefillShort
+        } else {
+            PayloadClass::PrefillLong
+        }
     }
 
     fn enqueue(&self, queue: &Channel<Work>, bucket: usize, work: Work) -> Result<()> {
@@ -249,7 +526,20 @@ impl Coordinator {
         causal: bool,
         scale: Option<f32>,
     ) -> Result<mpsc::Receiver<Response>> {
-        let (bucket, queue) = self.queue_for(tokens.len())?;
+        let bucket = self.bucket_for(tokens.len())?;
+        // Admission: each prefill class pays its live token count
+        // against its budget.  Decode steps are exempt — a live session
+        // already holds its slot (session-aware admission).
+        let budget = match self.prefill_class(bucket) {
+            PayloadClass::PrefillShort => &self.admission.short,
+            _ => &self.admission.long,
+        };
+        if !budget.admit(tokens.len() as f64) {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!("admission: token budget exhausted for bucket n{bucket}");
+        }
+        let shard = self.least_loaded_shard(bucket);
+        let queue = self.shards[shard].queue(bucket);
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -295,19 +585,59 @@ impl Coordinator {
     /// full-attention only) and unmaskable methods (Nystrom/Linformer)
     /// — or on backpressure.
     pub fn open_session(&self, max_len: usize) -> Result<DecodeSession> {
-        let (bucket, queue) = self.queue_for(max_len)?;
+        let bucket = self.bucket_for(max_len)?;
+        if !self.admission.opens.admit(1.0) {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!("admission: session-open budget exhausted");
+        }
+        // Slot budget: a live session holds its slot; when full, the
+        // oldest-idle session (smallest touch stamp) is evicted to make
+        // room.  Removing its slot drops the decode state — for paged
+        // states that releases its pages back to the pool.
+        if self.cfg.max_sessions > 0 {
+            let mut reg = self.registry.lock().unwrap();
+            if reg.len() >= self.cfg.max_sessions {
+                let victim = reg
+                    .iter()
+                    .min_by_key(|(vid, meta)| (meta.touched.load(Ordering::Relaxed), **vid))
+                    .map(|(vid, _)| *vid);
+                match victim {
+                    Some(vid) => {
+                        let meta = reg.remove(&vid).unwrap();
+                        meta.sessions.lock().unwrap().remove(&vid);
+                        self.stats.lock().unwrap().sessions_evicted += 1;
+                    }
+                    None => bail!("session slot budget exhausted"),
+                }
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Sessions pin to their consistent-hash shard for life: their
+        // decode state lives in that shard's registry, and stealing
+        // skips session work, so steps always execute where the state
+        // is.
+        let shard = self.ring.route(id);
+        let queue = self.shards[shard].queue(bucket);
         let (tx, rx) = mpsc::channel();
         let open = SessionOpen { id, enqueued_at: Instant::now(), resp: tx };
         self.enqueue(queue, bucket, Work::Open(open))?;
         let resp = rx.recv().map_err(|_| anyhow!("worker dropped session-open response"))?;
         resp.result.map_err(|e| anyhow!(e))?;
-        let sessions = Arc::clone(&self.sessions.iter().find(|(b, _)| *b == bucket).unwrap().1);
+        let sessions = Arc::clone(self.shards[shard].session_map(bucket));
+        let touched =
+            Arc::new(AtomicU64::new(self.touch_clock.fetch_add(1, Ordering::Relaxed) + 1));
+        self.registry.lock().unwrap().insert(
+            id,
+            SessionMeta { sessions: Arc::clone(&sessions), touched: Arc::clone(&touched) },
+        );
         Ok(DecodeSession {
             id,
             bucket,
             queue: queue.clone(),
             sessions,
+            registry: Arc::clone(&self.registry),
+            touched,
+            touch_clock: Arc::clone(&self.touch_clock),
             stats: Arc::clone(&self.stats),
             next_pos: 0,
             closed: false,
@@ -318,6 +648,12 @@ impl Coordinator {
         Arc::clone(&self.stats)
     }
 
+    /// The shared KV page pool, when `[serve] page_pool_pages > 0`
+    /// configured one (benches read its budget/occupancy/counters).
+    pub fn page_pool(&self) -> Option<&PagePool> {
+        self.pool.as_ref()
+    }
+
     pub fn uptime_secs(&self) -> f64 {
         self.started_at.elapsed().as_secs_f64()
     }
@@ -326,8 +662,10 @@ impl Coordinator {
     /// autoscaled extras).
     pub fn shutdown(self) {
         self.draining.store(true, Ordering::SeqCst);
-        for (_, q) in &self.queues {
-            q.close();
+        for shard in &self.shards {
+            for (_, q) in &shard.queues {
+                q.close();
+            }
         }
         loop {
             // Scalers may still be pushing handles while we join; drain
@@ -357,6 +695,12 @@ pub struct DecodeSession {
     bucket: usize,
     queue: Channel<Work>,
     sessions: SessionMap,
+    /// Coordinator-wide live-session registry (slot accounting).
+    registry: SessionRegistry,
+    /// This session's last-activity stamp (oldest-idle eviction reads
+    /// it; every step bumps it from the shared clock).
+    touched: Arc<AtomicU64>,
+    touch_clock: Arc<AtomicU64>,
     stats: Arc<Mutex<ServeStats>>,
     next_pos: usize,
     closed: bool,
@@ -397,6 +741,10 @@ impl DecodeSession {
         if self.next_pos >= self.bucket {
             bail!("decode session reached its bucket length n{}", self.bucket);
         }
+        // Session-aware admission: activity protects the slot from
+        // oldest-idle eviction.
+        self.touched
+            .store(self.touch_clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
         let step = SessionStep {
             id: self.id,
             pos: self.next_pos,
@@ -468,6 +816,7 @@ impl DecodeSession {
             // state.  In-flight steps keep the slot alive through their
             // own Arc; steps still queued reply "unknown session".
             self.sessions.lock().unwrap().remove(&self.id);
+            self.registry.lock().unwrap().remove(&self.id);
             self.closed = true;
         }
     }
@@ -539,6 +888,19 @@ trait BatchExec {
         pos: usize,
         token: i32,
     ) -> Result<Vec<f32>, String>;
+
+    /// Recompute the K/V rows of `token` at `pos` into `k`/`v` — the
+    /// paged cache's recompute-on-miss refill.  Only executors with a
+    /// deterministic embedding can honor it.
+    fn recompute_kv(
+        &self,
+        _token: i32,
+        _pos: usize,
+        _k: &mut [f32],
+        _v: &mut [f32],
+    ) -> Result<(), String> {
+        Err("this executor cannot recompute evicted KV pages".into())
+    }
 }
 
 /// PJRT path: resident params + the bucket's b1/bN executables.
@@ -719,6 +1081,19 @@ impl BatchExec for NativeExec {
     ) -> Result<Vec<f32>, String> {
         Ok(self.encoder.decode_step(state, pos, token))
     }
+
+    fn recompute_kv(
+        &self,
+        token: i32,
+        pos: usize,
+        k: &mut [f32],
+        v: &mut [f32],
+    ) -> Result<(), String> {
+        // The native embedding is deterministic in (token, pos), so an
+        // evicted page is recomputed bit-for-bit.
+        self.encoder.recompute_kv_rows(token, pos, k, v);
+        Ok(())
+    }
 }
 
 /// Run `f` with panics converted to `Err` — backend capability and
@@ -741,11 +1116,12 @@ fn catch_panic<T>(f: impl FnOnce() -> T) -> Result<T, String> {
 }
 
 fn spawn_worker(ctx: WorkerCtx, index: usize) -> JoinHandle<()> {
+    let shard = ctx.shard;
     let bucket = ctx.bucket;
     let live = Arc::clone(&ctx.live);
     let deaths = Arc::clone(&ctx.deaths);
     std::thread::Builder::new()
-        .name(format!("lln-worker-n{bucket}-{index}"))
+        .name(format!("lln-worker-s{shard}-n{bucket}-{index}"))
         .spawn(move || {
             if let Err(e) = worker_loop(ctx) {
                 // A worker that dies (e.g. executor construction
@@ -770,7 +1146,7 @@ fn spawn_scaler(
     registry: Arc<Mutex<Vec<JoinHandle<()>>>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
-        .name(format!("lln-scaler-n{}", ctx.bucket))
+        .name(format!("lln-scaler-s{}-n{}", ctx.shard, ctx.bucket))
         .spawn(move || {
             let poll = Duration::from_millis(ctx.cfg.batch_timeout_ms.clamp(1, 20));
             let mut seq = ctx.min_workers;
@@ -816,7 +1192,24 @@ fn spawn_scaler(
 /// queue closes (or, for autoscaled extras, until idle long enough to
 /// retire back to the bucket's floor).
 fn worker_loop(ctx: WorkerCtx) -> Result<()> {
-    let WorkerCtx { cfg, dir, bucket, queue, stats, draining, sessions, live, min_workers } = ctx;
+    let WorkerCtx {
+        cfg,
+        dir,
+        shard: _,
+        bucket,
+        queue,
+        victims,
+        stats,
+        draining,
+        sessions,
+        pool,
+        short_bucket,
+        live,
+        min_workers,
+        ..
+    } = ctx;
+    let prefill_class =
+        if short_bucket { PayloadClass::PrefillShort } else { PayloadClass::PrefillLong };
     let mut exec: Box<dyn BatchExec> = if cfg.force_native {
         // Causal serving and mask-sensitive traffic skip PJRT outright:
         // the AOT executables are full bidirectional attention.
@@ -851,6 +1244,23 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
                 Ok(None) => {}
                 Err(_) if pending.is_empty() => return Ok(()), // closed + drained
                 Err(_) => {}
+            }
+        }
+        if pending.is_empty() && !victims.is_empty() {
+            // Work stealing: an idle shard relieves a loaded sibling's
+            // same-bucket queue.  Only the FIFO prefix of *prefill*
+            // items moves — session work is shard-pinned (its decode
+            // state lives in the victim shard's registry) and stealing
+            // past it would reorder the queue.
+            for v in &victims {
+                let stolen = v.steal_up_to(cfg.max_batch - pending.len(), |w| !w.is_session_work());
+                if !stolen.is_empty() {
+                    stats.lock().unwrap().steals += stolen.len() as u64;
+                    pending.extend(stolen);
+                }
+                if pending.len() >= cfg.max_batch {
+                    break;
+                }
             }
         }
         if pending.is_empty() {
@@ -895,14 +1305,30 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
         for work in pending.drain(..) {
             match work {
                 Work::Infer(r) => infers.push(r),
-                Work::Open(open) => run_session_open(exec.as_mut(), &sessions, open, &stats),
-                Work::Step(step) => run_session_step(exec.as_mut(), &sessions, step, &stats),
+                Work::Open(open) => {
+                    run_session_open(exec.as_mut(), &sessions, open, pool.as_ref(), &stats)
+                }
+                Work::Step(step) => run_session_step(
+                    exec.as_mut(),
+                    &sessions,
+                    step,
+                    cfg.recompute_on_miss,
+                    &stats,
+                ),
             }
         }
         for plan in plan_batches(infers.len(), cfg.max_batch) {
             let batch: Vec<Request> = infers.drain(..plan.members.len()).collect();
             let capacity = exec.plan_capacity(batch.len(), cfg.max_batch);
-            run_batch(exec.as_mut(), capacity, bucket, batch, cfg.compute.causal, &stats);
+            run_batch(
+                exec.as_mut(),
+                capacity,
+                bucket,
+                batch,
+                cfg.compute.causal,
+                prefill_class,
+                &stats,
+            );
         }
     }
 }
@@ -914,21 +1340,42 @@ fn run_session_open(
     exec: &mut dyn BatchExec,
     sessions: &SessionMap,
     open: SessionOpen,
+    pool: Option<&PagePool>,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
-    let latency_ms = open.enqueued_at.elapsed().as_secs_f64() * 1e3;
     match catch_panic(|| exec.begin_decode()).and_then(|r| r) {
         Ok(state) => {
-            sessions
-                .lock()
-                .unwrap()
-                .insert(open.id, Arc::new(Mutex::new(SessionSlot { state, pos: 0, failed: None })));
-            stats.lock().unwrap().sessions_opened += 1;
+            // KV-cache states back onto the shared page pool when one
+            // is configured: the session's memory becomes pool pages
+            // (evictable, LRU across sessions) instead of a private
+            // unbounded buffer.  Non-KV states (the linear class's
+            // constant prefix state) stay as they are.
+            let state = match (state, pool) {
+                (DecodeState::Cache(c), Some(p))
+                    if c.is_empty() && c.d() == p.d() && c.dv() == p.dv() =>
+                {
+                    DecodeState::Paged(PagedKvCache::new(p, open.id, c.d(), c.dv()))
+                }
+                (s, _) => s,
+            };
+            sessions.lock().unwrap().insert(
+                open.id,
+                Arc::new(Mutex::new(SessionSlot { state, pos: 0, failed: None, tokens: Vec::new() })),
+            );
+            let latency_ms = open.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            let mut st = stats.lock().unwrap();
+            st.sessions_opened += 1;
+            // Session opens are their own payload class: they complete
+            // work (state allocation + registration) and count toward
+            // `completed` like every other finished item.
+            st.record(PayloadClass::SessionOpen, latency_ms);
+            drop(st);
             open.resp
                 .send(Response { id: open.id, result: Ok(Vec::new()), latency_ms, batch_size: 1 })
                 .ok();
         }
         Err(e) => {
+            let latency_ms = open.enqueued_at.elapsed().as_secs_f64() * 1e3;
             stats.lock().unwrap().errors += 1;
             open.resp
                 .send(Response { id: open.id, result: Err(e), latency_ms, batch_size: 0 })
@@ -947,6 +1394,7 @@ fn run_session_step(
     exec: &mut dyn BatchExec,
     sessions: &SessionMap,
     step: SessionStep,
+    recompute_on_miss: bool,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
     let reply_err = |msg: String| {
@@ -990,17 +1438,60 @@ fn run_session_step(
             guard.pos, step.pos
         ));
     }
-    let slot_ref = &mut *guard;
+    let SessionSlot { state, tokens, .. } = &mut *guard;
+    // Paged sessions: pin the session's pages for the whole step (the
+    // ensure/push/gather sequence spans several pool calls), bump its
+    // LRU stamp, and — when enabled — recompute any evicted pages from
+    // the recorded token history before the kernel runs.
+    let mut pin = None;
+    let mut pool_counters = None;
+    if let DecodeState::Paged(paged) = state {
+        pin = Some(paged.pool().pin(step.id));
+        paged.touch();
+        if recompute_on_miss {
+            let hist: &[i32] = tokens.as_slice();
+            let refill = catch_panic(|| {
+                paged.ensure_resident(|pos, k, v| {
+                    let tok = *hist
+                        .get(pos)
+                        .ok_or_else(|| format!("no recorded token at position {pos}"))?;
+                    exec.recompute_kv(tok, pos, k, v)
+                })
+            })
+            .and_then(|r| r);
+            if let Err(e) = refill {
+                drop(pin);
+                guard.pos = step.pos + 1;
+                guard.failed = Some(e.clone());
+                drop(guard);
+                return reply_err(format!("paged KV refill failed: {e}"));
+            }
+        }
+    }
     let result =
-        catch_panic(|| exec.decode_step(&mut slot_ref.state, step.pos, step.token)).and_then(|r| r);
+        catch_panic(|| exec.decode_step(&mut *state, step.pos, step.token)).and_then(|r| r);
+    if let DecodeState::Paged(paged) = state {
+        // Token history powers recompute-on-miss; record only on
+        // success (a failed step poisons the session anyway).
+        if result.is_ok() {
+            tokens.push(step.token);
+        }
+        pool_counters = Some(paged.pool().counters());
+    }
+    drop(pin);
     match result {
         Ok(logits) => {
             guard.pos += 1;
             let latency_ms = step.enqueued_at.elapsed().as_secs_f64() * 1e3;
             let mut st = stats.lock().unwrap();
-            st.completed += 1;
             st.decode_steps += 1;
-            st.record_latency(latency_ms);
+            st.record(PayloadClass::DecodeStep, latency_ms);
+            if let Some(c) = pool_counters {
+                // Mirror the pool's lifetime counters (shared across
+                // shards, so assignment — not accumulation — is right).
+                st.pages_evicted = c.evicted;
+                st.pages_recomputed = c.recomputed;
+            }
             drop(st);
             step.resp
                 .send(Response { id: step.id, result: Ok(logits), latency_ms, batch_size: 1 })
@@ -1028,6 +1519,7 @@ fn run_batch(
     bucket: usize,
     batch: Vec<Request>,
     default_causal: bool,
+    class: PayloadClass,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
     let mut batch = batch;
@@ -1113,13 +1605,12 @@ fn run_batch(
     };
 
     let mut st = stats.lock().unwrap();
-    st.batch_sizes.push(real);
+    st.record_batch(real);
     match result {
         Ok(rows) => {
             for (r, row) in batch.into_iter().zip(rows) {
                 let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
-                st.completed += 1;
-                st.record_latency(latency_ms);
+                st.record(class, latency_ms);
                 r.resp
                     .send(Response { id: r.id, result: Ok(row), latency_ms, batch_size: real })
                     .ok();
@@ -1492,8 +1983,13 @@ mod tests {
         }
         let stats = c.stats();
         let st = stats.lock().unwrap();
-        assert_eq!(st.completed, 20);
+        // 10 prefill + 10 decode steps + 1 session open (opens are a
+        // payload class of their own and count as completed work).
+        assert_eq!(st.completed, 21);
         assert_eq!(st.decode_steps, 10);
+        assert_eq!(st.class(PayloadClass::SessionOpen).completed, 1);
+        assert_eq!(st.class(PayloadClass::DecodeStep).completed, 10);
+        assert_eq!(st.class(PayloadClass::PrefillShort).completed, 10);
         drop(st);
         session.close();
         c.shutdown();
@@ -1570,6 +2066,297 @@ mod tests {
         assert!(e.contains("boom 3"), "{e}");
         let e = catch_panic(|| panic!("static boom")).unwrap_err();
         assert!(e.contains("static boom"), "{e}");
+    }
+
+    // -- per-class stats ----------------------------------------------------
+
+    #[test]
+    fn batch_size_window_stays_bounded() {
+        // Regression: batch_sizes grew one entry per drained batch for
+        // the life of the server.  The ring must cap at BATCH_WINDOW
+        // while the mean stays exact over the whole lifetime.
+        let mut st = ServeStats::default();
+        let n = BATCH_WINDOW + 1234;
+        for i in 0..n {
+            st.record_batch(1 + (i % 3));
+        }
+        assert!(st.batch_sizes.len() <= BATCH_WINDOW, "unbounded: {}", st.batch_sizes.len());
+        assert_eq!(st.batches, n as u64);
+        let exact: f64 =
+            (0..n).map(|i| (1 + i % 3) as f64).sum::<f64>() / n as f64;
+        assert!((st.mean_batch_size() - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_window_wraps_preserving_recency() {
+        // Regression: the latency window's write index used to be
+        // `completed % window`, but `completed` also advanced on paths
+        // that never recorded a latency, so wraparound skipped slots
+        // and overwrote fresh samples.  The window now owns its cursor.
+        let mut w = ClassWindow::with_capacity(8);
+        for i in 0..20 {
+            w.record(i as f64);
+        }
+        assert_eq!(w.completed, 20);
+        assert_eq!(w.samples().len(), 8);
+        let mut got: Vec<f64> = w.samples().to_vec();
+        got.sort_by(|a, b| a.total_cmp(b));
+        // Exactly the 8 most recent samples survive.
+        assert_eq!(got, (12..20).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cursor_survives_foreign_completed_bumps() {
+        // The shared `completed` counter moving (e.g. another payload
+        // class completing) must not disturb a class's write cursor.
+        let mut st = ServeStats::default();
+        for i in 0..4 {
+            st.record(PayloadClass::PrefillShort, 10.0 + i as f64);
+            st.record(PayloadClass::DecodeStep, 0.1); // advances completed
+        }
+        let w = st.class(PayloadClass::PrefillShort);
+        assert_eq!(w.samples(), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(st.completed, 8);
+    }
+
+    #[test]
+    fn per_class_windows_do_not_cross_contaminate() {
+        let mut st = ServeStats::default();
+        for _ in 0..100 {
+            st.record(PayloadClass::PrefillShort, 1.0);
+            st.record(PayloadClass::PrefillLong, 100.0);
+            st.record(PayloadClass::DecodeStep, 0.01);
+        }
+        assert_eq!(st.class_percentile(PayloadClass::PrefillShort, 99.0), 1.0);
+        assert_eq!(st.class_percentile(PayloadClass::PrefillLong, 50.0), 100.0);
+        assert_eq!(st.class_percentile(PayloadClass::DecodeStep, 99.0), 0.01);
+        // The empty class reads 0.0, not a panic.
+        assert_eq!(st.class_percentile(PayloadClass::SessionOpen, 99.0), 0.0);
+        // The legacy mixed view merges all classes.
+        let mixed = st.mixed_percentile(50.0);
+        assert!(mixed >= 0.01 && mixed <= 100.0);
+    }
+
+    // -- paged KV sessions --------------------------------------------------
+
+    /// Stream `tokens` through one decode session on `c`, returning the
+    /// per-step logits.
+    fn stream_all(c: &Coordinator, tokens: &[i32]) -> Vec<Vec<f32>> {
+        let mut s = c.open_session(32).unwrap();
+        let rx = s.stream(tokens).unwrap();
+        let out = (0..tokens.len())
+            .map(|i| {
+                rx.recv().unwrap().result.unwrap_or_else(|e| panic!("step {i}: {e}"))
+            })
+            .collect();
+        s.close();
+        out
+    }
+
+    #[test]
+    fn paged_session_replay_is_bitwise_identical_to_unpaged() {
+        // The acceptance bar: the same token stream through a paged
+        // softmax KV session and a legacy unpaged one must produce
+        // bitwise-identical logits at every step.
+        let tokens: Vec<i32> = (0..28).map(|i| 4 + (i % 13) as i32).collect();
+        let unpaged = native_coordinator("softmax", 1);
+        let want = stream_all(&unpaged, &tokens);
+        unpaged.shutdown();
+
+        let cfg = ServeConfig {
+            method: "softmax".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            page_pool_pages: 64, // roomy: no eviction on this path
+            page_tokens: 4,
+            ..Default::default()
+        };
+        let paged =
+            Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        let got = stream_all(&paged, &tokens);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "paged replay diverged at step {i}");
+        }
+        paged.shutdown();
+    }
+
+    #[test]
+    fn paged_sessions_share_a_budget_smaller_than_their_total_kv() {
+        // Three live sessions over a pool that can hold barely more
+        // than one session's KV: eviction + recompute-on-miss must keep
+        // every session bitwise-correct while the pool never exceeds
+        // its byte budget.
+        let tokens_for = |salt: i32| -> Vec<i32> {
+            (0..24).map(|i| 4 + (i + salt) % 17).collect()
+        };
+        let solo = native_coordinator("softmax", 1);
+        let wants: Vec<Vec<Vec<f32>>> =
+            (0..3).map(|s| stream_all(&solo, &tokens_for(s))).collect();
+        solo.shutdown();
+
+        let cfg = ServeConfig {
+            method: "softmax".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1, // one worker: steps serialize, evictions interleave
+            buckets: vec![32, 64],
+            native_fallback: true,
+            page_pool_pages: 8, // 8 pages * 4 tokens = one 32-token session
+            page_tokens: 4,
+            recompute_on_miss: true,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        let pool = c.page_pool().expect("pool configured").clone();
+        let toks: Vec<Vec<i32>> = (0..3).map(tokens_for).collect();
+        let mut sessions: Vec<DecodeSession> =
+            (0..3).map(|_| c.open_session(32).unwrap()).collect();
+        // Interleave: each round steps every session once, so sessions
+        // keep stealing each other's pages back.
+        for i in 0..24 {
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                let logits = sess.step(toks[s][i]).unwrap();
+                assert_eq!(
+                    logits, wants[s][i],
+                    "paged session {s} diverged at step {i} under eviction pressure"
+                );
+                assert!(
+                    pool.held_bytes() <= pool.budget_bytes(),
+                    "pool exceeded its budget: {} > {}",
+                    pool.held_bytes(),
+                    pool.budget_bytes()
+                );
+            }
+        }
+        let counters = pool.counters();
+        assert!(counters.evicted > 0, "three sessions over a one-session budget must evict");
+        assert!(counters.recomputed > 0, "evicted pages must be recomputed on touch");
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.pages_evicted, counters.evicted);
+        assert_eq!(st.pages_recomputed, counters.recomputed);
+        drop(st);
+        for s in sessions.drain(..) {
+            s.close();
+        }
+        c.shutdown();
+    }
+
+    // -- sharding, eviction, admission --------------------------------------
+
+    #[test]
+    fn sharded_front_serves_prefill_and_sessions() {
+        let cfg = ServeConfig {
+            method: "lln".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            shards: 3,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        // Sessions pin to their ring shard; prefill goes least-loaded.
+        let tokens: Vec<i32> = (0..16).map(|i| 4 + i % 9).collect();
+        let mut sessions: Vec<DecodeSession> =
+            (0..4).map(|_| c.open_session(32).unwrap()).collect();
+        let rxs: Vec<_> = (0..24).map(|i| c.submit(vec![5 + i as i32 % 7; 20]).unwrap()).collect();
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            for &t in &tokens {
+                let logits = sess.step(t).unwrap();
+                assert!(logits.iter().all(|x| x.is_finite()), "session {i}");
+            }
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.class(PayloadClass::PrefillShort).completed, 24);
+        assert_eq!(st.class(PayloadClass::SessionOpen).completed, 4);
+        assert_eq!(st.decode_steps, 64);
+        drop(st);
+        for s in sessions.drain(..) {
+            s.close();
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn slot_budget_evicts_the_oldest_idle_session() {
+        let cfg = ServeConfig {
+            method: "lln".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            max_sessions: 2,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        let mut a = c.open_session(32).unwrap();
+        let mut b = c.open_session(32).unwrap();
+        a.step(5).unwrap();
+        b.step(6).unwrap();
+        a.step(7).unwrap(); // b is now the oldest-idle session
+        let mut d = c.open_session(32).unwrap(); // third slot: evicts b
+        d.step(8).unwrap();
+        let err = b.step(9).unwrap_err();
+        assert!(
+            format!("{err}").contains("unknown decode session"),
+            "evicted session should be gone: {err}"
+        );
+        let live = a.step(10).unwrap();
+        assert!(live.iter().all(|x| x.is_finite()), "recently-active session must survive");
+        assert_eq!(c.stats().lock().unwrap().sessions_evicted, 1);
+        a.close();
+        b.close();
+        d.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn admission_budget_rejects_oversized_class_deterministically() {
+        // An 8-token/s short budget has a burst capacity of 8 tokens: a
+        // 20-token request can never be admitted, while decode-session
+        // traffic (exempt: a live session holds its slot) still flows.
+        let cfg = ServeConfig {
+            method: "lln".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            short_tokens_per_s: 8.0,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap();
+        for _ in 0..3 {
+            let err = c.submit(vec![7i32; 20]).unwrap_err();
+            assert!(format!("{err}").contains("admission"), "{err}");
+        }
+        assert_eq!(c.stats().lock().unwrap().rejected, 3);
+        // Small requests fit the burst capacity (a rejection never
+        // deducts tokens, so the budget is still whole).
+        let ok = c.infer(vec![7i32; 4]).unwrap();
+        assert!(ok.result.is_ok());
+        // Decode sessions are budget-exempt.
+        let mut s = c.open_session(32).unwrap();
+        for i in 0..16 {
+            s.step(4 + i).unwrap();
+        }
+        s.close();
+        c.shutdown();
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! Serving experiment: drive the coordinator with an open-loop request
-//! stream and report throughput / latency / batching efficiency —
-//! the deployment-side payoff of linear attention (long-sequence
-//! batches SA could not schedule at the same cost).
+//! stream and report throughput / batching efficiency plus **per-class
+//! latency percentiles** — prefill-short / prefill-long / decode-step /
+//! session-open each get their own p50/p90/p99 instead of one smeared
+//! mixed distribution (a sub-millisecond decode step and a 512-token
+//! prefill do not belong in the same histogram).
+//!
+//! `--slo-p99 <ms>` turns the report into a gate: any class with
+//! traffic whose p99 exceeds the bound fails the run (CI's SLO smoke).
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::maybe_write_csv;
 use crate::cli::Args;
 use crate::config::{ConfigTable, ServeConfig};
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, PayloadClass};
 use crate::data::tasks::{GlueGen, GlueTask};
 use crate::rng::Pcg64;
 use crate::runtime::{artifacts_available, artifacts_dir};
@@ -32,6 +37,11 @@ pub fn run_serve(args: &Args) -> Result<()> {
     // through each, co-batched with the prefill traffic's buckets.
     let sessions = args.get_usize("sessions", 0)?;
     let decode_tokens = args.get_usize("decode-tokens", 48)?.max(1);
+    // Sharded front override (0 = take the [serve] config's value).
+    let shards = args.get_usize("shards", 0)?;
+    // SLO gate: 0 disables; otherwise every trafficked class's p99 [ms]
+    // must stay under the bound or the run exits nonzero.
+    let slo_p99 = args.get_f64("slo-p99", 0.0)?;
 
     println!(
         "== Serving: coordinator throughput/latency ({requests} reqs, {rate}/s offered, {:.0}% long, {:.0}% causal) ==\n",
@@ -39,11 +49,15 @@ pub fn run_serve(args: &Args) -> Result<()> {
         causal_frac * 100.0
     );
     // --config wires the [serve] / [compute] sections (queue, batching,
-    // workers-per-bucket, kernel threads) into the coordinator.
-    let base_cfg = match args.get("config") {
+    // workers-per-bucket, shards, page pool, admission) into the
+    // coordinator.
+    let mut base_cfg = match args.get("config") {
         Some(path) => ServeConfig::from_table(&ConfigTable::load(std::path::Path::new(path))?),
         None => ServeConfig::default(),
     };
+    if shards > 0 {
+        base_cfg.shards = shards;
+    }
     // Experiment harness (not production serving): explicitly opt into
     // the native-backend encoder when AOT artifacts are absent so the
     // coordinator pipeline is still measurable.  Causal traffic forces
@@ -56,8 +70,10 @@ pub fn run_serve(args: &Args) -> Result<()> {
     } else if force_native {
         println!("(causal/decode traffic requested: serving via the native AttentionBackend encoder)\n");
     }
-    let mut rows = Vec::new();
+    let mut class_rows = Vec::new();
+    let mut summary_rows = Vec::new();
     let mut csv = Vec::new();
+    let mut slo_violations: Vec<String> = Vec::new();
     for method in &methods {
         let cfg = ServeConfig {
             method: method.clone(),
@@ -66,9 +82,11 @@ pub fn run_serve(args: &Args) -> Result<()> {
             ..base_cfg.clone()
         };
         let coord = Coordinator::start(cfg, &dir)?;
-        // Warm both buckets (compile once) before timing.
+        // Warm both buckets (compile once), then zero the stats so the
+        // warmup's cold latencies don't pollute the percentiles.
         coord.infer(vec![crate::data::special::CLS; 64])?;
         coord.infer(vec![crate::data::special::CLS; 300])?;
+        coord.stats().lock().unwrap().reset();
 
         let mut gen_short = GlueGen::new(GlueTask::Sst2, 512, 120, 1);
         let mut gen_long = GlueGen::new(GlueTask::Qnli, 512, 480, 2);
@@ -94,25 +112,16 @@ pub fn run_serve(args: &Args) -> Result<()> {
                 std::thread::sleep(sleep);
             }
         }
-        let mut latencies = Vec::with_capacity(rxs.len());
         for rx in rxs {
-            let resp = rx.recv()?;
-            latencies.push(resp.latency_ms);
+            rx.recv()?;
         }
         let wall = t0.elapsed().as_secs_f64();
-        // Snapshot the prefill-phase stats before any decode-session
-        // traffic lands: the shared latency buffer would otherwise mix
-        // sub-millisecond decode-step latencies into the prefill
-        // percentiles.
-        let (prefill_completed, p50, p95, mean_batch) = {
-            let stats_arc = coord.stats();
-            let st = stats_arc.lock().unwrap();
-            (st.completed, st.p50_latency(), st.p95_latency(), st.mean_batch_size())
-        };
 
         // Streaming decode sessions, co-batched through the same
         // coordinator: open N sessions, pipeline decode_tokens through
         // each, and drain the streams (tokens arrive as they decode).
+        // Their latencies land in the decode-step / session-open class
+        // windows — the prefill percentiles stay untouched.
         let decode_cell = if sessions == 0 {
             "-".to_string()
         } else if !crate::attention::Method::parse(method)
@@ -146,33 +155,78 @@ pub fn run_serve(args: &Args) -> Result<()> {
             format!("{tok_s:.0}")
         };
 
+        let stats_arc = coord.stats();
+        let st = stats_arc.lock().unwrap();
+        let mut prefill_completed = 0u64;
+        for class in PayloadClass::ALL {
+            let w = st.class(class);
+            if matches!(class, PayloadClass::PrefillShort | PayloadClass::PrefillLong) {
+                prefill_completed += w.completed;
+            }
+            if w.completed == 0 {
+                continue;
+            }
+            let (p50, p90, p99) =
+                (w.percentile(50.0), w.percentile(90.0), w.percentile(99.0));
+            class_rows.push(vec![
+                method.to_string(),
+                class.name().to_string(),
+                format!("{}", w.completed),
+                format!("{p50:.2}"),
+                format!("{p90:.2}"),
+                format!("{p99:.2}"),
+            ]);
+            csv.push(format!("{method},{},{},{p50},{p90},{p99}", class.name(), w.completed));
+            if slo_p99 > 0.0 && p99 > slo_p99 {
+                slo_violations.push(format!(
+                    "{method}/{}: p99 {p99:.2} ms > SLO {slo_p99:.2} ms",
+                    class.name()
+                ));
+            }
+        }
+        let pages_cell = match coord.page_pool() {
+            Some(_) => format!("{}/{}", st.pages_evicted, st.pages_recomputed),
+            None => "-".to_string(),
+        };
         let throughput = prefill_completed as f64 / wall;
-        rows.push(vec![
+        summary_rows.push(vec![
             method.to_string(),
             format!("{throughput:.1}"),
-            format!("{p50:.1}"),
-            format!("{p95:.1}"),
-            format!("{mean_batch:.2}"),
+            format!("{:.2}", st.mean_batch_size()),
             format!("{rejected}"),
-            decode_cell.clone(),
+            format!("{}", st.steals),
+            decode_cell,
+            pages_cell,
         ]);
-        csv.push(format!("{method},{throughput},{p50},{p95},{mean_batch},{rejected},{decode_cell}"));
+        drop(st);
         coord.shutdown();
     }
+    print_table(
+        &["method", "class", "count", "p50 [ms]", "p90 [ms]", "p99 [ms]"],
+        &class_rows,
+    );
+    println!();
     print_table(
         &[
             "method",
             "throughput [req/s]",
-            "p50 [ms]",
-            "p95 [ms]",
             "mean batch",
             "rejected",
+            "steals",
             "decode [tok/s]",
+            "pages evict/recomp",
         ],
-        &rows,
+        &summary_rows,
     );
-    println!("\nshape: lln_diag sustains long-sequence traffic at lower p95 than");
-    println!("softmax (quadratic N=512 forwards dominate SA's tail).");
-    maybe_write_csv(args, "serve", "method,throughput,p50,p95,mean_batch,rejected,decode_tok_s", &csv)?;
+    println!("\nshape: lln_diag sustains long-sequence traffic at lower prefill-long p99");
+    println!("than softmax (quadratic N=512 forwards dominate SA's tail), and decode");
+    println!("steps hold a distribution of their own instead of hiding the prefill tail.");
+    maybe_write_csv(args, "serve", "method,class,count,p50,p90,p99", &csv)?;
+    if !slo_violations.is_empty() {
+        bail!("SLO violated:\n  {}", slo_violations.join("\n  "));
+    }
+    if slo_p99 > 0.0 {
+        println!("\nSLO check passed: every trafficked class p99 <= {slo_p99:.1} ms");
+    }
     Ok(())
 }

@@ -85,6 +85,8 @@ fn cli() -> Cli {
                         switch("causal", "serve every request under the causal mask (native path)"),
                         flag("sessions", "concurrent decode sessions to stream (native path)", Some("0")),
                         flag("decode-tokens", "tokens to stream per decode session", Some("48")),
+                        flag("shards", "coordinator shards (0 = [serve] config value)", Some("0")),
+                        flag("slo-p99", "per-class p99 SLO bound in ms (0 = report only)", Some("0")),
                         flag("config", "TOML file with [serve] / [compute] sections", None),
                     ]);
                     f

@@ -191,10 +191,16 @@ impl Welford {
 }
 
 /// Percentile of a sample (linear interpolation), q in [0, 100].
+///
+/// An empty sample yields 0.0 — callers report "no traffic yet" without
+/// guarding — and the sort uses `total_cmp`, so a stray NaN orders to
+/// the end instead of panicking mid-sort.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -314,5 +320,16 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_degenerate_inputs() {
+        // Empty window (a class with no traffic yet) reports 0, not a panic.
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // A NaN sample orders via total_cmp instead of panicking the sort;
+        // the finite percentiles stay finite.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!(percentile(&xs, 0.0).is_finite());
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
     }
 }

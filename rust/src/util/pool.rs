@@ -132,6 +132,26 @@ impl<T> Channel<T> {
         }
     }
 
+    /// Steal up to `max` items from the queue *front*, but only while
+    /// `pred` holds (work-stealing fill path).  Stops at the first
+    /// non-matching item, so the remaining queue keeps its exact order
+    /// — a thief configured with `pred = !is_session_work` can never
+    /// reorder or migrate session-pinned steps.
+    pub fn steal_up_to(&self, max: usize, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < max {
+            match st.items.front() {
+                Some(item) if pred(item) => out.push(st.items.pop_front().unwrap()),
+                _ => break,
+            }
+        }
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
     /// Drain up to `max` items without blocking (batcher fill path).
     pub fn drain_up_to(&self, max: usize) -> Vec<T> {
         let mut st = self.inner.queue.lock().unwrap();
@@ -324,6 +344,22 @@ mod tests {
         }
         assert_eq!(ch.drain_up_to(4), vec![0, 1, 2, 3]);
         assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    fn steal_up_to_stops_at_first_non_matching_item() {
+        let ch = Channel::bounded(8);
+        // 0,1 stealable; 2 is "session work" (odd sentinel: >= 100).
+        for i in [0, 1, 102, 3] {
+            ch.send(i).unwrap();
+        }
+        assert_eq!(ch.steal_up_to(8, |&x| x < 100), vec![0, 1]);
+        // The blocked prefix stays put in order — even stealable items
+        // behind it are not reordered past the session item.
+        assert_eq!(ch.len(), 2);
+        assert_eq!(ch.recv().unwrap(), 102);
+        assert_eq!(ch.recv().unwrap(), 3);
+        assert!(ch.steal_up_to(0, |_| true).is_empty());
     }
 
     #[test]
