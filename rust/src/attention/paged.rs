@@ -19,6 +19,8 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::faults::FaultPlan;
+
 /// Pool-wide counters (eviction/recompute telemetry for ServeStats).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PageCounters {
@@ -39,6 +41,10 @@ struct PoolInner {
     pinned: HashMap<u64, usize>,
     clock: u64,
     counters: PageCounters,
+    /// Seeded fault schedule: when armed, fresh page acquisitions may
+    /// be failed on schedule (chaos testing of the recompute/poison
+    /// paths).  `None` in production.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Shared slab allocator of fixed-size KV pages (clone freely; all
@@ -82,12 +88,20 @@ impl PagePool {
                 pinned: HashMap::new(),
                 clock: 0,
                 counters: PageCounters::default(),
+                faults: None,
             })),
             budget_pages,
             page_tokens,
             d,
             dv,
         }
+    }
+
+    /// Arm the pool with a fault-injection schedule (builder form so
+    /// production call sites stay unchanged).
+    pub fn with_faults(self, plan: Option<Arc<FaultPlan>>) -> Self {
+        self.lock().faults = plan;
+        self
     }
 
     pub fn page_tokens(&self) -> usize {
@@ -151,6 +165,9 @@ impl PagePool {
     fn acquire(inner: &mut PoolInner, budget: usize, floats: usize, sid: u64, idx: usize) -> Result<bool, String> {
         if inner.resident.contains_key(&(sid, idx)) {
             return Ok(true);
+        }
+        if inner.faults.as_ref().is_some_and(|p| p.on_page_alloc()) {
+            return Err(format!("page pool allocation for session {sid} page {idx} failed (injected fault)"));
         }
         let buf = if let Some(buf) = inner.free.pop() {
             buf
@@ -499,6 +516,34 @@ mod tests {
         c.push(&[9.0, 9.0], &[9.0, 9.0]);
         let (ks, _) = c.gather();
         assert_eq!(ks, &[9.0, 9.0], "window restarts cleanly mid-history");
+    }
+
+    #[test]
+    fn injected_page_alloc_fault_fails_only_fresh_acquisitions() {
+        use crate::config::FaultsConfig;
+        // Fail the 2nd fresh acquisition: the first page allocates, the
+        // second fails loudly, resident pages stay readable throughout.
+        let plan = FaultPlan::from_config(&FaultsConfig {
+            page_fail_start: 2,
+            page_fail_every: 0,
+            page_fail_limit: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let pool = PagePool::new(8, 2, 2, 2).with_faults(Some(plan.clone()));
+        let mut c = PagedKvCache::new(&pool, 1, 2, 2);
+        c.push(&[1.0, 1.0], &[1.0, 1.0]);
+        c.push(&[2.0, 2.0], &[2.0, 2.0]); // same page: resident, no fault arrival
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.push(&[3.0, 3.0], &[3.0, 3.0]); // page 1: fresh acquisition -> injected failure
+        }));
+        assert!(r.is_err(), "the scheduled acquisition must fail");
+        assert_eq!(plan.injected(), 1);
+        // The fault point is spent: the retried acquisition succeeds
+        // and the earlier rows were never corrupted.
+        c.push(&[3.0, 3.0], &[3.0, 3.0]);
+        let (ks, _) = c.gather();
+        assert_eq!(&ks[..4], &[1.0, 1.0, 2.0, 2.0]);
     }
 
     #[test]

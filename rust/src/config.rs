@@ -320,6 +320,29 @@ pub struct ServeConfig {
     pub long_tokens_per_s: f64,
     /// Session opens per second (each open costs 1).
     pub opens_per_s: f64,
+    /// Default per-request deadline in milliseconds (`0` = none).
+    /// Requests past their deadline are shed queue-side with a
+    /// `DeadlineExceeded` terminal response instead of wasting executor
+    /// time, and admission rejects a request outright when the
+    /// projected queue wait already exceeds its deadline.  Decode
+    /// steps are exempt (a live session already holds its slot).
+    pub default_deadline_ms: u64,
+    /// Max coordinator-side retries for failed *prefill* batches
+    /// (`0` = no retry).  Decode steps are never retried: a failed
+    /// step poisons its session rather than silently re-executing.
+    pub retry_max: u32,
+    /// Base backoff between prefill retries in milliseconds; grows
+    /// exponentially per attempt with deterministic jitter (see
+    /// [`backoff_ms`](crate::faults::backoff_ms)).
+    pub retry_backoff_ms: u64,
+    /// Shed new session opens when PagePool churn — pages evicted +
+    /// recomputed per decode step since the last open — exceeds this
+    /// ratio (`0.0` = never shed).  Protects live-session p99 from
+    /// thrash before it protects new traffic.
+    pub thrash_shed_ratio: f64,
+    /// Seeded fault-injection schedule (`[faults]` section /
+    /// `lln serve --chaos-seed`).  All-off by default.
+    pub faults: FaultsConfig,
     /// Kernel-compute knobs forwarded to the native backends.
     pub compute: ComputeConfig,
 }
@@ -345,6 +368,11 @@ impl Default for ServeConfig {
             short_tokens_per_s: 0.0,
             long_tokens_per_s: 0.0,
             opens_per_s: 0.0,
+            default_deadline_ms: 0,
+            retry_max: 0,
+            retry_backoff_ms: 5,
+            thrash_shed_ratio: 0.0,
+            faults: FaultsConfig::default(),
             compute: ComputeConfig::default(),
         }
     }
@@ -376,6 +404,11 @@ impl ServeConfig {
             short_tokens_per_s: t.f64_or("serve.short_tokens_per_s", d.short_tokens_per_s),
             long_tokens_per_s: t.f64_or("serve.long_tokens_per_s", d.long_tokens_per_s),
             opens_per_s: t.f64_or("serve.opens_per_s", d.opens_per_s),
+            default_deadline_ms: t.usize_or("serve.default_deadline_ms", d.default_deadline_ms as usize) as u64,
+            retry_max: t.usize_or("serve.retry_max", d.retry_max as usize) as u32,
+            retry_backoff_ms: t.usize_or("serve.retry_backoff_ms", d.retry_backoff_ms as usize) as u64,
+            thrash_shed_ratio: t.f64_or("serve.thrash_shed_ratio", d.thrash_shed_ratio),
+            faults: FaultsConfig::from_table(t),
             compute: ComputeConfig::from_table(t),
         }
     }
@@ -387,6 +420,131 @@ impl ServeConfig {
     pub fn worker_band(&self) -> (usize, usize) {
         let min = if self.min_workers == 0 { self.workers.max(1) } else { self.min_workers };
         (min, self.max_workers.max(min))
+    }
+}
+
+/// Seeded fault-injection schedule (`[faults]` section): every knob is
+/// a deterministic arrival-count trigger — see
+/// [`FaultPoint`](crate::faults::FaultPoint) for the
+/// `start` / `every` / `limit` semantics (`start == 0` disables a
+/// fault; `every == 0` fires only at `start`; `limit == 0` is
+/// unlimited).  All-off by default: production serving never pays for
+/// the harness.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed recorded for reproducibility (`lln serve --chaos-seed`);
+    /// purely informational once the schedule below is derived.
+    pub seed: u64,
+    /// Panic the Nth executor call (batch run / decode begin / step).
+    pub exec_panic_start: u64,
+    pub exec_panic_every: u64,
+    pub exec_panic_limit: u64,
+    /// Delay a worker `delay_ms` before processing the Nth item.
+    pub delay_start: u64,
+    pub delay_every: u64,
+    pub delay_limit: u64,
+    pub delay_ms: u64,
+    /// Fail the Nth fresh PagePool page acquisition.
+    pub page_fail_start: u64,
+    pub page_fail_every: u64,
+    pub page_fail_limit: u64,
+    /// Kill the worker that picks up the Nth item.
+    pub kill_worker_start: u64,
+    pub kill_worker_every: u64,
+    pub kill_worker_limit: u64,
+    /// Condemn this shard's worker pool (`-1` = off) once the global
+    /// worker-item counter reaches `kill_shard_at`.
+    pub kill_shard: i64,
+    pub kill_shard_at: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            exec_panic_start: 0,
+            exec_panic_every: 0,
+            exec_panic_limit: 0,
+            delay_start: 0,
+            delay_every: 0,
+            delay_limit: 0,
+            delay_ms: 10,
+            page_fail_start: 0,
+            page_fail_every: 0,
+            page_fail_limit: 0,
+            kill_worker_start: 0,
+            kill_worker_every: 0,
+            kill_worker_limit: 0,
+            kill_shard: -1,
+            kill_shard_at: 0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Any fault armed?  (`FaultPlan::from_config` returns `None`
+    /// otherwise, so fault-free serving takes no new locks or counters.)
+    pub fn enabled(&self) -> bool {
+        self.exec_panic_start > 0
+            || self.delay_start > 0
+            || self.page_fail_start > 0
+            || self.kill_worker_start > 0
+            || self.kill_shard >= 0
+    }
+
+    pub fn from_table(t: &ConfigTable) -> Self {
+        let d = Self::default();
+        let u = |key: &str, dv: u64| t.usize_or(key, dv as usize) as u64;
+        Self {
+            seed: u("faults.seed", d.seed),
+            exec_panic_start: u("faults.exec_panic_start", d.exec_panic_start),
+            exec_panic_every: u("faults.exec_panic_every", d.exec_panic_every),
+            exec_panic_limit: u("faults.exec_panic_limit", d.exec_panic_limit),
+            delay_start: u("faults.delay_start", d.delay_start),
+            delay_every: u("faults.delay_every", d.delay_every),
+            delay_limit: u("faults.delay_limit", d.delay_limit),
+            delay_ms: u("faults.delay_ms", d.delay_ms),
+            page_fail_start: u("faults.page_fail_start", d.page_fail_start),
+            page_fail_every: u("faults.page_fail_every", d.page_fail_every),
+            page_fail_limit: u("faults.page_fail_limit", d.page_fail_limit),
+            kill_worker_start: u("faults.kill_worker_start", d.kill_worker_start),
+            kill_worker_every: u("faults.kill_worker_every", d.kill_worker_every),
+            kill_worker_limit: u("faults.kill_worker_limit", d.kill_worker_limit),
+            kill_shard: t.get("faults.kill_shard").and_then(Value::as_i64).unwrap_or(d.kill_shard),
+            kill_shard_at: u("faults.kill_shard_at", d.kill_shard_at),
+        }
+    }
+
+    /// Derive a full chaos schedule from one seed (`lln serve
+    /// --chaos-seed`): a short burst of executor panics, a couple of
+    /// slow-worker delays, one single-worker kill (the supervisor must
+    /// respawn it), and — with more than one shard — one whole-shard
+    /// kill partway through the run.  Deterministic in `(seed, shards)`.
+    pub fn chaos(seed: u64, shards: usize) -> Self {
+        let mix = crate::faults::splitmix;
+        let h = |salt: u64| mix(seed ^ mix(salt));
+        Self {
+            seed,
+            // First panic within calls 4..=11, then every 5..=9 calls, 3 total.
+            exec_panic_start: 4 + h(1) % 8,
+            exec_panic_every: 5 + h(2) % 5,
+            exec_panic_limit: 3,
+            // Two slow-downs of 15..=30 ms starting within items 3..=8.
+            delay_start: 3 + h(3) % 6,
+            delay_every: 7 + h(4) % 6,
+            delay_limit: 2,
+            delay_ms: 15 + h(5) % 16,
+            page_fail_start: 0,
+            page_fail_every: 0,
+            page_fail_limit: 0,
+            // One worker dies within items 6..=13; the supervisor respawns.
+            kill_worker_start: 6 + h(6) % 8,
+            kill_worker_every: 0,
+            kill_worker_limit: 1,
+            // With >1 shard, condemn one whole shard within items 20..=35.
+            kill_shard: if shards > 1 { (h(7) % shards as u64) as i64 } else { -1 },
+            kill_shard_at: 20 + h(8) % 16,
+        }
     }
 }
 
@@ -570,6 +728,43 @@ method = lln_diag
         // max_workers alone scales up from the `workers` floor.
         let up = ServeConfig { workers: 1, max_workers: 4, ..Default::default() };
         assert_eq!(up.worker_band(), (1, 4));
+    }
+
+    #[test]
+    fn serve_resilience_knobs_parse() {
+        let d = ServeConfig::default();
+        assert_eq!(d.default_deadline_ms, 0, "deadlines must be opt-in");
+        assert_eq!(d.retry_max, 0, "retry must be opt-in");
+        assert_eq!(d.thrash_shed_ratio, 0.0, "thrash shedding must be opt-in");
+        let t = ConfigTable::parse(
+            "[serve]\ndefault_deadline_ms = 250\nretry_max = 2\nretry_backoff_ms = 8\nthrash_shed_ratio = 1.5",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_table(&t);
+        assert_eq!(sc.default_deadline_ms, 250);
+        assert_eq!(sc.retry_max, 2);
+        assert_eq!(sc.retry_backoff_ms, 8);
+        assert!((sc.thrash_shed_ratio - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faults_section_parses_and_defaults_off() {
+        let off = FaultsConfig::default();
+        assert!(!off.enabled(), "all-off faults must not arm the harness");
+        assert!(!ServeConfig::default().faults.enabled());
+        let t = ConfigTable::parse(
+            "[faults]\nexec_panic_start = 3\nexec_panic_every = 5\nexec_panic_limit = 2\nkill_shard = 1\nkill_shard_at = 10\ndelay_start = 4\ndelay_ms = 20",
+        )
+        .unwrap();
+        let fc = FaultsConfig::from_table(&t);
+        assert!(fc.enabled());
+        assert_eq!((fc.exec_panic_start, fc.exec_panic_every, fc.exec_panic_limit), (3, 5, 2));
+        assert_eq!((fc.kill_shard, fc.kill_shard_at), (1, 10));
+        assert_eq!((fc.delay_start, fc.delay_ms), (4, 20));
+        // And the section rides into the serve config.
+        let sc = ServeConfig::from_table(&t);
+        assert!(sc.faults.enabled());
+        assert_eq!(sc.faults.kill_shard, 1);
     }
 
     #[test]

@@ -42,6 +42,29 @@ pub fn should_fire(queued: usize, max_batch: usize, oldest_wait_ms: f64, timeout
     queued >= max_batch || oldest_wait_ms >= timeout_ms || draining
 }
 
+/// Projected queue wait for a newly admitted request, in milliseconds:
+/// the batches already ahead of it (itself included) times the recent
+/// mean batch latency for its class.  `0.0` when there is no latency
+/// history yet — admission never rejects on a guess it cannot back.
+///
+/// Invariants (property-tested below): monotone non-decreasing in
+/// `queued`; zero iff `batch_ms` is zero; an empty queue still pays
+/// one batch (its own).
+pub fn projected_wait_ms(queued: usize, max_batch: usize, batch_ms: f64) -> f64 {
+    if !(batch_ms > 0.0) {
+        return 0.0;
+    }
+    let batches_ahead = (queued + 1).div_ceil(max_batch.max(1));
+    batches_ahead as f64 * batch_ms
+}
+
+/// Queue-side deadline shed decision: `true` when the item's deadline
+/// (if any) has already passed at `now` — the worker replies
+/// `DeadlineExceeded` instead of spending executor time on it.
+pub fn deadline_expired(deadline: Option<std::time::Instant>, now: std::time::Instant) -> bool {
+    deadline.is_some_and(|d| now >= d)
+}
+
 /// The per-bucket autoscaling policy: how many workers a bucket wants
 /// for `queued` items of backlog — one worker per `max_batch` of queued
 /// work, clamped to the `[min_workers, max_workers]` band.
@@ -185,6 +208,53 @@ mod tests {
         assert_eq!(desired_workers(0, 8, 2, 4), 2);
         assert_eq!(desired_workers(9, 8, 1, 4), 2);
         assert_eq!(desired_workers(1000, 8, 1, 4), 4);
+    }
+
+    #[test]
+    fn projected_wait_properties() {
+        check(512, |g| {
+            let queued = g.usize_in(0, 256);
+            let max_batch = g.usize_in(1, 16);
+            let ms = g.f64_in(0.0, 50.0);
+            let w = projected_wait_ms(queued, max_batch, ms);
+            if ms == 0.0 {
+                prop_assert(w == 0.0, "no history must project zero wait")?;
+            } else {
+                prop_assert(w >= ms, "even an empty queue pays its own batch")?;
+                prop_assert(
+                    projected_wait_ms(queued + 1, max_batch, ms) >= w,
+                    format!("not monotone in queued at q={queued}"),
+                )?;
+                // A full extra batch of backlog adds exactly one batch time.
+                let deeper = projected_wait_ms(queued + max_batch, max_batch, ms);
+                prop_assert(
+                    (deeper - w - ms).abs() < 1e-9,
+                    format!("one extra batch of backlog must add one batch time ({w} -> {deeper})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn projected_wait_degenerate_inputs() {
+        // No history: never reject.
+        assert_eq!(projected_wait_ms(100, 8, 0.0), 0.0);
+        assert_eq!(projected_wait_ms(100, 8, f64::NAN), 0.0);
+        // max_batch of 0 clamps to 1 instead of dividing by zero.
+        assert_eq!(projected_wait_ms(2, 0, 10.0), 30.0);
+        // Empty queue, one batch ahead (its own).
+        assert_eq!(projected_wait_ms(0, 8, 4.0), 4.0);
+    }
+
+    #[test]
+    fn deadline_expiry_decision() {
+        let now = std::time::Instant::now();
+        assert!(!deadline_expired(None, now), "no deadline never expires");
+        assert!(!deadline_expired(Some(now + std::time::Duration::from_secs(5)), now));
+        assert!(deadline_expired(Some(now), now), "deadline is inclusive");
+        let later = now + std::time::Duration::from_millis(10);
+        assert!(deadline_expired(Some(now), later));
     }
 
     #[test]

@@ -47,14 +47,65 @@ pub struct Request {
     /// specs wholesale, which would drop it silently).
     pub scale: Option<f32>,
     pub enqueued_at: std::time::Instant,
+    /// Hard completion deadline: past it the coordinator sheds the
+    /// request queue-side (terminal [`RespError::DeadlineExceeded`])
+    /// instead of spending executor time on an answer nobody is
+    /// waiting for.  `None` = no deadline.  Decode steps carry no
+    /// deadline — a live session already holds its slot.
+    pub deadline: Option<std::time::Instant>,
     pub resp: std::sync::mpsc::Sender<Response>,
+}
+
+/// Why a request did not produce logits.  Every submitted request gets
+/// exactly one terminal outcome: `Ok(logits)`, or one of these — the
+/// serving report counts each kind separately so shed load is never
+/// laundered as executor errors (or vice versa).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RespError {
+    /// Shed before execution (backpressure, admission, thrash guard).
+    Rejected(String),
+    /// The request's deadline passed while it waited in a queue.
+    DeadlineExceeded(String),
+    /// Execution failed (executor error/panic, poisoned session,
+    /// buried shard).
+    Failed(String),
+}
+
+impl RespError {
+    /// The human-readable detail, without the kind prefix.
+    pub fn message(&self) -> &str {
+        match self {
+            RespError::Rejected(m) | RespError::DeadlineExceeded(m) | RespError::Failed(m) => m,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RespError::Rejected(_) => "rejected",
+            RespError::DeadlineExceeded(_) => "deadline-exceeded",
+            RespError::Failed(_) => "failed",
+        }
+    }
+}
+
+impl std::fmt::Display for RespError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Failed keeps the bare message (the historical error strings
+        // that tests and examples match on); shed outcomes carry their
+        // kind so a caller's log line can't mistake them for crashes.
+        match self {
+            RespError::Failed(m) => write!(f, "{m}"),
+            RespError::Rejected(m) => write!(f, "rejected: {m}"),
+            RespError::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+        }
+    }
 }
 
 /// The reply for one request (or one decode-session open/step).
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub result: Result<Vec<f32>, String>,
+    pub result: Result<Vec<f32>, RespError>,
     /// Wall time from admission to completion.
     pub latency_ms: f64,
     /// Size of the batch this request rode in.
@@ -117,6 +168,15 @@ impl Work {
     /// the prefill batcher's fill timer.
     pub fn is_session_work(&self) -> bool {
         !matches!(self, Work::Infer(_))
+    }
+
+    /// The item's completion deadline, if any.  Only prefill carries
+    /// one; session opens/steps are exempt by design.
+    pub fn deadline(&self) -> Option<std::time::Instant> {
+        match self {
+            Work::Infer(r) => r.deadline,
+            Work::Open(_) | Work::Step(_) => None,
+        }
     }
 }
 

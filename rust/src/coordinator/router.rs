@@ -46,6 +46,36 @@ impl HashRing {
         Self { points, shards }
     }
 
+    /// Rebuild the ring with `dead` shards removed.  Surviving shards
+    /// keep their exact virtual points (the point hash is a pure
+    /// function of `(shard, replica)`), so only keys that routed to a
+    /// dead shard remap — the failover guarantee the supervisor relies
+    /// on when it marks a shard out of the ring.  If every shard is
+    /// dead the ring degenerates to shard 0 (callers check liveness
+    /// before enqueueing).
+    pub fn excluding(shards: usize, dead: &[usize]) -> Self {
+        Self::excluding_with_replicas(shards, dead, RING_REPLICAS)
+    }
+
+    pub fn excluding_with_replicas(shards: usize, dead: &[usize], replicas: usize) -> Self {
+        let shards = shards.max(1);
+        let replicas = replicas.max(1);
+        let mut points = Vec::with_capacity(shards * replicas);
+        for s in 0..shards {
+            if dead.contains(&s) {
+                continue;
+            }
+            for r in 0..replicas {
+                points.push((mix(((s as u64) << 32) | r as u64), s));
+            }
+        }
+        if points.is_empty() {
+            return Self::with_replicas(1, replicas);
+        }
+        points.sort_unstable();
+        Self { points, shards }
+    }
+
     pub fn shards(&self) -> usize {
         self.shards
     }
@@ -115,6 +145,79 @@ mod tests {
         let b = HashRing::new(3);
         for k in 0..512u64 {
             assert_eq!(a.route(k), b.route(k));
+        }
+    }
+
+    #[test]
+    fn removing_a_shard_moves_only_its_keys() {
+        // The failover property: when shard `d` dies, every key it
+        // owned remaps to a *surviving* shard, and no key owned by a
+        // surviving shard moves at all.
+        for n in 2..6usize {
+            for d in 0..n {
+                let full = HashRing::new(n);
+                let cut = HashRing::excluding(n, &[d]);
+                let mut moved = 0usize;
+                for k in 0..20_000u64 {
+                    let (a, b) = (full.route(k), cut.route(k));
+                    assert_ne!(b, d, "key {k} routed to the dead shard {d}");
+                    if a != d {
+                        assert_eq!(a, b, "survivor key {k} moved {a}->{b} when {d} died");
+                    } else {
+                        moved += 1;
+                    }
+                }
+                assert!(moved > 0, "the dead shard {d}/{n} must have owned some keys");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_with_dead_shards_stays_covered_and_roughly_uniform() {
+        // 4 shards, one dead: the survivors split its arc between them.
+        let cut = HashRing::excluding(4, &[2]);
+        let mut counts = [0usize; 4];
+        for k in 0..30_000u64 {
+            counts[cut.route(k)] += 1;
+        }
+        assert_eq!(counts[2], 0, "dead shard must receive nothing");
+        for (s, &c) in counts.iter().enumerate() {
+            if s != 2 {
+                // Within 30% of the uniform 10k per surviving shard.
+                assert!((7_000..=13_000).contains(&c), "skewed survivor load: {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rebuilds_are_deterministic_and_compose() {
+        // Rebuilding the same live set twice routes identically, and
+        // excluding nothing is exactly the full ring.
+        let a = HashRing::excluding(5, &[1, 3]);
+        let b = HashRing::excluding(5, &[3, 1]);
+        let full = HashRing::new(5);
+        let none = HashRing::excluding(5, &[]);
+        for k in 0..4_096u64 {
+            assert_eq!(a.route(k), b.route(k), "dead-set order must not matter");
+            assert_eq!(full.route(k), none.route(k), "empty dead set = full ring");
+        }
+        // All-dead degenerates to shard 0 instead of panicking.
+        let dead = HashRing::excluding(3, &[0, 1, 2]);
+        assert_eq!(dead.route(42), 0);
+    }
+
+    #[test]
+    fn sequential_removals_compose_with_single_rebuild() {
+        // Killing shard 1 then shard 3 routes the same as rebuilding
+        // once with both dead — supervisors on different shards may
+        // condemn in any order.
+        let step = HashRing::excluding(5, &[1]);
+        let both = HashRing::excluding(5, &[1, 3]);
+        for k in 0..8_192u64 {
+            let s = step.route(k);
+            if s != 3 {
+                assert_eq!(s, both.route(k), "key {k} moved although shard {s} survived");
+            }
         }
     }
 }

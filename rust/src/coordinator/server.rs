@@ -31,15 +31,17 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
-use super::batcher::{desired_workers, plan_batches, should_fire};
+use super::batcher::{deadline_expired, desired_workers, plan_batches, projected_wait_ms, should_fire};
 use super::native::NativeEncoder;
 use super::router::HashRing;
 use super::{
-    pad_to_bucket, pick_bucket, PayloadClass, Request, Response, SessionOpen, SessionStep, Work,
+    pad_to_bucket, pick_bucket, PayloadClass, Request, RespError, Response, SessionOpen,
+    SessionStep, Work,
 };
 use crate::attention::paged::{PagePool, PagedKvCache};
 use crate::attention::{DecodeState, Method};
 use crate::config::ServeConfig;
+use crate::faults::{backoff_ms, FaultPlan, WorkerFault};
 use crate::runtime::{Engine, HostTensor, ParamStore};
 use crate::util::pool::{Channel, SendError};
 
@@ -106,6 +108,16 @@ impl ClassWindow {
     pub fn percentile(&self, q: f64) -> f64 {
         crate::stats::percentile(&self.samples, q)
     }
+
+    /// Windowed mean latency; 0.0 with no traffic.  Feeds the
+    /// deadline-aware admission's projected-wait estimate.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
 }
 
 /// Rolling serving metrics (shared across all shards' workers).
@@ -141,6 +153,23 @@ pub struct ServeStats {
     pub pages_evicted: u64,
     /// KV pages refilled from token history (recompute-on-miss).
     pub pages_recomputed: u64,
+    /// Faults fired by the deterministic chaos plan (mirror of
+    /// [`FaultPlan::injected`]; 0 without a `[faults]` section).
+    pub faults_injected: u64,
+    /// Dead workers respawned by the per-shard supervisor back to the
+    /// `min_workers` floor.
+    pub worker_restarts: u64,
+    /// Failed prefill batches re-executed under the retry budget.
+    pub retries: u64,
+    /// Requests shed with `DeadlineExceeded` — queue-side expiry or
+    /// members dropped while a batch backed off between retries.
+    pub deadline_drops: u64,
+    /// Decode sessions failed over (replayed bit-exactly onto a healthy
+    /// shard after a poison or shard death).
+    pub sessions_restored: u64,
+    /// Session opens shed by the thrash guard (page-pool churn per
+    /// decode step above `thrash_shed_ratio`).
+    pub thrash_sheds: u64,
 }
 
 impl Default for ServeStats {
@@ -161,6 +190,12 @@ impl Default for ServeStats {
             steals: 0,
             pages_evicted: 0,
             pages_recomputed: 0,
+            faults_injected: 0,
+            worker_restarts: 0,
+            retries: 0,
+            deadline_drops: 0,
+            sessions_restored: 0,
+            thrash_sheds: 0,
         }
     }
 }
@@ -321,7 +356,14 @@ pub struct Coordinator {
     cfg: ServeConfig,
     shards: Vec<Shard>,
     /// Consistent-hash session router (stable under shard growth).
-    ring: HashRing,
+    /// Mutex-shared with the supervisors: condemning a dead shard
+    /// rebuilds the ring without its points, so new sessions route
+    /// around it and failed-over sessions land on survivors.
+    ring: Arc<Mutex<HashRing>>,
+    /// Shards condemned by their supervisors (dead worker pools).  A
+    /// dead shard's queues are closed and its queued work buried with
+    /// terminal `Failed` replies; it never rejoins the ring.
+    dead_shards: Arc<Mutex<Vec<usize>>>,
     /// Live-session registry for the slot budget / oldest-idle eviction.
     registry: SessionRegistry,
     /// Logical touch clock: sessions stamp their last activity from it.
@@ -330,6 +372,9 @@ pub struct Coordinator {
     admission: Admission,
     /// Shared KV page pool (None = unpaged legacy sessions).
     pool: Option<PagePool>,
+    /// (page-pool churn, decode steps) at the last admitted open — the
+    /// thrash guard sheds new opens when the delta ratio spikes.
+    thrash_mark: Mutex<(u64, u64)>,
     workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
     stats: Arc<Mutex<ServeStats>>,
     next_id: AtomicU64,
@@ -365,6 +410,8 @@ struct WorkerCtx {
     /// construction/runtime failure) — the scaler backs off on growth.
     deaths: Arc<AtomicUsize>,
     min_workers: usize,
+    /// Deterministic chaos plan (None without a `[faults]` section).
+    plan: Option<Arc<FaultPlan>>,
 }
 
 impl Coordinator {
@@ -382,17 +429,23 @@ impl Coordinator {
         let (min_w, max_w) = cfg.worker_band();
         let n_shards = cfg.shards.max(1);
         let short_len = cfg.buckets.iter().copied().min().unwrap_or(0);
+        // Deterministic chaos plan (None unless `[faults]` arms one).
+        let plan = FaultPlan::from_config(&cfg.faults);
+        let ring = Arc::new(Mutex::new(HashRing::new(n_shards)));
+        let dead_shards: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
         // One shared page pool across every shard and bucket: paging is
         // a *global* memory budget, so sessions on any shard compete
         // for the same pages.  Native decode states are all
         // NATIVE_D_MODEL-dimensional.
         let pool = if cfg.page_pool_pages > 0 {
-            Some(PagePool::new(
+            let p = PagePool::new(
                 cfg.page_pool_pages,
                 cfg.page_tokens.max(1),
                 super::native::NATIVE_D_MODEL,
                 super::native::NATIVE_D_MODEL,
-            ))
+            )
+            .with_faults(plan.clone());
+            Some(p)
         } else {
             None
         };
@@ -431,16 +484,24 @@ impl Coordinator {
                     live: Arc::new(AtomicUsize::new(min_w)),
                     deaths: Arc::new(AtomicUsize::new(0)),
                     min_workers: min_w,
+                    plan: plan.clone(),
                 };
                 for w in 0..min_w {
                     workers.lock().unwrap().push(spawn_worker(ctx.clone(), w));
                 }
-                if max_w > min_w {
-                    workers
-                        .lock()
-                        .unwrap()
-                        .push(spawn_scaler(ctx, max_w, Arc::clone(&workers)));
-                }
+                // Every (shard, bucket) gets a supervisor: it respawns
+                // dead workers back to the floor, condemns the shard
+                // when the floor cannot be held (or the chaos plan
+                // kills it), and — when the band allows — grows the
+                // pool from queue depth up to the ceiling.
+                workers.lock().unwrap().push(spawn_supervisor(
+                    ctx,
+                    max_w,
+                    Arc::clone(&workers),
+                    Arc::clone(&ring),
+                    Arc::clone(&dead_shards),
+                    n_shards,
+                ));
             }
         }
         let admission = Admission {
@@ -451,11 +512,13 @@ impl Coordinator {
         Ok(Self {
             cfg,
             shards,
-            ring: HashRing::new(n_shards),
+            ring,
+            dead_shards,
             registry: Arc::new(Mutex::new(HashMap::new())),
             touch_clock: Arc::new(AtomicU64::new(1)),
             admission,
             pool,
+            thrash_mark: Mutex::new((0, 0)),
             workers,
             stats,
             next_id: AtomicU64::new(1),
@@ -469,12 +532,14 @@ impl Coordinator {
             .ok_or_else(|| anyhow!("sequence length {len} exceeds all buckets"))
     }
 
-    /// Prefill shard choice: least-loaded same-bucket queue (work
-    /// stealing rebalances whatever this heuristic gets wrong).
-    fn least_loaded_shard(&self, bucket: usize) -> usize {
+    /// Prefill shard choice: least-loaded same-bucket queue among live
+    /// shards (work stealing rebalances whatever this heuristic gets
+    /// wrong).  `None` once every shard has been condemned.
+    fn least_loaded_shard(&self, bucket: usize) -> Option<usize> {
+        let dead = self.dead_shards.lock().unwrap();
         (0..self.shards.len())
+            .filter(|s| !dead.contains(s))
             .min_by_key(|&s| self.shards[s].queue(bucket).len())
-            .unwrap_or(0)
     }
 
     /// The shard/bucket the admission token budgets classify `len` as.
@@ -526,11 +591,31 @@ impl Coordinator {
         causal: bool,
         scale: Option<f32>,
     ) -> Result<mpsc::Receiver<Response>> {
+        self.submit_deadline(tokens, causal, scale, None)
+    }
+
+    /// Submit with an explicit per-request deadline in milliseconds
+    /// from now (`None` inherits `[serve] default_deadline_ms`; 0
+    /// disables).  Deadlines are enforced twice: here at admission —
+    /// when the projected queue wait (recent mean batch latency for the
+    /// request's class times the batches ahead of it) already exceeds
+    /// the deadline, rejecting now is strictly better than queueing a
+    /// request that can only expire — and again queue-side, where
+    /// workers shed already-expired items with a terminal
+    /// `DeadlineExceeded` instead of spending executor time on them.
+    pub fn submit_deadline(
+        &self,
+        tokens: Vec<i32>,
+        causal: bool,
+        scale: Option<f32>,
+        deadline_ms: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>> {
         let bucket = self.bucket_for(tokens.len())?;
         // Admission: each prefill class pays its live token count
         // against its budget.  Decode steps are exempt — a live session
         // already holds its slot (session-aware admission).
-        let budget = match self.prefill_class(bucket) {
+        let class = self.prefill_class(bucket);
+        let budget = match class {
             PayloadClass::PrefillShort => &self.admission.short,
             _ => &self.admission.long,
         };
@@ -538,8 +623,24 @@ impl Coordinator {
             self.stats.lock().unwrap().rejected += 1;
             bail!("admission: token budget exhausted for bucket n{bucket}");
         }
-        let shard = self.least_loaded_shard(bucket);
+        let shard = self
+            .least_loaded_shard(bucket)
+            .ok_or_else(|| anyhow!("no live shard left for bucket n{bucket}"))?;
         let queue = self.shards[shard].queue(bucket);
+        let ms = deadline_ms.unwrap_or(self.cfg.default_deadline_ms);
+        let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
+        if let Some(d) = deadline {
+            let batch_ms = self.stats.lock().unwrap().class(class).mean();
+            let wait = projected_wait_ms(queue.len(), self.cfg.max_batch, batch_ms);
+            let remaining = d.saturating_duration_since(Instant::now()).as_secs_f64() * 1e3;
+            if wait > remaining {
+                self.stats.lock().unwrap().rejected += 1;
+                bail!(
+                    "admission: projected queue wait {wait:.1} ms exceeds the request \
+                     deadline ({remaining:.1} ms remaining)"
+                );
+            }
+        }
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -547,6 +648,7 @@ impl Coordinator {
             causal,
             scale,
             enqueued_at: Instant::now(),
+            deadline,
             resp: tx,
         };
         self.enqueue(queue, bucket, Work::Infer(req))?;
@@ -590,6 +692,35 @@ impl Coordinator {
             self.stats.lock().unwrap().rejected += 1;
             bail!("admission: session-open budget exhausted");
         }
+        // Thrash guard (graceful degradation): when the page pool is
+        // churning — evictions + recomputes per decode step since the
+        // last admitted open above `thrash_shed_ratio` — another
+        // session would push every live session deeper into recompute
+        // storms and degrade their p99.  Shed the *new* open instead;
+        // the mark is left in place so the guard stays armed until
+        // churn actually subsides.
+        if self.cfg.thrash_shed_ratio > 0.0 {
+            if let Some(pool) = &self.pool {
+                let c = pool.counters();
+                let churn = c.evicted + c.recomputed;
+                let steps = self.stats.lock().unwrap().decode_steps;
+                let mut mark = self.thrash_mark.lock().unwrap();
+                let d_churn = churn.saturating_sub(mark.0);
+                let d_steps = steps.saturating_sub(mark.1);
+                if d_steps > 0 && d_churn as f64 > self.cfg.thrash_shed_ratio * d_steps as f64 {
+                    drop(mark);
+                    let mut st = self.stats.lock().unwrap();
+                    st.rejected += 1;
+                    st.thrash_sheds += 1;
+                    bail!(
+                        "thrash guard: {d_churn} pages churned over the last {d_steps} decode \
+                         steps (over {} per step); retry once live sessions stop thrashing",
+                        self.cfg.thrash_shed_ratio
+                    );
+                }
+                *mark = (churn, steps);
+            }
+        }
         // Slot budget: a live session holds its slot; when full, the
         // oldest-idle session (smallest touch stamp) is evicted to make
         // room.  Removing its slot drops the decode state — for paged
@@ -612,11 +743,15 @@ impl Coordinator {
             }
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        // Sessions pin to their consistent-hash shard for life: their
-        // decode state lives in that shard's registry, and stealing
-        // skips session work, so steps always execute where the state
-        // is.
-        let shard = self.ring.route(id);
+        // Sessions pin to their consistent-hash shard: their decode
+        // state lives in that shard's registry, and stealing skips
+        // session work, so steps always execute where the state is.
+        // The ring only holds live shards; a session stranded on a
+        // later-condemned shard moves via `restore_session`.
+        let shard = self.ring.lock().unwrap().route(id);
+        if self.dead_shards.lock().unwrap().contains(&shard) {
+            bail!("no live shard left for session {id}");
+        }
         let queue = self.shards[shard].queue(bucket);
         let (tx, rx) = mpsc::channel();
         let open = SessionOpen { id, enqueued_at: Instant::now(), resp: tx };
@@ -633,6 +768,7 @@ impl Coordinator {
         Ok(DecodeSession {
             id,
             bucket,
+            shard,
             queue: queue.clone(),
             sessions,
             registry: Arc::clone(&self.registry),
@@ -641,7 +777,85 @@ impl Coordinator {
             stats: Arc::clone(&self.stats),
             next_pos: 0,
             closed: false,
+            tokens: Vec::new(),
+            synced: true,
         })
+    }
+
+    /// Fail a session over to a healthy shard: re-open its id on the
+    /// live ring and replay its confirmed token history against a
+    /// fresh decode state.  A bucket's native encoders are
+    /// deterministic replicas across shards, so the restored state —
+    /// and every logit it produces from here on — is bitwise identical
+    /// to an unfaulted session fed the same tokens.  The replay is a
+    /// *fresh state lineage*: the old (poisoned, evicted, or
+    /// shard-dead) state is discarded, never advanced twice, so a
+    /// failed step can be resubmitted post-restore without ever
+    /// re-executing against an already-advanced state.
+    ///
+    /// Requires a *synced* handle: only the blocking
+    /// [`DecodeSession::step`] keeps confirmed history.  After
+    /// pipelined `submit_step`/`stream` the handle cannot know which
+    /// tokens actually executed, so failover refuses rather than
+    /// guess at the session's contents.
+    pub fn restore_session(&self, session: &mut DecodeSession) -> Result<()> {
+        if !session.synced {
+            bail!(
+                "session {} used pipelined steps; failover needs the confirmed \
+                 history only blocking step() keeps",
+                session.id
+            );
+        }
+        // Drop the old slot and registry entry first: whatever state
+        // remains on the old shard is now orphaned, and any in-flight
+        // step against it gets a terminal "unknown session" reply.
+        session.sessions.lock().unwrap().remove(&session.id);
+        self.registry.lock().unwrap().remove(&session.id);
+        let shard = self.ring.lock().unwrap().route(session.id);
+        if self.dead_shards.lock().unwrap().contains(&shard) {
+            bail!("no live shard left to restore session {}", session.id);
+        }
+        let queue = self.shards[shard].queue(session.bucket);
+        let (tx, rx) = mpsc::channel();
+        let open = SessionOpen { id: session.id, enqueued_at: Instant::now(), resp: tx };
+        self.enqueue(queue, session.bucket, Work::Open(open))?;
+        let resp = rx.recv().map_err(|_| anyhow!("worker dropped session-restore response"))?;
+        resp.result.map_err(|e| anyhow!("session restore reopen failed: {e}"))?;
+        // Serial replay of the confirmed history: decode order demands
+        // each step lands before the next, and every reply is checked —
+        // a replay failure is loud, never a silent hole in the state.
+        for (pos, &token) in session.tokens.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let step =
+                SessionStep { id: session.id, pos, token, enqueued_at: Instant::now(), resp: tx };
+            self.enqueue(queue, session.bucket, Work::Step(step))?;
+            let resp = rx.recv().map_err(|_| anyhow!("worker dropped replay response"))?;
+            resp.result
+                .map_err(|e| anyhow!("replay of token {pos} for session {}: {e}", session.id))?;
+        }
+        // Re-point the handle at its new home.
+        session.queue = queue.clone();
+        session.sessions = Arc::clone(self.shards[shard].session_map(session.bucket));
+        session.shard = shard;
+        session.next_pos = session.tokens.len();
+        session.closed = false;
+        session
+            .touched
+            .store(self.touch_clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        self.registry.lock().unwrap().insert(
+            session.id,
+            SessionMeta {
+                sessions: Arc::clone(&session.sessions),
+                touched: Arc::clone(&session.touched),
+            },
+        );
+        self.stats.lock().unwrap().sessions_restored += 1;
+        Ok(())
+    }
+
+    /// Shards condemned by their supervisors (empty in a healthy front).
+    pub fn dead_shards(&self) -> Vec<usize> {
+        self.dead_shards.lock().unwrap().clone()
     }
 
     pub fn stats(&self) -> Arc<Mutex<ServeStats>> {
@@ -693,6 +907,8 @@ impl Coordinator {
 pub struct DecodeSession {
     id: u64,
     bucket: usize,
+    /// Hosting shard (updated on failover by `restore_session`).
+    shard: usize,
     queue: Channel<Work>,
     sessions: SessionMap,
     /// Coordinator-wide live-session registry (slot accounting).
@@ -704,6 +920,14 @@ pub struct DecodeSession {
     stats: Arc<Mutex<ServeStats>>,
     next_pos: usize,
     closed: bool,
+    /// Confirmed token history: tokens whose logits the blocking
+    /// [`step`](Self::step) has seen come back.  Powers
+    /// [`Coordinator::restore_session`]'s bit-exact failover replay.
+    tokens: Vec<i32>,
+    /// False once pipelined submission (`submit_step` / `stream`) is
+    /// used: the handle no longer knows which tokens definitely
+    /// executed, so failover refuses rather than guess.
+    synced: bool,
 }
 
 impl DecodeSession {
@@ -714,6 +938,16 @@ impl DecodeSession {
     /// The bucket length this session can grow to.
     pub fn capacity(&self) -> usize {
         self.bucket
+    }
+
+    /// The shard currently hosting this session's decode state.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The confirmed (blocking-step) token history.
+    pub fn history(&self) -> &[i32] {
+        &self.tokens
     }
 
     /// Tokens submitted so far.
@@ -775,18 +1009,25 @@ impl DecodeSession {
 
     /// Submit one token without waiting; the step's logits arrive on
     /// the returned receiver.  Fails fast on a full bucket queue
-    /// (backpressure), like prefill submission.
+    /// (backpressure), like prefill submission.  Pipelining forfeits
+    /// failover: the handle stops tracking confirmed history.
     pub fn submit_step(&mut self, token: i32) -> Result<mpsc::Receiver<Response>> {
+        self.synced = false;
         let (tx, rx) = mpsc::channel();
         self.enqueue_step(token, tx, false)?;
         Ok(rx)
     }
 
-    /// Submit one token and block for its logits.
+    /// Submit one token and block for its logits.  A confirmed step is
+    /// appended to the handle's token history, keeping the session
+    /// restorable via [`Coordinator::restore_session`].
     pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
-        let rx = self.submit_step(token)?;
+        let (tx, rx) = mpsc::channel();
+        self.enqueue_step(token, tx, false)?;
         let resp = rx.recv().map_err(|_| anyhow!("worker dropped decode response"))?;
-        resp.result.map_err(|e| anyhow!(e))
+        let logits = resp.result.map_err(|e| anyhow!(e))?;
+        self.tokens.push(token);
+        Ok(logits)
     }
 
     /// Pipeline a stretch of tokens and stream the per-token responses
@@ -796,6 +1037,7 @@ impl DecodeSession {
     /// so stretches longer than the queue capacity pipeline cleanly).
     /// Consume the receiver fully before closing the session.
     pub fn stream(&mut self, tokens: &[i32]) -> Result<mpsc::Receiver<Response>> {
+        self.synced = false;
         let (tx, rx) = mpsc::channel();
         for &t in tokens {
             self.enqueue_step(t, tx.clone(), true)?;
@@ -1096,14 +1338,44 @@ impl BatchExec for NativeExec {
     }
 }
 
+thread_local! {
+    /// True while this thread is inside [`catch_panic`]: the scoped
+    /// hook below drops those panics' backtraces — they are *expected*
+    /// (capability asserts, injected chaos faults) and become error
+    /// responses, so spewing a full backtrace per occurrence buries
+    /// real failures in noise.
+    static PANIC_SUPPRESSED: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Install (once, process-wide) a panic hook that stays silent for
+/// panics caught by [`catch_panic`] and defers to the previous hook
+/// for everything else.
+fn install_scoped_panic_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !PANIC_SUPPRESSED.with(|s| s.get()) {
+                prev(info);
+            }
+        }));
+    });
+}
+
 /// Run `f` with panics converted to `Err` — backend capability and
-/// shape asserts reached from a worker thread become per-request error
-/// responses through the coordinator instead of killing the worker.
+/// shape asserts (and injected chaos faults) reached from a worker
+/// thread become per-request error responses through the coordinator
+/// instead of killing the worker.  The scoped hook suppresses the
+/// default backtrace spew for exactly these expected panics; anything
+/// panicking outside `catch_panic` still reports normally.
 fn catch_panic<T>(f: impl FnOnce() -> T) -> Result<T, String> {
-    // The default hook still prints the panic to stderr (useful when
-    // debugging a worker); the point here is that the thread survives
-    // and the requester gets the message instead of a dropped channel.
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|payload| {
+    install_scoped_panic_hook();
+    // Save/restore (rather than set/clear) so nested catch_panic calls
+    // keep suppression alive for the whole outer scope.
+    let was = PANIC_SUPPRESSED.with(|s| s.replace(true));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    PANIC_SUPPRESSED.with(|s| s.set(was));
+    result.map_err(|payload| {
         let msg = if let Some(s) = payload.downcast_ref::<&str>() {
             (*s).to_string()
         } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -1137,24 +1409,72 @@ fn spawn_worker(ctx: WorkerCtx, index: usize) -> JoinHandle<()> {
         .expect("spawn worker")
 }
 
-/// Per-bucket autoscaler: polls queue depth and grows the worker pool
-/// toward [`desired_workers`] (idle extras retire themselves in
-/// [`worker_loop`]).  Exits when the coordinator drains.
-fn spawn_scaler(
+/// Consecutive failed respawn waves (the floor still short after each)
+/// before the supervisor gives up and condemns the shard's bucket: a
+/// persistently failing executor gets terminal `Failed` replies instead
+/// of either a spawn/die hot loop or requests hanging forever.
+const MAX_RESPAWN_WAVES: usize = 3;
+
+/// Per-(shard, bucket) supervisor: respawns dead workers back to the
+/// `min_workers` floor, condemns the shard when the floor cannot be
+/// held (or when the chaos plan kills the shard outright), and — when
+/// the band allows — grows the pool from queue depth toward the
+/// ceiling exactly like the old autoscaler (idle extras still retire
+/// themselves in [`worker_loop`]).  Exits when the coordinator drains
+/// or the shard is condemned.
+fn spawn_supervisor(
     ctx: WorkerCtx,
     max_workers: usize,
     registry: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    ring: Arc<Mutex<HashRing>>,
+    dead_shards: Arc<Mutex<Vec<usize>>>,
+    n_shards: usize,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
-        .name(format!("lln-scaler-s{}-n{}", ctx.shard, ctx.bucket))
+        .name(format!("lln-supervisor-s{}-n{}", ctx.shard, ctx.bucket))
         .spawn(move || {
             let poll = Duration::from_millis(ctx.cfg.batch_timeout_ms.clamp(1, 20));
             let mut seq = ctx.min_workers;
             let mut deaths_seen = 0usize;
+            let mut failed_waves = 0usize;
             while !ctx.draining.load(Ordering::SeqCst) {
+                // Condemnation — the chaos plan killed this shard, a
+                // sibling bucket's supervisor already declared it dead,
+                // or this bucket's floor would not hold after repeated
+                // respawn waves.  Bury the bucket's queue (terminal
+                // replies) and exit; dead shards never rejoin the ring.
+                let condemned = ctx
+                    .plan
+                    .as_ref()
+                    .is_some_and(|p| p.shard_condemned(ctx.shard))
+                    || dead_shards.lock().unwrap().contains(&ctx.shard)
+                    || failed_waves >= MAX_RESPAWN_WAVES;
+                if condemned {
+                    bury_shard_bucket(&ctx, &ring, &dead_shards, n_shards);
+                    return;
+                }
+                let cur = ctx.live.load(Ordering::SeqCst);
+                if cur < ctx.min_workers {
+                    // Dead workers below the floor: respawn the wave,
+                    // then back off so a persistently failing executor
+                    // cannot drive a spawn/die hot loop at the poll
+                    // rate.  `failed_waves` resets only once the floor
+                    // holds through a full poll.
+                    for _ in cur..ctx.min_workers {
+                        ctx.live.fetch_add(1, Ordering::SeqCst);
+                        ctx.stats.lock().unwrap().worker_restarts += 1;
+                        registry.lock().unwrap().push(spawn_worker(ctx.clone(), seq));
+                        seq += 1;
+                    }
+                    failed_waves += 1;
+                    deaths_seen = ctx.deaths.load(Ordering::SeqCst);
+                    std::thread::sleep(SPAWN_BACKOFF);
+                    continue;
+                }
+                failed_waves = 0;
                 // Back off growth whenever a worker died since the last
-                // poll (persistently failing executors must not drive a
-                // spawn/die hot loop at the poll rate).
+                // poll (the floor survived, but the pool is clearly not
+                // healthy enough to grow into).
                 let deaths_now = ctx.deaths.load(Ordering::SeqCst);
                 if deaths_now > deaths_seen {
                     deaths_seen = deaths_now;
@@ -1164,13 +1484,7 @@ fn spawn_scaler(
                 let depth = ctx.queue.len();
                 let want =
                     desired_workers(depth, ctx.cfg.max_batch, ctx.min_workers, max_workers);
-                let cur = ctx.live.load(Ordering::SeqCst);
-                // Only grow beyond a *healthy* floor: when floor
-                // workers have died (cur < min — e.g. persistent
-                // executor-construction failure), respawning here would
-                // hot-loop spawn/die at the poll rate; dead floors stay
-                // dead, exactly like the pre-autoscaler behavior.
-                if cur >= ctx.min_workers && want > cur {
+                if want > cur && max_workers > ctx.min_workers {
                     for _ in cur..want {
                         ctx.live.fetch_add(1, Ordering::SeqCst);
                         ctx.stats.lock().unwrap().workers_spawned += 1;
@@ -1185,7 +1499,84 @@ fn spawn_scaler(
                 std::thread::sleep(poll);
             }
         })
-        .expect("spawn scaler")
+        .expect("spawn supervisor")
+}
+
+/// Condemn one (shard, bucket): record the shard dead, rebuild the
+/// session ring without it, close the bucket queue, and reply a
+/// terminal `Failed` to everything still queued — a request must never
+/// hang on a shard that can no longer serve it.  The ring rebuild
+/// happens *before* the queue closes, so by the time any client
+/// observes the failure, new routing already avoids the dead shard.
+fn bury_shard_bucket(
+    ctx: &WorkerCtx,
+    ring: &Arc<Mutex<HashRing>>,
+    dead_shards: &Arc<Mutex<Vec<usize>>>,
+    n_shards: usize,
+) {
+    {
+        let mut dead = dead_shards.lock().unwrap();
+        if !dead.contains(&ctx.shard) {
+            dead.push(ctx.shard);
+            *ring.lock().unwrap() = HashRing::excluding(n_shards, &dead);
+            eprintln!(
+                "supervisor: shard {} condemned; new sessions route to survivors",
+                ctx.shard
+            );
+        }
+    }
+    ctx.queue.close();
+    let buried = ctx.queue.drain_up_to(usize::MAX);
+    if buried.is_empty() {
+        return;
+    }
+    let mut st = ctx.stats.lock().unwrap();
+    for work in buried {
+        st.errors += 1;
+        let msg = format!("shard {} is dead (worker pool condemned)", ctx.shard);
+        reply_failed(work, msg);
+    }
+}
+
+/// Terminal `Failed` reply for an un-executable work item (dead shard
+/// burial, dying-worker fallback).  Best-effort send: the caller may
+/// already be gone.
+fn reply_failed(work: Work, msg: String) {
+    match work {
+        Work::Infer(r) => {
+            let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            r.resp
+                .send(Response {
+                    id: r.id,
+                    result: Err(RespError::Failed(msg)),
+                    latency_ms,
+                    batch_size: 0,
+                })
+                .ok();
+        }
+        Work::Open(o) => {
+            let latency_ms = o.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            o.resp
+                .send(Response {
+                    id: o.id,
+                    result: Err(RespError::Failed(msg)),
+                    latency_ms,
+                    batch_size: 0,
+                })
+                .ok();
+        }
+        Work::Step(s) => {
+            let latency_ms = s.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            s.resp
+                .send(Response {
+                    id: s.id,
+                    result: Err(RespError::Failed(msg)),
+                    latency_ms,
+                    batch_size: 0,
+                })
+                .ok();
+        }
+    }
 }
 
 /// Per-bucket worker: owns its executor and loops batching until the
@@ -1195,7 +1586,7 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
     let WorkerCtx {
         cfg,
         dir,
-        shard: _,
+        shard,
         bucket,
         queue,
         victims,
@@ -1206,6 +1597,7 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
         short_bucket,
         live,
         min_workers,
+        plan,
         ..
     } = ctx;
     let prefill_class =
@@ -1230,6 +1622,10 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
     };
 
     let mut pending: Vec<Work> = Vec::new();
+    // Pending items already charged against the fault plan's arrival
+    // counter — an item waiting out the batch timer across iterations
+    // must be counted exactly once.
+    let mut counted = 0usize;
     let mut idle_since: Option<Instant> = None;
     loop {
         // Top up the pending set.
@@ -1261,6 +1657,53 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
                 if pending.len() >= cfg.max_batch {
                     break;
                 }
+            }
+        }
+        // Deterministic chaos: each newly picked-up item advances the
+        // plan's global arrival counter and may fire a worker fault.
+        if let Some(p) = &plan {
+            let mut delay_ms = 0u64;
+            let mut die = false;
+            while counted < pending.len() {
+                counted += 1;
+                match p.on_worker_item(shard) {
+                    Some(WorkerFault::Delay(ms)) => delay_ms += ms,
+                    Some(WorkerFault::Die) => {
+                        die = true;
+                        break;
+                    }
+                    None => {}
+                }
+            }
+            if !pending.is_empty() {
+                // Assignment, not accumulation: `injected` is the
+                // plan's lifetime total, shared across all workers.
+                stats.lock().unwrap().faults_injected = p.injected();
+            }
+            if die {
+                // A dying worker must never strand a request: give
+                // un-executed items back to the queue (the respawned
+                // worker or a sibling picks them up), or bury them with
+                // a terminal reply when the queue is already closed.
+                for work in pending.drain(..) {
+                    if let Err(e) = queue.try_send(work) {
+                        let work = match e {
+                            SendError::Full(w) | SendError::Closed(w) => w,
+                        };
+                        stats.lock().unwrap().errors += 1;
+                        reply_failed(
+                            work,
+                            format!(
+                                "worker on shard {shard} killed with its bucket n{bucket} \
+                                 queue unavailable"
+                            ),
+                        );
+                    }
+                }
+                bail!("injected fault: worker killed by chaos plan");
+            }
+            if delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(delay_ms));
             }
         }
         if pending.is_empty() {
@@ -1300,11 +1743,31 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
         }
         // One drained set can mix prefill and decode traffic: session
         // items run statefully in arrival order, prefill members batch
-        // through the executor as before.
+        // through the executor as before.  Already-expired prefill is
+        // shed here — a terminal `DeadlineExceeded` beats burning
+        // executor time on a response nobody is waiting for.
         let mut infers: Vec<Request> = Vec::new();
+        let now = Instant::now();
         for work in pending.drain(..) {
             match work {
-                Work::Infer(r) => infers.push(r),
+                Work::Infer(r) => {
+                    if deadline_expired(r.deadline, now) {
+                        let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                        stats.lock().unwrap().deadline_drops += 1;
+                        r.resp
+                            .send(Response {
+                                id: r.id,
+                                result: Err(RespError::DeadlineExceeded(format!(
+                                    "deadline passed after {latency_ms:.1} ms in queue"
+                                ))),
+                                latency_ms,
+                                batch_size: 0,
+                            })
+                            .ok();
+                    } else {
+                        infers.push(r);
+                    }
+                }
                 Work::Open(open) => {
                     run_session_open(exec.as_mut(), &sessions, open, pool.as_ref(), &stats)
                 }
@@ -1317,16 +1780,18 @@ fn worker_loop(ctx: WorkerCtx) -> Result<()> {
                 ),
             }
         }
-        for plan in plan_batches(infers.len(), cfg.max_batch) {
-            let batch: Vec<Request> = infers.drain(..plan.members.len()).collect();
+        counted = 0;
+        for batch_plan in plan_batches(infers.len(), cfg.max_batch) {
+            let batch: Vec<Request> = infers.drain(..batch_plan.members.len()).collect();
             let capacity = exec.plan_capacity(batch.len(), cfg.max_batch);
             run_batch(
                 exec.as_mut(),
+                &cfg,
                 capacity,
                 bucket,
                 batch,
-                cfg.compute.causal,
                 prefill_class,
+                plan.as_ref(),
                 &stats,
             );
         }
@@ -1378,7 +1843,12 @@ fn run_session_open(
             let latency_ms = open.enqueued_at.elapsed().as_secs_f64() * 1e3;
             stats.lock().unwrap().errors += 1;
             open.resp
-                .send(Response { id: open.id, result: Err(e), latency_ms, batch_size: 0 })
+                .send(Response {
+                    id: open.id,
+                    result: Err(RespError::Failed(e)),
+                    latency_ms,
+                    batch_size: 0,
+                })
                 .ok();
         }
     }
@@ -1401,7 +1871,12 @@ fn run_session_step(
         stats.lock().unwrap().errors += 1;
         let latency_ms = step.enqueued_at.elapsed().as_secs_f64() * 1e3;
         step.resp
-            .send(Response { id: step.id, result: Err(msg), latency_ms, batch_size: 0 })
+            .send(Response {
+                id: step.id,
+                result: Err(RespError::Failed(msg)),
+                latency_ms,
+                batch_size: 0,
+            })
             .ok();
     };
     let slot = sessions.lock().unwrap().get(&step.id).cloned();
@@ -1508,20 +1983,30 @@ fn run_session_step(
 }
 
 /// Execute one padded batch through the worker's executor and fan
-/// results back out.  `default_causal` (`[compute] causal`) is OR-ed
-/// with each request's own flag; causal members an executor cannot
-/// honor are rejected *individually* — their co-batched bidirectional
-/// requests still run.  Executor panics are caught and routed back as
-/// per-request error responses (the worker thread survives).
+/// results back out.  `[compute] causal` is OR-ed with each request's
+/// own flag; causal members an executor cannot honor are rejected
+/// *individually* — their co-batched bidirectional requests still run.
+/// Executor panics are caught and routed back as per-request error
+/// responses (the worker thread survives).
+///
+/// Failed executions retry up to `[serve] retry_max` times with
+/// jittered exponential backoff — prefill only, and only here: a
+/// prefill batch that never produced logits is side-effect-free to
+/// re-execute, unlike a decode step whose state may have advanced.
+/// Members whose deadline expires while the batch backs off are shed
+/// (`DeadlineExceeded`) instead of riding the retry.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     exec: &mut dyn BatchExec,
+    cfg: &ServeConfig,
     capacity: usize,
     bucket: usize,
     batch: Vec<Request>,
-    default_causal: bool,
     class: PayloadClass,
+    plan: Option<&Arc<FaultPlan>>,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
+    let default_causal = cfg.compute.causal;
     let mut batch = batch;
     if !exec.supports_causal() {
         let mut kept = Vec::with_capacity(batch.len());
@@ -1532,13 +2017,13 @@ fn run_batch(
                 r.resp
                     .send(Response {
                         id: r.id,
-                        result: Err(
+                        result: Err(RespError::Failed(
                             "causal attention is not available on this worker's executor \
                              (AOT serve artifacts and the nystrom/linformer methods are \
                              full-attention only); serve a maskable method with `[serve] \
                              force_native = true`"
                                 .into(),
-                        ),
+                        )),
                         latency_ms,
                         batch_size: 0,
                     })
@@ -1561,13 +2046,13 @@ fn run_batch(
                 r.resp
                     .send(Response {
                         id: r.id,
-                        result: Err(
+                        result: Err(RespError::Failed(
                             "per-request attention scale is not available on this worker's \
                              executor (AOT serve artifacts bake the default 1/sqrt(d) in, and \
                              the nystrom/linformer encoders drop non-full specs wholesale); \
                              serve a maskable method with `[serve] force_native = true`"
                                 .into(),
-                        ),
+                        )),
                         latency_ms,
                         batch_size: 0,
                     })
@@ -1581,54 +2066,114 @@ fn run_batch(
             return;
         }
     }
-    let real = batch.len();
-    let mut tokens = Vec::with_capacity(capacity * bucket);
-    // One attention spec per live row: the request's pre-padding length
-    // becomes its key mask, its causal flag (or the worker-wide
-    // default) and its scale override ride along — the request's own
-    // spec always wins over what the worker default implies.
-    let mut specs = Vec::with_capacity(real);
-    for r in &batch {
-        specs.push(ReqSpec {
-            key_len: r.tokens.len().min(bucket),
-            causal: r.causal || default_causal,
-            scale: r.scale,
-        });
-        tokens.extend(pad_to_bucket(&r.tokens, bucket));
-    }
-    // Pad phantom rows up to the executor's static batch.
-    tokens.resize(capacity * bucket, crate::data::special::PAD);
-
-    let result = match catch_panic(|| exec.run(tokens, &specs, capacity, real, bucket)) {
-        Ok(r) => r,
-        Err(panic_msg) => Err(anyhow!(panic_msg)),
-    };
-
-    let mut st = stats.lock().unwrap();
-    st.record_batch(real);
-    match result {
-        Ok(rows) => {
-            for (r, row) in batch.into_iter().zip(rows) {
-                let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
-                st.record(class, latency_ms);
-                r.resp
-                    .send(Response { id: r.id, result: Ok(row), latency_ms, batch_size: real })
-                    .ok();
-            }
+    // Jitter salt: the first member's id — deterministic for a
+    // replayed request sequence, decorrelated across batches.
+    let salt = batch.first().map_or(0, |r| r.id);
+    let mut attempt: u32 = 0;
+    loop {
+        // (Re)build the padded buffer + specs for the current
+        // membership — retries may have shed expired members.  One
+        // attention spec per live row: the request's pre-padding length
+        // becomes its key mask, its causal flag (or the worker-wide
+        // default) and its scale override ride along — the request's
+        // own spec always wins over what the worker default implies.
+        let real = batch.len();
+        let mut tokens = Vec::with_capacity(capacity * bucket);
+        let mut specs = Vec::with_capacity(real);
+        for r in &batch {
+            specs.push(ReqSpec {
+                key_len: r.tokens.len().min(bucket),
+                causal: r.causal || default_causal,
+                scale: r.scale,
+            });
+            tokens.extend(pad_to_bucket(&r.tokens, bucket));
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for r in batch {
-                let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
-                st.errors += 1;
-                r.resp
-                    .send(Response {
-                        id: r.id,
-                        result: Err(msg.clone()),
-                        latency_ms,
-                        batch_size: real,
-                    })
-                    .ok();
+        // Pad phantom rows up to the executor's static batch.
+        tokens.resize(capacity * bucket, crate::data::special::PAD);
+
+        let inject = plan.is_some_and(|p| p.on_exec_call());
+        let result = match catch_panic(|| {
+            if inject {
+                panic!("injected fault: executor panic (chaos schedule)");
+            }
+            exec.run(tokens, &specs, capacity, real, bucket)
+        }) {
+            Ok(r) => r,
+            Err(panic_msg) => Err(anyhow!(panic_msg)),
+        };
+
+        match result {
+            Ok(rows) => {
+                let mut st = stats.lock().unwrap();
+                st.record_batch(real);
+                if let Some(p) = plan {
+                    st.faults_injected = p.injected();
+                }
+                for (r, row) in batch.into_iter().zip(rows) {
+                    let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                    st.record(class, latency_ms);
+                    r.resp
+                        .send(Response { id: r.id, result: Ok(row), latency_ms, batch_size: real })
+                        .ok();
+                }
+                return;
+            }
+            Err(e) if attempt < cfg.retry_max => {
+                attempt += 1;
+                stats.lock().unwrap().retries += 1;
+                std::thread::sleep(Duration::from_millis(backoff_ms(
+                    cfg.retry_backoff_ms,
+                    attempt,
+                    salt,
+                )));
+                // Shed members whose deadline passed during the
+                // backoff — retrying them would spend executor time on
+                // already-dead load.
+                let now = Instant::now();
+                let mut kept = Vec::with_capacity(batch.len());
+                for r in batch {
+                    if deadline_expired(r.deadline, now) {
+                        let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                        stats.lock().unwrap().deadline_drops += 1;
+                        r.resp
+                            .send(Response {
+                                id: r.id,
+                                result: Err(RespError::DeadlineExceeded(format!(
+                                    "deadline passed while retrying a failed batch ({e:#})"
+                                ))),
+                                latency_ms,
+                                batch_size: 0,
+                            })
+                            .ok();
+                    } else {
+                        kept.push(r);
+                    }
+                }
+                batch = kept;
+                if batch.is_empty() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let mut st = stats.lock().unwrap();
+                st.record_batch(real);
+                if let Some(p) = plan {
+                    st.faults_injected = p.injected();
+                }
+                for r in batch {
+                    let latency_ms = r.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                    st.errors += 1;
+                    r.resp
+                        .send(Response {
+                            id: r.id,
+                            result: Err(RespError::Failed(msg.clone())),
+                            latency_ms,
+                            batch_size: real,
+                        })
+                        .ok();
+                }
+                return;
             }
         }
     }
@@ -1776,7 +2321,7 @@ mod tests {
         let causal = causal_rx.recv().unwrap();
         let bidi = bidi_rx.recv().unwrap();
         let err = causal.result.unwrap_err();
-        assert!(err.contains("causal"), "unexpected error: {err}");
+        assert!(err.message().contains("causal"), "unexpected error: {err}");
         assert!(bidi.result.is_ok(), "bidirectional co-request must still serve");
         let stats = c.stats();
         let st = stats.lock().unwrap();
@@ -1855,7 +2400,7 @@ mod tests {
         let scaled = scaled_rx.recv().unwrap();
         let plain = plain_rx.recv().unwrap();
         let err = scaled.result.unwrap_err();
-        assert!(err.contains("scale"), "unexpected error: {err}");
+        assert!(err.message().contains("scale"), "unexpected error: {err}");
         assert!(plain.result.is_ok(), "scale-free co-request must still serve");
         c.shutdown();
     }
@@ -2410,6 +2955,309 @@ mod tests {
         let Some(c) = coordinator() else { return };
         let err = c.open_session(64).unwrap_err();
         assert!(format!("{err}").contains("force_native"), "{err}");
+        c.shutdown();
+    }
+
+    // -- chaos: fault injection, deadlines, supervision, failover -----------
+
+    use crate::config::FaultsConfig;
+
+    /// A native single-shard front with the given fault plan armed.
+    fn resilient_cfg(faults: FaultsConfig) -> ServeConfig {
+        ServeConfig {
+            method: "softmax".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            faults,
+            ..Default::default()
+        }
+    }
+
+    fn start_native(cfg: ServeConfig) -> Coordinator {
+        Coordinator::start(cfg, std::path::Path::new("definitely-not-artifacts")).unwrap()
+    }
+
+    #[test]
+    fn injected_exec_panic_is_retried_to_success() {
+        let faults =
+            FaultsConfig { exec_panic_start: 1, exec_panic_limit: 1, ..Default::default() };
+        let cfg = ServeConfig { retry_max: 2, retry_backoff_ms: 1, ..resilient_cfg(faults) };
+        let c = start_native(cfg);
+        // The first executor call panics (injected); the retry budget
+        // re-executes the batch and the client sees a clean Ok.
+        let resp = c.infer(vec![7i32; 16]).unwrap();
+        assert!(resp.result.is_ok(), "retry must absorb the injected panic: {:?}", resp.result);
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert!(st.retries >= 1, "the recovery must be visible in the retry counter");
+        assert!(st.faults_injected >= 1);
+        assert_eq!(st.errors, 0, "a retried batch is not an error");
+        assert_eq!(st.completed, 1);
+        drop(st);
+        c.shutdown();
+    }
+
+    #[test]
+    fn injected_exec_panic_without_retry_is_one_terminal_failure() {
+        let faults =
+            FaultsConfig { exec_panic_start: 1, exec_panic_limit: 1, ..Default::default() };
+        let c = start_native(resilient_cfg(faults)); // retry_max = 0
+        let rx = c.submit(vec![7i32; 16]).unwrap();
+        let resp = rx.recv().unwrap();
+        let err = resp.result.unwrap_err();
+        assert_eq!(err.kind(), "failed");
+        assert!(err.message().contains("injected"), "{err}");
+        assert!(rx.try_recv().is_err(), "exactly one terminal response per request");
+        // The fault point is spent (limit 1): the next request serves.
+        assert!(c.infer(vec![8i32; 16]).unwrap().result.is_ok());
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.errors, 1);
+        assert_eq!(st.retries, 0);
+        drop(st);
+        c.shutdown();
+    }
+
+    #[test]
+    fn supervisor_respawns_a_killed_worker_and_the_request_completes() {
+        let faults =
+            FaultsConfig { kill_worker_start: 1, kill_worker_limit: 1, ..Default::default() };
+        let c = start_native(resilient_cfg(faults));
+        // The first item kills its worker; the dying worker requeues
+        // the item, the supervisor respawns the floor, and the fresh
+        // worker serves it — the client just sees a slower Ok.
+        let resp = c.infer(vec![7i32; 16]).unwrap();
+        assert!(resp.result.is_ok(), "{:?}", resp.result);
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert!(st.worker_restarts >= 1, "the supervisor must have respawned the floor");
+        assert!(st.faults_injected >= 1);
+        assert_eq!(st.completed, 1);
+        drop(st);
+        assert!(c.dead_shards().is_empty(), "a respawned floor is not a dead shard");
+        c.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_queue_side_with_a_terminal_response() {
+        // The injected 40 ms worker delay sits between pickup and the
+        // drain-side deadline check, so the 5 ms deadline is expired by
+        // the time the worker would execute — shed, never executed.
+        let faults = FaultsConfig {
+            delay_start: 1,
+            delay_limit: 1,
+            delay_ms: 40,
+            ..Default::default()
+        };
+        let cfg = ServeConfig { default_deadline_ms: 5, ..resilient_cfg(faults) };
+        let c = start_native(cfg);
+        let rx = c.submit(vec![7i32; 16]).unwrap();
+        let resp = rx.recv().unwrap();
+        let err = resp.result.unwrap_err();
+        assert_eq!(err.kind(), "deadline-exceeded", "{err}");
+        assert!(rx.try_recv().is_err(), "exactly one terminal response");
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.deadline_drops, 1);
+        assert_eq!(st.completed, 0);
+        assert_eq!(st.errors, 0, "shed load must not be laundered as executor errors");
+        drop(st);
+        // The delay point is spent: a roomy deadline now serves fine.
+        let rx = c.submit_deadline(vec![8i32; 16], false, None, Some(5_000)).unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn admission_rejects_when_projected_wait_exceeds_the_deadline() {
+        let c = start_native(resilient_cfg(FaultsConfig::default()));
+        // Prime the short-prefill class with 50 ms batch history so the
+        // projected wait has something to stand on.
+        c.stats().lock().unwrap().record(PayloadClass::PrefillShort, 50.0);
+        let err = c.submit_deadline(vec![7i32; 16], false, None, Some(2)).unwrap_err();
+        assert!(format!("{err}").contains("projected queue wait"), "{err}");
+        assert_eq!(c.stats().lock().unwrap().rejected, 1);
+        // A roomy deadline admits and serves.
+        let rx = c.submit_deadline(vec![7i32; 16], false, None, Some(5_000)).unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn thrash_guard_sheds_new_session_opens_under_page_churn() {
+        let cfg = ServeConfig {
+            page_pool_pages: 8, // one 32-token session's worth
+            page_tokens: 4,
+            recompute_on_miss: true,
+            thrash_shed_ratio: 0.5,
+            ..resilient_cfg(FaultsConfig::default())
+        };
+        let c = start_native(cfg);
+        // Three sessions over a one-session page budget: every step
+        // evicts + recomputes, driving churn-per-step far above 0.5.
+        let mut sessions: Vec<DecodeSession> =
+            (0..3).map(|_| c.open_session(32).unwrap()).collect();
+        for i in 0..24 {
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                sess.step(4 + ((i + s) % 17) as i32).unwrap();
+            }
+        }
+        let err = c.open_session(32).unwrap_err();
+        assert!(format!("{err}").contains("thrash guard"), "{err}");
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.thrash_sheds, 1);
+        assert!(st.rejected >= 1);
+        drop(st);
+        // Live sessions keep serving: degradation sheds *new* load only.
+        for (s, sess) in sessions.iter_mut().enumerate() {
+            assert!(sess.step(5 + s as i32).is_ok(), "live session {s} must survive the shed");
+        }
+        for s in sessions.drain(..) {
+            s.close();
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn chaos_shard_kill_fails_over_sessions_bit_exactly() {
+        // The acceptance bar (chaos plan: an executor panic, a worker
+        // delay, and a whole shard killed mid-decode): every request
+        // gets exactly one terminal response, and a failed-over
+        // session's logits — confirmed history replayed onto a
+        // surviving shard — are bitwise identical to an unfaulted solo
+        // run of the same tokens.
+        let tokens: Vec<i32> = (0..14).map(|i| 4 + (i % 13) as i32).collect();
+        let solo = native_coordinator("softmax", 1);
+        let want = stream_all(&solo, &tokens);
+        solo.shutdown();
+
+        // Session ids are 1 and 2 (opened first, ids start at 1); kill
+        // the shard hosting session 1 so failover is always exercised.
+        let killed = HashRing::new(2).route(1);
+        let faults = FaultsConfig {
+            // Items: open A = 1, open B = 2, prefill p1 = 3, p2 = 4,
+            // then interleaved steps.  Exec calls count prefill batch
+            // executions only: p1 = call 1, p2 = call 2 (panics, retry
+            // recovers).  The delay lands on item 4 (p2's pickup).
+            // Item 10 (the sixth step) latches the shard kill.
+            exec_panic_start: 2,
+            exec_panic_limit: 1,
+            delay_start: 4,
+            delay_limit: 1,
+            delay_ms: 10,
+            kill_shard: killed as i64,
+            kill_shard_at: 10,
+            ..Default::default()
+        };
+        let cfg = ServeConfig {
+            shards: 2,
+            retry_max: 2,
+            retry_backoff_ms: 1,
+            ..resilient_cfg(faults)
+        };
+        let c = start_native(cfg);
+        let mut sa = c.open_session(32).unwrap();
+        let mut sb = c.open_session(32).unwrap();
+        assert_eq!(sa.shard(), killed, "session 1 must start on the to-be-killed shard");
+
+        // Two prefills while the executors are still healthy-ish: p2
+        // rides the injected panic + retry.  Exactly one terminal
+        // response each.
+        for salt in [7i32, 8] {
+            let rx = c.submit(vec![salt; 16]).unwrap();
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok(), "prefill must survive the chaos plan: {:?}", resp.result);
+            assert!(rx.try_recv().is_err(), "exactly one terminal response");
+        }
+
+        // Serial decode on both sessions through the shard kill: a
+        // failed step triggers failover, then the same token is
+        // resubmitted against the restored (fresh-lineage) state.
+        let mut got_a: Vec<Vec<f32>> = Vec::new();
+        let mut got_b: Vec<Vec<f32>> = Vec::new();
+        let mut restored = 0u64;
+        for (i, &t) in tokens.iter().enumerate() {
+            for (sess, got) in [(&mut sa, &mut got_a), (&mut sb, &mut got_b)] {
+                let logits = match sess.step(t) {
+                    Ok(l) => l,
+                    Err(first) => {
+                        c.restore_session(sess).unwrap_or_else(|e| {
+                            panic!("failover after step {i} failed ({first:#}): {e:#}")
+                        });
+                        restored += 1;
+                        sess.step(t).unwrap_or_else(|e| {
+                            panic!("restored session must serve step {i}: {e:#}")
+                        })
+                    }
+                };
+                got.push(logits);
+            }
+        }
+        assert!(restored >= 1, "the shard kill must force at least one failover");
+        assert_eq!(c.dead_shards(), vec![killed]);
+        assert_ne!(sa.shard(), killed, "session 1 must have moved off the dead shard");
+        for (i, (g, w)) in got_a.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "session A diverged at step {i} after failover");
+        }
+        for (i, (g, w)) in got_b.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "session B diverged at step {i}");
+        }
+        let stats = c.stats();
+        let st = stats.lock().unwrap();
+        assert_eq!(st.sessions_restored, restored);
+        assert!(st.retries >= 1, "the injected exec panic must have been retried");
+        assert!(st.faults_injected >= 3, "panic + delay + shard kill: {}", st.faults_injected);
+        drop(st);
+        sa.close();
+        sb.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn pipelined_sessions_refuse_failover_instead_of_guessing() {
+        let c = start_native(resilient_cfg(FaultsConfig::default()));
+        let mut s = c.open_session(32).unwrap();
+        s.step(5).unwrap();
+        let rx = s.stream(&[6, 7]).unwrap();
+        for _ in 0..2 {
+            rx.recv().unwrap().result.unwrap();
+        }
+        let err = c.restore_session(&mut s).unwrap_err();
+        assert!(format!("{err}").contains("pipelined"), "{err}");
+        s.close();
+        c.shutdown();
+    }
+
+    #[test]
+    fn restore_onto_the_same_ring_replays_a_poison_free_state() {
+        // Failover is also the poison-recovery path on a healthy ring:
+        // restoring replays the confirmed history onto a fresh state
+        // lineage and the session continues bit-exactly.
+        let tokens: Vec<i32> = (0..10).map(|i| 4 + (i % 13) as i32).collect();
+        let solo = native_coordinator("softmax", 1);
+        let want = stream_all(&solo, &tokens);
+        solo.shutdown();
+
+        let c = start_native(resilient_cfg(FaultsConfig::default()));
+        let mut s = c.open_session(32).unwrap();
+        let mut got: Vec<Vec<f32>> = Vec::new();
+        for &t in &tokens[..5] {
+            got.push(s.step(t).unwrap());
+        }
+        c.restore_session(&mut s).unwrap();
+        for &t in &tokens[5..] {
+            got.push(s.step(t).unwrap());
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "restored session diverged at step {i}");
+        }
+        assert_eq!(c.stats().lock().unwrap().sessions_restored, 1);
+        s.close();
         c.shutdown();
     }
 }

@@ -14,14 +14,21 @@ use anyhow::{bail, Result};
 
 use super::maybe_write_csv;
 use crate::cli::Args;
-use crate::config::{ConfigTable, ServeConfig};
-use crate::coordinator::{Coordinator, PayloadClass};
+use crate::config::{ConfigTable, FaultsConfig, ServeConfig};
+use crate::coordinator::{Coordinator, DecodeSession, HashRing, PayloadClass};
 use crate::data::tasks::{GlueGen, GlueTask};
 use crate::rng::Pcg64;
 use crate::runtime::{artifacts_available, artifacts_dir};
 use crate::util::print_table;
 
 pub fn run_serve(args: &Args) -> Result<()> {
+    // `--chaos-seed N` flips the bench into the deterministic chaos
+    // soak: same coordinator, but under a seeded fault plan, and the
+    // report is the resilience contract instead of latency percentiles.
+    let chaos_seed = args.get_usize("chaos-seed", 0)? as u64;
+    if chaos_seed > 0 {
+        return run_chaos(args, chaos_seed);
+    }
     let dir = artifacts_dir(args.get("artifacts"));
     let requests = args.get_usize("requests", 200)?;
     let methods = args.get_list("methods", "softmax,lln_diag");
@@ -73,6 +80,7 @@ pub fn run_serve(args: &Args) -> Result<()> {
     let mut class_rows = Vec::new();
     let mut summary_rows = Vec::new();
     let mut csv = Vec::new();
+    let mut outcome_csv = Vec::new();
     let mut slo_violations: Vec<String> = Vec::new();
     for method in &methods {
         let cfg = ServeConfig {
@@ -112,8 +120,23 @@ pub fn run_serve(args: &Args) -> Result<()> {
                 std::thread::sleep(sleep);
             }
         }
+        // Every admitted request ends in exactly one terminal response;
+        // tally the outcome classes instead of assuming Ok — shed load
+        // (queue-side rejections, expired deadlines) and failures are
+        // their own columns, not silently folded into throughput.
+        let (mut ok, mut deadline_dropped, mut failed) = (0u64, 0u64, 0u64);
         for rx in rxs {
-            rx.recv()?;
+            match rx.recv() {
+                Err(_) => failed += 1, // dropped without a terminal reply
+                Ok(resp) => match &resp.result {
+                    Ok(_) => ok += 1,
+                    Err(e) => match e.kind() {
+                        "rejected" => rejected += 1,
+                        "deadline-exceeded" => deadline_dropped += 1,
+                        _ => failed += 1,
+                    },
+                },
+            }
         }
         let wall = t0.elapsed().as_secs_f64();
 
@@ -193,11 +216,15 @@ pub fn run_serve(args: &Args) -> Result<()> {
             method.to_string(),
             format!("{throughput:.1}"),
             format!("{:.2}", st.mean_batch_size()),
+            format!("{ok}"),
             format!("{rejected}"),
+            format!("{deadline_dropped}"),
+            format!("{failed}"),
             format!("{}", st.steals),
             decode_cell,
             pages_cell,
         ]);
+        outcome_csv.push(format!("{method},{ok},{rejected},{deadline_dropped},{failed}"));
         drop(st);
         coord.shutdown();
     }
@@ -211,7 +238,10 @@ pub fn run_serve(args: &Args) -> Result<()> {
             "method",
             "throughput [req/s]",
             "mean batch",
+            "ok",
             "rejected",
+            "deadline_dropped",
+            "failed",
             "steals",
             "decode [tok/s]",
             "pages evict/recomp",
@@ -222,11 +252,209 @@ pub fn run_serve(args: &Args) -> Result<()> {
     println!("than softmax (quadratic N=512 forwards dominate SA's tail), and decode");
     println!("steps hold a distribution of their own instead of hiding the prefill tail.");
     maybe_write_csv(args, "serve", "method,class,count,p50,p90,p99", &csv)?;
+    maybe_write_csv(
+        args,
+        "serve_outcomes",
+        "method,ok,rejected,deadline_dropped,failed",
+        &outcome_csv,
+    )?;
     if !slo_violations.is_empty() {
         bail!("SLO violated:\n  {}", slo_violations.join("\n  "));
     }
     if slo_p99 > 0.0 {
         println!("\nSLO check passed: every trafficked class p99 <= {slo_p99:.1} ms");
     }
+    Ok(())
+}
+
+/// `--chaos-seed N`: deterministic chaos soak (CI's chaos smoke).
+///
+/// Drives a sharded native front under the seeded fault plan from
+/// [`FaultsConfig::chaos`] — executor panics, worker delays, a worker
+/// kill, and one whole-shard condemnation — and verifies the resilience
+/// contract end to end:
+///
+///   * every submitted request gets exactly one terminal response
+///     (none lost, none duplicated);
+///   * the supervisor respawns killed workers back to the floor;
+///   * sessions stranded on the condemned shard fail over, and their
+///     post-failover logits are bitwise identical to an unfaulted
+///     single-shard replay of the same tokens;
+///   * the condemned shard leaves the routing ring.
+///
+/// Any violation exits nonzero.
+fn run_chaos(args: &Args, seed: u64) -> Result<()> {
+    let shards = args.get_usize("shards", 0)?.max(2);
+    let requests = args.get_usize("requests", 48)?.max(24);
+    let sessions = args.get_usize("sessions", 2)?.clamp(1, 8);
+    let decode_tokens = args.get_usize("decode-tokens", 24)?.clamp(16, 48);
+    let method = "softmax";
+
+    let mut faults = FaultsConfig::chaos(seed, shards);
+    // Sessions are opened first (ids 1..=sessions): pin the shard kill
+    // onto session 1's home so failover is exercised on every seed.
+    faults.kill_shard = HashRing::new(shards).route(1) as i64;
+    println!(
+        "== Chaos soak: seed {seed}, {shards} shards, {requests} prefills, \
+         {sessions} sessions x {decode_tokens} tokens =="
+    );
+    println!("   plan: {faults:?}\n");
+
+    let cfg = ServeConfig {
+        method: method.into(),
+        queue_capacity: 64,
+        max_batch: 4,
+        batch_timeout_ms: 3,
+        workers: 1,
+        buckets: vec![32, 64],
+        native_fallback: true,
+        force_native: true,
+        shards,
+        retry_max: 2,
+        retry_backoff_ms: 1,
+        faults,
+        ..ServeConfig::default()
+    };
+    let dir = artifacts_dir(args.get("artifacts"));
+    let coord = Coordinator::start(cfg.clone(), &dir)?;
+
+    let tok = |s: usize, i: usize| 4 + ((s * 31 + i) % 97) as i32;
+    let mut sess: Vec<DecodeSession> = Vec::new();
+    for _ in 0..sessions {
+        sess.push(coord.open_session(decode_tokens)?);
+    }
+    let mut got: Vec<Vec<Vec<f32>>> = vec![Vec::new(); sessions];
+    let (mut ok, mut rejected, mut deadline_dropped, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut lost, mut duplicated, mut restores) = (0u64, 0u64, 0u64);
+
+    let rounds = requests.max(decode_tokens);
+    for round in 0..rounds {
+        if round < requests {
+            match coord.submit(vec![4 + (round % 13) as i32; 16]) {
+                Err(_) => rejected += 1,
+                Ok(rx) => match rx.recv_timeout(Duration::from_secs(30)) {
+                    Err(_) => lost += 1,
+                    Ok(resp) => {
+                        match &resp.result {
+                            Ok(_) => ok += 1,
+                            Err(e) => match e.kind() {
+                                "rejected" => rejected += 1,
+                                "deadline-exceeded" => deadline_dropped += 1,
+                                _ => failed += 1,
+                            },
+                        }
+                        if rx.try_recv().is_ok() {
+                            duplicated += 1;
+                        }
+                    }
+                },
+            }
+        }
+        if round < decode_tokens {
+            for (s, session) in sess.iter_mut().enumerate() {
+                let t = tok(s, round);
+                // A failed step means the session's shard died (or its
+                // state is poisoned): fail over and resubmit the same
+                // token against the restored fresh-lineage state.
+                let logits = match session.step(t) {
+                    Ok(l) => l,
+                    Err(_) => {
+                        coord.restore_session(session)?;
+                        restores += 1;
+                        session.step(t)?
+                    }
+                };
+                got[s].push(logits);
+            }
+        }
+    }
+
+    let dead = coord.dead_shards();
+    let stats_arc = coord.stats();
+    let st = stats_arc.lock().unwrap();
+    let (worker_restarts, injected, stat_restored, retries) =
+        (st.worker_restarts, st.faults_injected, st.sessions_restored, st.retries);
+    drop(st);
+    for s in sess.drain(..) {
+        s.close();
+    }
+    coord.shutdown();
+
+    // Bitwise ground truth: an unfaulted single-shard front fed the
+    // same per-session token sequences.
+    let ref_cfg = ServeConfig {
+        shards: 1,
+        retry_max: 0,
+        faults: FaultsConfig::default(),
+        ..cfg
+    };
+    let refc = Coordinator::start(ref_cfg, &dir)?;
+    let mut divergences = 0u64;
+    for (s, rows) in got.iter().enumerate() {
+        let mut rs = refc.open_session(decode_tokens)?;
+        for (i, row) in rows.iter().enumerate() {
+            let want = rs.step(tok(s, i))?;
+            if *row != want {
+                divergences += 1;
+                eprintln!("session {s} step {i}: logits diverged from the unfaulted replay");
+            }
+        }
+        rs.close();
+    }
+    refc.shutdown();
+
+    print_table(
+        &["ok", "rejected", "deadline_dropped", "failed", "lost", "duplicated"],
+        &[vec![
+            format!("{ok}"),
+            format!("{rejected}"),
+            format!("{deadline_dropped}"),
+            format!("{failed}"),
+            format!("{lost}"),
+            format!("{duplicated}"),
+        ]],
+    );
+    println!(
+        "\nfaults injected: {injected}  retries: {retries}  worker restarts: {worker_restarts}  \
+         session failovers: {restores} (stats: {stat_restored})  dead shards: {dead:?}"
+    );
+    maybe_write_csv(
+        args,
+        "serve_chaos",
+        "seed,ok,rejected,deadline_dropped,failed,lost,duplicated,worker_restarts,failovers",
+        &[format!(
+            "{seed},{ok},{rejected},{deadline_dropped},{failed},{lost},{duplicated},\
+             {worker_restarts},{restores}"
+        )],
+    )?;
+
+    let mut violations: Vec<String> = Vec::new();
+    if lost > 0 {
+        violations.push(format!("{lost} request(s) lost without a terminal response"));
+    }
+    if duplicated > 0 {
+        violations.push(format!("{duplicated} duplicated response(s)"));
+    }
+    if worker_restarts == 0 {
+        violations.push("no worker restart observed under a plan that kills one".into());
+    }
+    if restores == 0 {
+        violations.push("no session failover observed under a pinned shard kill".into());
+    }
+    if divergences > 0 {
+        violations.push(format!(
+            "{divergences} step(s) diverged bitwise from the unfaulted replay"
+        ));
+    }
+    if dead.is_empty() {
+        violations.push("the condemned shard never left the ring".into());
+    }
+    if !violations.is_empty() {
+        bail!("chaos contract violated:\n  {}", violations.join("\n  "));
+    }
+    println!(
+        "\nchaos contract held: every request got exactly one terminal response, the \
+         supervisor held the worker floor, and failover restored sessions bit-exactly."
+    );
     Ok(())
 }

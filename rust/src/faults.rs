@@ -1,0 +1,347 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a schedule, not a dice roll: every fault site in
+//! the coordinator consults a [`FaultPoint`] whose firing pattern is a
+//! pure function of how many times the site has been reached
+//! (`start` / `every` / `limit`), so the same plan against the same
+//! request sequence injects the same faults.  `lln serve --chaos-seed`
+//! derives a full plan from a single seed (see
+//! [`FaultsConfig::chaos`](crate::config::FaultsConfig::chaos)); tests
+//! construct plans directly.
+//!
+//! Fault sites:
+//!   * **executor call** — panic the Nth prefill batch execution (the
+//!     panic is raised inside the worker's `catch_panic` scope, so it
+//!     routes into the bounded-retry path, never a crashed worker);
+//!   * **worker item** — delay a worker before processing an item, kill
+//!     a single worker (the supervisor must respawn it), or condemn a
+//!     whole shard once the global item counter crosses a threshold;
+//!   * **page allocation** — fail a `PagePool` page acquisition
+//!     (exercising the recompute / poison / failover paths).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::FaultsConfig;
+
+/// SplitMix64 — the same finalizer the session router uses; here it
+/// seeds chaos-plan derivation and deterministic retry jitter.
+pub fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Deterministic backoff with jitter for prefill retries: exponential
+/// in the attempt number (1-based), jittered by a pure hash of
+/// `(salt, attempt)` so two coordinators replaying the same request ids
+/// sleep the same schedule.  Returns milliseconds.
+pub fn backoff_ms(base_ms: u64, attempt: u32, salt: u64) -> u64 {
+    let base = base_ms.max(1);
+    // Cap the exponent so a misconfigured retry_max cannot overflow.
+    let exp = base.saturating_mul(1u64 << attempt.min(10).saturating_sub(1));
+    let jitter = splitmix(salt ^ (attempt as u64).wrapping_mul(0x9E37)) % (exp / 2 + 1);
+    exp / 2 + jitter
+}
+
+/// A single schedulable fault site: fires on the `start`-th arrival
+/// (1-based), then every `every` arrivals after that, at most `limit`
+/// times (`0` = unlimited).  `start == 0` disables the point.
+#[derive(Debug, Default)]
+pub struct FaultPoint {
+    start: u64,
+    every: u64,
+    limit: u64,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl FaultPoint {
+    pub fn new(start: u64, every: u64, limit: u64) -> Self {
+        Self { start, every, limit, hits: AtomicU64::new(0), fired: AtomicU64::new(0) }
+    }
+
+    /// A point that never fires.
+    pub fn disabled() -> Self {
+        Self::new(0, 0, 0)
+    }
+
+    /// Fire exactly once, on the `n`-th arrival (1-based).
+    pub fn once_at(n: u64) -> Self {
+        Self::new(n, 0, 1)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.start > 0
+    }
+
+    /// Count one arrival at this site and decide whether the fault
+    /// fires for it.  Thread-safe; the arrival order across threads is
+    /// whatever the scheduler produced, but the *pattern* over arrival
+    /// indices is fixed.
+    pub fn fire(&self) -> bool {
+        if self.start == 0 {
+            return false;
+        }
+        let n = self.hits.fetch_add(1, Ordering::SeqCst) + 1;
+        if n < self.start {
+            return false;
+        }
+        let offset = n - self.start;
+        let periodic = if self.every == 0 { offset == 0 } else { offset % self.every == 0 };
+        if !periodic {
+            return false;
+        }
+        if self.limit == 0 {
+            self.fired.fetch_add(1, Ordering::SeqCst);
+            return true;
+        }
+        self.fired
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |f| {
+                if f < self.limit {
+                    Some(f + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// How many times this point has actually fired.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// What a worker should do with the item it just picked up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerFault {
+    /// Sleep this many milliseconds before processing (a slow worker).
+    Delay(u64),
+    /// Die: the worker re-queues or buries its pending items and
+    /// returns an error, exercising the supervisor's respawn path.
+    Die,
+}
+
+/// The full seeded fault schedule shared by every worker/supervisor.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Panic the Nth prefill batch execution.  Decode calls
+    /// (`begin_decode` / `decode_step`) are deliberately not wired to
+    /// this point: a panicked step would poison its session, and the
+    /// chaos acceptance test needs decode to stay deterministic so
+    /// failover can be checked bitwise.
+    pub exec_panic: FaultPoint,
+    /// Delay a worker before the Nth picked-up item.
+    pub delay: FaultPoint,
+    pub delay_ms: u64,
+    /// Fail the Nth fresh PagePool page acquisition.
+    pub page_alloc_fail: FaultPoint,
+    /// Kill the worker that picks up the Nth item.
+    pub kill_worker: FaultPoint,
+    /// Condemn this shard's whole worker pool once the global
+    /// worker-item counter reaches `kill_shard_at`.
+    pub kill_shard: Option<usize>,
+    pub kill_shard_at: u64,
+    items: AtomicU64,
+    shard_killed: AtomicBool,
+}
+
+impl FaultPlan {
+    /// Build the shared plan from a parsed `[faults]` section; `None`
+    /// when every knob is off (the fast path stays fault-free).
+    pub fn from_config(cfg: &FaultsConfig) -> Option<Arc<FaultPlan>> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(Arc::new(FaultPlan {
+            exec_panic: FaultPoint::new(cfg.exec_panic_start, cfg.exec_panic_every, cfg.exec_panic_limit),
+            delay: FaultPoint::new(cfg.delay_start, cfg.delay_every, cfg.delay_limit),
+            delay_ms: cfg.delay_ms,
+            page_alloc_fail: FaultPoint::new(cfg.page_fail_start, cfg.page_fail_every, cfg.page_fail_limit),
+            kill_worker: FaultPoint::new(cfg.kill_worker_start, cfg.kill_worker_every, cfg.kill_worker_limit),
+            kill_shard: usize::try_from(cfg.kill_shard).ok(),
+            kill_shard_at: cfg.kill_shard_at,
+            items: AtomicU64::new(0),
+            shard_killed: AtomicBool::new(false),
+        }))
+    }
+
+    /// One executor invocation is about to run; `true` = panic it.
+    pub fn on_exec_call(&self) -> bool {
+        self.exec_panic.fire()
+    }
+
+    /// A worker on `shard` picked up one work item.  Advances the
+    /// global item counter (which drives the shard-kill schedule) and
+    /// returns the fault, if any, the worker must act out.
+    pub fn on_worker_item(&self, shard: usize) -> Option<WorkerFault> {
+        let n = self.items.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.kill_shard.is_some() && n >= self.kill_shard_at.max(1) {
+            self.shard_killed.store(true, Ordering::SeqCst);
+        }
+        if self.shard_condemned(shard) {
+            return Some(WorkerFault::Die);
+        }
+        if self.kill_worker.fire() {
+            return Some(WorkerFault::Die);
+        }
+        if self.delay.fire() {
+            return Some(WorkerFault::Delay(self.delay_ms.max(1)));
+        }
+        None
+    }
+
+    /// Has the shard-kill schedule condemned this shard?  Once true it
+    /// stays true: the supervisor buries the shard instead of
+    /// respawning into it.
+    pub fn shard_condemned(&self, shard: usize) -> bool {
+        self.kill_shard == Some(shard) && self.shard_killed.load(Ordering::SeqCst)
+    }
+
+    /// A fresh (non-resident) page acquisition is about to allocate;
+    /// `true` = fail it.
+    pub fn on_page_alloc(&self) -> bool {
+        self.page_alloc_fail.fire()
+    }
+
+    /// Total faults actually injected so far (mirrored into
+    /// `ServeStats::faults_injected` by the workers).
+    pub fn injected(&self) -> u64 {
+        self.exec_panic.fired()
+            + self.delay.fired()
+            + self.page_alloc_fail.fired()
+            + self.kill_worker.fired()
+            + u64::from(self.shard_killed.load(Ordering::SeqCst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_point_never_fires() {
+        let p = FaultPoint::disabled();
+        for _ in 0..100 {
+            assert!(!p.fire());
+        }
+        assert_eq!(p.fired(), 0);
+        assert!(!p.is_enabled());
+    }
+
+    #[test]
+    fn once_at_fires_exactly_once_at_n() {
+        let p = FaultPoint::once_at(3);
+        let fires: Vec<bool> = (0..8).map(|_| p.fire()).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, false, false, false]);
+        assert_eq!(p.fired(), 1);
+    }
+
+    #[test]
+    fn periodic_point_respects_start_every_limit() {
+        // start=2, every=3, limit=2 -> fires on arrivals 2 and 5 only.
+        let p = FaultPoint::new(2, 3, 2);
+        let fired: Vec<u64> = (1..=12).filter(|_| p.fire()).collect();
+        assert_eq!(p.fired(), 2);
+        assert_eq!(fired.len(), 2);
+        // Unlimited: fires on 2, 5, 8, 11 within 12 arrivals.
+        let p = FaultPoint::new(2, 3, 0);
+        let n = (1..=12).filter(|_| p.fire()).count();
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_across_replays() {
+        let pattern = |p: &FaultPoint| -> Vec<bool> { (0..64).map(|_| p.fire()).collect() };
+        let a = pattern(&FaultPoint::new(5, 4, 3));
+        let b = pattern(&FaultPoint::new(5, 4, 3));
+        assert_eq!(a, b, "same schedule must replay identically");
+    }
+
+    #[test]
+    fn shard_kill_trips_at_threshold_and_latches() {
+        let plan = FaultPlan {
+            exec_panic: FaultPoint::disabled(),
+            delay: FaultPoint::disabled(),
+            delay_ms: 0,
+            page_alloc_fail: FaultPoint::disabled(),
+            kill_worker: FaultPoint::disabled(),
+            kill_shard: Some(1),
+            kill_shard_at: 3,
+            items: AtomicU64::new(0),
+            shard_killed: AtomicBool::new(false),
+        };
+        // Shard 0 items advance the counter but shard 0 never dies.
+        assert_eq!(plan.on_worker_item(0), None);
+        assert_eq!(plan.on_worker_item(0), None);
+        assert!(!plan.shard_condemned(1), "threshold not reached yet");
+        assert_eq!(plan.on_worker_item(0), None, "shard 0 is not the target");
+        assert!(plan.shard_condemned(1), "threshold reached: shard 1 condemned");
+        assert!(!plan.shard_condemned(0));
+        assert_eq!(plan.on_worker_item(1), Some(WorkerFault::Die));
+        // Latched: stays condemned forever.
+        assert_eq!(plan.on_worker_item(1), Some(WorkerFault::Die));
+        assert_eq!(plan.injected(), 1, "one shard kill counts as one injected fault");
+    }
+
+    #[test]
+    fn worker_faults_delay_then_die() {
+        let plan = FaultPlan {
+            exec_panic: FaultPoint::disabled(),
+            delay: FaultPoint::once_at(1),
+            delay_ms: 7,
+            page_alloc_fail: FaultPoint::disabled(),
+            kill_worker: FaultPoint::once_at(2),
+            kill_shard: None,
+            kill_shard_at: 0,
+            items: AtomicU64::new(0),
+            shard_killed: AtomicBool::new(false),
+        };
+        assert_eq!(plan.on_worker_item(0), Some(WorkerFault::Delay(7)));
+        assert_eq!(plan.on_worker_item(0), Some(WorkerFault::Die));
+        assert_eq!(plan.on_worker_item(0), None);
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_grows() {
+        let a = backoff_ms(5, 1, 42);
+        let b = backoff_ms(5, 1, 42);
+        assert_eq!(a, b, "jitter must be a pure function of (base, attempt, salt)");
+        assert!(backoff_ms(5, 1, 42) != backoff_ms(5, 1, 43) || backoff_ms(5, 2, 42) != backoff_ms(5, 2, 43));
+        for attempt in 1..=6u32 {
+            let exp = 5u64 << (attempt - 1);
+            let ms = backoff_ms(5, attempt, 9);
+            assert!(ms >= exp / 2 && ms <= exp, "attempt {attempt}: {ms} outside [{}, {exp}]", exp / 2);
+        }
+        // Degenerate inputs stay sane (no panic, no overflow).
+        let _ = backoff_ms(0, 1, 0);
+        assert!(backoff_ms(u64::MAX / 2, 30, 1) > 0, "saturates instead of overflowing");
+    }
+
+    #[test]
+    fn plan_from_config_gates_on_enabled() {
+        let off = FaultsConfig::default();
+        assert!(FaultPlan::from_config(&off).is_none(), "all-off config must not allocate a plan");
+        let on = FaultsConfig { exec_panic_start: 2, ..Default::default() };
+        let plan = FaultPlan::from_config(&on).expect("enabled config builds a plan");
+        assert!(!plan.on_exec_call());
+        assert!(plan.on_exec_call());
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn chaos_derivation_is_deterministic_and_in_range() {
+        let a = FaultsConfig::chaos(7, 2);
+        let b = FaultsConfig::chaos(7, 2);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "same seed -> same plan");
+        assert!(a.enabled());
+        let shard = usize::try_from(a.kill_shard).expect("chaos with >1 shard kills one shard");
+        assert!(shard < 2);
+        // A different seed must produce a different schedule somewhere.
+        let c = FaultsConfig::chaos(8, 2);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"));
+    }
+}

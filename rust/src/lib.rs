@@ -81,6 +81,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod linalg;
 pub mod rng;
 pub mod runtime;

@@ -87,6 +87,7 @@ fn cli() -> Cli {
                         flag("decode-tokens", "tokens to stream per decode session", Some("48")),
                         flag("shards", "coordinator shards (0 = [serve] config value)", Some("0")),
                         flag("slo-p99", "per-class p99 SLO bound in ms (0 = report only)", Some("0")),
+                        flag("chaos-seed", "run the seeded chaos soak instead of the traffic demo (0 = off)", Some("0")),
                         flag("config", "TOML file with [serve] / [compute] sections", None),
                     ]);
                     f

@@ -99,6 +99,13 @@ impl ParamStore {
     }
 
     /// Serialize to the raw-f32 checkpoint format.
+    ///
+    /// The write is atomic: bytes land in a sibling temp file first and
+    /// are `rename`d over the final path only once fully written, so a
+    /// crash (or full disk) mid-write can never leave a truncated
+    /// checkpoint where [`load_checkpoint`](Self::load_checkpoint)
+    /// expects a complete one — the previous checkpoint, if any,
+    /// survives intact.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut bytes = Vec::with_capacity(self.total_elements() * 4);
         for v in &self.values {
@@ -106,7 +113,17 @@ impl ParamStore {
                 bytes.extend_from_slice(&x.to_le_bytes());
             }
         }
-        std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow!("checkpoint path {} has no file name", path.display()))?;
+        let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+        if let Err(e) = std::fs::write(&tmp, &bytes) {
+            // Best-effort cleanup; the final path was never touched.
+            std::fs::remove_file(&tmp).ok();
+            return Err(e).with_context(|| format!("writing {}", tmp.display()));
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("committing {} -> {}", tmp.display(), path.display()))
     }
 
     /// Load a checkpoint saved by [`ParamStore::save`] (same schema).
@@ -191,5 +208,51 @@ mod tests {
         let z = ParamStore::zeros_like(&store);
         assert_eq!(z.total_elements(), 10);
         assert!(z.values.iter().flatten().all(|&x| x == 0.0));
+    }
+
+    fn small_store(fill: f32) -> ParamStore {
+        ParamStore {
+            names: vec!["a".into(), "b".into()],
+            shapes: vec![vec![2, 3], vec![4]],
+            values: vec![vec![fill; 6], vec![fill + 1.0; 4]],
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_and_never_exposes_a_truncated_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("lln_atomic_save_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+
+        // A stale temp file from a crashed prior writer must not
+        // corrupt anything: save overwrites it and commits cleanly.
+        std::fs::write(dir.join("ckpt.bin.tmp"), b"garbage from a crashed writer").unwrap();
+        let old = small_store(1.0);
+        old.save(&path).unwrap();
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            (old.total_elements() * 4) as u64,
+            "the final path must only ever hold a complete checkpoint"
+        );
+        assert!(!dir.join("ckpt.bin.tmp").exists(), "the temp file is consumed by the rename");
+
+        // Regression: a failed write never truncates the existing
+        // checkpoint.  Making the temp path unwritable (a directory
+        // squats on it) forces the data write to fail — with the old
+        // direct `fs::write(path)` scheme this same failure mode (dying
+        // mid-write) left a short file at the final path.
+        std::fs::create_dir(dir.join("ckpt.bin.tmp")).unwrap();
+        let new = small_store(9.0);
+        assert!(new.save(&path).is_err(), "the squatted temp path must fail the save");
+        std::fs::remove_dir(dir.join("ckpt.bin.tmp")).ok();
+        let mut reread = small_store(0.0);
+        reread.load_checkpoint(&path).unwrap();
+        assert_eq!(reread.values, old.values, "a failed save must leave the old checkpoint intact");
+
+        // A successful overwrite replaces it whole.
+        new.save(&path).unwrap();
+        reread.load_checkpoint(&path).unwrap();
+        assert_eq!(reread.values, new.values);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

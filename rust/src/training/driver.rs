@@ -178,6 +178,9 @@ impl TrainDriver {
             .collect()
     }
 
+    /// Write the current parameters as a checkpoint.  Atomic via
+    /// [`ParamStore::save`]'s temp-file + rename commit: a crash
+    /// mid-write never corrupts an existing checkpoint at `path`.
     pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
         self.params.save(path)
     }
