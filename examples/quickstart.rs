@@ -2,8 +2,10 @@
 //! `AttnSpec` mask API (full, padded, causal), demo moment matching and
 //! token-by-token decode sessions (`begin_decode` / `decode_step` at
 //! the kernel layer, `Coordinator::open_session` streaming at the
-//! serving layer), then — when AOT artifacts are built — cross-check
-//! the PJRT LLN kernel against the native implementation.
+//! serving layer), show the `[compute] head_dim` / `precision` perf
+//! knobs (monomorphized kernels, int8-kv storage), then — when AOT
+//! artifacts are built — cross-check the PJRT LLN kernel against the
+//! native implementation.
 //!
 //!     cargo run --release --example quickstart                  # native only
 //!     cargo run --release --example quickstart -- --decode-smoke  # CI decode smoke
@@ -131,6 +133,50 @@ fn main() -> Result<()> {
         sm_state.state_bytes()
     );
     assert!(sm_err < 1e-5);
+
+    // 3b. Perf knobs.  `[compute] head_dim` pins the monomorphized
+    //     microkernels at backend construction — d = 64 matches a
+    //     specialized instance (D ∈ {32, 64, 128}), and the unrolled
+    //     loops are *bitwise* identical to the generic ones, so this
+    //     is purely a speed choice.  `[compute] precision` stores K/V
+    //     operands narrow (bf16 / f16 / int8-kv) while every dot
+    //     product still runs in f32: here the int8-kv decode cache
+    //     holds the same session in >3.5x fewer bytes.
+    let pinned_bk =
+        backend_for(Method::Softmax, BackendParams { head_dim: d, ..Default::default() });
+    assert_eq!(
+        pinned_bk.forward(&q, &k, &v, &AttnSpec::CAUSAL).data(),
+        sm_causal_ref.data(),
+        "specialized head-dim kernels must be bitwise identical"
+    );
+    let int8_bk = backend_for(
+        Method::Softmax,
+        BackendParams { precision: lln::lowp::Precision::Int8Kv, ..Default::default() },
+    );
+    let mut int8_state = int8_bk.begin_decode(d, d).map_err(|e| anyhow!(e))?;
+    let mut int8_err = 0.0f32;
+    for i in 0..n {
+        let row = int8_bk.decode_step(&mut int8_state, q.row(i), k.row(i), v.row(i));
+        for (a, b) in row.iter().zip(sm_causal_ref.row(i)) {
+            int8_err = int8_err.max((a - b).abs());
+        }
+    }
+    println!(
+        "int8-kv decode session: cache = {} bytes vs {} at f32 ({:.2}x smaller), max |diff| vs \
+         f32 = {int8_err:.2e}",
+        int8_state.state_bytes(),
+        sm_state.state_bytes(),
+        sm_state.state_bytes() as f64 / int8_state.state_bytes() as f64
+    );
+    assert!(2 * int8_state.state_bytes() <= sm_state.state_bytes());
+    // Same tolerance shape as the property suite: the documented
+    // int8-kv bound, scaled by the reference magnitude.
+    let ref_scale =
+        sm_causal_ref.data().iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1.0);
+    assert!(
+        int8_err < 0.25 * ref_scale,
+        "int8-kv storage error out of documented bounds: {int8_err} (scale {ref_scale})"
+    );
 
     // 4. Exact softmax under the same masks, through the fused
     //    O(n·tile) kernels — including the causal variant that streams

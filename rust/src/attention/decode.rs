@@ -23,7 +23,9 @@
 //! to the batch kernel's rows for the same `chunk` parameter (the
 //! property suite pins this).
 
-use super::kernels::accumulate_state;
+use super::kernels::accumulate_state_dispatch;
+use crate::lowp::{Precision, RowStore};
+use crate::tensor::KernelDispatch;
 
 const EPS: f32 = 1e-6;
 
@@ -34,6 +36,15 @@ const EPS: f32 = 1e-6;
 /// call [`start_new_window`](Self::start_new_window) at tile
 /// boundaries, which evicts the dead prefix and keeps the resident
 /// state O(window) instead of O(t).
+///
+/// Rows are *stored* at the configured [`Precision`] (the
+/// `[compute] precision` knob): each pushed row is encoded on append —
+/// per-row scale/zero-point for int8, plain bf16/f16 words otherwise —
+/// and the step kernels read a maintained f32 decode of the live window
+/// (the gather scratch; [`state_bytes`](Self::state_bytes) counts only
+/// the stored payload, mirroring the paged cache's accounting).  At
+/// `Precision::F32` the store IS the f32 buffer — zero-copy and bitwise
+/// identical to the pre-precision cache.
 pub struct KvCache {
     d: usize,
     dv: usize,
@@ -42,13 +53,37 @@ pub struct KvCache {
     /// Tokens evicted from the front; the buffers hold rows
     /// `base..len`.
     base: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: RowStore,
+    v: RowStore,
+    /// f32 decode of the resident window (empty at `Precision::F32`,
+    /// where the store itself is read zero-copy).
+    k_dec: Vec<f32>,
+    v_dec: Vec<f32>,
 }
 
 impl KvCache {
     pub fn new(d: usize, dv: usize) -> Self {
-        Self { d, dv, len: 0, base: 0, k: Vec::new(), v: Vec::new() }
+        Self::with_precision(d, dv, Precision::F32)
+    }
+
+    /// A cache whose K/V rows are stored at `prec` (encoded on push,
+    /// decoded for the step kernels; arithmetic stays f32).
+    pub fn with_precision(d: usize, dv: usize, prec: Precision) -> Self {
+        Self {
+            d,
+            dv,
+            len: 0,
+            base: 0,
+            k: RowStore::new(prec, d),
+            v: RowStore::new(prec, dv),
+            k_dec: Vec::new(),
+            v_dec: Vec::new(),
+        }
+    }
+
+    /// The storage precision of the K/V rows.
+    pub fn precision(&self) -> Precision {
+        self.k.precision()
     }
 
     /// Appended token count (total, including evicted rows).
@@ -75,12 +110,25 @@ impl KvCache {
         self.len - self.base
     }
 
-    /// Append one token's key/value rows.
+    /// Append one token's key/value rows.  The rows are encoded through
+    /// the storage precision; what the step kernels later read is the
+    /// *decoded* values, so quantization error is applied exactly once
+    /// per row, at append time (a pure function of the row — the
+    /// determinism the paged recompute-on-miss path relies on).
     pub fn push(&mut self, krow: &[f32], vrow: &[f32]) {
         assert_eq!(krow.len(), self.d, "key row dim mismatch");
         assert_eq!(vrow.len(), self.dv, "value row dim mismatch");
-        self.k.extend_from_slice(krow);
-        self.v.extend_from_slice(vrow);
+        self.k.push_row(krow);
+        self.v.push_row(vrow);
+        if self.k.as_f32().is_none() {
+            // Low-precision store: extend the f32 window decode with
+            // just the new row (O(1)/token).
+            let mut tmp = Vec::with_capacity(self.d.max(self.dv));
+            self.k.decode_range_into(self.k.rows() - 1, self.k.rows(), &mut tmp);
+            self.k_dec.extend_from_slice(&tmp);
+            self.v.decode_range_into(self.v.rows() - 1, self.v.rows(), &mut tmp);
+            self.v_dec.extend_from_slice(&tmp);
+        }
         self.len += 1;
     }
 
@@ -91,24 +139,31 @@ impl KvCache {
     pub fn start_new_window(&mut self) {
         self.k.clear();
         self.v.clear();
+        self.k_dec.clear();
+        self.v_dec.clear();
         self.base = self.len;
     }
 
-    /// The resident key rows, row-major (`window_len() * d` — rows
-    /// `base..len` of the sequence).
+    /// The resident key rows as f32, row-major (`window_len() * d` —
+    /// rows `base..len` of the sequence).  Zero-copy at
+    /// `Precision::F32`; the maintained window decode otherwise.
     pub fn keys(&self) -> &[f32] {
-        &self.k
+        self.k.as_f32().unwrap_or(&self.k_dec)
     }
 
-    /// The resident value rows, row-major (`window_len() * dv`).
+    /// The resident value rows as f32, row-major (`window_len() * dv`).
     pub fn values(&self) -> &[f32] {
-        &self.v
+        self.v.as_f32().unwrap_or(&self.v_dec)
     }
 
-    /// Resident state bytes: linear in the decoded length for the
-    /// full-prefix methods, bounded by the window for BlockDiag.
+    /// Resident *stored* state bytes: the encoded K/V payload (plus the
+    /// int8 per-row scale/zero tables) — linear in the decoded length
+    /// for the full-prefix methods, bounded by the window for
+    /// BlockDiag.  This is what the serving admission math budgets; the
+    /// f32 window decode is gather scratch, same as the paged cache's
+    /// gather buffers.
     pub fn state_bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        self.k.stored_bytes() + self.v.stored_bytes()
     }
 }
 
@@ -131,6 +186,9 @@ pub struct PrefixState {
     dv: usize,
     chunk: usize,
     len: usize,
+    /// Microkernel instance for the per-token state fold, resolved at
+    /// backend construction (bitwise-identical across instances).
+    kern: KernelDispatch,
     carry_kv: Vec<f32>,
     carry_z: Vec<f32>,
     part_kv: Vec<f32>,
@@ -143,12 +201,21 @@ impl PrefixState {
     /// `m` feature dim, `dv` value dim, `chunk` the carry granularity
     /// (0 = the batch kernel's default of 128).
     pub fn new(m: usize, dv: usize, chunk: usize) -> Self {
+        Self::with_kernel(m, dv, chunk, KernelDispatch::Auto)
+    }
+
+    /// [`PrefixState::new`] with an explicit [`KernelDispatch`] for the
+    /// per-token `Σ φ(k)vᵀ` fold (backends pass their
+    /// construction-resolved instance; outputs are bitwise identical
+    /// for every dispatch value).
+    pub fn with_kernel(m: usize, dv: usize, chunk: usize, kern: KernelDispatch) -> Self {
         let chunk = if chunk == 0 { 128 } else { chunk };
         Self {
             m,
             dv,
             chunk,
             len: 0,
+            kern,
             carry_kv: vec![0.0; m * dv],
             carry_z: vec![0.0; m],
             part_kv: vec![0.0; m * dv],
@@ -196,8 +263,8 @@ impl PrefixState {
             self.state_kv.copy_from_slice(&self.carry_kv);
             self.state_z.copy_from_slice(&self.carry_z);
         }
-        accumulate_state(&mut self.part_kv, &mut self.part_z, phi_k, vrow, self.dv);
-        accumulate_state(&mut self.state_kv, &mut self.state_z, phi_k, vrow, self.dv);
+        accumulate_state_dispatch(self.kern, &mut self.part_kv, &mut self.part_z, phi_k, vrow, self.dv);
+        accumulate_state_dispatch(self.kern, &mut self.state_kv, &mut self.state_z, phi_k, vrow, self.dv);
         self.len += 1;
     }
 
@@ -291,6 +358,51 @@ mod tests {
         assert_eq!(c.keys(), &[1.0, 2.0, 3.0, 6.0, 7.0, 8.0]);
         assert_eq!(c.values(), &[4.0, 5.0, 9.0, 10.0]);
         assert_eq!(c.state_bytes(), (6 + 4) * 4);
+    }
+
+    #[test]
+    fn kv_cache_low_precision_stores_fewer_bytes_and_bounded_error() {
+        let d = 8;
+        let dv = 8;
+        let mut rng = crate::rng::Pcg64::seed(77);
+        let k = crate::tensor::Mat::gaussian(12, d, 1.0, &mut rng);
+        let v = crate::tensor::Mat::gaussian(12, dv, 1.0, &mut rng);
+        let mut f32c = KvCache::new(d, dv);
+        for i in 0..12 {
+            f32c.push(k.row(i), v.row(i));
+        }
+        for (prec, tol, shrink) in [
+            (Precision::Bf16, 1.0 / 128.0, 2),
+            (Precision::F16, 1.0 / 1024.0, 2),
+            (Precision::Int8Kv, 0.05, 2),
+        ] {
+            let mut c = KvCache::with_precision(d, dv, prec);
+            for i in 0..12 {
+                c.push(k.row(i), v.row(i));
+            }
+            assert_eq!(c.precision(), prec);
+            assert_eq!(c.len(), 12);
+            assert!(
+                c.state_bytes() * shrink <= f32c.state_bytes(),
+                "{prec:?}: {} vs f32 {}",
+                c.state_bytes(),
+                f32c.state_bytes()
+            );
+            for (&x, &y) in f32c.keys().iter().zip(c.keys()) {
+                assert!((x - y).abs() <= tol * x.abs().max(2.0), "{prec:?} key: {x} vs {y}");
+            }
+            for (&x, &y) in f32c.values().iter().zip(c.values()) {
+                assert!((x - y).abs() <= tol * x.abs().max(2.0), "{prec:?} value: {x} vs {y}");
+            }
+            // Window eviction clears the decode scratch too.
+            c.start_new_window();
+            assert_eq!(c.window_len(), 0);
+            assert!(c.keys().is_empty() && c.values().is_empty());
+            assert_eq!(c.state_bytes(), 0);
+            c.push(k.row(0), v.row(0));
+            assert_eq!(c.window_len(), 1);
+            assert_eq!(c.keys().len(), d);
+        }
     }
 
     #[test]

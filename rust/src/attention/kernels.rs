@@ -7,7 +7,7 @@
 
 use super::{AttnSpec, EXP_CLAMP};
 use crate::rng::Pcg64;
-use crate::tensor::Mat;
+use crate::tensor::{KernelDispatch, Mat};
 
 pub(crate) const EPS: f32 = 1e-6;
 
@@ -259,6 +259,26 @@ pub fn fused_softmax_attention_spec(
     unroll: usize,
     threads: usize,
 ) -> Mat {
+    fused_softmax_attention_dispatch(q, k, v, spec, tile, unroll, threads, KernelDispatch::Auto)
+}
+
+/// [`fused_softmax_attention_spec`] with an explicit [`KernelDispatch`]:
+/// the score tiles run the monomorphized head-dim microkernel the
+/// backend resolved at construction (bitwise-identical to the generic
+/// path — the spec instances are exact statement-for-statement copies,
+/// see `tensor::micro`).  A pinned instance whose `D` does not match
+/// `q.cols()` silently falls back to the generic kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_softmax_attention_dispatch(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    tile: usize,
+    unroll: usize,
+    threads: usize,
+    kern: KernelDispatch,
+) -> Mat {
     assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
     assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
     let (nq, d) = q.shape();
@@ -276,11 +296,13 @@ pub fn fused_softmax_attention_spec(
     if t <= 1 {
         // Same serial short-circuit as the other `par_*` entry points:
         // no worker spawn when one span would do.
-        fused_softmax_rows(qd, kd, vd, out.data_mut(), 0, nq, d, nk, dv, scale, tile, ur, spec);
+        fused_softmax_rows(
+            qd, kd, vd, out.data_mut(), 0, nq, d, nk, dv, scale, tile, ur, spec, kern,
+        );
         return out;
     }
     par_query_spans(out.data_mut(), nq, nk, dv, t, spec, |row0, len, chunk| {
-        fused_softmax_rows(qd, kd, vd, chunk, row0, len, d, nk, dv, scale, tile, ur, spec);
+        fused_softmax_rows(qd, kd, vd, chunk, row0, len, d, nk, dv, scale, tile, ur, spec, kern);
     });
     out
 }
@@ -301,6 +323,7 @@ fn fused_softmax_rows(
     tile: usize,
     ur: usize,
     spec: &AttnSpec,
+    kern: KernelDispatch,
 ) {
     // Per-worker scratch: O(ur·(tile + dv)) — independent of n.
     let mut scores = vec![0.0f32; ur * tile];
@@ -322,7 +345,7 @@ fn fused_softmax_rows(
         while t0 < span {
             let tn = tile.min(span - t0);
             let ktile = &k[t0 * d..(t0 + tn) * d];
-            crate::tensor::micro::matmul_t_block(qrows, ktile, &mut scores[..ib * tn], ib, d, tn);
+            kern.matmul_t_block(qrows, ktile, &mut scores[..ib * tn], ib, d, tn);
             for r in 0..ib {
                 // Keys this row may use within the tile — `live < tn`
                 // is exactly the partial diagonal tile of the causal
@@ -412,6 +435,23 @@ pub fn fused_quadratic_attention_spec(
     unroll: usize,
     threads: usize,
 ) -> Mat {
+    fused_quadratic_attention_dispatch(q, k, v, spec, tile, unroll, threads, KernelDispatch::Auto)
+}
+
+/// [`fused_quadratic_attention_spec`] with an explicit
+/// [`KernelDispatch`] for the score microkernel (see
+/// [`fused_softmax_attention_dispatch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_quadratic_attention_dispatch(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    tile: usize,
+    unroll: usize,
+    threads: usize,
+    kern: KernelDispatch,
+) -> Mat {
     assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
     assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
     let (nq, d) = q.shape();
@@ -426,11 +466,11 @@ pub fn fused_quadratic_attention_spec(
     let t = crate::tensor::resolve_threads(threads).min(nq);
     let (qd, kd, vd) = (q.data(), k.data(), v.data());
     if t <= 1 {
-        fused_quadratic_rows(qd, kd, vd, out.data_mut(), 0, nq, d, nk, dv, tile, ur, spec);
+        fused_quadratic_rows(qd, kd, vd, out.data_mut(), 0, nq, d, nk, dv, tile, ur, spec, kern);
         return out;
     }
     par_query_spans(out.data_mut(), nq, nk, dv, t, spec, |row0, len, chunk| {
-        fused_quadratic_rows(qd, kd, vd, chunk, row0, len, d, nk, dv, tile, ur, spec);
+        fused_quadratic_rows(qd, kd, vd, chunk, row0, len, d, nk, dv, tile, ur, spec, kern);
     });
     out
 }
@@ -450,6 +490,7 @@ fn fused_quadratic_rows(
     tile: usize,
     ur: usize,
     spec: &AttnSpec,
+    kern: KernelDispatch,
 ) {
     let mut scores = vec![0.0f32; ur * tile];
     let mut num = vec![0.0f32; ur * dv];
@@ -465,7 +506,7 @@ fn fused_quadratic_rows(
         while t0 < span {
             let tn = tile.min(span - t0);
             let ktile = &k[t0 * d..(t0 + tn) * d];
-            crate::tensor::micro::matmul_t_block(qrows, ktile, &mut scores[..ib * tn], ib, d, tn);
+            kern.matmul_t_block(qrows, ktile, &mut scores[..ib * tn], ib, d, tn);
             for r in 0..ib {
                 let live = spec.row_limit(row0 + i + r, nk).saturating_sub(t0).min(tn);
                 let srow = &scores[r * tn..r * tn + live];
@@ -516,6 +557,25 @@ pub fn fused_softmax_decode_step(
     scale: f32,
     tile: usize,
 ) -> Vec<f32> {
+    fused_softmax_decode_step_dispatch(q, keys, values, len, d, dv, scale, tile, KernelDispatch::Auto)
+}
+
+/// [`fused_softmax_decode_step`] with an explicit [`KernelDispatch`]
+/// for the score microkernel — the per-token serving hot path, where
+/// the backend's construction-time dispatch table pays off most (one
+/// `q · K_tileᵀ` microkernel call per tile per token).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_softmax_decode_step_dispatch(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    len: usize,
+    d: usize,
+    dv: usize,
+    scale: f32,
+    tile: usize,
+    kern: KernelDispatch,
+) -> Vec<f32> {
     assert_eq!(q.len(), d, "query row dim mismatch");
     assert!(keys.len() >= len * d && values.len() >= len * dv, "cache shorter than len");
     let mut out = vec![0.0f32; dv];
@@ -530,7 +590,7 @@ pub fn fused_softmax_decode_step(
     while t0 < len {
         let tn = tile.min(len - t0);
         let ktile = &keys[t0 * d..(t0 + tn) * d];
-        crate::tensor::micro::matmul_t_block(q, ktile, &mut scores[..tn], 1, d, tn);
+        kern.matmul_t_block(q, ktile, &mut scores[..tn], 1, d, tn);
         let mut tile_max = f32::NEG_INFINITY;
         for s in scores[..tn].iter_mut() {
             *s *= scale;
@@ -577,6 +637,22 @@ pub fn fused_quadratic_decode_step(
     dv: usize,
     tile: usize,
 ) -> Vec<f32> {
+    fused_quadratic_decode_step_dispatch(q, keys, values, len, d, dv, tile, KernelDispatch::Auto)
+}
+
+/// [`fused_quadratic_decode_step`] with an explicit [`KernelDispatch`]
+/// for the score microkernel.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_quadratic_decode_step_dispatch(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    len: usize,
+    d: usize,
+    dv: usize,
+    tile: usize,
+    kern: KernelDispatch,
+) -> Vec<f32> {
     assert_eq!(q.len(), d, "query row dim mismatch");
     assert!(keys.len() >= len * d && values.len() >= len * dv, "cache shorter than len");
     let mut num = vec![0.0f32; dv];
@@ -590,7 +666,7 @@ pub fn fused_quadratic_decode_step(
     while t0 < len {
         let tn = tile.min(len - t0);
         let ktile = &keys[t0 * d..(t0 + tn) * d];
-        crate::tensor::micro::matmul_t_block(q, ktile, &mut scores[..tn], 1, d, tn);
+        kern.matmul_t_block(q, ktile, &mut scores[..tn], 1, d, tn);
         for (j, &s) in scores[..tn].iter().enumerate() {
             let w = s * s;
             den += w;
@@ -623,6 +699,23 @@ pub fn blockdiag_decode_step(
     scale: f32,
     block: usize,
 ) -> Vec<f32> {
+    blockdiag_decode_step_dispatch(q, keys, values, len, d, dv, scale, block, KernelDispatch::Auto)
+}
+
+/// [`blockdiag_decode_step`] with an explicit [`KernelDispatch`] for
+/// the score microkernel.
+#[allow(clippy::too_many_arguments)]
+pub fn blockdiag_decode_step_dispatch(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    len: usize,
+    d: usize,
+    dv: usize,
+    scale: f32,
+    block: usize,
+    kern: KernelDispatch,
+) -> Vec<f32> {
     assert_eq!(q.len(), d, "query row dim mismatch");
     assert!(keys.len() >= len * d && values.len() >= len * dv, "cache shorter than len");
     let mut out = vec![0.0f32; dv];
@@ -633,7 +726,7 @@ pub fn blockdiag_decode_step(
     let span = len - b0;
     let mut scores = vec![0.0f32; span];
     let ktile = &keys[b0 * d..(b0 + span) * d];
-    crate::tensor::micro::matmul_t_block(q, ktile, &mut scores, 1, d, span);
+    kern.matmul_t_block(q, ktile, &mut scores, 1, d, span);
     masked_softmax_row(&mut scores, span, scale);
     for (j, &p) in scores.iter().enumerate() {
         let vrow = &values[(b0 + j) * dv..(b0 + j + 1) * dv];
@@ -711,8 +804,32 @@ pub fn linear_attention_spec(
     chunk: usize,
     threads: usize,
 ) -> Mat {
+    linear_attention_spec_dispatch(phi_q, phi_k, v, spec, chunk, threads, KernelDispatch::Auto)
+}
+
+/// [`linear_attention_spec`] with an explicit [`KernelDispatch`] for
+/// the causal prefix-state route (the streamed full/padded routes keep
+/// their own chunk-parallel folds).
+#[allow(clippy::too_many_arguments)]
+pub fn linear_attention_spec_dispatch(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    chunk: usize,
+    threads: usize,
+    kern: KernelDispatch,
+) -> Mat {
     if spec.causal {
-        return linear_attention_causal(phi_q, phi_k, v, spec.key_len, chunk, threads);
+        return linear_attention_causal_dispatch(
+            phi_q,
+            phi_k,
+            v,
+            spec.key_len,
+            chunk,
+            threads,
+            kern,
+        );
     }
     linear_attention_streamed_prefix(
         phi_q,
@@ -750,6 +867,24 @@ pub fn linear_attention_causal(
     key_len: Option<usize>,
     chunk: usize,
     threads: usize,
+) -> Mat {
+    linear_attention_causal_dispatch(phi_q, phi_k, v, key_len, chunk, threads, KernelDispatch::Auto)
+}
+
+/// [`linear_attention_causal`] with an explicit [`KernelDispatch`]: the
+/// per-row state folds (phases 1 and 3) run the monomorphized
+/// fixed-`dv` fold when the value dimension matches a specialized
+/// instance (bitwise-identical to the generic fold — see
+/// [`accumulate_state_dispatch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn linear_attention_causal_dispatch(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    key_len: Option<usize>,
+    chunk: usize,
+    threads: usize,
+    kern: KernelDispatch,
 ) -> Mat {
     assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
     assert_eq!(phi_k.rows(), v.rows(), "key/value row mismatch");
@@ -789,7 +924,7 @@ pub fn linear_attention_causal(
                     let lo = c * chunk;
                     let hi = ((c + 1) * chunk).min(n).min(kl);
                     for i in lo..hi.max(lo) {
-                        accumulate_state(kv_c, z_c, phi_k.row(i), v.row(i), dv);
+                        accumulate_state_dispatch(kern, kv_c, z_c, phi_k.row(i), v.row(i), dv);
                     }
                 }
             });
@@ -831,7 +966,14 @@ pub fn linear_attention_causal(
                     for (ri, orow) in out_c.chunks_mut(dv).enumerate() {
                         let i = lo + ri;
                         if i < kl {
-                            accumulate_state(&mut state_kv, &mut state_z, phi_k.row(i), v.row(i), dv);
+                            accumulate_state_dispatch(
+                                kern,
+                                &mut state_kv,
+                                &mut state_z,
+                                phi_k.row(i),
+                                v.row(i),
+                                dv,
+                            );
                         }
                         let qrow = phi_q.row(i);
                         let mut den = 0.0f32;
@@ -871,6 +1013,54 @@ pub(crate) fn accumulate_state(kv: &mut [f32], z: &mut [f32], krow: &[f32], vrow
                 *o += kf * vv;
             }
         }
+    }
+}
+
+/// [`accumulate_state`] monomorphized per value dimension: the inner
+/// `dv`-length fused multiply-add becomes a const-length loop the
+/// autovectorizer fully unrolls.  The body is a statement-for-statement
+/// copy of the generic fold (same iteration order, same `kf != 0.0`
+/// skip), so outputs are bitwise identical — pinned by
+/// `accumulate_state_dispatch_is_bitwise` below and the head-dim
+/// goldens in rust/tests/prop_kernels.rs.
+#[inline]
+fn accumulate_state_spec<const DV: usize>(kv: &mut [f32], z: &mut [f32], krow: &[f32], vrow: &[f32]) {
+    for (f, &kf) in krow.iter().enumerate() {
+        z[f] += kf;
+        if kf != 0.0 {
+            let dst = &mut kv[f * DV..(f + 1) * DV];
+            for (o, &vv) in dst.iter_mut().zip(vrow) {
+                *o += kf * vv;
+            }
+        }
+    }
+}
+
+/// Dispatch one state fold through the resolved microkernel instance:
+/// `Auto` picks the monomorphized fold when `dv` matches a specialized
+/// dimension, a pinned instance applies only when its `D == dv`, and
+/// everything else takes the generic fold.  Bitwise-identical across
+/// all dispatch values.
+#[inline]
+pub(crate) fn accumulate_state_dispatch(
+    kern: KernelDispatch,
+    kv: &mut [f32],
+    z: &mut [f32],
+    krow: &[f32],
+    vrow: &[f32],
+    dv: usize,
+) {
+    match (kern, dv) {
+        (KernelDispatch::Auto | KernelDispatch::D32, 32) => {
+            accumulate_state_spec::<32>(kv, z, krow, vrow)
+        }
+        (KernelDispatch::Auto | KernelDispatch::D64, 64) => {
+            accumulate_state_spec::<64>(kv, z, krow, vrow)
+        }
+        (KernelDispatch::Auto | KernelDispatch::D128, 128) => {
+            accumulate_state_spec::<128>(kv, z, krow, vrow)
+        }
+        _ => accumulate_state(kv, z, krow, vrow, dv),
     }
 }
 
@@ -1194,7 +1384,11 @@ fn softmax_tile(q: &Mat, k: &Mat, b0: usize, block: usize, scale: f32, spec: &At
     let mut s = Mat::zeros(block, block);
     let qrows = &q.data()[b0 * d..(b0 + block) * d];
     let krows = &k.data()[b0 * d..(b0 + block) * d];
-    crate::tensor::micro::matmul_t_block(qrows, krows, s.data_mut(), block, d, block);
+    // `Auto` resolves per call: batch tiles pick up the monomorphized
+    // head-dim instance whenever `d` matches one (bitwise-identical
+    // either way, so no dispatch handle needs to thread through the
+    // blockdiag entry points).
+    KernelDispatch::Auto.matmul_t_block(qrows, krows, s.data_mut(), block, d, block);
     if spec.is_full() && spec.scale.is_none() {
         // Bitwise-identical to the historical unmasked tile.
         s.map_inplace(|x| x * scale);
@@ -1788,6 +1982,87 @@ mod tests {
                 for s in &spans {
                     assert!(load(s) <= 1.25 * mean, "span {s:?} overloaded in n={n} t={t}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_state_dispatch_is_bitwise() {
+        // The monomorphized state fold must be bitwise-equal to the
+        // generic fold for every dispatch value, at specialized and
+        // unspecialized value dims alike (mismatched pins fall back).
+        let mut rng = Pcg64::seed(41);
+        for dv in [5usize, 32, 64, 128] {
+            let m = 24;
+            let krow = {
+                let mut r = vec![0.0f32; m];
+                rng.fill_gaussian(&mut r, 0.0, 1.0);
+                r[3] = 0.0; // exercise the kf == 0 skip
+                r
+            };
+            let mut vrow = vec![0.0f32; dv];
+            rng.fill_gaussian(&mut vrow, 0.0, 1.0);
+            let mut kv_ref = vec![0.1f32; m * dv];
+            let mut z_ref = vec![0.2f32; m];
+            accumulate_state(&mut kv_ref, &mut z_ref, &krow, &vrow, dv);
+            for kern in [
+                KernelDispatch::Auto,
+                KernelDispatch::Generic,
+                KernelDispatch::D32,
+                KernelDispatch::D64,
+                KernelDispatch::D128,
+            ] {
+                let mut kv = vec![0.1f32; m * dv];
+                let mut z = vec![0.2f32; m];
+                accumulate_state_dispatch(kern, &mut kv, &mut z, &krow, &vrow, dv);
+                assert_eq!(kv, kv_ref, "kv diverged: {kern:?} dv={dv}");
+                assert_eq!(z, z_ref, "z diverged: {kern:?} dv={dv}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_kernels_are_bitwise_across_dispatch_values() {
+        // Every dispatch value (including mismatched pins) must give
+        // bitwise-identical outputs on the fused forwards, the decode
+        // steps, and the causal prefix recurrence — at a specialized
+        // head dim (64) and an unspecialized one (24).
+        for d in [24usize, 64] {
+            let (q, k, v) = probe(48, d, 42);
+            let spec = AttnSpec::CAUSAL;
+            let base_sm = fused_softmax_attention_spec(&q, &k, &v, &spec, 16, 4, 2);
+            let base_qd = fused_quadratic_attention_spec(&q, &k, &v, &spec, 16, 4, 2);
+            let scale = 1.0 / (d as f32).sqrt();
+            let base_step =
+                fused_softmax_decode_step(q.row(0), k.data(), v.data(), 48, d, d, scale, 16);
+            let pq = lln_features(&q, 1.1);
+            let pk = lln_features(&k, 1.1);
+            let base_lin = linear_attention_causal(&pq, &pk, &v, None, 16, 2);
+            for kern in [
+                KernelDispatch::Auto,
+                KernelDispatch::Generic,
+                KernelDispatch::D32,
+                KernelDispatch::D64,
+                KernelDispatch::D128,
+            ] {
+                let sm = fused_softmax_attention_dispatch(&q, &k, &v, &spec, 16, 4, 2, kern);
+                assert_eq!(sm.data(), base_sm.data(), "softmax: {kern:?} d={d}");
+                let qd = fused_quadratic_attention_dispatch(&q, &k, &v, &spec, 16, 4, 2, kern);
+                assert_eq!(qd.data(), base_qd.data(), "quadratic: {kern:?} d={d}");
+                let st = fused_softmax_decode_step_dispatch(
+                    q.row(0),
+                    k.data(),
+                    v.data(),
+                    48,
+                    d,
+                    d,
+                    scale,
+                    16,
+                    kern,
+                );
+                assert_eq!(st, base_step, "decode step: {kern:?} d={d}");
+                let lin = linear_attention_causal_dispatch(&pq, &pk, &v, None, 16, 2, kern);
+                assert_eq!(lin.data(), base_lin.data(), "linear: {kern:?} d={d}");
             }
         }
     }

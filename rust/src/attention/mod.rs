@@ -198,8 +198,26 @@ impl Method {
 /// key-side terms for padded `key_len` (only `kl` key/value rows carry
 /// state); pass [`AttnSpec::FULL`] for the paper's dense numbers.
 pub fn memory_model_bytes(method: Method, n: usize, d: usize, spec: &AttnSpec) -> usize {
-    let f = 4; // f32
-    let io = 3 * n * d * f + n * d * f; // q, k, v, out
+    memory_model_bytes_at(method, n, d, spec, crate::lowp::Precision::F32)
+}
+
+/// Precision-aware variant of [`memory_model_bytes`]: the at-rest K/V
+/// operands are charged at `prec`'s stored row width (payload plus the
+/// per-row quant tables at int8-kv), while q, outputs, score tiles,
+/// feature maps, and running state stay f32 — mirroring the
+/// storage-only contract of the `[compute] precision` knob (operands
+/// are decoded to f32 before any arithmetic).  At
+/// [`Precision::F32`](crate::lowp::Precision::F32) this is exactly
+/// [`memory_model_bytes`].
+pub fn memory_model_bytes_at(
+    method: Method,
+    n: usize,
+    d: usize,
+    spec: &AttnSpec,
+    prec: crate::lowp::Precision,
+) -> usize {
+    let f = 4; // f32 activations
+    let io = 2 * n * d * f + 2 * n * prec.row_bytes(d); // q, out f32; k, v at rest
     let kl = spec.key_limit(n);
     match method {
         // Every live score pair is materialized for backward: n×n when
@@ -230,6 +248,35 @@ pub fn memory_model_bytes(method: Method, n: usize, d: usize, spec: &AttnSpec) -
             let k = 64.min(n);
             io + 2 * k * d * f + n * k * f
         }
+    }
+}
+
+/// Analytic decode-session state bytes after `t` generated tokens at
+/// storage precision `prec` — the docs/CONFIG.md decode-sessions
+/// table, computed instead of hand-maintained.  Cache-class sessions
+/// hold every appended K/V row at the stored row width; BlockDiag
+/// holds at most one `block`-row window; the linear class holds the
+/// O(d·dv) prefix state, which is always f32 because it is arithmetic
+/// state (running sums), not at-rest storage.  `None` for methods with
+/// no streaming decode path (Nystrom / Linformer).
+pub fn decode_state_model_bytes(
+    method: Method,
+    t: usize,
+    d: usize,
+    dv: usize,
+    block: usize,
+    prec: crate::lowp::Precision,
+) -> Option<usize> {
+    let f = 4; // f32 prefix state
+    let kv_rows = |rows: usize| rows * (prec.row_bytes(d) + prec.row_bytes(dv));
+    // Matches PrefixState::state_bytes: state + chunk part + carry.
+    let prefix = 3 * (d * dv + d) * f;
+    match method {
+        Method::Softmax | Method::Quadratic => Some(kv_rows(t)),
+        Method::BlockDiag => Some(kv_rows(t.min(block.max(1)))),
+        Method::LlnDiag => Some(prefix + kv_rows(t.min(block.max(1)))),
+        Method::Lln | Method::Elu | Method::Relu | Method::Performer => Some(prefix),
+        Method::Nystrom | Method::Linformer => None,
     }
 }
 
@@ -393,6 +440,59 @@ mod tests {
             memory_model_bytes(Method::BlockDiag, n, d, &AttnSpec::CAUSAL),
             io + causal_tiles
         );
+    }
+
+    #[test]
+    fn memory_model_precision_narrows_only_kv_terms() {
+        use crate::lowp::Precision;
+        let (n, d) = (1024usize, 64usize);
+        for m in Method::ALL {
+            let f32b = memory_model_bytes_at(m, n, d, &AttnSpec::FULL, Precision::F32);
+            // The F32 variant IS the default model.
+            assert_eq!(f32b, memory_model_bytes(m, n, d, &AttnSpec::FULL), "{m:?}");
+            // bf16 halves exactly the 2·n·d·4 at-rest K/V term.
+            let bf16 = memory_model_bytes_at(m, n, d, &AttnSpec::FULL, Precision::Bf16);
+            assert_eq!(f32b - bf16, 2 * n * d * 2, "{m:?}");
+            // int8-kv: 1 byte/elem + 8 bytes/row of scale+zero tables.
+            let int8 = memory_model_bytes_at(m, n, d, &AttnSpec::FULL, Precision::Int8Kv);
+            assert_eq!(f32b - int8, 2 * n * d * 3 - 2 * n * 8, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn decode_state_model_pinned_points() {
+        use crate::lowp::Precision;
+        let (t, d, dv, b) = (512usize, 64usize, 64usize, 64usize);
+        // Cache class grows with t at the stored row width.
+        assert_eq!(
+            decode_state_model_bytes(Method::Softmax, t, d, dv, b, Precision::F32),
+            Some(t * (d + dv) * 4)
+        );
+        assert_eq!(
+            decode_state_model_bytes(Method::Softmax, t, d, dv, b, Precision::Bf16),
+            Some(t * (d + dv) * 2)
+        );
+        assert_eq!(
+            decode_state_model_bytes(Method::Softmax, t, d, dv, b, Precision::Int8Kv),
+            Some(t * ((d + dv) + 2 * 8))
+        );
+        // int8-kv shrinks a cache-class session by more than 2x vs f32.
+        let f32b = decode_state_model_bytes(Method::Quadratic, t, d, dv, b, Precision::F32);
+        let i8b = decode_state_model_bytes(Method::Quadratic, t, d, dv, b, Precision::Int8Kv);
+        assert!(f32b.unwrap() >= 2 * i8b.unwrap());
+        // BlockDiag is windowed; the linear class is O(d·dv), t-free
+        // and precision-free (prefix state is arithmetic, stays f32).
+        assert_eq!(
+            decode_state_model_bytes(Method::BlockDiag, t, d, dv, b, Precision::F32),
+            Some(b * (d + dv) * 4)
+        );
+        for p in [Precision::F32, Precision::Int8Kv] {
+            assert_eq!(
+                decode_state_model_bytes(Method::Lln, t, d, dv, b, p),
+                Some(3 * (d * dv + d) * 4)
+            );
+        }
+        assert_eq!(decode_state_model_bytes(Method::Nystrom, t, d, dv, b, Precision::F32), None);
     }
 
     #[test]

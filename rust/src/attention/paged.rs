@@ -13,13 +13,25 @@
 //! `KvCache` because pages are copied back into one contiguous scratch
 //! buffer before the (unchanged) decode kernels run.
 //!
+//! Pages store rows *encoded* at the pool's [`Precision`] — the same
+//! per-row codec as the flat `KvCache`, so `[compute] precision`
+//! shrinks paged sessions by the same factor, and (because per-row
+//! quantization is a pure function of the row) a page lost to eviction
+//! and refilled by deterministic recompute holds byte-identical
+//! content to one that was never evicted.
+//!
 //! Memory: resident + recycled pages never exceed the budget, so
-//! `bytes <= budget_pages * page_tokens * (d + dv) * 4`.
+//! `bytes <= budget_pages * page_bytes`, where `page_bytes =
+//! page_tokens * (d + dv) * kv_bytes + 2 * page_tokens *
+//! quant_overhead` follows the precision (4/0 at f32, 2/0 at bf16 and
+//! f16, 1/8 at int8-kv).
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
 use crate::faults::FaultPlan;
+use crate::lowp::{decode_row, encode_row, Precision};
 
 /// Pool-wide counters (eviction/recompute telemetry for ServeStats).
 #[derive(Clone, Copy, Debug, Default)]
@@ -31,10 +43,11 @@ pub struct PageCounters {
 }
 
 struct PoolInner {
-    /// Resident pages, keyed by (session id, page index).
-    resident: HashMap<(u64, usize), Box<[f32]>>,
+    /// Resident pages, keyed by (session id, page index).  Pages hold
+    /// *encoded* rows — see [`PagePool::slot_offsets`] for the layout.
+    resident: HashMap<(u64, usize), Box<[u8]>>,
     /// Recycled page buffers awaiting reuse (resident + free <= budget).
-    free: Vec<Box<[f32]>>,
+    free: Vec<Box<[u8]>>,
     /// Last-step logical clock per session (LRU victim selection).
     touch: HashMap<u64, u64>,
     /// Sessions currently mid-step; never eviction victims.
@@ -55,6 +68,7 @@ pub struct PagePool {
     page_tokens: usize,
     d: usize,
     dv: usize,
+    prec: Precision,
 }
 
 impl Clone for PagePool {
@@ -65,8 +79,33 @@ impl Clone for PagePool {
             page_tokens: self.page_tokens,
             d: self.d,
             dv: self.dv,
+            prec: self.prec,
         }
     }
+}
+
+/// Absolute byte ranges of one token slot within a page: K payload, V
+/// payload, and the per-row quant-table entries (empty except at
+/// int8-kv).
+struct SlotOffsets {
+    k: Range<usize>,
+    v: Range<usize>,
+    kq: Range<usize>,
+    vq: Range<usize>,
+}
+
+/// Encode one row into its page slot.  The payload and quant regions
+/// never overlap (every quant table lives after the last payload
+/// slot), so one split yields both mutable views.
+fn encode_slot(
+    prec: Precision,
+    page: &mut [u8],
+    payload: &Range<usize>,
+    quant: &Range<usize>,
+    row: &[f32],
+) {
+    let (pay, qt) = page.split_at_mut(quant.start);
+    encode_row(prec, row, &mut pay[payload.clone()], &mut qt[..quant.end - quant.start]);
 }
 
 impl PagePool {
@@ -77,7 +116,20 @@ impl PagePool {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
+    /// Full-width (f32) pool — the historical constructor.
     pub fn new(budget_pages: usize, page_tokens: usize, d: usize, dv: usize) -> Self {
+        Self::with_precision(budget_pages, page_tokens, d, dv, Precision::F32)
+    }
+
+    /// Pool whose pages store rows encoded at `prec` (`[compute]
+    /// precision` reaches here through the serving coordinator).
+    pub fn with_precision(
+        budget_pages: usize,
+        page_tokens: usize,
+        d: usize,
+        dv: usize,
+        prec: Precision,
+    ) -> Self {
         assert!(budget_pages > 0, "page pool needs a nonzero budget");
         assert!(page_tokens > 0 && d > 0 && dv > 0);
         Self {
@@ -94,6 +146,7 @@ impl PagePool {
             page_tokens,
             d,
             dv,
+            prec,
         }
     }
 
@@ -118,12 +171,29 @@ impl PagePool {
     pub fn dv(&self) -> usize {
         self.dv
     }
-    /// Floats per page: `page_tokens` K rows then `page_tokens` V rows.
-    fn page_floats(&self) -> usize {
-        self.page_tokens * (self.d + self.dv)
+    /// Storage precision of every page in this pool.
+    pub fn precision(&self) -> Precision {
+        self.prec
     }
+    /// Bytes per page: `page_tokens` encoded K rows, then `page_tokens`
+    /// encoded V rows, then the K and V quant tables (int8-kv only).
     pub fn page_bytes(&self) -> usize {
-        self.page_floats() * std::mem::size_of::<f32>()
+        let pt = self.page_tokens;
+        pt * (self.d + self.dv) * self.prec.kv_bytes() + 2 * pt * self.prec.row_overhead_bytes()
+    }
+
+    /// Byte layout of one token slot within a page.
+    fn slot_offsets(&self, slot: usize) -> SlotOffsets {
+        let (kb, ov, pt) = (self.prec.kv_bytes(), self.prec.row_overhead_bytes(), self.page_tokens);
+        let vbase = pt * self.d * kb;
+        let kqbase = pt * (self.d + self.dv) * kb;
+        let vqbase = kqbase + pt * ov;
+        SlotOffsets {
+            k: slot * self.d * kb..(slot + 1) * self.d * kb,
+            v: vbase + slot * self.dv * kb..vbase + (slot + 1) * self.dv * kb,
+            kq: kqbase + slot * ov..kqbase + (slot + 1) * ov,
+            vq: vqbase + slot * ov..vqbase + (slot + 1) * ov,
+        }
     }
     /// Hard ceiling on pool memory (resident + recycled buffers).
     pub fn budget_bytes(&self) -> usize {
@@ -162,7 +232,7 @@ impl PagePool {
     /// Ensure a writable page exists for (sid, idx), evicting the
     /// oldest-idle unpinned session's lowest page if the budget is full.
     /// Returns true if the page was already resident.
-    fn acquire(inner: &mut PoolInner, budget: usize, floats: usize, sid: u64, idx: usize) -> Result<bool, String> {
+    fn acquire(inner: &mut PoolInner, budget: usize, bytes: usize, sid: u64, idx: usize) -> Result<bool, String> {
         if inner.resident.contains_key(&(sid, idx)) {
             return Ok(true);
         }
@@ -172,7 +242,7 @@ impl PagePool {
         let buf = if let Some(buf) = inner.free.pop() {
             buf
         } else if inner.resident.len() < budget {
-            vec![0.0f32; floats].into_boxed_slice()
+            vec![0u8; bytes].into_boxed_slice()
         } else {
             // Budget full: evict one page from the oldest-idle unpinned
             // session (never the allocating session, never a pinned one).
@@ -290,6 +360,10 @@ impl PagedKvCache {
     pub fn dv(&self) -> usize {
         self.dv
     }
+    /// Storage precision of the backing pool's pages.
+    pub fn precision(&self) -> Precision {
+        self.pool.prec
+    }
     /// Bytes resident in the pool for this session right now.
     pub fn state_bytes(&self) -> usize {
         let inner = self.pool.lock();
@@ -313,27 +387,31 @@ impl PagedKvCache {
             return Ok(0);
         }
         let pt = self.pool.page_tokens;
-        let floats = self.pool.page_floats();
+        let bytes = self.pool.page_bytes();
         let budget = self.pool.budget_pages;
+        let prec = self.pool.prec;
         let (first, last) = (self.base / pt, (self.len - 1) / pt);
         let mut inner = self.pool.lock();
         let mut recomputed = 0usize;
+        // Recomputed rows land in f32 scratch and are re-encoded with
+        // the same pure per-row codec `push` used, so a refilled page
+        // is byte-identical to one that was never evicted.
+        let mut krow = vec![0.0f32; self.d];
+        let mut vrow = vec![0.0f32; self.dv];
         for idx in first..=last {
-            if PagePool::acquire(&mut inner, budget, floats, self.sid, idx)? {
+            if PagePool::acquire(&mut inner, budget, bytes, self.sid, idx)? {
                 continue; // already resident
             }
             // Freshly (re)acquired: refill the live rows of this page.
             let lo = (idx * pt).max(self.base);
             let hi = ((idx + 1) * pt).min(self.len);
-            let page = inner.resident.get_mut(&(self.sid, idx)).unwrap();
             for pos in lo..hi {
                 let slot = pos % pt;
-                let (kpart, vpart) = page.split_at_mut(pt * self.d);
-                refill(
-                    pos,
-                    &mut kpart[slot * self.d..(slot + 1) * self.d],
-                    &mut vpart[slot * self.dv..(slot + 1) * self.dv],
-                )?;
+                refill(pos, &mut krow, &mut vrow)?;
+                let off = self.pool.slot_offsets(slot);
+                let page = inner.resident.get_mut(&(self.sid, idx)).unwrap();
+                encode_slot(prec, page, &off.k, &off.kq, &krow);
+                encode_slot(prec, page, &off.v, &off.vq, &vrow);
             }
             recomputed += 1;
         }
@@ -349,16 +427,17 @@ impl PagedKvCache {
         assert_eq!(v.len(), self.dv, "value row dim mismatch");
         let pt = self.pool.page_tokens;
         let (idx, slot) = (self.len / pt, self.len % pt);
-        let floats = self.pool.page_floats();
+        let bytes = self.pool.page_bytes();
         let budget = self.pool.budget_pages;
+        let prec = self.pool.prec;
+        let off = self.pool.slot_offsets(slot);
         let mut inner = self.pool.lock();
-        if let Err(e) = PagePool::acquire(&mut inner, budget, floats, self.sid, idx) {
+        if let Err(e) = PagePool::acquire(&mut inner, budget, bytes, self.sid, idx) {
             panic!("{e}");
         }
         let page = inner.resident.get_mut(&(self.sid, idx)).unwrap();
-        let (kpart, vpart) = page.split_at_mut(pt * self.d);
-        kpart[slot * self.d..(slot + 1) * self.d].copy_from_slice(k);
-        vpart[slot * self.dv..(slot + 1) * self.dv].copy_from_slice(v);
+        encode_slot(prec, page, &off.k, &off.kq, k);
+        encode_slot(prec, page, &off.v, &off.vq, v);
         drop(inner);
         self.len += 1;
     }
@@ -391,6 +470,7 @@ impl PagedKvCache {
         self.k_scratch.resize(rows * self.d, 0.0);
         self.v_scratch.resize(rows * self.dv, 0.0);
         let pt = self.pool.page_tokens;
+        let prec = self.pool.prec;
         let inner = self.pool.lock();
         for (r, pos) in (self.base..self.len).enumerate() {
             let (idx, slot) = (pos / pt, pos % pt);
@@ -398,11 +478,19 @@ impl PagedKvCache {
                 .resident
                 .get(&(self.sid, idx))
                 .unwrap_or_else(|| panic!("KV page ({}, {idx}) evicted mid-step (pin before gather)", self.sid));
-            let (kpart, vpart) = page.split_at(pt * self.d);
-            self.k_scratch[r * self.d..(r + 1) * self.d]
-                .copy_from_slice(&kpart[slot * self.d..(slot + 1) * self.d]);
-            self.v_scratch[r * self.dv..(r + 1) * self.dv]
-                .copy_from_slice(&vpart[slot * self.dv..(slot + 1) * self.dv]);
+            let off = self.pool.slot_offsets(slot);
+            decode_row(
+                prec,
+                &page[off.k],
+                &page[off.kq],
+                &mut self.k_scratch[r * self.d..(r + 1) * self.d],
+            );
+            decode_row(
+                prec,
+                &page[off.v],
+                &page[off.vq],
+                &mut self.v_scratch[r * self.dv..(r + 1) * self.dv],
+            );
         }
         drop(inner);
         (&self.k_scratch, &self.v_scratch)
@@ -483,6 +571,86 @@ mod tests {
             self.len = 0;
             self.base = 0;
         }
+    }
+
+    #[test]
+    fn low_precision_pools_shrink_page_bytes_and_bound_gather_error() {
+        let f32p = PagePool::new(2, 8, 64, 64);
+        assert_eq!(f32p.page_bytes(), 8 * 128 * 4);
+        let bf = PagePool::with_precision(2, 8, 64, 64, Precision::Bf16);
+        assert_eq!(bf.page_bytes() * 2, f32p.page_bytes());
+        let q8 = PagePool::with_precision(2, 8, 64, 64, Precision::Int8Kv);
+        // int8: 1-byte payload plus one (scale, zero) pair per K and V row.
+        assert_eq!(q8.page_bytes(), 8 * 128 + 2 * 8 * 8);
+        assert!(q8.page_bytes() * 2 <= f32p.page_bytes(), "int8-kv must halve page bytes");
+
+        // A bf16 session round-trips its gather to bf16 tolerance.
+        let pool = PagePool::with_precision(4, 3, 4, 4, Precision::Bf16);
+        let mut c = PagedKvCache::new(&pool, 1, 4, 4);
+        let mut flat_k = Vec::new();
+        for t in 0..7 {
+            let k = row(t as f32 * 0.3 - 0.9, 4);
+            let v = row(2.0 - t as f32 * 0.5, 4);
+            flat_k.extend_from_slice(&k);
+            c.push(&k, &v);
+        }
+        let (ks, _) = c.gather();
+        for (&x, &y) in flat_k.iter().zip(ks) {
+            assert!((x - y).abs() <= x.abs().max(1.0) / 128.0, "bf16 gather drifted: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn int8_recompute_after_eviction_is_byte_identical() {
+        // The quantized-eviction contract: per-row quantization is a
+        // pure function of the row, so a page lost to LRU eviction and
+        // refilled by deterministic recompute must hand back exactly
+        // the values a never-evicted page stores.
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..4)
+            .map(|t| {
+                let k: Vec<f32> = (0..4).map(|i| (t * 4 + i) as f32 * 0.37 - 1.1).collect();
+                let v: Vec<f32> = (0..4).map(|i| (t * 4 + i) as f32 * -0.21 + 0.4).collect();
+                (k, v)
+            })
+            .collect();
+        // Reference: a roomy pool that never evicts.
+        let calm = PagePool::with_precision(4, 2, 4, 4, Precision::Int8Kv);
+        let mut undisturbed = PagedKvCache::new(&calm, 1, 4, 4);
+        for (k, v) in &rows {
+            undisturbed.push(k, v);
+        }
+        let (ks_ref, vs_ref) = {
+            let (a, b) = undisturbed.gather();
+            (a.to_vec(), b.to_vec())
+        };
+        assert_eq!(calm.counters().evicted, 0);
+
+        // Churned pool: session 2's allocation steals session 1's page.
+        let tight = PagePool::with_precision(2, 2, 4, 4, Precision::Int8Kv);
+        let mut a = PagedKvCache::new(&tight, 1, 4, 4);
+        a.touch();
+        for (k, v) in &rows {
+            a.push(k, v); // two pages: fills the budget
+        }
+        {
+            let mut b = PagedKvCache::new(&tight, 2, 4, 4);
+            b.touch();
+            b.push(&rows[0].0, &rows[0].1); // evicts one of a's pages
+            assert!(tight.counters().evicted >= 1);
+        }
+        let _pin = tight.pin(1);
+        a.touch();
+        let n = a
+            .ensure_resident(|pos, k, v| {
+                k.copy_from_slice(&rows[pos].0);
+                v.copy_from_slice(&rows[pos].1);
+                Ok(())
+            })
+            .unwrap();
+        assert!(n >= 1, "the evicted page must be recomputed");
+        let (ks, vs) = a.gather();
+        assert_eq!(ks, &ks_ref[..], "recomputed K page drifted from the never-evicted bytes");
+        assert_eq!(vs, &vs_ref[..], "recomputed V page drifted from the never-evicted bytes");
     }
 
     #[test]

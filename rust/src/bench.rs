@@ -169,6 +169,17 @@ pub struct KernelRecord {
     pub iters: usize,
 }
 
+/// One decode-state footprint entry of the report: a real
+/// [`KvCache`](crate::attention::KvCache) fed `tokens` rows at a
+/// storage precision, reporting its own `state_bytes()` — the
+/// `[compute] precision` savings measured, not modeled.
+#[derive(Clone, Debug)]
+pub struct MemoryRecord {
+    pub name: &'static str,
+    pub tokens: usize,
+    pub bytes: usize,
+}
+
 /// The `lln bench --json` / `kernel_micro -- --json` report: per-method
 /// ns/op at each probed sequence length plus derived speedups — the
 /// cross-PR perf record CI uploads as the `BENCH_kernels.json`
@@ -177,6 +188,8 @@ pub struct KernelReport {
     pub d: usize,
     pub threads: usize,
     pub records: Vec<KernelRecord>,
+    /// Decode-state bytes per storage precision (`kv_state_bytes_*`).
+    pub memory: Vec<MemoryRecord>,
 }
 
 /// (fast, slow) kernel pairs whose ratio the report derives whenever
@@ -201,6 +214,13 @@ const SPEEDUP_PAIRS: &[(&str, &str)] = &[
     // backward classically lands at ~2-2.5x its forward.
     ("softmax_fused", "softmax_fused_bwd"),
     ("lln_streamed", "lln_bwd"),
+    // Monomorphized-vs-generic microkernel pairs: the same inner loops
+    // with the head dim a compile-time const (D ∈ {32, 64, 128}) vs a
+    // runtime value.  These are the rows the CI baseline gate watches
+    // (`lln bench --baseline BENCH_kernels.json`).
+    ("matmul_t_spec", "matmul_t_gen"),
+    ("softmax_decode_spec", "softmax_decode_gen"),
+    ("lln_prefix_spec", "lln_prefix_gen"),
 ];
 
 /// The PR-1 scalar-dot baseline is only timed up to this n — it is the
@@ -260,6 +280,17 @@ impl KernelReport {
             ));
         }
         s.push_str("  ],\n");
+        if !self.memory.is_empty() {
+            s.push_str("  \"memory\": [\n");
+            for (i, m) in self.memory.iter().enumerate() {
+                let sep = if i + 1 == self.memory.len() { "" } else { "," };
+                s.push_str(&format!(
+                    "    {{\"name\": \"{}\", \"tokens\": {}, \"bytes\": {}}}{}\n",
+                    m.name, m.tokens, m.bytes, sep
+                ));
+            }
+            s.push_str("  ],\n");
+        }
         // Sparse reports (a capped method row, an interrupted run)
         // simply have fewer — possibly zero — derivable pairs; absent
         // pairs are skipped, never unwrapped.
@@ -286,6 +317,54 @@ impl KernelReport {
         }
         std::fs::write(path, self.to_json())
     }
+}
+
+/// Compare a fresh report against a committed `BENCH_kernels.json` and
+/// list every *specialized* kernel row (`*_spec`) that regressed by
+/// more than `threshold` (fractional: 0.25 = 25% slower) — the CI perf
+/// gate for the monomorphized microkernels.  Only `_spec` rows gate:
+/// the generic rows exist as denominators, and the macro rows are too
+/// machine-noisy to block merges on.  Baseline rows with zero ns/op
+/// (the honest "not yet measured" bootstrap committed before a runner
+/// first populates the file) and (name, n) points absent from either
+/// side are skipped, never failed.  `Err` only on unparsable baseline
+/// JSON.
+pub fn spec_regressions(
+    report: &KernelReport,
+    baseline_json: &str,
+    threshold: f64,
+) -> Result<Vec<String>, String> {
+    let base = crate::util::json::Json::parse(baseline_json)
+        .map_err(|e| format!("unparsable baseline JSON: {e}"))?;
+    let rows = base
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| "baseline JSON has no \"results\" array".to_string())?;
+    let mut out = Vec::new();
+    for row in rows {
+        let name = match row.get("name").and_then(|v| v.as_str()) {
+            Some(n) if n.ends_with("_spec") => n,
+            _ => continue,
+        };
+        let (n, base_ns) = match (
+            row.get("n").and_then(|v| v.as_usize()),
+            row.get("ns_per_op").and_then(|v| v.as_f64()),
+        ) {
+            (Some(n), Some(ns)) if ns > 0.0 => (n, ns),
+            _ => continue, // un-baselined bootstrap row
+        };
+        if let Some(new_ns) = report.mean_ns(name, n) {
+            if new_ns > base_ns * (1.0 + threshold) {
+                out.push(format!(
+                    "{name} n={n}: {new_ns:.0} ns/op vs baseline {base_ns:.0} ns/op \
+                     (+{:.0}%, gate {:.0}%)",
+                    (new_ns / base_ns - 1.0) * 100.0,
+                    threshold * 100.0
+                ));
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Run the kernel perf trajectory suite: at each n, the PR-1 scalar-dot
@@ -323,6 +402,12 @@ pub fn run_kernel_bench(
         let k = Mat::gaussian(n, d, 1.0, &mut rng);
         let v = Mat::gaussian(n, d, 1.0, &mut rng);
         let scale = 1.0 / (d as f32).sqrt();
+        // Monomorphized-vs-generic microkernel pinning for the `_spec`
+        // / `_gen` row pairs.  At a d with no specialized instance,
+        // for_dim resolves to Generic and each pair reads ~1.0x — the
+        // rows stay comparable across configurations.
+        let kern_spec = crate::tensor::KernelDispatch::for_dim(d);
+        let kern_gen = crate::tensor::KernelDispatch::Generic;
 
         if n <= PR1_BASELINE_MAX_N {
             // The PR-1 pipeline this PR replaces: scalar-dot scores +
@@ -346,6 +431,19 @@ pub fn run_kernel_bench(
                 .run(&format!("matmul_t_blocked n={n}"), 1.0, || q.par_matmul_t(&k, params.threads))
                 .clone();
             push(&mut records, "matmul_t_blocked", n, &r);
+
+            // The same register-blocked q·kᵀ with the head dim a
+            // compile-time const vs a runtime value.
+            for (name, kern) in [("matmul_t_spec", kern_spec), ("matmul_t_gen", kern_gen)] {
+                let mut out = vec![0.0f32; n * n];
+                let r = b
+                    .run(&format!("{name} n={n}"), 1.0, || {
+                        kern.matmul_t_block(q.data(), k.data(), &mut out, n, d, n);
+                        out[0]
+                    })
+                    .clone();
+                push(&mut records, name, n, &r);
+            }
 
             // The masked *dense* causal route (materialize all n×n
             // scores in parallel, mask + softmax, value matmul — the
@@ -444,6 +542,52 @@ pub fn run_kernel_bench(
             .clone();
         push_per_token(&mut records, "lln_decode_step", n, &r);
 
+        // Monomorphized-vs-generic pinned pairs on the two serving hot
+        // paths: one softmax decode step over an n-token KV cache (the
+        // per-token microkernel the dispatch table exists for), and the
+        // causal O(N) prefix-state recurrence whose per-row state folds
+        // monomorphize on dv.
+        for (name, kern) in
+            [("softmax_decode_spec", kern_spec), ("softmax_decode_gen", kern_gen)]
+        {
+            let r = b
+                .run(&format!("{name} n={n}"), 1.0, || {
+                    crate::attention::fused_softmax_decode_step_dispatch(
+                        q.row(0),
+                        k.data(),
+                        v.data(),
+                        n,
+                        d,
+                        d,
+                        scale,
+                        params.tile,
+                        kern,
+                    )
+                })
+                .clone();
+            push(&mut records, name, n, &r);
+        }
+        {
+            let pq = crate::attention::lln_features(&q, 2.2);
+            let pk = crate::attention::lln_features(&k, 2.2);
+            for (name, kern) in [("lln_prefix_spec", kern_spec), ("lln_prefix_gen", kern_gen)] {
+                let r = b
+                    .run(&format!("{name} n={n}"), 1.0, || {
+                        crate::attention::linear_attention_causal_dispatch(
+                            &pq,
+                            &pk,
+                            &v,
+                            None,
+                            params.chunk,
+                            params.threads,
+                            kern,
+                        )
+                    })
+                    .clone();
+                push(&mut records, name, n, &r);
+            }
+        }
+
         let diag = backend_for(Method::LlnDiag, BackendParams { alpha: 2.2, beta: 2.2, ..params });
         let r = b
             .run(&format!("lln_diag n={n}"), 1.0, || diag.forward(&q, &k, &v, &FULL))
@@ -487,7 +631,31 @@ pub fn run_kernel_bench(
         }
     }
 
-    KernelReport { d, threads, records }
+    // Decode-state footprint per storage precision: a real KvCache fed
+    // the largest probed sequence, reporting its own state_bytes() —
+    // the `kv_state_bytes_*` rows the docs/CONFIG.md scorecard quotes.
+    let t = sizes.iter().copied().max().unwrap_or(0).min(PR1_BASELINE_MAX_N);
+    let mut memory = Vec::new();
+    if t > 0 {
+        use crate::lowp::Precision;
+        let mut rng = crate::rng::Pcg64::seed(0xB17E5);
+        let kr = Mat::gaussian(t, d, 1.0, &mut rng);
+        let vr = Mat::gaussian(t, d, 1.0, &mut rng);
+        for (name, prec) in [
+            ("kv_state_bytes_f32", Precision::F32),
+            ("kv_state_bytes_bf16", Precision::Bf16),
+            ("kv_state_bytes_f16", Precision::F16),
+            ("kv_state_bytes_int8", Precision::Int8Kv),
+        ] {
+            let mut cache = crate::attention::KvCache::with_precision(d, d, prec);
+            for i in 0..t {
+                cache.push(kr.row(i), vr.row(i));
+            }
+            memory.push(MemoryRecord { name, tokens: t, bytes: cache.state_bytes() });
+        }
+    }
+
+    KernelReport { d, threads, records, memory }
 }
 
 /// Minimal `--flag value` / `--flag=value` scan for the harness-less
@@ -551,6 +719,7 @@ mod tests {
                 rec("softmax_fused", 4096, 2000.0),
                 rec("softmax_fused", 8192, 9000.0),
             ],
+            memory: vec![MemoryRecord { name: "kv_state_bytes_f32", tokens: 512, bytes: 262144 }],
         };
         let sp = report.speedup("softmax_fused", "softmax_pipeline_pr1", 4096).unwrap();
         assert!((sp - 4.0).abs() < 1e-9);
@@ -561,6 +730,8 @@ mod tests {
         assert!(json.contains("\"bench\": \"kernels\""));
         assert!(json.contains("\"softmax_fused_vs_softmax_pipeline_pr1_n4096\": 4.00"));
         assert!(json.contains("\"name\": \"softmax_fused\", \"n\": 8192"));
+        assert!(json.contains("\"name\": \"kv_state_bytes_f32\", \"tokens\": 512, \"bytes\": 262144"));
+        assert!(crate::util::json::Json::parse(&json).is_ok(), "unparsable JSON:\n{json}");
         // Balanced braces/brackets as a cheap well-formedness check.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
@@ -586,9 +757,24 @@ mod tests {
             "matmul_t_blocked",
             "softmax_fused_bwd",
             "lln_bwd",
+            "matmul_t_spec",
+            "matmul_t_gen",
+            "softmax_decode_spec",
+            "softmax_decode_gen",
+            "lln_prefix_spec",
+            "lln_prefix_gen",
         ] {
             assert!(report.mean_ns(name, 64).is_some(), "{name} missing");
         }
+        // The decode-state footprint rows come from a real KvCache: at
+        // t=64, d=8 the precisions land at exactly (d + dv) * t * width
+        // (+ the int8 per-row tables).
+        let mem = |name: &str| report.memory.iter().find(|m| m.name == name).unwrap().bytes;
+        assert_eq!(mem("kv_state_bytes_f32"), 64 * 16 * 4);
+        assert_eq!(mem("kv_state_bytes_bf16"), 64 * 16 * 2);
+        assert_eq!(mem("kv_state_bytes_f16"), 64 * 16 * 2);
+        assert_eq!(mem("kv_state_bytes_int8"), 64 * 16 + 2 * 64 * 8);
+        assert!(2 * mem("kv_state_bytes_int8") <= mem("kv_state_bytes_f32"));
         assert!(report
             .speedup("softmax_fused", "softmax_pipeline_pr1", 64)
             .is_some());
@@ -602,6 +788,51 @@ mod tests {
         // And the new backward-vs-forward cost pairs.
         assert!(report.speedup("softmax_fused", "softmax_fused_bwd", 64).is_some());
         assert!(report.speedup("lln_streamed", "lln_bwd", 64).is_some());
+        // The monomorphized-vs-generic gate pairs.
+        assert!(report.speedup("matmul_t_spec", "matmul_t_gen", 64).is_some());
+        assert!(report.speedup("softmax_decode_spec", "softmax_decode_gen", 64).is_some());
+        assert!(report.speedup("lln_prefix_spec", "lln_prefix_gen", 64).is_some());
+    }
+
+    #[test]
+    fn baseline_gate_flags_only_regressed_spec_rows() {
+        let rec = |name: &'static str, n: usize, mean_ns: f64| KernelRecord {
+            name,
+            n,
+            mean_ns,
+            p50_ns: mean_ns,
+            iters: 3,
+        };
+        let report = KernelReport {
+            d: 64,
+            threads: 4,
+            records: vec![
+                rec("matmul_t_spec", 1024, 1300.0),     // +30%: over the gate
+                rec("softmax_decode_spec", 1024, 1100.0), // +10%: within it
+                rec("lln_prefix_gen", 1024, 9000.0),    // generic rows never gate
+            ],
+            memory: vec![],
+        };
+        let baseline = r#"{
+          "results": [
+            {"name": "matmul_t_spec", "n": 1024, "ns_per_op": 1000, "p50_ns": 1000, "iters": 3},
+            {"name": "softmax_decode_spec", "n": 1024, "ns_per_op": 1000, "p50_ns": 1000, "iters": 3},
+            {"name": "lln_prefix_spec", "n": 1024, "ns_per_op": 0, "p50_ns": 0, "iters": 0},
+            {"name": "lln_prefix_gen", "n": 1024, "ns_per_op": 10, "p50_ns": 10, "iters": 3},
+            {"name": "matmul_t_spec", "n": 4096, "ns_per_op": 1000, "p50_ns": 1000, "iters": 3}
+          ]
+        }"#;
+        let regs = spec_regressions(&report, baseline, 0.25).unwrap();
+        // Only the genuinely regressed spec row fails: the within-gate
+        // row, the zero-ns bootstrap row, the generic row, and the
+        // (name, n) point absent from the new report are all skipped.
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("matmul_t_spec n=1024"), "{}", regs[0]);
+        // An empty or zero-only baseline (the committed bootstrap)
+        // gates nothing; garbage input errors instead of passing.
+        assert!(spec_regressions(&report, "{\"results\": []}", 0.25).unwrap().is_empty());
+        assert!(spec_regressions(&report, "not json", 0.25).is_err());
+        assert!(spec_regressions(&report, "{}", 0.25).is_err());
     }
 
     #[test]
@@ -644,7 +875,12 @@ mod tests {
             iters: 1,
         };
         // Only one method measured: no pair is derivable at all.
-        let lonely = KernelReport { d: 64, threads: 2, records: vec![rec("lln_streamed", 8192, 5e5)] };
+        let lonely = KernelReport {
+            d: 64,
+            threads: 2,
+            records: vec![rec("lln_streamed", 8192, 5e5)],
+            memory: vec![],
+        };
         assert!(lonely.speedups().is_empty());
         assert!(lonely.speedup("softmax_fused", "softmax_pipeline_pr1", 8192).is_none());
         let json = lonely.to_json();
@@ -660,6 +896,7 @@ mod tests {
                 rec("softmax_fused", 8192, 4e6),
                 rec("softmax_fused_bwd", 4096, 2.5e6),
             ],
+            memory: vec![],
         };
         let pairs = mixed.speedups();
         assert_eq!(pairs.len(), 1);

@@ -300,7 +300,10 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Page budget for the paged KV cache backing softmax / quadratic
     /// / blockdiag decode sessions: total pages the pool may hold
-    /// (`bytes = page_pool_pages * page_tokens * (d + dv) * 4`).
+    /// (`bytes <= page_pool_pages * (page_tokens * (d + dv) * kv_bytes
+    /// + 2 * page_tokens * quant_overhead)` where `kv_bytes` /
+    /// `quant_overhead` follow `[compute] precision` — 4/0 at f32,
+    /// 2/0 at bf16 or f16, 1/8 at int8-kv; see docs/CONFIG.md).
     /// `0` = unpaged sessions (each grows its own `KvCache`).
     pub page_pool_pages: usize,
     /// Tokens per KV page.
@@ -574,11 +577,33 @@ pub struct ComputeConfig {
     /// request says otherwise.  Requests can also opt in per-call via
     /// [`Coordinator::submit_with`](crate::coordinator::Coordinator::submit_with).
     pub causal: bool,
+    /// Declared attention head dim, used to pin the monomorphized
+    /// microkernel instance at backend construction (0 = resolve per
+    /// call from the operand width).  32 / 64 / 128 hit the specialized
+    /// fully-unrolled kernels; any other nonzero value pins the generic
+    /// fallback.  See docs/CONFIG.md §[compute].
+    pub head_dim: usize,
+    /// K/V storage precision for decode caches, paged pools, and
+    /// at-rest attention operands: `f32` (default; bitwise identical to
+    /// a build without the precision layer), `bf16`, `f16`, or
+    /// `int8-kv` (per-row affine quantization).  Arithmetic always
+    /// accumulates in f32.
+    pub precision: crate::lowp::Precision,
 }
 
 impl Default for ComputeConfig {
     fn default() -> Self {
-        Self { threads: 0, block: 64, chunk: 0, tile: 0, unroll: 0, fused: true, causal: false }
+        Self {
+            threads: 0,
+            block: 64,
+            chunk: 0,
+            tile: 0,
+            unroll: 0,
+            fused: true,
+            causal: false,
+            head_dim: 0,
+            precision: crate::lowp::Precision::F32,
+        }
     }
 }
 
@@ -593,6 +618,9 @@ impl ComputeConfig {
             unroll: t.usize_or("compute.unroll", d.unroll),
             fused: t.bool_or("compute.fused", d.fused),
             causal: t.bool_or("compute.causal", d.causal),
+            head_dim: t.usize_or("compute.head_dim", d.head_dim),
+            precision: crate::lowp::Precision::parse(&t.str_or("compute.precision", "f32"))
+                .unwrap_or_default(),
         }
     }
 
@@ -689,6 +717,26 @@ method = lln_diag
         let sc = ServeConfig::from_table(&t);
         assert_eq!(sc.compute.tile, 256);
         assert!(!sc.compute.fused);
+    }
+
+    #[test]
+    fn compute_config_head_dim_and_precision_parse() {
+        use crate::lowp::Precision;
+        // Defaults: auto head dim, full-width storage.
+        let d = ComputeConfig::default();
+        assert_eq!(d.head_dim, 0);
+        assert_eq!(d.precision, Precision::F32);
+        let t = ConfigTable::parse("[compute]\nhead_dim = 64\nprecision = \"int8-kv\"").unwrap();
+        let cc = ComputeConfig::from_table(&t);
+        assert_eq!(cc.head_dim, 64);
+        assert_eq!(cc.precision, Precision::Int8Kv);
+        // Aliases and the serve-config ride-along.
+        let t2 = ConfigTable::parse("[compute]\nprecision = \"bfloat16\"").unwrap();
+        assert_eq!(ServeConfig::from_table(&t2).compute.precision, Precision::Bf16);
+        // Unknown spellings fall back to the f32 escape hatch rather
+        // than killing the launcher.
+        let t3 = ConfigTable::parse("[compute]\nprecision = \"int4\"").unwrap();
+        assert_eq!(ComputeConfig::from_table(&t3).precision, Precision::F32);
     }
 
     #[test]

@@ -438,11 +438,16 @@ impl Coordinator {
         // for the same pages.  Native decode states are all
         // NATIVE_D_MODEL-dimensional.
         let pool = if cfg.page_pool_pages > 0 {
-            let p = PagePool::new(
+            // Pages store K/V at `[compute] precision`: the same pool
+            // budget holds 2x the tokens at bf16/f16 and ~3.5x at
+            // int8-kv (admission math reads the pool's own byte
+            // accounting, so it follows automatically).
+            let p = PagePool::with_precision(
                 cfg.page_pool_pages,
                 cfg.page_tokens.max(1),
                 super::native::NATIVE_D_MODEL,
                 super::native::NATIVE_D_MODEL,
+                cfg.compute.precision,
             )
             .with_faults(plan.clone());
             Some(p)
@@ -2790,6 +2795,80 @@ mod tests {
             s.close();
         }
         c.shutdown();
+    }
+
+    #[test]
+    fn int8_kv_pool_shrinks_pages_and_survives_eviction_bitwise() {
+        // `[compute] precision = "int8-kv"`: pages hold quantized K/V,
+        // so the same pool budget covers >2x the tokens, and because
+        // quantization is a pure per-row function, recompute-on-miss
+        // refills must reproduce the exact bytes — a tight (evicting)
+        // pool serves bitwise-identically to a roomy one.
+        let tokens_for = |salt: i32| -> Vec<i32> {
+            (0..24).map(|i| 4 + (i + salt) % 17).collect()
+        };
+        let cfg_at = |pages: usize| ServeConfig {
+            method: "softmax".into(),
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_timeout_ms: 3,
+            workers: 1,
+            buckets: vec![32, 64],
+            native_fallback: true,
+            page_pool_pages: pages,
+            page_tokens: 4,
+            recompute_on_miss: true,
+            compute: crate::config::ComputeConfig {
+                precision: crate::lowp::Precision::Int8Kv,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let roomy = Coordinator::start(
+            cfg_at(64), // no eviction at this budget
+            std::path::Path::new("definitely-not-artifacts"),
+        )
+        .unwrap();
+        let wants: Vec<Vec<Vec<f32>>> =
+            (0..3).map(|s| stream_all(&roomy, &tokens_for(s))).collect();
+        roomy.shutdown();
+
+        let tight = Coordinator::start(
+            cfg_at(8), // one 32-token session's worth: forces eviction
+            std::path::Path::new("definitely-not-artifacts"),
+        )
+        .unwrap();
+        let pool = tight.page_pool().expect("pool configured").clone();
+        assert_eq!(pool.precision(), crate::lowp::Precision::Int8Kv);
+        let f32_pool = PagePool::new(
+            8,
+            4,
+            super::super::native::NATIVE_D_MODEL,
+            super::super::native::NATIVE_D_MODEL,
+        );
+        assert!(
+            2 * pool.page_bytes() <= f32_pool.page_bytes(),
+            "int8-kv pages must be less than half the f32 size: {} vs {}",
+            pool.page_bytes(),
+            f32_pool.page_bytes()
+        );
+        let toks: Vec<Vec<i32>> = (0..3).map(tokens_for).collect();
+        let mut sessions: Vec<DecodeSession> =
+            (0..3).map(|_| tight.open_session(32).unwrap()).collect();
+        for i in 0..24 {
+            for (s, sess) in sessions.iter_mut().enumerate() {
+                let logits = sess.step(toks[s][i]).unwrap();
+                assert_eq!(
+                    logits, wants[s][i],
+                    "int8 paged session {s} diverged at step {i} under eviction"
+                );
+            }
+        }
+        assert!(pool.counters().evicted > 0, "tight int8 pool must evict");
+        for s in sessions.drain(..) {
+            s.close();
+        }
+        tight.shutdown();
     }
 
     // -- sharding, eviction, admission --------------------------------------

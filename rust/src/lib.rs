@@ -83,6 +83,7 @@ pub mod data;
 pub mod experiments;
 pub mod faults;
 pub mod linalg;
+pub mod lowp;
 pub mod rng;
 pub mod runtime;
 pub mod stats;

@@ -1,0 +1,610 @@
+//! Low-precision K/V storage: the `[compute] precision` knob and the
+//! encodings behind it.
+//!
+//! Serving memory is dominated by decode-state bytes — every live
+//! session holds its keys and values for the whole decoded window, and
+//! at f32 that is `(d + dv) * 4` bytes per token.  This module provides
+//! the storage codecs that cut that width: `bf16` (truncated-mantissa
+//! f32, round-to-nearest-even), `f16` (IEEE binary16), and `int8-kv`
+//! (affine per-row quantization with explicit scale/zero-point).  The
+//! contract everywhere is **storage-only** precision: operands are
+//! encoded at rest and decoded back to f32 before any arithmetic, so
+//! every kernel keeps full f32 accumulation and `precision = "f32"`
+//! remains a bitwise no-op escape hatch.
+//!
+//! Quantization must be a *pure function of the row being stored*: the
+//! paged KV cache refills LRU-evicted pages by deterministic recompute
+//! (see `attention::paged`), and an evicted-then-refilled page must
+//! reproduce the same stored bytes as a never-evicted one.  That is why
+//! int8 carries scale/zero-point per row (keyed only by that row's
+//! values) rather than any running per-buffer statistic.
+//!
+//! Documented storage tolerances (relative to the stored f32 value, at
+//! normal magnitudes):
+//!
+//! | precision | max round-trip error            |
+//! |-----------|---------------------------------|
+//! | `f32`     | exact (bitwise)                 |
+//! | `bf16`    | 2⁻⁸ ≈ 0.4% relative             |
+//! | `f16`     | 2⁻¹¹ ≈ 0.05% relative           |
+//! | `int8-kv` | (row max − row min) / 254 abs   |
+
+/// Storage precision for K/V operands and paged KV-cache pages
+/// (`[compute] precision`).  See the module docs for the exact codecs
+/// and round-trip tolerances.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage — the bitwise escape hatch (default).
+    #[default]
+    F32,
+    /// bfloat16: f32 with the mantissa truncated to 7 bits (RNE).
+    Bf16,
+    /// IEEE binary16.
+    F16,
+    /// Affine int8 with per-row scale/zero-point.
+    Int8Kv,
+}
+
+impl Precision {
+    /// Parse the `[compute] precision` spelling (`f32 | bf16 | f16 |
+    /// int8-kv`; `int8_kv`/`int8` accepted as aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(Self::F32),
+            "bf16" | "bfloat16" => Some(Self::Bf16),
+            "f16" | "fp16" | "float16" | "half" => Some(Self::F16),
+            "int8-kv" | "int8_kv" | "int8" => Some(Self::Int8Kv),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::Bf16 => "bf16",
+            Self::F16 => "f16",
+            Self::Int8Kv => "int8-kv",
+        }
+    }
+
+    /// Payload bytes per stored K/V element (excluding int8 quant
+    /// tables — see [`Precision::row_overhead_bytes`]).
+    pub fn kv_bytes(self) -> usize {
+        match self {
+            Self::F32 => 4,
+            Self::Bf16 | Self::F16 => 2,
+            Self::Int8Kv => 1,
+        }
+    }
+
+    /// Metadata bytes per stored *row*: int8 rows carry an f32
+    /// scale/zero-point pair, the direct encodings carry nothing.
+    pub fn row_overhead_bytes(self) -> usize {
+        match self {
+            Self::Int8Kv => 8,
+            _ => 0,
+        }
+    }
+
+    /// Total stored bytes for one row of `cols` elements.
+    pub fn row_bytes(self, cols: usize) -> usize {
+        cols * self.kv_bytes() + self.row_overhead_bytes()
+    }
+
+    /// Encode-then-decode one value (the storage round trip for the
+    /// direct encodings; int8 depends on row context, see
+    /// [`quant_params`]).  `F32` is the identity.
+    pub fn roundtrip(self, x: f32) -> f32 {
+        match self {
+            Self::F32 => x,
+            Self::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+            Self::F16 => f16_to_f32(f32_to_f16(x)),
+            Self::Int8Kv => x,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bf16
+// ---------------------------------------------------------------------------
+
+/// f32 → bf16 with round-to-nearest-even on the dropped 16 bits.
+/// Finite inputs only round; NaN payloads are normalized to a quiet
+/// NaN so the carry in the rounding add cannot turn a NaN into Inf.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// f16 (IEEE binary16)
+// ---------------------------------------------------------------------------
+
+/// f32 → f16 with round-to-nearest-even; overflow saturates to Inf,
+/// underflow goes through the binary16 subnormal range to signed zero.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN (quiet bit forced so the payload stays a NaN).
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> Inf
+    }
+    if e >= -14 {
+        // Normal range: keep 10 mantissa bits, RNE on the dropped 13.
+        let m = man >> 13;
+        let rest = man & 0x1FFF;
+        let mut h = ((e + 15) as u32) << 10 | m;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            h += 1; // mantissa carry may bump the exponent: still correct
+        }
+        return sign | h as u16;
+    }
+    if e >= -25 {
+        // Subnormal range: shift the (implicit-bit) mantissa down.
+        // e = -25 keeps the RNE interval above 2^-25 rounding up to
+        // the smallest subnormal instead of flushing to zero.
+        let man = man | 0x0080_0000;
+        let shift = (13 - 14 - e) as u32; // in 1..=11 extra, total 14..=24
+        let m = man >> shift;
+        let rest = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = m;
+        if rest > half || (rest == half && (m & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    sign // underflow to signed zero
+}
+
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: normalize into f32's larger exponent range.
+                let shift = man.leading_zeros() - 21; // bring bit 10 up
+                let man = (man << shift) & 0x03FF; // mask drops the leading 1
+                sign | ((113 - shift) << 23) | (man << 13)
+            }
+        }
+        31 => sign | 0x7F80_0000 | (man << 13), // Inf / NaN
+        _ => sign | ((exp + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// int8 affine quantization (per-row scale/zero-point)
+// ---------------------------------------------------------------------------
+
+/// Affine quantization parameters `(scale, zero)` for one row — a pure
+/// function of the row's values (the determinism contract for
+/// recompute-on-miss refills).  The row range maps symmetrically onto
+/// `[-127, 127]` around its midpoint; degenerate rows (constant, empty,
+/// or non-finite) get `scale = 1` so every entry quantizes to the
+/// zero-point exactly.
+pub fn quant_params(row: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in row {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        let zero = if lo.is_finite() { lo } else { 0.0 };
+        return (1.0, zero);
+    }
+    let zero = 0.5 * (hi + lo);
+    let scale = ((hi - zero).max(zero - lo) / 127.0).max(f32::MIN_POSITIVE);
+    (scale, zero)
+}
+
+#[inline]
+pub fn quantize(x: f32, scale: f32, zero: f32) -> i8 {
+    (((x - zero) / scale).round()).clamp(-127.0, 127.0) as i8
+}
+
+#[inline]
+pub fn dequantize(q: i8, scale: f32, zero: f32) -> f32 {
+    zero + q as f32 * scale
+}
+
+/// Quantize one row: returns the `(scale, zero)` pair written alongside
+/// the payload.  `out.len() == row.len()`.
+pub fn quantize_row(row: &[f32], out: &mut [i8]) -> (f32, f32) {
+    debug_assert_eq!(row.len(), out.len());
+    let (scale, zero) = quant_params(row);
+    for (o, &x) in out.iter_mut().zip(row) {
+        *o = quantize(x, scale, zero);
+    }
+    (scale, zero)
+}
+
+/// Decode one quantized row.
+pub fn dequantize_row(q: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = dequantize(v, scale, zero);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte-slot row codec (the paged-pool substrate)
+// ---------------------------------------------------------------------------
+
+/// Encode one row into a page-resident byte slot: `payload` receives
+/// the packed elements (`row.len() * kv_bytes()` little-endian bytes),
+/// `quant` the int8 scale/zero pair (`row_overhead_bytes()` bytes —
+/// empty for the direct encodings).  Pure in `row`: re-encoding an
+/// identical row always produces identical bytes, which is what makes
+/// recompute-on-miss refills byte-equal to never-evicted pages.
+pub fn encode_row(prec: Precision, row: &[f32], payload: &mut [u8], quant: &mut [u8]) {
+    debug_assert_eq!(payload.len(), row.len() * prec.kv_bytes());
+    debug_assert_eq!(quant.len(), prec.row_overhead_bytes());
+    match prec {
+        Precision::F32 => {
+            for (dst, &x) in payload.chunks_exact_mut(4).zip(row) {
+                dst.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        Precision::Bf16 => {
+            for (dst, &x) in payload.chunks_exact_mut(2).zip(row) {
+                dst.copy_from_slice(&f32_to_bf16(x).to_le_bytes());
+            }
+        }
+        Precision::F16 => {
+            for (dst, &x) in payload.chunks_exact_mut(2).zip(row) {
+                dst.copy_from_slice(&f32_to_f16(x).to_le_bytes());
+            }
+        }
+        Precision::Int8Kv => {
+            let (scale, zero) = quant_params(row);
+            for (dst, &x) in payload.iter_mut().zip(row) {
+                *dst = quantize(x, scale, zero) as u8;
+            }
+            quant[..4].copy_from_slice(&scale.to_le_bytes());
+            quant[4..].copy_from_slice(&zero.to_le_bytes());
+        }
+    }
+}
+
+/// Decode one page-resident row slot (inverse of [`encode_row`]; the
+/// f32 path restores the exact stored bits).
+pub fn decode_row(prec: Precision, payload: &[u8], quant: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(payload.len(), out.len() * prec.kv_bytes());
+    debug_assert_eq!(quant.len(), prec.row_overhead_bytes());
+    match prec {
+        Precision::F32 => {
+            for (src, x) in payload.chunks_exact(4).zip(out) {
+                *x = f32::from_le_bytes(src.try_into().unwrap());
+            }
+        }
+        Precision::Bf16 => {
+            for (src, x) in payload.chunks_exact(2).zip(out) {
+                *x = bf16_to_f32(u16::from_le_bytes(src.try_into().unwrap()));
+            }
+        }
+        Precision::F16 => {
+            for (src, x) in payload.chunks_exact(2).zip(out) {
+                *x = f16_to_f32(u16::from_le_bytes(src.try_into().unwrap()));
+            }
+        }
+        Precision::Int8Kv => {
+            let scale = f32::from_le_bytes(quant[..4].try_into().unwrap());
+            let zero = f32::from_le_bytes(quant[4..].try_into().unwrap());
+            for (src, x) in payload.iter().zip(out) {
+                *x = dequantize(*src as i8, scale, zero);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RowStore: an append-only encoded row buffer (the KvCache substrate)
+// ---------------------------------------------------------------------------
+
+/// Append-only store of fixed-width rows encoded at the configured
+/// [`Precision`].  Backs the flat `KvCache`: push encodes, decode
+/// restores f32 for the kernels (f32 path is zero-copy and bitwise).
+#[derive(Clone, Debug)]
+pub struct RowStore {
+    prec: Precision,
+    cols: usize,
+    rows: usize,
+    f32s: Vec<f32>,  // F32 payload
+    words: Vec<u16>, // Bf16 / F16 payload
+    bytes: Vec<i8>,  // Int8Kv payload
+    quant: Vec<f32>, // Int8Kv per-row (scale, zero) pairs
+}
+
+impl RowStore {
+    pub fn new(prec: Precision, cols: usize) -> Self {
+        Self {
+            prec,
+            cols,
+            rows: 0,
+            f32s: Vec::new(),
+            words: Vec::new(),
+            bytes: Vec::new(),
+            quant: Vec::new(),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        self.f32s.clear();
+        self.words.clear();
+        self.bytes.clear();
+        self.quant.clear();
+    }
+
+    /// Stored bytes: encoded payload plus int8 quant tables.  The
+    /// transient f32 decode scratch lives with the caller, not here.
+    pub fn stored_bytes(&self) -> usize {
+        self.rows * self.prec.row_bytes(self.cols)
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cols);
+        match self.prec {
+            Precision::F32 => self.f32s.extend_from_slice(row),
+            Precision::Bf16 => self.words.extend(row.iter().map(|&x| f32_to_bf16(x))),
+            Precision::F16 => self.words.extend(row.iter().map(|&x| f32_to_f16(x))),
+            Precision::Int8Kv => {
+                let start = self.bytes.len();
+                self.bytes.resize(start + self.cols, 0);
+                let (scale, zero) = quantize_row(row, &mut self.bytes[start..]);
+                self.quant.push(scale);
+                self.quant.push(zero);
+            }
+        }
+        self.rows += 1;
+    }
+
+    /// The raw f32 payload — only available at `Precision::F32` (the
+    /// zero-copy bitwise path).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self.prec {
+            Precision::F32 => Some(&self.f32s),
+            _ => None,
+        }
+    }
+
+    /// Decode rows `[from, to)` into `out` (resized to fit).
+    pub fn decode_range_into(&self, from: usize, to: usize, out: &mut Vec<f32>) {
+        debug_assert!(from <= to && to <= self.rows);
+        let c = self.cols;
+        out.clear();
+        out.reserve((to - from) * c);
+        match self.prec {
+            Precision::F32 => out.extend_from_slice(&self.f32s[from * c..to * c]),
+            Precision::Bf16 => {
+                out.extend(self.words[from * c..to * c].iter().map(|&w| bf16_to_f32(w)))
+            }
+            Precision::F16 => {
+                out.extend(self.words[from * c..to * c].iter().map(|&w| f16_to_f32(w)))
+            }
+            Precision::Int8Kv => {
+                for r in from..to {
+                    let (scale, zero) = (self.quant[2 * r], self.quant[2 * r + 1]);
+                    out.extend(
+                        self.bytes[r * c..(r + 1) * c].iter().map(|&q| dequantize(q, scale, zero)),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parsing_and_widths() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("bf16"), Some(Precision::Bf16));
+        assert_eq!(Precision::parse("F16"), Some(Precision::F16));
+        assert_eq!(Precision::parse("int8-kv"), Some(Precision::Int8Kv));
+        assert_eq!(Precision::parse("int8_kv"), Some(Precision::Int8Kv));
+        assert_eq!(Precision::parse("int4"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+        for p in [Precision::F32, Precision::Bf16, Precision::F16, Precision::Int8Kv] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::F32.row_bytes(64), 256);
+        assert_eq!(Precision::Bf16.row_bytes(64), 128);
+        assert_eq!(Precision::F16.row_bytes(64), 128);
+        assert_eq!(Precision::Int8Kv.row_bytes(64), 72); // 64 + scale/zero
+    }
+
+    #[test]
+    fn bf16_round_trip_error_is_bounded() {
+        let mut rng = crate::rng::Pcg64::seed(0xB16);
+        let mut buf = vec![0.0f32; 4096];
+        rng.fill_gaussian(&mut buf, 0.0, 2.0);
+        for &x in &buf {
+            let y = bf16_to_f32(f32_to_bf16(x));
+            assert!((y - x).abs() <= x.abs() * (1.0 / 256.0) + f32::EPSILON, "{x} -> {y}");
+        }
+        // Exactly-representable values survive bitwise.
+        for x in [0.0f32, -0.0, 1.0, -2.0, 0.5, 1.5, 256.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_round_trip_error_is_bounded() {
+        let mut rng = crate::rng::Pcg64::seed(0xF16);
+        let mut buf = vec![0.0f32; 4096];
+        rng.fill_gaussian(&mut buf, 0.0, 2.0);
+        for &x in &buf {
+            let y = f16_to_f32(f32_to_f16(x));
+            assert!((y - x).abs() <= x.abs() * (1.0 / 2048.0) + 1e-7, "{x} -> {y}");
+        }
+        for x in [0.0f32, -0.0, 1.0, -2.0, 0.5, 1.5, 2048.0, 65504.0] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        // Overflow saturates, subnormals and underflow stay signed.
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e6)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        let sub = 3.0e-6f32; // inside binary16's subnormal range
+        let y = f16_to_f32(f32_to_f16(sub));
+        assert!(y > 0.0 && (y - sub).abs() < 1e-7, "{sub} -> {y}");
+        assert_eq!(f16_to_f32(f32_to_f16(1e-9)), 0.0);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e-9)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_exhaustive_decode_encode_identity() {
+        // Every finite f16 bit pattern must survive decode -> encode
+        // exactly (the decoder and encoder agree on the format).
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 31 {
+                continue; // Inf/NaN payloads are normalized, skip
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn int8_quantization_is_deterministic_and_bounded() {
+        let mut rng = crate::rng::Pcg64::seed(0x18);
+        let mut row = vec![0.0f32; 64];
+        rng.fill_gaussian(&mut row, 0.3, 1.7);
+        let mut q1 = vec![0i8; 64];
+        let mut q2 = vec![0i8; 64];
+        let (s1, z1) = quantize_row(&row, &mut q1);
+        let (s2, z2) = quantize_row(&row, &mut q2);
+        // Pure function of the row: identical params and payload.
+        assert_eq!((s1.to_bits(), z1.to_bits()), (s2.to_bits(), z2.to_bits()));
+        assert_eq!(q1, q2);
+        // Error bound: half a quantization step.
+        let (lo, hi) = row.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| {
+            (l.min(x), h.max(x))
+        });
+        let step = (hi - lo) / 254.0;
+        let mut dec = vec![0.0f32; 64];
+        dequantize_row(&q1, s1, z1, &mut dec);
+        for (&x, &y) in row.iter().zip(&dec) {
+            assert!((x - y).abs() <= step * 0.5 + 1e-6, "{x} -> {y} (step {step})");
+        }
+        // Degenerate rows: constant maps exactly, empty is fine.
+        let (s, z) = quant_params(&[3.25; 7]);
+        assert_eq!((s, z), (1.0, 3.25));
+        assert_eq!(dequantize(quantize(3.25, s, z), s, z), 3.25);
+        assert_eq!(quant_params(&[]), (1.0, 0.0));
+    }
+
+    #[test]
+    fn row_store_round_trips_every_precision() {
+        let mut rng = crate::rng::Pcg64::seed(0x57);
+        let cols = 24usize;
+        let rows: Vec<Vec<f32>> = (0..9)
+            .map(|_| {
+                let mut r = vec![0.0f32; cols];
+                rng.fill_gaussian(&mut r, 0.0, 1.2);
+                r
+            })
+            .collect();
+        for prec in [Precision::F32, Precision::Bf16, Precision::F16, Precision::Int8Kv] {
+            let mut store = RowStore::new(prec, cols);
+            for r in &rows {
+                store.push_row(r);
+            }
+            assert_eq!(store.rows(), rows.len());
+            assert_eq!(store.stored_bytes(), rows.len() * prec.row_bytes(cols));
+            let mut dec = Vec::new();
+            store.decode_range_into(0, rows.len(), &mut dec);
+            for (i, r) in rows.iter().enumerate() {
+                let got = &dec[i * cols..(i + 1) * cols];
+                if prec == Precision::F32 {
+                    assert_eq!(got, r.as_slice(), "f32 must be bitwise");
+                } else {
+                    for (&x, &y) in r.iter().zip(got) {
+                        assert!((x - y).abs() <= 0.02 * x.abs().max(1.0), "{prec:?}: {x} vs {y}");
+                    }
+                }
+            }
+            // Partial decode agrees with the full decode's slice.
+            let mut part = Vec::new();
+            store.decode_range_into(3, 7, &mut part);
+            assert_eq!(part.as_slice(), &dec[3 * cols..7 * cols]);
+            // The zero-copy f32 view exists exactly for F32.
+            assert_eq!(store.as_f32().is_some(), prec == Precision::F32);
+        }
+    }
+
+    #[test]
+    fn byte_slot_codec_round_trips_and_is_deterministic() {
+        let mut rng = crate::rng::Pcg64::seed(0x58);
+        let cols = 16usize;
+        let mut row = vec![0.0f32; cols];
+        rng.fill_gaussian(&mut row, 0.3, 1.5);
+        for prec in [Precision::F32, Precision::Bf16, Precision::F16, Precision::Int8Kv] {
+            let mut payload = vec![0u8; cols * prec.kv_bytes()];
+            let mut quant = vec![0u8; prec.row_overhead_bytes()];
+            encode_row(prec, &row, &mut payload, &mut quant);
+            let mut dec = vec![0.0f32; cols];
+            decode_row(prec, &payload, &quant, &mut dec);
+            if prec == Precision::F32 {
+                assert_eq!(dec, row, "f32 slots must restore the exact bits");
+            } else {
+                for (&x, &y) in row.iter().zip(&dec) {
+                    assert!((x - y).abs() <= 0.05 * x.abs().max(1.0), "{prec:?}: {x} vs {y}");
+                }
+            }
+            // Byte-slot decode agrees exactly with the RowStore decode
+            // of the same row (one quantization law everywhere).
+            let mut store = RowStore::new(prec, cols);
+            store.push_row(&row);
+            let mut via_store = Vec::new();
+            store.decode_range_into(0, 1, &mut via_store);
+            assert_eq!(dec, via_store, "{prec:?}: page and flat-cache decode disagree");
+            // Re-encoding the identical row reproduces identical bytes —
+            // the recompute-on-miss determinism contract.
+            let mut payload2 = vec![0u8; payload.len()];
+            let mut quant2 = vec![0u8; quant.len()];
+            encode_row(prec, &row, &mut payload2, &mut quant2);
+            assert_eq!(payload, payload2, "{prec:?}: payload must be deterministic");
+            assert_eq!(quant, quant2, "{prec:?}: quant table must be deterministic");
+        }
+    }
+}

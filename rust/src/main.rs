@@ -100,6 +100,7 @@ fn cli() -> Cli {
                     let mut f = common();
                     f.extend([
                         flag("json", "write the kernel report to this JSON path", None),
+                        flag("baseline", "fail on >25% *_spec regressions vs this BENCH json", None),
                         flag("sizes", "comma-separated sequence lengths", Some("1024,4096,8192")),
                         flag("d", "head dimension", Some("64")),
                         flag("tile", "fused-kernel K/V tile rows (0 = auto)", Some("0")),
@@ -247,9 +248,42 @@ fn cmd_bench(args: &lln::cli::Args) -> Result<()> {
     for (fast, slow, n, sp) in report.speedups() {
         println!("{fast:<24} vs {slow:<26} n={n:<6} {sp:.2}x");
     }
+    if !report.memory.is_empty() {
+        println!("\n== decode-state bytes (d={d}, t={}) ==", report.memory[0].tokens);
+        for m in &report.memory {
+            println!("{:<24} {:>12} bytes", m.name, m.bytes);
+        }
+    }
+    // Read the baseline *before* --json can overwrite the same path
+    // (CI passes both flags pointing at the committed file).
+    let baseline = match args.get("baseline") {
+        Some(path) => Some((
+            path.to_string(),
+            std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read baseline {path}: {e}"))?,
+        )),
+        None => None,
+    };
     if let Some(path) = args.get("json") {
         report.write_json(std::path::Path::new(path))?;
         println!("\nwrote {path}");
+    }
+    // CI perf gate: compare the specialized (`*_spec`) rows against a
+    // committed BENCH_kernels.json and fail on >25% ns/op regressions.
+    // Zero-ns baseline rows (the pre-measurement bootstrap) gate
+    // nothing, so the check is safe to run before a perf runner has
+    // ever populated the file.
+    if let Some((path, baseline)) = baseline {
+        let regs = lln::bench::spec_regressions(&report, &baseline, 0.25)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if regs.is_empty() {
+            println!("\nbaseline gate: no specialized-kernel regressions vs {path}");
+        } else {
+            for r in &regs {
+                eprintln!("regression: {r}");
+            }
+            anyhow::bail!("{} specialized kernel row(s) regressed past the 25% gate", regs.len());
+        }
     }
     Ok(())
 }

@@ -234,6 +234,269 @@ pub mod micro {
             }
         }
     }
+
+    // ------------------------------------------------------------------
+    // Monomorphized head-dim instances
+    // ------------------------------------------------------------------
+    //
+    // The generic kernels above take the reduction depth `k` at runtime:
+    // the lane loop re-checks its trip count every `LANES` block and the
+    // scalar tail survives as dead weight even when `k % LANES == 0`.
+    // The `*_spec::<D>` instances below are the *same loops* with `k`
+    // replaced by a const generic `D` (one instance per supported head
+    // dim, D ∈ {32, 64, 128} — all multiples of LANES, so the compiler
+    // proves the tail empty and fully unrolls the lane blocks).  The
+    // statement order, and therefore the floating-point order, is
+    // token-for-token the generic path's, so for equal inputs the
+    // outputs are bitwise equal and the dispatch layer
+    // ([`KernelDispatch`](super::KernelDispatch)) may pick either
+    // freely.  Pinned by `spec_kernels_bitwise_match_generic` below and
+    // the head-dim goldens in rust/tests/prop_kernels.rs.
+
+    /// Lane-blocked dot with the depth fixed at `D` — bitwise [`dot`]
+    /// for `k == D`.
+    #[inline(always)]
+    pub fn dot_spec<const D: usize>(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(D % LANES, 0);
+        debug_assert_eq!(a.len(), D);
+        debug_assert_eq!(b.len(), D);
+        let mut acc = [0.0f32; LANES];
+        let mut kk = 0;
+        while kk + LANES <= D {
+            for l in 0..LANES {
+                acc[l] += a[kk + l] * b[kk + l];
+            }
+            kk += LANES;
+        }
+        // D % LANES == 0: the tail loop is provably empty, but the
+        // `+ tail` stays so the FP expression matches [`dot`] exactly.
+        let mut tail = 0.0f32;
+        while kk < D {
+            tail += a[kk] * b[kk];
+            kk += 1;
+        }
+        fold_lanes(acc) + tail
+    }
+
+    /// [`matmul_t_block`] with the reduction depth fixed at `D` —
+    /// bitwise the generic kernel for `k == D`.
+    pub fn matmul_t_block_spec<const D: usize>(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(D % LANES, 0);
+        debug_assert_eq!(a.len(), m * D);
+        debug_assert_eq!(b.len(), n * D);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * D..(i + 1) * D];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + NR <= n {
+                let b0 = &b[j * D..(j + 1) * D];
+                let b1 = &b[(j + 1) * D..(j + 2) * D];
+                let b2 = &b[(j + 2) * D..(j + 3) * D];
+                let b3 = &b[(j + 3) * D..(j + 4) * D];
+                let mut acc = [[0.0f32; LANES]; NR];
+                let mut kk = 0;
+                while kk + LANES <= D {
+                    for l in 0..LANES {
+                        let av = arow[kk + l];
+                        acc[0][l] += av * b0[kk + l];
+                        acc[1][l] += av * b1[kk + l];
+                        acc[2][l] += av * b2[kk + l];
+                        acc[3][l] += av * b3[kk + l];
+                    }
+                    kk += LANES;
+                }
+                let mut tail = [0.0f32; NR];
+                while kk < D {
+                    let av = arow[kk];
+                    tail[0] += av * b0[kk];
+                    tail[1] += av * b1[kk];
+                    tail[2] += av * b2[kk];
+                    tail[3] += av * b3[kk];
+                    kk += 1;
+                }
+                for r in 0..NR {
+                    orow[j + r] = fold_lanes(acc[r]) + tail[r];
+                }
+                j += NR;
+            }
+            while j < n {
+                orow[j] = dot_spec::<D>(arow, &b[j * D..(j + 1) * D]);
+                j += 1;
+            }
+        }
+    }
+
+    /// [`matmul_block`] with the reduction depth fixed at `D` — bitwise
+    /// the generic kernel for `k == D`.  The caller zero-initializes
+    /// `out`.
+    pub fn matmul_block_spec<const D: usize>(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * D);
+        debug_assert_eq!(b.len(), D * n);
+        debug_assert_eq!(out.len(), m * n);
+        for kb in (0..D).step_by(KB) {
+            let kend = (kb + KB).min(D);
+            let mut i = 0;
+            while i + MR <= m {
+                let rows = &mut out[i * n..(i + MR) * n];
+                let (r0, rest) = rows.split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3) = rest.split_at_mut(n);
+                for kk in kb..kend {
+                    let a0 = a[i * D + kk];
+                    let a1 = a[(i + 1) * D + kk];
+                    let a2 = a[(i + 2) * D + kk];
+                    let a3 = a[(i + 3) * D + kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (j, &bj) in brow.iter().enumerate() {
+                        r0[j] += a0 * bj;
+                        r1[j] += a1 * bj;
+                        r2[j] += a2 * bj;
+                        r3[j] += a3 * bj;
+                    }
+                }
+                i += MR;
+            }
+            while i < m {
+                let arow = &a[i * D..(i + 1) * D];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bj) in orow.iter_mut().zip(brow) {
+                        *o += av * bj;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Which head-dim instance of the [`micro`] kernels a call site runs.
+///
+/// `Auto` (the `[compute] head_dim = 0` default) looks the reduction
+/// depth up per call; `D32`/`D64`/`D128` are resolved once at backend
+/// construction through the dispatch table in `attention::backend`
+/// (`resolve_kernel`); `Generic` forces the runtime-generic loops — the
+/// bench baseline and the escape hatch for unspecialized dims.  Every
+/// monomorphized instance is bitwise-identical to the generic path (see
+/// the `micro::*_spec` docs), so dispatch is purely a perf choice: a
+/// pinned instance that meets an off-config depth (e.g. Performer's
+/// projected features) silently degrades to the generic kernel rather
+/// than miscomputing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelDispatch {
+    /// Per-call lookup: specialize whenever the depth matches.
+    #[default]
+    Auto,
+    /// Runtime-generic loops only.
+    Generic,
+    /// Monomorphized for head dim 32.
+    D32,
+    /// Monomorphized for head dim 64.
+    D64,
+    /// Monomorphized for head dim 128.
+    D128,
+}
+
+impl KernelDispatch {
+    /// The instance specialized for reduction depth `d` (`Generic` when
+    /// no monomorphized instance exists).
+    pub fn for_dim(d: usize) -> Self {
+        match d {
+            32 => Self::D32,
+            64 => Self::D64,
+            128 => Self::D128,
+            _ => Self::Generic,
+        }
+    }
+
+    /// The head dim this instance is pinned to (`None` for
+    /// `Auto`/`Generic`).
+    pub fn specialized_dim(self) -> Option<usize> {
+        match self {
+            Self::D32 => Some(32),
+            Self::D64 => Some(64),
+            Self::D128 => Some(128),
+            Self::Auto | Self::Generic => None,
+        }
+    }
+
+    /// Resolve against a concrete depth: `Auto` picks the matching
+    /// instance, a mismatched pinned instance falls back to `Generic`.
+    #[inline(always)]
+    fn resolve(self, k: usize) -> Self {
+        match self {
+            Self::Auto => Self::for_dim(k),
+            other => match other.specialized_dim() {
+                Some(d) if d != k => Self::Generic,
+                _ => other,
+            },
+        }
+    }
+
+    /// [`micro::dot`] through the dispatch (`a`, `b` of equal length).
+    #[inline(always)]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        match self.resolve(a.len()) {
+            Self::D32 => micro::dot_spec::<32>(a, b),
+            Self::D64 => micro::dot_spec::<64>(a, b),
+            Self::D128 => micro::dot_spec::<128>(a, b),
+            _ => micro::dot(a, b),
+        }
+    }
+
+    /// [`micro::matmul_t_block`] through the dispatch.
+    #[inline]
+    pub fn matmul_t_block(
+        self,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        match self.resolve(k) {
+            Self::D32 => micro::matmul_t_block_spec::<32>(a, b, out, m, n),
+            Self::D64 => micro::matmul_t_block_spec::<64>(a, b, out, m, n),
+            Self::D128 => micro::matmul_t_block_spec::<128>(a, b, out, m, n),
+            _ => micro::matmul_t_block(a, b, out, m, k, n),
+        }
+    }
+
+    /// [`micro::matmul_block`] through the dispatch (the caller
+    /// zero-initializes `out`).
+    #[inline]
+    pub fn matmul_block(
+        self,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        match self.resolve(k) {
+            Self::D32 => micro::matmul_block_spec::<32>(a, b, out, m, n),
+            Self::D64 => micro::matmul_block_spec::<64>(a, b, out, m, n),
+            Self::D128 => micro::matmul_block_spec::<128>(a, b, out, m, n),
+            _ => micro::matmul_block(a, b, out, m, k, n),
+        }
+    }
 }
 
 /// Row-major dense matrix of `f32`.
@@ -333,7 +596,7 @@ impl Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        micro::matmul_block(&self.data, &other.data, &mut out.data, m, k, n);
+        KernelDispatch::Auto.matmul_block(&self.data, &other.data, &mut out.data, m, k, n);
         out
     }
 
@@ -381,7 +644,7 @@ impl Mat {
         let a = self.data.as_slice();
         let b = other.data.as_slice();
         par_row_spans(&mut out.data, m, n, t, |row0, len, chunk| {
-            micro::matmul_block(&a[row0 * k..(row0 + len) * k], b, chunk, len, k, n);
+            KernelDispatch::Auto.matmul_block(&a[row0 * k..(row0 + len) * k], b, chunk, len, k, n);
         });
         out
     }
@@ -392,7 +655,7 @@ impl Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Mat::zeros(m, n);
-        micro::matmul_t_block(&self.data, &other.data, &mut out.data, m, k, n);
+        KernelDispatch::Auto.matmul_t_block(&self.data, &other.data, &mut out.data, m, k, n);
         out
     }
 
@@ -433,7 +696,7 @@ impl Mat {
         let a = self.data.as_slice();
         let b = other.data.as_slice();
         par_row_spans(&mut out.data, m, n, t, |row0, len, chunk| {
-            micro::matmul_t_block(&a[row0 * k..(row0 + len) * k], b, chunk, len, k, n);
+            KernelDispatch::Auto.matmul_t_block(&a[row0 * k..(row0 + len) * k], b, chunk, len, k, n);
         });
         out
     }
@@ -862,6 +1125,74 @@ mod tests {
             // scalar reference it row-partitions.
             for t in [1usize, 3, 0] {
                 assert_eq!(reference.data(), a.par_matmul_t_ref(&b, t).data(), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_kernels_bitwise_match_generic() {
+        // Every monomorphized head-dim instance must be bitwise equal
+        // to the runtime-generic kernel it replaces — the contract that
+        // lets the dispatch layer pick instances freely.
+        fn check_dim<const D: usize>(rng: &mut Pcg64) {
+            for (m, n) in [(1usize, 1usize), (3, 5), (4, 4), (7, 13), (16, 33)] {
+                let a = Mat::gaussian(m, D, 1.0, rng);
+                let b = Mat::gaussian(n, D, 1.0, rng);
+                assert_eq!(
+                    micro::dot(a.row(0), b.row(0)).to_bits(),
+                    micro::dot_spec::<D>(a.row(0), b.row(0)).to_bits(),
+                    "dot d={D}"
+                );
+                let mut gen_out = vec![0.0f32; m * n];
+                let mut spec_out = vec![0.0f32; m * n];
+                micro::matmul_t_block(a.data(), b.data(), &mut gen_out, m, D, n);
+                micro::matmul_t_block_spec::<D>(a.data(), b.data(), &mut spec_out, m, n);
+                assert_eq!(gen_out, spec_out, "matmul_t_block d={D} m={m} n={n}");
+                let c = Mat::gaussian(D, n, 1.0, rng);
+                let mut gen_out = vec![0.0f32; m * n];
+                let mut spec_out = vec![0.0f32; m * n];
+                micro::matmul_block(a.data(), c.data(), &mut gen_out, m, D, n);
+                micro::matmul_block_spec::<D>(a.data(), c.data(), &mut spec_out, m, n);
+                assert_eq!(gen_out, spec_out, "matmul_block d={D} m={m} n={n}");
+            }
+        }
+        let mut rng = Pcg64::seed(24);
+        check_dim::<32>(&mut rng);
+        check_dim::<64>(&mut rng);
+        check_dim::<128>(&mut rng);
+    }
+
+    #[test]
+    fn kernel_dispatch_resolution_and_fallback() {
+        assert_eq!(KernelDispatch::for_dim(32), KernelDispatch::D32);
+        assert_eq!(KernelDispatch::for_dim(64), KernelDispatch::D64);
+        assert_eq!(KernelDispatch::for_dim(128), KernelDispatch::D128);
+        assert_eq!(KernelDispatch::for_dim(48), KernelDispatch::Generic);
+        assert_eq!(KernelDispatch::D64.specialized_dim(), Some(64));
+        assert_eq!(KernelDispatch::Auto.specialized_dim(), None);
+        // A pinned instance meeting an off-config depth degrades to the
+        // generic kernel: same results, never a miscompute.
+        let mut rng = Pcg64::seed(25);
+        for k in [5usize, 32, 48, 64, 128] {
+            let a = Mat::gaussian(6, k, 1.0, &mut rng);
+            let b = Mat::gaussian(9, k, 1.0, &mut rng);
+            let mut base = vec![0.0f32; 6 * 9];
+            micro::matmul_t_block(a.data(), b.data(), &mut base, 6, k, 9);
+            for kern in [
+                KernelDispatch::Auto,
+                KernelDispatch::Generic,
+                KernelDispatch::D32,
+                KernelDispatch::D64,
+                KernelDispatch::D128,
+            ] {
+                let mut out = vec![0.0f32; 6 * 9];
+                kern.matmul_t_block(a.data(), b.data(), &mut out, 6, k, 9);
+                assert_eq!(base, out, "matmul_t k={k} kern={kern:?}");
+                assert_eq!(
+                    micro::dot(a.row(0), b.row(0)).to_bits(),
+                    kern.dot(a.row(0), b.row(0)).to_bits(),
+                    "dot k={k} kern={kern:?}"
+                );
             }
         }
     }

@@ -761,6 +761,179 @@ fn default_backends_cover_every_method() {
 }
 
 // ---------------------------------------------------------------------------
+// Monomorphized head-dim kernels + low-precision KV storage
+// ---------------------------------------------------------------------------
+
+/// Methods whose forward/decode hot loops route through the
+/// [`KernelDispatch`](lln::tensor::KernelDispatch) microkernels (every
+/// maskable method minus ReLU/LLN+Diag, which are covered transitively
+/// via the shared linear/blockdiag kernels the others exercise).
+const DISPATCHED_METHODS: [Method; 6] = [
+    Method::Softmax,
+    Method::Quadratic,
+    Method::BlockDiag,
+    Method::Lln,
+    Method::Elu,
+    Method::Performer,
+];
+
+#[test]
+fn specialized_head_dim_kernels_are_bitwise_identical_to_generic() {
+    // The tentpole golden: for each specialized instance D ∈ {32, 64,
+    // 128}, a backend constructed with `[compute] head_dim = D` (whose
+    // dispatch table pins the const-generic microkernels) produces
+    // *bitwise* the outputs of one pinned to the generic runtime-dim
+    // loops (any head_dim with no specialized instance).  The spec
+    // kernels are token-for-token copies of the generic loops, so any
+    // FP reassociation is a bug, not a tolerance.
+    check(12, |g| {
+        let d = *g.choose(&[32usize, 64, 128]);
+        let n = g.usize_in(3, 33);
+        let spec = gen_spec(g, n);
+        let threads = g.usize_in(1, 4);
+        let tile = *g.choose(&[0usize, 7, 16, 130]);
+        let chunk = g.usize_in(1, 40);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in DISPATCHED_METHODS {
+            if !m.supports_spec(&spec) {
+                continue;
+            }
+            let base = BackendParams { threads, tile, chunk, ..Default::default() };
+            let spec_bk = backend_for(m, BackendParams { head_dim: d, ..base });
+            let gen_bk = backend_for(m, BackendParams { head_dim: d + 1, ..base });
+            let a = spec_bk.forward(&q, &k, &v, &spec);
+            let b = gen_bk.forward(&q, &k, &v, &spec);
+            prop_assert(
+                a == b,
+                format!("{m:?} n={n} d={d} tile={tile} {spec:?}: specialized forward not bitwise"),
+            )?;
+            // The per-token decode hot path, where the construction-time
+            // dispatch table matters most.
+            let (mut sa, mut sb) = (spec_bk.begin_decode(d, d), gen_bk.begin_decode(d, d));
+            if let (Ok(sa), Ok(sb)) = (sa.as_mut(), sb.as_mut()) {
+                for i in 0..n.min(8) {
+                    let ra = spec_bk.decode_step(sa, q.row(i), k.row(i), v.row(i));
+                    let rb = gen_bk.decode_step(sb, q.row(i), k.row(i), v.row(i));
+                    prop_assert(
+                        ra == rb,
+                        format!("{m:?} d={d} step {i}: specialized decode not bitwise"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_precision_backends_are_a_bitwise_escape_hatch() {
+    // `[compute] precision = "f32"` (the default) must leave every
+    // backend bitwise-untouched: the storage wrapper is only applied
+    // for narrower precisions.
+    check(8, |g| {
+        let n = g.usize_in(2, 24);
+        let d = g.usize_in(4, 20);
+        let spec = gen_spec(g, n);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in MASKABLE_METHODS {
+            if !m.supports_spec(&spec) {
+                continue;
+            }
+            let f32_bk = backend_for(
+                m,
+                BackendParams { precision: lln::lowp::Precision::F32, ..Default::default() },
+            );
+            let plain = backend_for(m, BackendParams::default());
+            let a = f32_bk.forward(&q, &k, &v, &spec);
+            let b = plain.forward(&q, &k, &v, &spec);
+            prop_assert(a == b, format!("{m:?} n={n} d={d}: f32 precision changed bits"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn low_precision_kv_storage_stays_within_documented_tolerances() {
+    // Storage-only quantization: K/V are encoded at rest and decoded
+    // to f32 before arithmetic, so the forward drifts from the f32
+    // reference by at most the element-wise storage error amplified by
+    // the row-stochastic mix — generous documented bounds: bf16 (8-bit
+    // mantissa) 5e-2, f16 (11-bit) 1e-2, int8-kv (per-row affine over
+    // the observed range) 2.5e-1, all scaled by the reference row max.
+    check(12, |g| {
+        use lln::lowp::Precision;
+        let n = g.usize_in(2, 28);
+        let d = g.usize_in(4, 20);
+        let causal = g.bool();
+        let spec = AttnSpec { causal, key_len: None, scale: None };
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for m in [Method::Softmax, Method::Lln, Method::Quadratic, Method::BlockDiag] {
+            let f32_out = backend_for(m, BackendParams::default()).forward(&q, &k, &v, &spec);
+            for (prec, tol) in [
+                (Precision::Bf16, 5e-2f32),
+                (Precision::F16, 1e-2),
+                (Precision::Int8Kv, 2.5e-1),
+            ] {
+                let bk = backend_for(m, BackendParams { precision: prec, ..Default::default() });
+                let out = bk.forward(&q, &k, &v, &spec);
+                assert_close(
+                    &out,
+                    &f32_out,
+                    tol,
+                    &format!("{m:?} n={n} d={d} {} storage", prec.name()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_decode_replays_the_quantized_batch_forward() {
+    // Under int8-kv the decode session quantizes each K/V row once at
+    // push — a pure per-row function, so the batch forward (which
+    // round-trips K/V through the same quantizer) sees identical
+    // decoded values and the replay matches within the usual KV-cache
+    // streaming tolerance, NOT the (much looser) quantization bound.
+    check(10, |g| {
+        use lln::lowp::Precision;
+        let n = g.usize_in(2, 24);
+        let d = g.usize_in(4, 20);
+        let q = gauss_mat(g, n, d, 0.8);
+        let k = gauss_mat(g, n, d, 0.8);
+        let v = gauss_mat(g, n, d, 1.0);
+        for prec in [Precision::Bf16, Precision::Int8Kv] {
+            let bk = backend_for(
+                Method::Softmax,
+                BackendParams { precision: prec, ..Default::default() },
+            );
+            let full = bk.forward(&q, &k, &v, &AttnSpec::CAUSAL);
+            let mut st = match bk.begin_decode(d, d) {
+                Ok(s) => s,
+                Err(e) => return prop_assert(false, format!("refused decode: {e}")),
+            };
+            for i in 0..n {
+                let row = bk.decode_step(&mut st, q.row(i), k.row(i), v.row(i));
+                let scale = full.row(i).iter().fold(0.0f32, |mx, &x| mx.max(x.abs())).max(1.0);
+                for (a, b) in row.iter().zip(full.row(i)) {
+                    prop_assert(
+                        (a - b).abs() <= 1e-3 * scale,
+                        format!("{} step {i}: {a} vs {b}", prec.name()),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Backward kernels: finite-difference gradient checks + fused-vs-dense parity
 // ---------------------------------------------------------------------------
 //
