@@ -108,8 +108,11 @@ impl Default for BackendParams {
 
 impl BackendParams {
     /// Pull worker-count / blocking / fused-kernel knobs from the
-    /// launcher config.
+    /// launcher config.  Also forwards `pool_threads` to the persistent
+    /// compute pool — a no-op once the pool has spun up, so the first
+    /// config to reach a kernel wins (matching the lazy-init contract).
     pub fn from_compute(c: &crate::config::ComputeConfig) -> Self {
+        crate::util::compute_pool::configure(c.pool_threads);
         Self {
             threads: c.threads,
             block: c.block,
@@ -284,19 +287,25 @@ fn wrong_cache(method: Method) -> String {
 }
 
 /// Shared linear-class backward: φ-space reverse sweep + a per-method
-/// feature chain rule mapping `dφ` back to the raw inputs.
+/// feature chain rule mapping `dφ` back to the raw inputs.  `chunk` /
+/// `threads` feed the pooled reverse sweep; `threads <= 1` keeps the
+/// serial path bitwise.
+#[allow(clippy::too_many_arguments)]
 fn linear_backward(
     method: Method,
     v: &Mat,
     spec: &AttnSpec,
     cache: &AttnCache,
     d_out: &Mat,
+    chunk: usize,
+    threads: usize,
     chain: impl Fn(&Mat, &Mat, &Mat, &Mat) -> (Mat, Mat, f32, f32),
 ) -> Result<AttnGrads, String> {
     let AttnCache::Linear { phi_q, phi_k, out } = cache else {
         return Err(wrong_cache(method));
     };
-    let (d_phi_q, d_phi_k, dv) = grad::linear_attention_spec_bwd(phi_q, phi_k, v, spec, out, d_out);
+    let (d_phi_q, d_phi_k, dv) =
+        grad::linear_attention_spec_bwd_par(phi_q, phi_k, v, spec, out, d_out, chunk, threads);
     let (dq, dk, dalpha, dbeta) = chain(phi_q, phi_k, &d_phi_q, &d_phi_k);
     Ok(AttnGrads { dq, dk, dv, dalpha, dbeta })
 }
@@ -409,7 +418,7 @@ impl AttentionBackend for SoftmaxBackend {
         spec: &AttnSpec,
     ) -> Result<(Mat, AttnCache), String> {
         let (out, row_max, row_sum) =
-            grad::fused_softmax_attention_spec_fwd_train(q, k, v, spec, self.0.tile);
+            grad::fused_softmax_attention_spec_fwd_train_par(q, k, v, spec, self.0.tile, self.0.threads);
         Ok((out.clone(), AttnCache::Softmax { row_max, row_sum, out }))
     }
     fn backward(
@@ -424,8 +433,8 @@ impl AttentionBackend for SoftmaxBackend {
         let AttnCache::Softmax { row_max, row_sum, out } = cache else {
             return Err(wrong_cache(Method::Softmax));
         };
-        let (dq, dk, dv) = grad::fused_softmax_attention_spec_bwd(
-            q, k, v, spec, out, row_max, row_sum, d_out, self.0.tile,
+        let (dq, dk, dv) = grad::fused_softmax_attention_spec_bwd_par(
+            q, k, v, spec, out, row_max, row_sum, d_out, self.0.tile, self.0.threads,
         );
         Ok(AttnGrads { dq, dk, dv, dalpha: 0.0, dbeta: 0.0 })
     }
@@ -496,7 +505,8 @@ impl AttentionBackend for LlnBackend {
         d_out: &Mat,
     ) -> Result<AttnGrads, String> {
         let (alpha, beta) = (self.0.alpha, self.0.beta);
-        linear_backward(Method::Lln, v, spec, cache, d_out, |phi_q, phi_k, dpq, dpk| {
+        let (chunk, threads) = (self.0.chunk, self.0.threads);
+        linear_backward(Method::Lln, v, spec, cache, d_out, chunk, threads, |phi_q, phi_k, dpq, dpk| {
             // The clamped-exp chain rule also produces dα/dβ — the
             // hooks that let alpha/beta be *learned* natively (fig. 9).
             let (dq, dalpha) = grad::lln_feature_bwd(q, phi_q, dpq, alpha);
@@ -680,7 +690,8 @@ impl AttentionBackend for EluBackend {
         cache: &AttnCache,
         d_out: &Mat,
     ) -> Result<AttnGrads, String> {
-        linear_backward(Method::Elu, v, spec, cache, d_out, |_, _, dpq, dpk| {
+        let (chunk, threads) = (self.0.chunk, self.0.threads);
+        linear_backward(Method::Elu, v, spec, cache, d_out, chunk, threads, |_, _, dpq, dpk| {
             (grad::elu_feature_bwd(q, dpq), grad::elu_feature_bwd(k, dpk), 0.0, 0.0)
         })
     }
@@ -751,7 +762,8 @@ impl AttentionBackend for ReluBackend {
         cache: &AttnCache,
         d_out: &Mat,
     ) -> Result<AttnGrads, String> {
-        linear_backward(Method::Relu, v, spec, cache, d_out, |_, _, dpq, dpk| {
+        let (chunk, threads) = (self.0.chunk, self.0.threads);
+        linear_backward(Method::Relu, v, spec, cache, d_out, chunk, threads, |_, _, dpq, dpk| {
             (grad::relu_feature_bwd(q, dpq), grad::relu_feature_bwd(k, dpk), 0.0, 0.0)
         })
     }
@@ -813,7 +825,9 @@ impl AttentionBackend for QuadraticBackend {
         v: &Mat,
         spec: &AttnSpec,
     ) -> Result<(Mat, AttnCache), String> {
-        let (out, den) = grad::fused_quadratic_attention_spec_fwd_train(q, k, v, spec, self.0.tile);
+        let (out, den) = grad::fused_quadratic_attention_spec_fwd_train_par(
+            q, k, v, spec, self.0.tile, self.0.threads,
+        );
         Ok((out.clone(), AttnCache::Quadratic { den, out }))
     }
     fn backward(
@@ -828,8 +842,9 @@ impl AttentionBackend for QuadraticBackend {
         let AttnCache::Quadratic { den, out } = cache else {
             return Err(wrong_cache(Method::Quadratic));
         };
-        let (dq, dk, dv) =
-            grad::fused_quadratic_attention_spec_bwd(q, k, v, spec, out, den, d_out, self.0.tile);
+        let (dq, dk, dv) = grad::fused_quadratic_attention_spec_bwd_par(
+            q, k, v, spec, out, den, d_out, self.0.tile, self.0.threads,
+        );
         Ok(AttnGrads { dq, dk, dv, dalpha: 0.0, dbeta: 0.0 })
     }
 }

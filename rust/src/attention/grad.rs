@@ -53,6 +53,84 @@ pub fn fused_softmax_attention_spec_fwd_train(
     spec: &AttnSpec,
     tile: usize,
 ) -> (Mat, Vec<f32>, Vec<f32>) {
+    fused_softmax_attention_spec_fwd_train_par(q, k, v, spec, tile, 1)
+}
+
+/// One query row of the fused softmax training forward: the online
+/// `(m, l, acc)` recurrence over the row's live K/V tiles; returns the
+/// row's `(row_max, row_sum)`.  Shared by the serial and pooled entry
+/// points, so per-row floating-point order — a function of the row's
+/// own tiles alone — is identical however the rows are partitioned.
+#[allow(clippy::too_many_arguments)]
+fn softmax_fwd_train_row(
+    qrow: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    d: usize,
+    dv: usize,
+    lim: usize,
+    scale: f32,
+    tile: usize,
+    orow: &mut [f32],
+    scores: &mut [f32],
+) -> (f32, f32) {
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut t0 = 0;
+    while t0 < lim {
+        let tn = tile.min(lim - t0);
+        let ktile = &kd[t0 * d..(t0 + tn) * d];
+        crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+        let mut tile_max = f32::NEG_INFINITY;
+        for s in scores[..tn].iter_mut() {
+            *s *= scale;
+            tile_max = tile_max.max(*s);
+        }
+        let m_new = m.max(tile_max);
+        let correction = (m - m_new).exp();
+        if correction != 1.0 {
+            l *= correction;
+            for a in orow.iter_mut() {
+                *a *= correction;
+            }
+        }
+        let mut tile_sum = 0.0f32;
+        for (j, &s) in scores[..tn].iter().enumerate() {
+            let p = (s - m_new).exp();
+            tile_sum += p;
+            let vrow = &vd[(t0 + j) * dv..(t0 + j + 1) * dv];
+            for (a, &vv) in orow.iter_mut().zip(vrow) {
+                *a += p * vv;
+            }
+        }
+        l += tile_sum;
+        m = m_new;
+        t0 += tn;
+    }
+    if l > 0.0 {
+        let inv = 1.0 / l;
+        for a in orow.iter_mut() {
+            *a *= inv;
+        }
+    } else {
+        orow.fill(0.0);
+    }
+    (m, l)
+}
+
+/// [`fused_softmax_attention_spec_fwd_train`] with the query rows
+/// partitioned across `threads` compute-pool tasks (0 = auto; causal
+/// specs cut spans on cumulative live pairs like the fused forward).
+/// Every row's math touches only that row's accumulators, so the
+/// result is bitwise identical to the serial walk at any thread count.
+pub fn fused_softmax_attention_spec_fwd_train_par(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    tile: usize,
+    threads: usize,
+) -> (Mat, Vec<f32>, Vec<f32>) {
     assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
     assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
     let (nq, d) = q.shape();
@@ -66,57 +144,80 @@ pub fn fused_softmax_attention_spec_fwd_train(
     }
     let scale = spec.resolve_scale(d);
     let tile = kernels::resolve_tile(tile).min(nk);
-    let mut scores = vec![0.0f32; tile];
     let (kd, vd) = (k.data(), v.data());
-    for i in 0..nq {
-        let lim = spec.row_limit(i, nk);
-        let qrow = q.row(i);
-        let orow = out.row_mut(i);
-        let mut m = f32::NEG_INFINITY;
-        let mut l = 0.0f32;
-        let mut t0 = 0;
-        while t0 < lim {
-            let tn = tile.min(lim - t0);
-            let ktile = &kd[t0 * d..(t0 + tn) * d];
-            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
-            let mut tile_max = f32::NEG_INFINITY;
-            for s in scores[..tn].iter_mut() {
-                *s *= scale;
-                tile_max = tile_max.max(*s);
-            }
-            let m_new = m.max(tile_max);
-            let correction = (m - m_new).exp();
-            if correction != 1.0 {
-                l *= correction;
-                for a in orow.iter_mut() {
-                    *a *= correction;
-                }
-            }
-            let mut tile_sum = 0.0f32;
-            for (j, &s) in scores[..tn].iter().enumerate() {
-                let p = (s - m_new).exp();
-                tile_sum += p;
-                let vrow = &vd[(t0 + j) * dv..(t0 + j + 1) * dv];
-                for (a, &vv) in orow.iter_mut().zip(vrow) {
-                    *a += p * vv;
-                }
-            }
-            l += tile_sum;
-            m = m_new;
-            t0 += tn;
+    let spans = query_spans(nq, nk, spec, threads);
+    if spans.len() <= 1 {
+        let mut scores = vec![0.0f32; tile];
+        for i in 0..nq {
+            let lim = spec.row_limit(i, nk);
+            let (m, l) = softmax_fwd_train_row(
+                q.row(i),
+                kd,
+                vd,
+                d,
+                dv,
+                lim,
+                scale,
+                tile,
+                out.row_mut(i),
+                &mut scores,
+            );
+            row_max[i] = m;
+            row_sum[i] = l;
         }
-        if l > 0.0 {
-            let inv = 1.0 / l;
-            for a in orow.iter_mut() {
-                *a *= inv;
-            }
-        } else {
-            orow.fill(0.0);
+        return (out, row_max, row_sum);
+    }
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(spans.len());
+        let mut out_rest = out.data_mut();
+        let mut m_rest = row_max.as_mut_slice();
+        let mut l_rest = row_sum.as_mut_slice();
+        for &(row0, len) in &spans {
+            let (o_c, o_t) = std::mem::take(&mut out_rest).split_at_mut(len * dv);
+            out_rest = o_t;
+            let (m_c, m_t) = std::mem::take(&mut m_rest).split_at_mut(len);
+            m_rest = m_t;
+            let (l_c, l_t) = std::mem::take(&mut l_rest).split_at_mut(len);
+            l_rest = l_t;
+            tasks.push(Box::new(move || {
+                let mut scores = vec![0.0f32; tile];
+                for r in 0..len {
+                    let i = row0 + r;
+                    let lim = spec.row_limit(i, nk);
+                    let (m, l) = softmax_fwd_train_row(
+                        q.row(i),
+                        kd,
+                        vd,
+                        d,
+                        dv,
+                        lim,
+                        scale,
+                        tile,
+                        &mut o_c[r * dv..(r + 1) * dv],
+                        &mut scores,
+                    );
+                    m_c[r] = m;
+                    l_c[r] = l;
+                }
+            }));
         }
-        row_max[i] = m;
-        row_sum[i] = l;
+        crate::util::compute_pool::scope(tasks);
     }
     (out, row_max, row_sum)
+}
+
+/// Query-row spans for the backward kernels: causal specs balance on
+/// cumulative live pairs ([`kernels::balanced_causal_spans`] — the
+/// backward's per-row cost is triangular exactly like the forward's),
+/// rectangular specs split evenly.  `threads` is resolved here
+/// (0 = auto).
+fn query_spans(nq: usize, nk: usize, spec: &AttnSpec, threads: usize) -> Vec<(usize, usize)> {
+    let t = crate::tensor::resolve_threads(threads);
+    if spec.causal {
+        kernels::balanced_causal_spans(nq, nk, spec, t)
+    } else {
+        crate::tensor::partition_rows(nq, t)
+    }
 }
 
 /// Flash-style recompute backward of the fused softmax forward.
@@ -150,6 +251,96 @@ pub fn fused_softmax_attention_spec_bwd(
     d_out: &Mat,
     tile: usize,
 ) -> (Mat, Mat, Mat) {
+    fused_softmax_attention_spec_bwd_par(q, k, v, spec, out, row_max, row_sum, d_out, tile, 1)
+}
+
+/// One query row of the fused softmax backward: re-streams the row's
+/// live K/V tiles, writes the row's `dq`, and accumulates its `dS`/`p`
+/// contributions into the caller's `dk`/`dv` buffers (flat
+/// `(nk, d)` / `(nk, dv)` — the full matrices on the serial path, a
+/// span-private partial on the pooled path).
+#[allow(clippy::too_many_arguments)]
+fn softmax_bwd_row(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    out: &Mat,
+    d_out: &Mat,
+    i: usize,
+    lim: usize,
+    m: f32,
+    inv_l: f32,
+    scale: f32,
+    tile: usize,
+    scores: &mut [f32],
+    dqrow: &mut [f32],
+    dk: &mut [f32],
+    dv_g: &mut [f32],
+) {
+    let d = q.cols();
+    let dv = v.cols();
+    let kd = k.data();
+    let qrow = q.row(i);
+    let dorow = d_out.row(i);
+    // δ_i = dO_i · O_i = Σ_j p_ij (dO_i · v_j), accumulated in f64
+    // so the subtraction below stays well-conditioned.
+    let mut delta = 0.0f64;
+    for (a, b) in dorow.iter().zip(out.row(i)) {
+        delta += *a as f64 * *b as f64;
+    }
+    let delta = delta as f32;
+    dqrow.fill(0.0);
+    let mut t0 = 0;
+    while t0 < lim {
+        let tn = tile.min(lim - t0);
+        let ktile = &kd[t0 * d..(t0 + tn) * d];
+        crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+        for j in 0..tn {
+            let kj = t0 + j;
+            let p = (scores[j] * scale - m).exp() * inv_l;
+            let vrow = v.row(kj);
+            let mut dp = 0.0f32;
+            for (a, b) in dorow.iter().zip(vrow) {
+                dp += a * b;
+            }
+            let ds = p * (dp - delta) * scale;
+            let krow = k.row(kj);
+            for (o, &x) in dqrow.iter_mut().zip(krow) {
+                *o += ds * x;
+            }
+            let dkrow = &mut dk[kj * d..(kj + 1) * d];
+            for (o, &x) in dkrow.iter_mut().zip(qrow) {
+                *o += ds * x;
+            }
+            let dvrow = &mut dv_g[kj * dv..(kj + 1) * dv];
+            for (o, &x) in dvrow.iter_mut().zip(dorow) {
+                *o += p * x;
+            }
+        }
+        t0 += tn;
+    }
+}
+
+/// [`fused_softmax_attention_spec_bwd`] with the query rows partitioned
+/// across `threads` compute-pool tasks (0 = auto).  `dq` rows are
+/// span-local and bitwise identical to the serial path at any thread
+/// count; `dk`/`dv` accumulate across query rows, so each span fills a
+/// private partial and the partials are reduced in fixed span order —
+/// the summation *association* (never the per-term order) depends on
+/// the span count, exactly like the forward's prefix-tile partials.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_softmax_attention_spec_bwd_par(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    row_max: &[f32],
+    row_sum: &[f32],
+    d_out: &Mat,
+    tile: usize,
+    threads: usize,
+) -> (Mat, Mat, Mat) {
     assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
     assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
     assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
@@ -166,56 +357,87 @@ pub fn fused_softmax_attention_spec_bwd(
     }
     let scale = spec.resolve_scale(d);
     let tile = kernels::resolve_tile(tile).min(nk);
-    let mut scores = vec![0.0f32; tile];
-    let mut dqrow = vec![0.0f32; d];
-    let kd = k.data();
-    for i in 0..nq {
-        let lim = spec.row_limit(i, nk);
-        if lim == 0 || row_sum[i] <= 0.0 {
-            continue;
-        }
-        let inv_l = 1.0 / row_sum[i];
-        let m = row_max[i];
-        let qrow = q.row(i);
-        let dorow = d_out.row(i);
-        // δ_i = dO_i · O_i = Σ_j p_ij (dO_i · v_j), accumulated in f64
-        // so the subtraction below stays well-conditioned.
-        let mut delta = 0.0f64;
-        for (a, b) in dorow.iter().zip(out.row(i)) {
-            delta += *a as f64 * *b as f64;
-        }
-        let delta = delta as f32;
-        dqrow.fill(0.0);
-        let mut t0 = 0;
-        while t0 < lim {
-            let tn = tile.min(lim - t0);
-            let ktile = &kd[t0 * d..(t0 + tn) * d];
-            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
-            for j in 0..tn {
-                let kj = t0 + j;
-                let p = (scores[j] * scale - m).exp() * inv_l;
-                let vrow = v.row(kj);
-                let mut dp = 0.0f32;
-                for (a, b) in dorow.iter().zip(vrow) {
-                    dp += a * b;
-                }
-                let ds = p * (dp - delta) * scale;
-                let krow = k.row(kj);
-                for (o, &x) in dqrow.iter_mut().zip(krow) {
-                    *o += ds * x;
-                }
-                let dkrow = dk.row_mut(kj);
-                for (o, &x) in dkrow.iter_mut().zip(qrow) {
-                    *o += ds * x;
-                }
-                let dvrow = dv_g.row_mut(kj);
-                for (o, &x) in dvrow.iter_mut().zip(dorow) {
-                    *o += p * x;
-                }
+    let spans = query_spans(nq, nk, spec, threads);
+    if spans.len() <= 1 {
+        let mut scores = vec![0.0f32; tile];
+        for i in 0..nq {
+            let lim = spec.row_limit(i, nk);
+            if lim == 0 || row_sum[i] <= 0.0 {
+                continue;
             }
-            t0 += tn;
+            let (dk_flat, dv_flat) = (dk.data_mut(), dv_g.data_mut());
+            softmax_bwd_row(
+                q,
+                k,
+                v,
+                out,
+                d_out,
+                i,
+                lim,
+                row_max[i],
+                1.0 / row_sum[i],
+                scale,
+                tile,
+                &mut scores,
+                dq.row_mut(i),
+                dk_flat,
+                dv_flat,
+            );
         }
-        dq.row_mut(i).copy_from_slice(&dqrow);
+        return (dq, dk, dv_g);
+    }
+    let mut dk_parts: Vec<Vec<f32>> = spans.iter().map(|_| vec![0.0f32; nk * d]).collect();
+    let mut dv_parts: Vec<Vec<f32>> = spans.iter().map(|_| vec![0.0f32; nk * dv]).collect();
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(spans.len());
+        let mut dq_rest = dq.data_mut();
+        for (&(row0, len), (dk_p, dv_p)) in
+            spans.iter().zip(dk_parts.iter_mut().zip(dv_parts.iter_mut()))
+        {
+            let (dq_c, dq_t) = std::mem::take(&mut dq_rest).split_at_mut(len * d);
+            dq_rest = dq_t;
+            tasks.push(Box::new(move || {
+                let mut scores = vec![0.0f32; tile];
+                for r in 0..len {
+                    let i = row0 + r;
+                    let lim = spec.row_limit(i, nk);
+                    if lim == 0 || row_sum[i] <= 0.0 {
+                        continue;
+                    }
+                    softmax_bwd_row(
+                        q,
+                        k,
+                        v,
+                        out,
+                        d_out,
+                        i,
+                        lim,
+                        row_max[i],
+                        1.0 / row_sum[i],
+                        scale,
+                        tile,
+                        &mut scores,
+                        &mut dq_c[r * d..(r + 1) * d],
+                        dk_p,
+                        dv_p,
+                    );
+                }
+            }));
+        }
+        crate::util::compute_pool::scope(tasks);
+    }
+    // Fixed span-order reduction: span 0's contributions land first,
+    // then span 1's, … — the association is a function of the span
+    // list alone, never of pool scheduling.
+    for dk_p in &dk_parts {
+        for (a, b) in dk.data_mut().iter_mut().zip(dk_p) {
+            *a += b;
+        }
+    }
+    for dv_p in &dv_parts {
+        for (a, b) in dv_g.data_mut().iter_mut().zip(dv_p) {
+            *a += b;
+        }
     }
     (dq, dk, dv_g)
 }
@@ -486,6 +708,433 @@ pub fn linear_attention_spec_bwd(
     (d_phi_q, d_phi_k, d_v)
 }
 
+/// [`linear_attention_spec_bwd`] on the compute pool: the reverse-sweep
+/// backward with both sweeps chunked exactly like
+/// [`linear_attention_causal`](super::linear_attention_causal)'s
+/// forward recurrence.  `chunk` is the state-carry granularity
+/// (0 = 128 rows), `threads` the task count (0 = auto).
+///
+/// Causal specs run six phases — per-chunk prefix partials, serial
+/// exclusive prefix carries, parallel per-chunk `dφq` replay, then the
+/// mirror for the suffix: per-chunk reverse partials, serial exclusive
+/// *suffix* carries, parallel per-chunk `dφk`/`dv` replay.  Summation
+/// order per chunk is fixed, so results depend on `chunk` but never on
+/// the worker count — the same determinism contract as the forward.
+/// Non-causal specs use per-task state partials merged in fixed range
+/// order plus row-local `dφq`/`dφk`/`dv` spans.  `threads <= 1` takes
+/// the serial path byte-for-byte.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_attention_spec_bwd_par(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    d_out: &Mat,
+    chunk: usize,
+    threads: usize,
+) -> (Mat, Mat, Mat) {
+    let t = crate::tensor::resolve_threads(threads);
+    let nq = phi_q.rows();
+    if t <= 1 || nq <= 1 {
+        return linear_attention_spec_bwd(phi_q, phi_k, v, spec, out, d_out);
+    }
+    assert_eq!(phi_q.cols(), phi_k.cols(), "feature dims differ");
+    assert_eq!(phi_k.rows(), v.rows(), "key/value row mismatch");
+    assert_eq!(out.shape(), (phi_q.rows(), v.cols()), "out shape mismatch");
+    assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
+    let m = phi_q.cols();
+    let nk = phi_k.rows();
+    let dv = v.cols();
+    let mut d_phi_q = Mat::zeros(nq, m);
+    let mut d_phi_k = Mat::zeros(nk, m);
+    let mut d_v = Mat::zeros(nk, dv);
+    if dv == 0 || m == 0 {
+        return (d_phi_q, d_phi_k, d_v);
+    }
+    let kl = spec.key_limit(nk);
+    let mut inv_den = vec![0.0f32; nq];
+    let mut dden = vec![0.0f32; nq];
+    let chunk = if chunk == 0 { 128 } else { chunk };
+
+    if spec.causal {
+        assert_eq!(nq, nk, "causal linear backward requires aligned q/k row counts");
+        let n_chunks = nq.div_ceil(chunk);
+        let groups = t.min(n_chunks);
+        let chunks_per = n_chunks.div_ceil(groups);
+
+        // F1: per-chunk (Σ φ(k)vᵀ, Σ φ(k)) prefix partials over live
+        // key rows — identical to the forward recurrence's phase 1.
+        let mut kv_part = vec![0.0f32; n_chunks * m * dv];
+        let mut z_part = vec![0.0f32; n_chunks * m];
+        {
+            let kv_groups = kv_part.chunks_mut(chunks_per * m * dv);
+            let z_groups = z_part.chunks_mut(chunks_per * m);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = kv_groups
+                .zip(z_groups)
+                .enumerate()
+                .map(|(gi, (kv_g, z_g))| {
+                    Box::new(move || {
+                        let per_chunk = kv_g.chunks_mut(m * dv).zip(z_g.chunks_mut(m));
+                        for (ci, (kv_c, z_c)) in per_chunk.enumerate() {
+                            let c = gi * chunks_per + ci;
+                            let lo = c * chunk;
+                            let hi = ((c + 1) * chunk).min(nq).min(kl);
+                            for i in lo..hi.max(lo) {
+                                kernels::accumulate_state(kv_c, z_c, phi_k.row(i), v.row(i), dv);
+                            }
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            crate::util::compute_pool::scope(tasks);
+        }
+
+        // F2 (serial): exclusive prefix carries.
+        let mut carry_kv = vec![0.0f32; n_chunks * m * dv];
+        let mut carry_z = vec![0.0f32; n_chunks * m];
+        for c in 1..n_chunks {
+            let (prev_kv, cur_kv) = carry_kv.split_at_mut(c * m * dv);
+            let prev_kv = &prev_kv[(c - 1) * m * dv..];
+            let part_kv = &kv_part[(c - 1) * m * dv..c * m * dv];
+            for ((o, &a), &b) in cur_kv[..m * dv].iter_mut().zip(prev_kv).zip(part_kv) {
+                *o = a + b;
+            }
+            let (prev_z, cur_z) = carry_z.split_at_mut(c * m);
+            let prev_z = &prev_z[(c - 1) * m..];
+            let part_z = &z_part[(c - 1) * m..c * m];
+            for ((o, &a), &b) in cur_z[..m].iter_mut().zip(prev_z).zip(part_z) {
+                *o = a + b;
+            }
+        }
+
+        // F3: each chunk group replays its rows on its prefix carry —
+        // dφq rows plus per-row (1/den, dden), all span-local writes.
+        {
+            let carry_kv = carry_kv.as_slice();
+            let carry_z = carry_z.as_slice();
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(groups);
+            let mut dq_rest = d_phi_q.data_mut();
+            let mut iv_rest = inv_den.as_mut_slice();
+            let mut dd_rest = dden.as_mut_slice();
+            for gi in 0..groups {
+                let lo_c = gi * chunks_per;
+                let hi_c = ((gi + 1) * chunks_per).min(n_chunks);
+                if lo_c >= hi_c {
+                    continue;
+                }
+                let lo = lo_c * chunk;
+                let rows = (hi_c * chunk).min(nq) - lo;
+                let (dq_g, dq_t) = std::mem::take(&mut dq_rest).split_at_mut(rows * m);
+                dq_rest = dq_t;
+                let (iv_g, iv_t) = std::mem::take(&mut iv_rest).split_at_mut(rows);
+                iv_rest = iv_t;
+                let (dd_g, dd_t) = std::mem::take(&mut dd_rest).split_at_mut(rows);
+                dd_rest = dd_t;
+                tasks.push(Box::new(move || {
+                    let mut state_kv = vec![0.0f32; m * dv];
+                    let mut state_z = vec![0.0f32; m];
+                    for c in lo_c..hi_c {
+                        state_kv.copy_from_slice(&carry_kv[c * m * dv..(c + 1) * m * dv]);
+                        state_z.copy_from_slice(&carry_z[c * m..(c + 1) * m]);
+                        for i in c * chunk..((c + 1) * chunk).min(nq) {
+                            if i < kl {
+                                kernels::accumulate_state(
+                                    &mut state_kv,
+                                    &mut state_z,
+                                    phi_k.row(i),
+                                    v.row(i),
+                                    dv,
+                                );
+                            }
+                            let r = i - lo;
+                            row_linear_bwd_q(
+                                phi_q.row(i),
+                                d_out.row(i),
+                                out.row(i),
+                                &state_kv,
+                                &state_z,
+                                dv,
+                                &mut dq_g[r * m..(r + 1) * m],
+                                &mut iv_g[r],
+                                &mut dd_g[r],
+                            );
+                        }
+                    }
+                }));
+            }
+            crate::util::compute_pool::scope(tasks);
+        }
+
+        // B1: per-chunk reverse-suffix partials (Σ φ(q)dnumᵀ, Σ dden φ(q)),
+        // each chunk's rows folded in reverse order like the serial sweep.
+        let inv_den_ref = inv_den.as_slice();
+        let dden_ref = dden.as_slice();
+        let mut g_part = vec![0.0f32; n_chunks * m * dv];
+        let mut h_part = vec![0.0f32; n_chunks * m];
+        {
+            let g_groups = g_part.chunks_mut(chunks_per * m * dv);
+            let h_groups = h_part.chunks_mut(chunks_per * m);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = g_groups
+                .zip(h_groups)
+                .enumerate()
+                .map(|(gi, (g_g, h_g))| {
+                    Box::new(move || {
+                        let per_chunk = g_g.chunks_mut(m * dv).zip(h_g.chunks_mut(m));
+                        for (ci, (g_c, h_c)) in per_chunk.enumerate() {
+                            let c = gi * chunks_per + ci;
+                            let lo = c * chunk;
+                            let hi = ((c + 1) * chunk).min(nq);
+                            for i in (lo..hi).rev() {
+                                accumulate_reverse_state(
+                                    g_c,
+                                    h_c,
+                                    phi_q.row(i),
+                                    d_out.row(i),
+                                    inv_den_ref[i],
+                                    dden_ref[i],
+                                    dv,
+                                );
+                            }
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            crate::util::compute_pool::scope(tasks);
+        }
+
+        // B2 (serial): exclusive *suffix* carries — chunk c starts from
+        // the reverse state of every chunk above it.
+        let mut carry_g = vec![0.0f32; n_chunks * m * dv];
+        let mut carry_h = vec![0.0f32; n_chunks * m];
+        for c in (0..n_chunks.saturating_sub(1)).rev() {
+            let (cur_g, next_g) = carry_g.split_at_mut((c + 1) * m * dv);
+            let cur_g = &mut cur_g[c * m * dv..];
+            let next_g = &next_g[..m * dv];
+            let part_g = &g_part[(c + 1) * m * dv..(c + 2) * m * dv];
+            for ((o, &a), &b) in cur_g.iter_mut().zip(next_g).zip(part_g) {
+                *o = a + b;
+            }
+            let (cur_h, next_h) = carry_h.split_at_mut((c + 1) * m);
+            let cur_h = &mut cur_h[c * m..];
+            let next_h = &next_h[..m];
+            let part_h = &h_part[(c + 1) * m..(c + 2) * m];
+            for ((o, &a), &b) in cur_h.iter_mut().zip(next_h).zip(part_h) {
+                *o = a + b;
+            }
+        }
+
+        // B3: each chunk group replays its rows (in reverse) on its
+        // suffix carry — dφk / dv rows for the live indices.
+        {
+            let carry_g = carry_g.as_slice();
+            let carry_h = carry_h.as_slice();
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(groups);
+            let mut dk_rest = d_phi_k.data_mut();
+            let mut dvm_rest = d_v.data_mut();
+            for gi in 0..groups {
+                let lo_c = gi * chunks_per;
+                let hi_c = ((gi + 1) * chunks_per).min(n_chunks);
+                if lo_c >= hi_c {
+                    continue;
+                }
+                let lo = lo_c * chunk;
+                let rows = (hi_c * chunk).min(nq) - lo;
+                let (dk_g, dk_t) = std::mem::take(&mut dk_rest).split_at_mut(rows * m);
+                dk_rest = dk_t;
+                let (dvm_g, dvm_t) = std::mem::take(&mut dvm_rest).split_at_mut(rows * dv);
+                dvm_rest = dvm_t;
+                tasks.push(Box::new(move || {
+                    let mut state_g = vec![0.0f32; m * dv];
+                    let mut state_h = vec![0.0f32; m];
+                    for c in (lo_c..hi_c).rev() {
+                        state_g.copy_from_slice(&carry_g[c * m * dv..(c + 1) * m * dv]);
+                        state_h.copy_from_slice(&carry_h[c * m..(c + 1) * m]);
+                        for i in (c * chunk..((c + 1) * chunk).min(nq)).rev() {
+                            accumulate_reverse_state(
+                                &mut state_g,
+                                &mut state_h,
+                                phi_q.row(i),
+                                d_out.row(i),
+                                inv_den_ref[i],
+                                dden_ref[i],
+                                dv,
+                            );
+                            if i < kl {
+                                let r = i - lo;
+                                row_linear_bwd_k(
+                                    phi_k.row(i),
+                                    v.row(i),
+                                    &state_g,
+                                    &state_h,
+                                    dv,
+                                    &mut dk_g[r * m..(r + 1) * m],
+                                    &mut dvm_g[r * dv..(r + 1) * dv],
+                                );
+                            }
+                        }
+                    }
+                }));
+            }
+            crate::util::compute_pool::scope(tasks);
+        }
+    } else {
+        // Phase A: shared prefix state over the live keys from
+        // per-*chunk* partials merged serially in chunk order — the
+        // summation order is a function of (kl, chunk) alone, never of
+        // the worker count, mirroring the causal path's contract.
+        let mut s_state = vec![0.0f32; m * dv];
+        let mut z_state = vec![0.0f32; m];
+        if kl > 0 {
+            let n_chunks = kl.div_ceil(chunk);
+            let groups = t.min(n_chunks);
+            let chunks_per = n_chunks.div_ceil(groups);
+            let mut kv_part = vec![0.0f32; n_chunks * m * dv];
+            let mut z_part = vec![0.0f32; n_chunks * m];
+            {
+                let kv_groups = kv_part.chunks_mut(chunks_per * m * dv);
+                let z_groups = z_part.chunks_mut(chunks_per * m);
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = kv_groups
+                    .zip(z_groups)
+                    .enumerate()
+                    .map(|(gi, (kv_g, z_g))| {
+                        Box::new(move || {
+                            let per_chunk = kv_g.chunks_mut(m * dv).zip(z_g.chunks_mut(m));
+                            for (ci, (kv_c, z_c)) in per_chunk.enumerate() {
+                                let c = gi * chunks_per + ci;
+                                let lo = c * chunk;
+                                let hi = ((c + 1) * chunk).min(kl);
+                                for j in lo..hi {
+                                    kernels::accumulate_state(
+                                        kv_c,
+                                        z_c,
+                                        phi_k.row(j),
+                                        v.row(j),
+                                        dv,
+                                    );
+                                }
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                crate::util::compute_pool::scope(tasks);
+            }
+            for c in 0..n_chunks {
+                for (a, b) in s_state.iter_mut().zip(&kv_part[c * m * dv..(c + 1) * m * dv]) {
+                    *a += b;
+                }
+                for (a, b) in z_state.iter_mut().zip(&z_part[c * m..(c + 1) * m]) {
+                    *a += b;
+                }
+            }
+        }
+
+        // Phase B: query chunks — row-local dφq plus per-chunk reverse
+        // (G, h) partials, merged serially in chunk order (same
+        // worker-count independence as phase A).
+        let mut g_state = vec![0.0f32; m * dv];
+        let mut h_state = vec![0.0f32; m];
+        {
+            let s_ref = s_state.as_slice();
+            let z_ref = z_state.as_slice();
+            let n_chunks = nq.div_ceil(chunk);
+            let groups = t.min(n_chunks);
+            let chunks_per = n_chunks.div_ceil(groups);
+            let mut g_part = vec![0.0f32; n_chunks * m * dv];
+            let mut h_part = vec![0.0f32; n_chunks * m];
+            {
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(groups);
+                let mut dq_rest = d_phi_q.data_mut();
+                let mut iv_rest = inv_den.as_mut_slice();
+                let mut dd_rest = dden.as_mut_slice();
+                let g_groups = g_part.chunks_mut(chunks_per * m * dv);
+                let h_groups = h_part.chunks_mut(chunks_per * m);
+                for (gi, (g_g, h_g)) in g_groups.zip(h_groups).enumerate() {
+                    let lo = gi * chunks_per * chunk;
+                    let rows = ((gi + 1) * chunks_per * chunk).min(nq) - lo;
+                    let (dq_g, dq_t) = std::mem::take(&mut dq_rest).split_at_mut(rows * m);
+                    dq_rest = dq_t;
+                    let (iv_g, iv_t) = std::mem::take(&mut iv_rest).split_at_mut(rows);
+                    iv_rest = iv_t;
+                    let (dd_g, dd_t) = std::mem::take(&mut dd_rest).split_at_mut(rows);
+                    dd_rest = dd_t;
+                    tasks.push(Box::new(move || {
+                        let per_chunk = g_g.chunks_mut(m * dv).zip(h_g.chunks_mut(m));
+                        for (ci, (g_c, h_c)) in per_chunk.enumerate() {
+                            let c = gi * chunks_per + ci;
+                            for i in c * chunk..((c + 1) * chunk).min(nq) {
+                                let r = i - lo;
+                                row_linear_bwd_q(
+                                    phi_q.row(i),
+                                    d_out.row(i),
+                                    out.row(i),
+                                    s_ref,
+                                    z_ref,
+                                    dv,
+                                    &mut dq_g[r * m..(r + 1) * m],
+                                    &mut iv_g[r],
+                                    &mut dd_g[r],
+                                );
+                                accumulate_reverse_state(
+                                    g_c,
+                                    h_c,
+                                    phi_q.row(i),
+                                    d_out.row(i),
+                                    iv_g[r],
+                                    dd_g[r],
+                                    dv,
+                                );
+                            }
+                        }
+                    }));
+                }
+                crate::util::compute_pool::scope(tasks);
+            }
+            for c in 0..n_chunks {
+                for (a, b) in g_state.iter_mut().zip(&g_part[c * m * dv..(c + 1) * m * dv]) {
+                    *a += b;
+                }
+                for (a, b) in h_state.iter_mut().zip(&h_part[c * m..(c + 1) * m]) {
+                    *a += b;
+                }
+            }
+        }
+
+        // Phase C: live key spans — row-local dφk / dv from the shared
+        // reduced (G, h).
+        if kl > 0 {
+            let g_ref = g_state.as_slice();
+            let h_ref = h_state.as_slice();
+            let kspans = crate::tensor::partition_rows(kl, t);
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(kspans.len());
+            let mut dk_rest = &mut d_phi_k.data_mut()[..kl * m];
+            let mut dvm_rest = &mut d_v.data_mut()[..kl * dv];
+            for &(row0, len) in &kspans {
+                let (dk_g, dk_t) = std::mem::take(&mut dk_rest).split_at_mut(len * m);
+                dk_rest = dk_t;
+                let (dvm_g, dvm_t) = std::mem::take(&mut dvm_rest).split_at_mut(len * dv);
+                dvm_rest = dvm_t;
+                tasks.push(Box::new(move || {
+                    for r in 0..len {
+                        let j = row0 + r;
+                        row_linear_bwd_k(
+                            phi_k.row(j),
+                            v.row(j),
+                            g_ref,
+                            h_ref,
+                            dv,
+                            &mut dk_g[r * m..(r + 1) * m],
+                            &mut dvm_g[r * dv..(r + 1) * dv],
+                        );
+                    }
+                }));
+            }
+            crate::util::compute_pool::scope(tasks);
+        }
+    }
+    (d_phi_q, d_phi_k, d_v)
+}
+
 // ---------------------------------------------------------------------------
 // Feature-map chain rules (φ-space gradients -> q/k space)
 // ---------------------------------------------------------------------------
@@ -557,6 +1206,59 @@ pub fn fused_quadratic_attention_spec_fwd_train(
     spec: &AttnSpec,
     tile: usize,
 ) -> (Mat, Vec<f32>) {
+    fused_quadratic_attention_spec_fwd_train_par(q, k, v, spec, tile, 1)
+}
+
+/// One query row of the quadratic training forward; returns the row's
+/// pre-ε denominator.  Shared by the serial and pooled entry points
+/// (row math is row-local, so partitioning never changes results).
+#[allow(clippy::too_many_arguments)]
+fn quadratic_fwd_train_row(
+    qrow: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    d: usize,
+    dv: usize,
+    lim: usize,
+    tile: usize,
+    orow: &mut [f32],
+    scores: &mut [f32],
+) -> f32 {
+    let mut den_i = 0.0f32;
+    let mut t0 = 0;
+    while t0 < lim {
+        let tn = tile.min(lim - t0);
+        let ktile = &kd[t0 * d..(t0 + tn) * d];
+        crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+        for (j, &s) in scores[..tn].iter().enumerate() {
+            let w = s * s;
+            den_i += w;
+            let vrow = &vd[(t0 + j) * dv..(t0 + j + 1) * dv];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += w * vv;
+            }
+        }
+        t0 += tn;
+    }
+    let inv = 1.0 / (den_i + kernels::EPS);
+    for o in orow.iter_mut() {
+        *o *= inv;
+    }
+    den_i
+}
+
+/// [`fused_quadratic_attention_spec_fwd_train`] with query rows
+/// partitioned across `threads` compute-pool tasks (0 = auto) —
+/// bitwise identical to the serial walk at any thread count (row-local
+/// math, like the softmax variant).
+pub fn fused_quadratic_attention_spec_fwd_train_par(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    tile: usize,
+    threads: usize,
+) -> (Mat, Vec<f32>) {
     assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
     assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
     let (nq, d) = q.shape();
@@ -568,33 +1270,55 @@ pub fn fused_quadratic_attention_spec_fwd_train(
         return (out, den);
     }
     let tile = kernels::resolve_tile(tile).min(nk);
-    let mut scores = vec![0.0f32; tile];
     let (kd, vd) = (k.data(), v.data());
-    for i in 0..nq {
-        let lim = spec.row_limit(i, nk);
-        let qrow = q.row(i);
-        let orow = out.row_mut(i);
-        let mut den_i = 0.0f32;
-        let mut t0 = 0;
-        while t0 < lim {
-            let tn = tile.min(lim - t0);
-            let ktile = &kd[t0 * d..(t0 + tn) * d];
-            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
-            for (j, &s) in scores[..tn].iter().enumerate() {
-                let w = s * s;
-                den_i += w;
-                let vrow = &vd[(t0 + j) * dv..(t0 + j + 1) * dv];
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += w * vv;
+    let spans = query_spans(nq, nk, spec, threads);
+    if spans.len() <= 1 {
+        let mut scores = vec![0.0f32; tile];
+        for i in 0..nq {
+            let lim = spec.row_limit(i, nk);
+            den[i] = quadratic_fwd_train_row(
+                q.row(i),
+                kd,
+                vd,
+                d,
+                dv,
+                lim,
+                tile,
+                out.row_mut(i),
+                &mut scores,
+            );
+        }
+        return (out, den);
+    }
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(spans.len());
+        let mut out_rest = out.data_mut();
+        let mut den_rest = den.as_mut_slice();
+        for &(row0, len) in &spans {
+            let (o_c, o_t) = std::mem::take(&mut out_rest).split_at_mut(len * dv);
+            out_rest = o_t;
+            let (den_c, den_t) = std::mem::take(&mut den_rest).split_at_mut(len);
+            den_rest = den_t;
+            tasks.push(Box::new(move || {
+                let mut scores = vec![0.0f32; tile];
+                for r in 0..len {
+                    let i = row0 + r;
+                    let lim = spec.row_limit(i, nk);
+                    den_c[r] = quadratic_fwd_train_row(
+                        q.row(i),
+                        kd,
+                        vd,
+                        d,
+                        dv,
+                        lim,
+                        tile,
+                        &mut o_c[r * dv..(r + 1) * dv],
+                        &mut scores,
+                    );
                 }
-            }
-            t0 += tn;
+            }));
         }
-        let inv = 1.0 / (den_i + kernels::EPS);
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
-        den[i] = den_i;
+        crate::util::compute_pool::scope(tasks);
     }
     (out, den)
 }
@@ -614,6 +1338,89 @@ pub fn fused_quadratic_attention_spec_bwd(
     d_out: &Mat,
     tile: usize,
 ) -> (Mat, Mat, Mat) {
+    fused_quadratic_attention_spec_bwd_par(q, k, v, spec, out, den, d_out, tile, 1)
+}
+
+/// One query row of the quadratic backward; `dk`/`dv_g` are flat
+/// `(nk, d)` / `(nk, dv)` accumulation buffers (full matrices on the
+/// serial path, span partials on the pooled path).
+#[allow(clippy::too_many_arguments)]
+fn quadratic_bwd_row(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    out: &Mat,
+    d_out: &Mat,
+    i: usize,
+    lim: usize,
+    inv: f32,
+    tile: usize,
+    scores: &mut [f32],
+    dqrow: &mut [f32],
+    dk: &mut [f32],
+    dv_g: &mut [f32],
+) {
+    let d = q.cols();
+    let dv = v.cols();
+    let kd = k.data();
+    let qrow = q.row(i);
+    let dorow = d_out.row(i);
+    let mut delta = 0.0f64;
+    for (a, b) in dorow.iter().zip(out.row(i)) {
+        delta += *a as f64 * *b as f64;
+    }
+    // dden_i = −(O_i · dO_i) / denε — the normalizer's pullback.
+    let dden = -(delta as f32) * inv;
+    dqrow.fill(0.0);
+    let mut t0 = 0;
+    while t0 < lim {
+        let tn = tile.min(lim - t0);
+        let ktile = &kd[t0 * d..(t0 + tn) * d];
+        crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
+        for j in 0..tn {
+            let kj = t0 + j;
+            let s = scores[j];
+            let vrow = v.row(kj);
+            let mut dp = 0.0f32;
+            for (a, b) in dorow.iter().zip(vrow) {
+                dp += a * b;
+            }
+            let dw = dp * inv + dden;
+            let ds = 2.0 * s * dw;
+            let w = s * s;
+            let krow = k.row(kj);
+            for (o, &x) in dqrow.iter_mut().zip(krow) {
+                *o += ds * x;
+            }
+            let dkrow = &mut dk[kj * d..(kj + 1) * d];
+            for (o, &x) in dkrow.iter_mut().zip(qrow) {
+                *o += ds * x;
+            }
+            let dvrow = &mut dv_g[kj * dv..(kj + 1) * dv];
+            for (o, &x) in dvrow.iter_mut().zip(dorow) {
+                *o += w * inv * x;
+            }
+        }
+        t0 += tn;
+    }
+}
+
+/// [`fused_quadratic_attention_spec_bwd`] with query rows partitioned
+/// across `threads` compute-pool tasks (0 = auto): span-local `dq`
+/// (bitwise) plus per-span `dk`/`dv` partials reduced in fixed span
+/// order, mirroring [`fused_softmax_attention_spec_bwd_par`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_quadratic_attention_spec_bwd_par(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    den: &[f32],
+    d_out: &Mat,
+    tile: usize,
+    threads: usize,
+) -> (Mat, Mat, Mat) {
     assert_eq!(q.cols(), k.cols(), "q/k head dims differ");
     assert_eq!(k.rows(), v.rows(), "key/value row mismatch");
     assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
@@ -628,56 +1435,82 @@ pub fn fused_quadratic_attention_spec_bwd(
         return (dq, dk, dv_g);
     }
     let tile = kernels::resolve_tile(tile).min(nk);
-    let mut scores = vec![0.0f32; tile];
-    let mut dqrow = vec![0.0f32; d];
-    let kd = k.data();
-    for i in 0..nq {
-        let lim = spec.row_limit(i, nk);
-        if lim == 0 {
-            continue;
-        }
-        let inv = 1.0 / (den[i] + kernels::EPS);
-        let qrow = q.row(i);
-        let dorow = d_out.row(i);
-        let mut delta = 0.0f64;
-        for (a, b) in dorow.iter().zip(out.row(i)) {
-            delta += *a as f64 * *b as f64;
-        }
-        // dden_i = −(O_i · dO_i) / denε — the normalizer's pullback.
-        let dden = -(delta as f32) * inv;
-        dqrow.fill(0.0);
-        let mut t0 = 0;
-        while t0 < lim {
-            let tn = tile.min(lim - t0);
-            let ktile = &kd[t0 * d..(t0 + tn) * d];
-            crate::tensor::micro::matmul_t_block(qrow, ktile, &mut scores[..tn], 1, d, tn);
-            for j in 0..tn {
-                let kj = t0 + j;
-                let s = scores[j];
-                let vrow = v.row(kj);
-                let mut dp = 0.0f32;
-                for (a, b) in dorow.iter().zip(vrow) {
-                    dp += a * b;
-                }
-                let dw = dp * inv + dden;
-                let ds = 2.0 * s * dw;
-                let w = s * s;
-                let krow = k.row(kj);
-                for (o, &x) in dqrow.iter_mut().zip(krow) {
-                    *o += ds * x;
-                }
-                let dkrow = dk.row_mut(kj);
-                for (o, &x) in dkrow.iter_mut().zip(qrow) {
-                    *o += ds * x;
-                }
-                let dvrow = dv_g.row_mut(kj);
-                for (o, &x) in dvrow.iter_mut().zip(dorow) {
-                    *o += w * inv * x;
-                }
+    let spans = query_spans(nq, nk, spec, threads);
+    if spans.len() <= 1 {
+        let mut scores = vec![0.0f32; tile];
+        for i in 0..nq {
+            let lim = spec.row_limit(i, nk);
+            if lim == 0 {
+                continue;
             }
-            t0 += tn;
+            let inv = 1.0 / (den[i] + kernels::EPS);
+            let (dk_flat, dv_flat) = (dk.data_mut(), dv_g.data_mut());
+            quadratic_bwd_row(
+                q,
+                k,
+                v,
+                out,
+                d_out,
+                i,
+                lim,
+                inv,
+                tile,
+                &mut scores,
+                dq.row_mut(i),
+                dk_flat,
+                dv_flat,
+            );
         }
-        dq.row_mut(i).copy_from_slice(&dqrow);
+        return (dq, dk, dv_g);
+    }
+    let mut dk_parts: Vec<Vec<f32>> = spans.iter().map(|_| vec![0.0f32; nk * d]).collect();
+    let mut dv_parts: Vec<Vec<f32>> = spans.iter().map(|_| vec![0.0f32; nk * dv]).collect();
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(spans.len());
+        let mut dq_rest = dq.data_mut();
+        for (&(row0, len), (dk_p, dv_p)) in
+            spans.iter().zip(dk_parts.iter_mut().zip(dv_parts.iter_mut()))
+        {
+            let (dq_c, dq_t) = std::mem::take(&mut dq_rest).split_at_mut(len * d);
+            dq_rest = dq_t;
+            tasks.push(Box::new(move || {
+                let mut scores = vec![0.0f32; tile];
+                for r in 0..len {
+                    let i = row0 + r;
+                    let lim = spec.row_limit(i, nk);
+                    if lim == 0 {
+                        continue;
+                    }
+                    let inv = 1.0 / (den[i] + kernels::EPS);
+                    quadratic_bwd_row(
+                        q,
+                        k,
+                        v,
+                        out,
+                        d_out,
+                        i,
+                        lim,
+                        inv,
+                        tile,
+                        &mut scores,
+                        &mut dq_c[r * d..(r + 1) * d],
+                        dk_p,
+                        dv_p,
+                    );
+                }
+            }));
+        }
+        crate::util::compute_pool::scope(tasks);
+    }
+    for dk_p in &dk_parts {
+        for (a, b) in dk.data_mut().iter_mut().zip(dk_p) {
+            *a += b;
+        }
+    }
+    for dv_p in &dv_parts {
+        for (a, b) in dv_g.data_mut().iter_mut().zip(dv_p) {
+            *a += b;
+        }
     }
     (dq, dk, dv_g)
 }

@@ -146,7 +146,7 @@ fn resolve_unroll(unroll: usize) -> usize {
 }
 
 /// Run `work(row0, len, chunk)` over contiguous query-row spans of a
-/// row-major output buffer, one scoped worker per span — like
+/// row-major output buffer, one compute-pool task per span — like
 /// [`par_row_spans`](crate::tensor::par_row_spans), but when the spec
 /// is causal the spans are cut on cumulative *live pairs* instead of
 /// row counts: causal work is triangular, so an even row split would
@@ -167,21 +167,30 @@ fn par_query_spans(
         crate::tensor::par_row_spans(buf, nq, row_len, threads, work);
         return;
     }
-    std::thread::scope(|scope| {
-        let work = &work;
-        let mut rest = buf;
-        for (row0, len) in balanced_causal_spans(nq, nk, spec, threads) {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len * row_len);
-            rest = tail;
-            scope.spawn(move || work(row0, len, chunk));
+    let spans = balanced_causal_spans(nq, nk, spec, threads);
+    if spans.len() <= 1 {
+        if let Some(&(row0, len)) = spans.first() {
+            work(row0, len, buf);
         }
-    });
+        return;
+    }
+    let work = &work;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(spans.len());
+    let mut rest = buf;
+    for (row0, len) in spans {
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len * row_len);
+        rest = tail;
+        tasks.push(Box::new(move || work(row0, len, chunk)));
+    }
+    crate::util::compute_pool::scope(tasks);
 }
 
 /// Contiguous spans of `nq` query rows with roughly equal cumulative
 /// live-pair work under a causal spec (at most `threads` spans, never
-/// empty, covering every row in order).
-fn balanced_causal_spans(
+/// empty, covering every row in order).  Shared with the backward
+/// kernels in [`super::grad`], whose causal dq/row-stat phases have the
+/// same triangular cost profile.
+pub(crate) fn balanced_causal_spans(
     nq: usize,
     nk: usize,
     spec: &AttnSpec,
@@ -913,23 +922,28 @@ pub fn linear_attention_causal_dispatch(
     // rows, accumulated in parallel chunk groups.
     let mut kv_part = vec![0.0f32; n_chunks * m * dv];
     let mut z_part = vec![0.0f32; n_chunks * m];
-    std::thread::scope(|scope| {
+    {
         let kv_groups = kv_part.chunks_mut(chunks_per * m * dv);
         let z_groups = z_part.chunks_mut(chunks_per * m);
-        for (gi, (kv_g, z_g)) in kv_groups.zip(z_groups).enumerate() {
-            scope.spawn(move || {
-                let per_chunk = kv_g.chunks_mut(m * dv).zip(z_g.chunks_mut(m));
-                for (ci, (kv_c, z_c)) in per_chunk.enumerate() {
-                    let c = gi * chunks_per + ci;
-                    let lo = c * chunk;
-                    let hi = ((c + 1) * chunk).min(n).min(kl);
-                    for i in lo..hi.max(lo) {
-                        accumulate_state_dispatch(kern, kv_c, z_c, phi_k.row(i), v.row(i), dv);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = kv_groups
+            .zip(z_groups)
+            .enumerate()
+            .map(|(gi, (kv_g, z_g))| {
+                Box::new(move || {
+                    let per_chunk = kv_g.chunks_mut(m * dv).zip(z_g.chunks_mut(m));
+                    for (ci, (kv_c, z_c)) in per_chunk.enumerate() {
+                        let c = gi * chunks_per + ci;
+                        let lo = c * chunk;
+                        let hi = ((c + 1) * chunk).min(n).min(kl);
+                        for i in lo..hi.max(lo) {
+                            accumulate_state_dispatch(kern, kv_c, z_c, phi_k.row(i), v.row(i), dv);
+                        }
                     }
-                }
-            });
-        }
-    });
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        crate::util::compute_pool::scope(tasks);
+    }
 
     // Phase 2 (serial): exclusive prefix over the chunk partials — the
     // state each chunk starts from.
@@ -953,9 +967,12 @@ pub fn linear_attention_causal_dispatch(
     // Phase 3: each chunk replays its rows on its carry, in parallel.
     let carry_kv = carry_kv.as_slice();
     let carry_z = carry_z.as_slice();
-    std::thread::scope(|scope| {
-        for (gi, out_g) in out.data_mut().chunks_mut(chunks_per * chunk * dv).enumerate() {
-            scope.spawn(move || {
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .data_mut()
+        .chunks_mut(chunks_per * chunk * dv)
+        .enumerate()
+        .map(|(gi, out_g)| {
+            Box::new(move || {
                 let mut state_kv = vec![0.0f32; m * dv];
                 let mut state_z = vec![0.0f32; m];
                 for (ci, out_c) in out_g.chunks_mut(chunk * dv).enumerate() {
@@ -992,9 +1009,10 @@ pub fn linear_attention_causal_dispatch(
                         }
                     }
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::util::compute_pool::scope(tasks);
     out
 }
 
@@ -1116,35 +1134,41 @@ pub(crate) fn linear_attention_streamed_prefix(
     let chunks_per = n_chunks.div_ceil(t1);
     let mut kv = vec![0.0f32; m * dv];
     let mut z = vec![0.0f32; m];
-    let partials: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for ti in 0..t1 {
-            let lo = ti * chunks_per * chunk;
-            let hi = ((ti + 1) * chunks_per * chunk).min(nk);
-            if lo >= hi {
-                continue;
-            }
-            handles.push(scope.spawn(move || {
-                let mut kv_p = vec![0.0f32; m * dv];
-                let mut z_p = vec![0.0f32; m];
-                for i in lo..hi {
-                    let krow = phi_k.row(i);
-                    let vrow = v.row(i);
-                    for (f, &kf) in krow.iter().enumerate() {
-                        z_p[f] += kf;
-                        if kf != 0.0 {
-                            let dst = &mut kv_p[f * dv..(f + 1) * dv];
-                            for (o, &vv) in dst.iter_mut().zip(vrow) {
-                                *o += kf * vv;
+    // Live worker ranges, in index order: partials are pre-allocated
+    // per range and merged serially in that same order, so the
+    // summation order is a function of (nk, chunk, threads) alone —
+    // never of pool scheduling.
+    let ranges: Vec<(usize, usize)> = (0..t1)
+        .map(|ti| (ti * chunks_per * chunk, ((ti + 1) * chunks_per * chunk).min(nk)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect();
+    let mut partials: Vec<(Vec<f32>, Vec<f32>)> =
+        ranges.iter().map(|_| (vec![0.0f32; m * dv], vec![0.0f32; m])).collect();
+    {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = partials
+            .iter_mut()
+            .zip(&ranges)
+            .map(|(part, &(lo, hi))| {
+                Box::new(move || {
+                    let (kv_p, z_p) = part;
+                    for i in lo..hi {
+                        let krow = phi_k.row(i);
+                        let vrow = v.row(i);
+                        for (f, &kf) in krow.iter().enumerate() {
+                            z_p[f] += kf;
+                            if kf != 0.0 {
+                                let dst = &mut kv_p[f * dv..(f + 1) * dv];
+                                for (o, &vv) in dst.iter_mut().zip(vrow) {
+                                    *o += kf * vv;
+                                }
                             }
                         }
                     }
-                }
-                (kv_p, z_p)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        crate::util::compute_pool::scope(tasks);
+    }
     for (kv_p, z_p) in partials {
         for (a, b) in kv.iter_mut().zip(&kv_p) {
             *a += b;
@@ -1159,10 +1183,13 @@ pub(crate) fn linear_attention_streamed_prefix(
     let rows_per = nq.div_ceil(t2);
     let kv_ref = kv.as_slice();
     let z_ref = z.as_slice();
-    std::thread::scope(|scope| {
-        for (ti, chunk_rows) in out.data_mut().chunks_mut(rows_per * dv).enumerate() {
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .data_mut()
+        .chunks_mut(rows_per * dv)
+        .enumerate()
+        .map(|(ti, chunk_rows)| {
             let row0 = ti * rows_per;
-            scope.spawn(move || {
+            Box::new(move || {
                 let rows_here = chunk_rows.len() / dv;
                 for i in 0..rows_here {
                     let qrow = phi_q.row(row0 + i);
@@ -1182,9 +1209,10 @@ pub(crate) fn linear_attention_streamed_prefix(
                         *o *= inv;
                     }
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::util::compute_pool::scope(tasks);
     out
 }
 
@@ -1456,10 +1484,13 @@ pub fn par_blockdiag_attention_spec(
     let scale = spec.resolve_scale(d);
     let tiles_per = tiles.div_ceil(t);
     let mut out = Mat::zeros(n, dv);
-    std::thread::scope(|scope| {
-        for (gi, group) in out.data_mut().chunks_mut(tiles_per * block * dv).enumerate() {
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .data_mut()
+        .chunks_mut(tiles_per * block * dv)
+        .enumerate()
+        .map(|(gi, group)| {
             let tile0 = gi * tiles_per;
-            scope.spawn(move || {
+            Box::new(move || {
                 let tiles_here = group.len() / (block * dv);
                 for ti in 0..tiles_here {
                     let b0 = (tile0 + ti) * block;
@@ -1475,9 +1506,10 @@ pub fn par_blockdiag_attention_spec(
                         }
                     }
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::util::compute_pool::scope(tasks);
     out
 }
 

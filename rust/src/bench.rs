@@ -214,6 +214,15 @@ const SPEEDUP_PAIRS: &[(&str, &str)] = &[
     // backward classically lands at ~2-2.5x its forward.
     ("softmax_fused", "softmax_fused_bwd"),
     ("lln_streamed", "lln_bwd"),
+    // Pooled-vs-serial training backward: the compute-pool span/chunk
+    // parallelization of the same kernels (≈ thread count on an idle
+    // multi-core box, ≈ 1.0x on a single-core runner).
+    ("softmax_fused_bwd_par", "softmax_fused_bwd"),
+    ("lln_bwd_par", "lln_bwd"),
+    // Small-matmul fallback: outputs under PAR_MIN_ELEMS skip the pool,
+    // so par_matmul at tiny n must cost the same as plain matmul (≈
+    // 1.0x) — the row pair that pins the threshold.
+    ("par_matmul_small", "matmul_small"),
     // Monomorphized-vs-generic microkernel pairs: the same inner loops
     // with the head dim a compile-time const (D ∈ {32, 64, 128}) vs a
     // runtime value.  These are the rows the CI baseline gate watches
@@ -385,6 +394,10 @@ pub fn run_kernel_bench(
     const FULL: AttnSpec = AttnSpec::FULL;
     const CAUSAL: AttnSpec = AttnSpec::CAUSAL;
     let threads = crate::tensor::resolve_threads(params.threads);
+    // Warm the persistent pool before any timed row so the first
+    // pooled kernel never pays worker spawn/first-touch inside its
+    // sample window (the CI smoke invokes this path once up front).
+    crate::util::compute_pool::scope_rows(threads.max(2) * 8, threads.max(2), |_, _| {});
     let mut records: Vec<KernelRecord> = Vec::new();
     let push = |records: &mut Vec<KernelRecord>, name: &'static str, n: usize, r: &BenchResult| {
         records.push(KernelRecord {
@@ -613,6 +626,17 @@ pub fn run_kernel_bench(
                 })
                 .clone();
             push(&mut records, "softmax_fused_bwd", n, &r);
+
+            // The same backward through the compute pool at the
+            // session's resolved worker count.
+            let r = b
+                .run(&format!("softmax_fused_bwd_par n={n}"), 1.0, || {
+                    crate::attention::grad::fused_softmax_attention_spec_bwd_par(
+                        &q, &k, &v, &FULL, &o, &rm, &rs, &d_out, params.tile, params.threads,
+                    )
+                })
+                .clone();
+            push(&mut records, "softmax_fused_bwd_par", n, &r);
         }
         {
             let pq = crate::attention::lln_features(&q, 2.2);
@@ -628,7 +652,32 @@ pub fn run_kernel_bench(
                 })
                 .clone();
             push(&mut records, "lln_bwd", n, &r);
+
+            let r = b
+                .run(&format!("lln_bwd_par n={n}"), 1.0, || {
+                    crate::attention::grad::linear_attention_spec_bwd_par(
+                        &pq, &pk, &v, &FULL, &lout, &d_out, params.chunk, params.threads,
+                    )
+                })
+                .clone();
+            push(&mut records, "lln_bwd_par", n, &r);
         }
+    }
+
+    // Small-matmul threshold pin: a 48×48 output (2304 elements, under
+    // PAR_MIN_ELEMS = 4096) must cost the same through par_matmul as
+    // through plain matmul — the pair that keeps the fallback honest.
+    {
+        let sn = 48;
+        let mut rng = crate::rng::Pcg64::seed(0x51AA11);
+        let a = Mat::gaussian(sn, d, 1.0, &mut rng);
+        let bm = Mat::gaussian(d, sn, 1.0, &mut rng);
+        let r = b.run(&format!("matmul_small n={sn}"), 1.0, || a.matmul(&bm)).clone();
+        push(&mut records, "matmul_small", sn, &r);
+        let r = b
+            .run(&format!("par_matmul_small n={sn}"), 1.0, || a.par_matmul(&bm, params.threads))
+            .clone();
+        push(&mut records, "par_matmul_small", sn, &r);
     }
 
     // Decode-state footprint per storage precision: a real KvCache fed
@@ -756,7 +805,9 @@ mod tests {
             "matmul_t_pr1",
             "matmul_t_blocked",
             "softmax_fused_bwd",
+            "softmax_fused_bwd_par",
             "lln_bwd",
+            "lln_bwd_par",
             "matmul_t_spec",
             "matmul_t_gen",
             "softmax_decode_spec",
@@ -788,6 +839,13 @@ mod tests {
         // And the new backward-vs-forward cost pairs.
         assert!(report.speedup("softmax_fused", "softmax_fused_bwd", 64).is_some());
         assert!(report.speedup("lln_streamed", "lln_bwd", 64).is_some());
+        // Pooled-backward pairs ride the same run.
+        assert!(report.speedup("softmax_fused_bwd_par", "softmax_fused_bwd", 64).is_some());
+        assert!(report.speedup("lln_bwd_par", "lln_bwd", 64).is_some());
+        // The small-matmul fallback pair lives at its own fixed n.
+        assert!(report.mean_ns("matmul_small", 48).is_some());
+        assert!(report.mean_ns("par_matmul_small", 48).is_some());
+        assert!(report.speedup("par_matmul_small", "matmul_small", 48).is_some());
         // The monomorphized-vs-generic gate pairs.
         assert!(report.speedup("matmul_t_spec", "matmul_t_gen", 64).is_some());
         assert!(report.speedup("softmax_decode_spec", "softmax_decode_gen", 64).is_some());

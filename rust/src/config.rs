@@ -559,6 +559,11 @@ pub struct ComputeConfig {
     /// Scoped-worker count for `Mat::par_*` and streamed attention
     /// (0 = auto: `LLN_THREADS` env or available parallelism).
     pub threads: usize,
+    /// Worker-thread count for the persistent compute pool that runs
+    /// every `par_*` kernel and the pooled training backward (0 =
+    /// auto: available parallelism).  Read once at first kernel use;
+    /// later edits need a restart.  See docs/CONFIG.md §[compute].
+    pub pool_threads: usize,
     /// Diagonal tile size for BlockDiag / LLN+Diag.
     pub block: usize,
     /// Streaming work-partition granularity: key/value rows are split
@@ -595,6 +600,7 @@ impl Default for ComputeConfig {
     fn default() -> Self {
         Self {
             threads: 0,
+            pool_threads: 0,
             block: 64,
             chunk: 0,
             tile: 0,
@@ -612,6 +618,7 @@ impl ComputeConfig {
         let d = Self::default();
         Self {
             threads: t.usize_or("compute.threads", d.threads),
+            pool_threads: t.usize_or("compute.pool_threads", d.pool_threads),
             block: t.usize_or("compute.block", d.block),
             chunk: t.usize_or("compute.chunk", d.chunk),
             tile: t.usize_or("compute.tile", d.tile),
@@ -688,11 +695,15 @@ method = lln_diag
 
     #[test]
     fn compute_config_defaults_and_overrides() {
-        let t = ConfigTable::parse("[compute]\nthreads = 3\nblock = 32").unwrap();
+        let t =
+            ConfigTable::parse("[compute]\nthreads = 3\nblock = 32\npool_threads = 2").unwrap();
         let cc = ComputeConfig::from_table(&t);
         assert_eq!(cc.threads, 3);
         assert_eq!(cc.block, 32);
         assert_eq!(cc.chunk, 0);
+        assert_eq!(cc.pool_threads, 2);
+        // Pool size defaults to auto (available parallelism).
+        assert_eq!(ComputeConfig::default().pool_threads, 0);
         assert_eq!(cc.resolved_threads(), 3);
         // Fused-kernel knobs default to auto/on.
         assert_eq!(cc.tile, 0);

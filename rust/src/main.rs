@@ -254,6 +254,16 @@ fn cmd_bench(args: &lln::cli::Args) -> Result<()> {
             println!("{:<24} {:>12} bytes", m.name, m.bytes);
         }
     }
+    // Persistent-pool telemetry over the whole suite: every scheduled
+    // task is a thread spawn the old scoped kernels would have paid.
+    {
+        let t = lln::util::compute_pool::telemetry();
+        println!("\n== compute pool (workers={}) ==", t.workers);
+        println!("{:<24} {:>12}", "spawns_avoided", t.spawns_avoided);
+        println!("{:<24} {:>12}", "steals", t.steals);
+        println!("{:<24} {:>12}", "parks", t.parks);
+        println!("{:<24} {:>12}", "unparks", t.unparks);
+    }
     // Read the baseline *before* --json can overwrite the same path
     // (CI passes both flags pointing at the committed file).
     let baseline = match args.get("baseline") {

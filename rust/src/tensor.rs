@@ -59,13 +59,23 @@ pub fn partition_rows(rows: usize, threads: usize) -> Vec<(usize, usize)> {
     spans
 }
 
+/// Output-element count below which the `Mat::par_*` entry points take
+/// the single-threaded kernel directly: a 64×64 output is the smallest
+/// matrix where span scheduling pays for itself even on the persistent
+/// pool (pinned by the `par_matmul_small`/`matmul_small` bench pair in
+/// BENCH_kernels.json).  The fallback is bitwise-safe — the parallel
+/// paths already match the serial kernels bitwise per row.
+pub const PAR_MIN_ELEMS: usize = 4096;
+
 /// Run `work(row0, len, chunk)` over the [`partition_rows`] spans of a
-/// row-major buffer (`rows` rows of `row_len` values), one scoped
-/// worker thread per span — the shared harness behind every `par_*`
-/// kernel and the fused attention entry points.  `chunk` is the span's
-/// disjoint `len * row_len` slice of `buf`; `row0` is its first global
-/// row index.  `threads` is taken as already resolved; the span count
-/// clamps to `rows`.
+/// row-major buffer (`rows` rows of `row_len` values), one persistent
+/// compute-pool task per span — the shared harness behind every
+/// `par_*` kernel and the fused attention entry points.  `chunk` is the
+/// span's disjoint `len * row_len` slice of `buf`; `row0` is its first
+/// global row index.  `threads` is taken as already resolved; the span
+/// count clamps to `rows`.  Partitioning is deterministic; which pool
+/// worker executes a span is not — outputs never depend on it because
+/// each span is written only by its owner.
 pub fn par_row_spans(
     buf: &mut [f32],
     rows: usize,
@@ -74,15 +84,22 @@ pub fn par_row_spans(
     work: impl Fn(usize, usize, &mut [f32]) + Sync,
 ) {
     debug_assert_eq!(buf.len(), rows * row_len);
-    std::thread::scope(|scope| {
-        let work = &work;
-        let mut rest = buf;
-        for (row0, len) in partition_rows(rows, threads) {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len * row_len);
-            rest = tail;
-            scope.spawn(move || work(row0, len, chunk));
+    let spans = partition_rows(rows, threads);
+    if spans.len() <= 1 {
+        if let Some(&(row0, len)) = spans.first() {
+            work(row0, len, buf);
         }
-    });
+        return;
+    }
+    let work = &work;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(spans.len());
+    let mut rest = buf;
+    for (row0, len) in spans {
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len * row_len);
+        rest = tail;
+        tasks.push(Box::new(move || work(row0, len, chunk)));
+    }
+    crate::util::compute_pool::scope(tasks);
 }
 
 /// Register-blocked microkernels shared by [`Mat`], the fused attention
@@ -629,15 +646,16 @@ impl Mat {
     }
 
     /// `self @ other` with the output rows partitioned across `threads`
-    /// scoped worker threads (0 = auto, see [`default_threads`]) via
-    /// [`partition_rows`].  Each worker runs the same register-blocked
+    /// compute-pool tasks (0 = auto, see [`default_threads`]) via
+    /// [`partition_rows`].  Each task runs the same register-blocked
     /// kernel as [`Mat::matmul`], in the same per-row floating-point
     /// order, so results are bitwise identical to the scalar path.
+    /// Outputs below [`PAR_MIN_ELEMS`] skip the pool entirely.
     pub fn par_matmul(&self, other: &Mat, threads: usize) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let t = resolve_threads(threads).min(m.max(1));
-        if t <= 1 || m == 0 || n == 0 {
+        if t <= 1 || m == 0 || n == 0 || m * n < PAR_MIN_ELEMS {
             return self.matmul(other);
         }
         let mut out = Mat::zeros(m, n);
@@ -682,14 +700,15 @@ impl Mat {
     }
 
     /// `self @ other^T` with output rows partitioned across `threads`
-    /// scoped workers (0 = auto) via [`partition_rows`].  Per-row FP
+    /// compute-pool tasks (0 = auto) via [`partition_rows`].  Per-row FP
     /// order matches [`Mat::matmul_t`] exactly (lane structure is fixed
     /// by k alone), so results are bitwise identical to the scalar path.
+    /// Outputs below [`PAR_MIN_ELEMS`] skip the pool entirely.
     pub fn par_matmul_t(&self, other: &Mat, threads: usize) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let t = resolve_threads(threads).min(m.max(1));
-        if t <= 1 || m == 0 || n == 0 {
+        if t <= 1 || m == 0 || n == 0 || m * n < PAR_MIN_ELEMS {
             return self.matmul_t(other);
         }
         let mut out = Mat::zeros(m, n);
@@ -709,7 +728,7 @@ impl Mat {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let t = resolve_threads(threads).min(m.max(1));
-        if t <= 1 || m == 0 || n == 0 {
+        if t <= 1 || m == 0 || n == 0 || m * n < PAR_MIN_ELEMS {
             return self.matmul_t_ref(other);
         }
         let mut out = Mat::zeros(m, n);
@@ -784,13 +803,15 @@ impl Mat {
         }
     }
 
-    /// Row-wise softmax with rows partitioned across `threads` scoped
-    /// workers (0 = auto) via [`partition_rows`].  Rows are independent,
-    /// so results are bitwise identical to [`Mat::softmax_rows`].
+    /// Row-wise softmax with rows partitioned across `threads`
+    /// compute-pool tasks (0 = auto) via [`partition_rows`].  Rows are
+    /// independent, so results are bitwise identical to
+    /// [`Mat::softmax_rows`].  Matrices below [`PAR_MIN_ELEMS`] skip
+    /// the pool entirely.
     pub fn par_softmax_rows(&mut self, threads: usize) {
         let (m, n) = (self.rows, self.cols);
         let t = resolve_threads(threads).min(m.max(1));
-        if t <= 1 || m == 0 || n == 0 {
+        if t <= 1 || m == 0 || n == 0 || m * n < PAR_MIN_ELEMS {
             self.softmax_rows();
             return;
         }

@@ -1,0 +1,404 @@
+//! Process-wide persistent compute pool — the one scheduler behind
+//! every `par_*` kernel (ROADMAP: retire per-call thread spawning).
+//!
+//! Before this module, each parallel hot path (`Mat::par_matmul{,_t}`,
+//! `par_softmax_rows`, the fused attention tiles, the causal chunk
+//! recurrence) spawned and joined fresh OS threads per call via
+//! `std::thread::scope`, so serving steps and training iterations paid
+//! thread-creation latency thousands of times per second.  Here the
+//! workers are created once, lazily, and then parked on a condvar
+//! between calls; a [`scope`] call costs a handful of mutex pushes and
+//! one notify instead of N clone+spawn+join syscalls.
+//!
+//! Design:
+//!
+//! * **Per-worker deques with stealing.**  Tasks are pushed round-robin
+//!   onto per-worker `Mutex<VecDeque>` deques; a worker pops its own
+//!   deque from the front and steals from siblings' backs when empty.
+//!   Which worker runs a task never affects the result — see below.
+//!
+//! * **Caller participation.**  The thread that calls [`scope`] does
+//!   not just wait: it drains tasks itself (its own first, then
+//!   stealing), and only blocks once every task of its job is either
+//!   done or in flight on a worker.  This is the deadlock-freedom
+//!   guarantee: a nested [`scope`] call from inside a pool task, or a
+//!   hundred coordinator threads calling in concurrently, can always
+//!   make progress on their own tasks even if every worker is busy.
+//!
+//! * **Determinism contract.**  The pool schedules; it never
+//!   partitions.  Callers split their output via
+//!   [`partition_rows`](crate::tensor::partition_rows) (or the causal
+//!   balancer) into disjoint spans, and each span's output is written
+//!   only by the task that owns it.  Results are therefore
+//!   bitwise-identical regardless of which worker (or the caller)
+//!   executes a span, in which order, or how often work was stolen —
+//!   only scheduling varies, never the floating-point order.
+//!
+//! * **Panic propagation.**  A panicking task is caught, the payload
+//!   parked on its job, and the panic resumed on the calling thread
+//!   once the job drains — the same contract as `std::thread::scope`.
+//!
+//! Telemetry (spawns avoided, steals, parks/unparks) is exposed via
+//! [`telemetry`] and printed by `lln bench`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A lifetime-erased unit of work plus the job it belongs to.
+type Unit = (Arc<JobState>, Box<dyn FnOnce() + Send + 'static>);
+
+/// Completion state of one [`scope`] call.
+struct JobState {
+    /// Units not yet finished (running counts as unfinished).
+    pending: AtomicUsize,
+    /// Set true when `pending` hits zero; guards the caller's wait.
+    done: Mutex<bool>,
+    cv: Condvar,
+    /// First panic payload from any unit of this job.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct Pool {
+    /// One deque per worker; tasks are pushed round-robin and stolen
+    /// from the back by idle siblings (and by participating callers).
+    deques: Vec<Mutex<VecDeque<Unit>>>,
+    /// Round-robin push cursor.
+    next_deque: AtomicUsize,
+    /// Parking lot: workers sleep here when every deque is empty.  The
+    /// mutex guards the empty-check so a push+notify can never race a
+    /// worker into a lost wakeup.
+    park_mx: Mutex<()>,
+    park_cv: Condvar,
+    // -- telemetry ---------------------------------------------------
+    /// Tasks run through the pool — each one an OS thread spawn the
+    /// pre-pool `std::thread::scope` call sites would have paid.
+    spawns_avoided: AtomicU64,
+    /// Tasks executed from a deque other than the runner's own.
+    steals: AtomicU64,
+    parks: AtomicU64,
+    unparks: AtomicU64,
+}
+
+/// Requested worker count for lazy init (0 = available_parallelism).
+/// Read once when the pool first spins up; see [`configure`].
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// Set the worker count used when the pool is (lazily) created:
+/// `0` means `available_parallelism`.  Wired from
+/// `[compute] pool_threads` in config.  A call after the pool has
+/// already spun up is a no-op — the pool is process-wide and its
+/// workers never shut down.
+pub fn configure(threads: usize) {
+    REQUESTED.store(threads, Ordering::Relaxed);
+}
+
+/// Pool telemetry counters (monotonic since process start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Telemetry {
+    pub workers: usize,
+    pub spawns_avoided: u64,
+    pub steals: u64,
+    pub parks: u64,
+    pub unparks: u64,
+}
+
+/// Snapshot the pool's telemetry.  Spins the pool up if it has not run
+/// anything yet (so `workers` is always the real count).
+pub fn telemetry() -> Telemetry {
+    let p = pool();
+    Telemetry {
+        workers: p.deques.len(),
+        spawns_avoided: p.spawns_avoided.load(Ordering::Relaxed),
+        steals: p.steals.load(Ordering::Relaxed),
+        parks: p.parks.load(Ordering::Relaxed),
+        unparks: p.unparks.load(Ordering::Relaxed),
+    }
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let req = REQUESTED.load(Ordering::Relaxed);
+        let n = if req == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            req
+        }
+        .max(1);
+        let pool = Pool {
+            deques: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            next_deque: AtomicUsize::new(0),
+            park_mx: Mutex::new(()),
+            park_cv: Condvar::new(),
+            spawns_avoided: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            parks: AtomicU64::new(0),
+            unparks: AtomicU64::new(0),
+        };
+        for wi in 0..n {
+            std::thread::Builder::new()
+                .name(format!("lln-compute-{wi}"))
+                .spawn(move || worker_loop(wi))
+                .expect("spawn compute-pool worker");
+        }
+        pool
+    })
+}
+
+/// Pop from own deque front, else steal from siblings' backs.
+/// `home == usize::MAX` marks a participating caller (no home deque —
+/// every unit it takes counts as a steal).
+fn take_unit(p: &Pool, home: usize) -> Option<Unit> {
+    if home != usize::MAX {
+        if let Some(u) = p.deques[home].lock().unwrap().pop_front() {
+            return Some(u);
+        }
+    }
+    let n = p.deques.len();
+    let start = if home == usize::MAX { 0 } else { home + 1 };
+    for off in 0..n {
+        let di = (start + off) % n;
+        if di == home {
+            continue;
+        }
+        if let Some(u) = p.deques[di].lock().unwrap().pop_back() {
+            p.steals.fetch_add(1, Ordering::Relaxed);
+            return Some(u);
+        }
+    }
+    None
+}
+
+/// Run one unit under `catch_unwind`, park any panic payload on its
+/// job, and signal the job's caller when the last unit finishes.
+fn run_unit(unit: Unit) {
+    let (job, f) = unit;
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+        let mut slot = job.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let mut done = job.done.lock().unwrap();
+        *done = true;
+        job.cv.notify_all();
+    }
+}
+
+fn worker_loop(home: usize) {
+    let p = pool();
+    loop {
+        if let Some(unit) = take_unit(p, home) {
+            run_unit(unit);
+            continue;
+        }
+        // Park: re-check emptiness under the park mutex so a
+        // concurrent push (which notifies under the same mutex) can
+        // never slip between our check and our wait.
+        let guard = p.park_mx.lock().unwrap();
+        if p.deques.iter().any(|d| !d.lock().unwrap().is_empty()) {
+            continue;
+        }
+        p.parks.fetch_add(1, Ordering::Relaxed);
+        drop(p.park_cv.wait(guard).unwrap());
+        p.unparks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Execute `tasks` to completion on the persistent pool and return only
+/// when every task has finished — the drop-in replacement for a
+/// `std::thread::scope` that spawned one thread per task.  Tasks may
+/// borrow from the caller's stack (lifetime `'s`): soundness holds
+/// because this function blocks until the last task completes (panicked
+/// tasks count as complete; their payload is re-thrown here), so no
+/// borrow outlives the frame that owns it.
+///
+/// The caller participates: it drains tasks itself alongside the
+/// workers and only sleeps when all of its job's remaining tasks are in
+/// flight elsewhere.  Nested calls from inside a pool task are safe for
+/// the same reason.
+///
+/// A single task runs inline with no queue traffic; an empty task list
+/// is a no-op.
+pub fn scope<'s>(tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+    match tasks.len() {
+        0 => return,
+        1 => {
+            let mut tasks = tasks;
+            (tasks.pop().unwrap())();
+            return;
+        }
+        _ => {}
+    }
+    let p = pool();
+    let job = Arc::new(JobState {
+        pending: AtomicUsize::new(tasks.len()),
+        done: Mutex::new(false),
+        cv: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    p.spawns_avoided.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+    // Erase the borrow lifetime: the blocking wait below guarantees no
+    // task (hence no captured borrow) survives this call.
+    let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = unsafe { std::mem::transmute(tasks) };
+    let n = p.deques.len();
+    for f in tasks {
+        let di = p.next_deque.fetch_add(1, Ordering::Relaxed) % n;
+        p.deques[di].lock().unwrap().push_back((Arc::clone(&job), f));
+    }
+    {
+        // Lock-then-notify pairs with the workers' locked empty-check.
+        let _guard = p.park_mx.lock().unwrap();
+        p.park_cv.notify_all();
+    }
+    // Participate: run anything available (own job's tasks drain
+    // first in FIFO push order, but any unit keeps the system moving).
+    while job.pending.load(Ordering::Acquire) > 0 {
+        if let Some(unit) = take_unit(p, usize::MAX) {
+            run_unit(unit);
+            continue;
+        }
+        // Everything left of this job is in flight on workers; sleep
+        // until the last unit signals.
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.cv.wait(done).unwrap();
+        }
+        break;
+    }
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+/// Run `f(row0, len)` over the
+/// [`partition_rows`](crate::tensor::partition_rows) spans of `rows`,
+/// scheduled on the pool — the convenience entry point for kernels
+/// whose span outputs are reachable through `&self`/indices rather
+/// than a `&mut` buffer split.  `threads` is the span-count request
+/// (0 = auto via [`resolve_threads`](crate::tensor::resolve_threads));
+/// partitioning is deterministic in (`rows`, resolved `threads`) alone,
+/// so outputs never depend on pool scheduling.
+pub fn scope_rows(rows: usize, threads: usize, f: impl Fn(usize, usize) + Sync) {
+    let t = crate::tensor::resolve_threads(threads);
+    let spans = crate::tensor::partition_rows(rows, t);
+    if spans.len() <= 1 {
+        if let Some(&(row0, len)) = spans.first() {
+            f(row0, len);
+        }
+        return;
+    }
+    let f = &f;
+    scope(
+        spans
+            .into_iter()
+            .map(|(row0, len)| Box::new(move || f(row0, len)) as Box<dyn FnOnce() + Send + '_>)
+            .collect(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_runs_every_task_once() {
+        let n = 64;
+        let mut hits = vec![0u8; n];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest = hits.as_mut_slice();
+            for _ in 0..n {
+                let (one, tail) = std::mem::take(&mut rest).split_at_mut(1);
+                rest = tail;
+                tasks.push(Box::new(move || one[0] += 1));
+            }
+            scope(tasks);
+        }
+        assert!(hits.iter().all(|&h| h == 1), "{hits:?}");
+    }
+
+    #[test]
+    fn scope_rows_covers_partition_exactly() {
+        let rows = 37;
+        let seen = Mutex::new(vec![0u8; rows]);
+        scope_rows(rows, 5, |row0, len| {
+            let mut s = seen.lock().unwrap();
+            for r in row0..row0 + len {
+                s[r] += 1;
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        let total = Mutex::new(0usize);
+        scope_rows(8, 4, |_row0, len| {
+            // A pool task that itself fans out — the caller-participation
+            // contract must drain this without a free worker.
+            scope_rows(16, 4, |_r0, l| {
+                *total.lock().unwrap() += l * len;
+            });
+        });
+        // Each of the 8 outer rows contributes len * 16.
+        assert_eq!(*total.lock().unwrap(), 8 * 16);
+    }
+
+    #[test]
+    fn panics_propagate_like_thread_scope() {
+        let caught = std::panic::catch_unwind(|| {
+            scope_rows(8, 4, |row0, _len| {
+                if row0 == 0 {
+                    panic!("boom from span");
+                }
+            });
+        });
+        assert!(caught.is_err());
+        // The pool must stay usable after a propagated panic.
+        let sum = Mutex::new(0usize);
+        scope_rows(6, 3, |_r, l| *sum.lock().unwrap() += l);
+        assert_eq!(*sum.lock().unwrap(), 6);
+    }
+
+    #[test]
+    fn telemetry_counts_scheduled_tasks() {
+        let before = telemetry();
+        scope_rows(64, 4, |_r, _l| {});
+        let after = telemetry();
+        assert!(after.workers >= 1);
+        assert!(
+            after.spawns_avoided >= before.spawns_avoided + 2,
+            "multi-span scope must count avoided spawns: {before:?} -> {after:?}"
+        );
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let handles: Vec<_> = (0..8)
+            .map(|ci| {
+                std::thread::spawn(move || {
+                    let acc = Mutex::new(0usize);
+                    scope_rows(32, 4, |row0, len| {
+                        *acc.lock().unwrap() += (ci + 1) * (row0 + len);
+                    });
+                    acc.into_inner().unwrap()
+                })
+            })
+            .collect();
+        let expect: Vec<usize> = (0..8)
+            .map(|ci| {
+                crate::tensor::partition_rows(32, 4)
+                    .into_iter()
+                    .map(|(r, l)| (ci + 1) * (r + l))
+                    .sum()
+            })
+            .collect();
+        for (h, e) in handles.into_iter().zip(expect) {
+            assert_eq!(h.join().unwrap(), e, "cross-task contamination");
+        }
+    }
+}

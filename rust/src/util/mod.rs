@@ -1,6 +1,8 @@
 //! Shared utilities: JSON (manifest + metrics), bounded channels and a
-//! thread pool (tokio substitute), and timing helpers.
+//! thread pool (tokio substitute), the persistent compute pool behind
+//! every `par_*` kernel, and timing helpers.
 
+pub mod compute_pool;
 pub mod json;
 pub mod pool;
 

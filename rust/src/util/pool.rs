@@ -51,7 +51,10 @@ impl<T> Channel<T> {
         assert!(capacity > 0);
         Self {
             inner: Arc::new(Inner {
-                queue: Mutex::new(State { items: VecDeque::with_capacity(capacity), closed: false }),
+                queue: Mutex::new(State {
+                    items: VecDeque::with_capacity(capacity),
+                    closed: false,
+                }),
                 not_full: Condvar::new(),
                 not_empty: Condvar::new(),
                 capacity,

@@ -1295,3 +1295,230 @@ fn fused_softmax_backward_matches_dense_masked_backward() {
         assert_close(&dvm, &dv2, 5e-4, &format!("fused-vs-dense bwd dv {what}"))
     });
 }
+
+// ---------------------------------------------------------------------------
+// Persistent compute pool: determinism + concurrency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pooled_tensor_kernels_are_bitwise_stable_across_thread_counts() {
+    // Every span's output is written only by its owner and each row's
+    // arithmetic never depends on span boundaries, so par_* must be
+    // *bitwise* equal to the single-threaded kernel at every worker
+    // count — shapes chosen above PAR_MIN_ELEMS so the pool really runs.
+    check(16, |g| {
+        let m = g.usize_in(64, 90);
+        let kdim = g.usize_in(4, 24);
+        let n = g.usize_in(64, 90);
+        let a = gauss_mat(g, m, kdim, 1.0);
+        let b = gauss_mat(g, kdim, n, 1.0);
+        let c = gauss_mat(g, n, kdim, 1.0);
+        let mm = a.matmul(&b);
+        let mt = a.matmul_t(&c);
+        let sm = gauss_mat(g, m, n, 1.0);
+        let mut sm_ser = sm.clone();
+        sm_ser.softmax_rows();
+        for &t in &[2usize, 3, 5, 8] {
+            prop_assert(
+                a.par_matmul(&b, t).data() == mm.data(),
+                format!("par_matmul not bitwise {m}x{kdim}x{n} t={t}"),
+            )?;
+            prop_assert(
+                a.par_matmul_t(&c, t).data() == mt.data(),
+                format!("par_matmul_t not bitwise {m}x{kdim}x{n} t={t}"),
+            )?;
+            let mut s = sm.clone();
+            s.par_softmax_rows(t);
+            prop_assert(
+                s.data() == sm_ser.data(),
+                format!("par_softmax_rows not bitwise {m}x{n} t={t}"),
+            )?;
+        }
+        // Below the element threshold the pool is skipped outright, so
+        // tiny outputs are bitwise-trivially identical too.
+        let ta = gauss_mat(g, 5, kdim, 1.0);
+        let tb = gauss_mat(g, kdim, 6, 1.0);
+        prop_assert(
+            ta.par_matmul(&tb, 4).data() == ta.matmul(&tb).data(),
+            "small par_matmul must fall back to the serial kernel".to_string(),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn pooled_fused_train_kernels_match_serial_across_thread_counts() {
+    // forward_train is row-local, so the pooled variant is bitwise at
+    // every thread count; the backward's dQ rows are span-local
+    // (bitwise) while dK/dV come from a fixed-order reduction of span
+    // partials (tolerance-level vs the serial association).
+    check(24, |g| {
+        let causal = g.bool();
+        let nq = g.usize_in(2, 40);
+        let nk = if causal { nq } else { g.usize_in(1, 40) };
+        let spec = AttnSpec {
+            causal,
+            key_len: if g.bool() { Some(g.usize_in(0, nk + 5)) } else { None },
+            scale: None,
+        };
+        let d = g.usize_in(2, 16);
+        let dv = g.usize_in(1, 12);
+        let tile = *g.choose(&[1usize, 5, 0, 64]);
+        let q = gauss_mat(g, nq, d, 0.8);
+        let k = gauss_mat(g, nk, d, 0.8);
+        let v = gauss_mat(g, nk, dv, 1.0);
+        let d_out = gauss_mat(g, nq, dv, 1.0);
+        let what = format!("nq={nq} nk={nk} d={d} dv={dv} tile={tile} {spec:?}");
+
+        let (o, rm, rs) = att::grad::fused_softmax_attention_spec_fwd_train(&q, &k, &v, &spec, tile);
+        let (dq, dk, dvm) = att::grad::fused_softmax_attention_spec_bwd(
+            &q, &k, &v, &spec, &o, &rm, &rs, &d_out, tile,
+        );
+        let (oq, den) = att::grad::fused_quadratic_attention_spec_fwd_train(&q, &k, &v, &spec, tile);
+        let (qdq, qdk, qdv) =
+            att::grad::fused_quadratic_attention_spec_bwd(&q, &k, &v, &spec, &oq, &den, &d_out, tile);
+
+        for &t in &[2usize, 3, 5] {
+            let (o2, rm2, rs2) =
+                att::grad::fused_softmax_attention_spec_fwd_train_par(&q, &k, &v, &spec, tile, t);
+            prop_assert(
+                o2.data() == o.data() && rm2 == rm && rs2 == rs,
+                format!("pooled softmax fwd_train not bitwise t={t} {what}"),
+            )?;
+            let (dq2, dk2, dv2) = att::grad::fused_softmax_attention_spec_bwd_par(
+                &q, &k, &v, &spec, &o, &rm, &rs, &d_out, tile, t,
+            );
+            prop_assert(
+                dq2.data() == dq.data(),
+                format!("pooled softmax bwd dq not bitwise t={t} {what}"),
+            )?;
+            assert_close(&dk2, &dk, 5e-5, &format!("pooled softmax bwd dk t={t} {what}"))?;
+            assert_close(&dv2, &dvm, 5e-5, &format!("pooled softmax bwd dv t={t} {what}"))?;
+
+            let (oq2, den2) =
+                att::grad::fused_quadratic_attention_spec_fwd_train_par(&q, &k, &v, &spec, tile, t);
+            prop_assert(
+                oq2.data() == oq.data() && den2 == den,
+                format!("pooled quadratic fwd_train not bitwise t={t} {what}"),
+            )?;
+            let (qdq2, qdk2, qdv2) = att::grad::fused_quadratic_attention_spec_bwd_par(
+                &q, &k, &v, &spec, &oq, &den, &d_out, tile, t,
+            );
+            prop_assert(
+                qdq2.data() == qdq.data(),
+                format!("pooled quadratic bwd dq not bitwise t={t} {what}"),
+            )?;
+            assert_close(&qdk2, &qdk, 5e-5, &format!("pooled quadratic bwd dk t={t} {what}"))?;
+            assert_close(&qdv2, &qdv, 5e-5, &format!("pooled quadratic bwd dv t={t} {what}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn causal_linear_recurrence_and_backward_are_chunk_deterministic() {
+    // The chunked recurrence's summation order is a function of `chunk`
+    // alone: at a fixed chunk the forward and the pooled backward must
+    // be bitwise identical at every thread count (the scheduling may
+    // differ; the arithmetic may not).  Against the serial backward the
+    // chunked association differs, so that comparison is tolerance.
+    check(16, |g| {
+        let n = g.usize_in(2, 60);
+        let m = g.usize_in(2, 12);
+        let dv = g.usize_in(1, 10);
+        let chunk = *g.choose(&[1usize, 3, 7, 16]);
+        let key_len = if g.bool() { Some(g.usize_in(0, n + 4)) } else { None };
+        let pq = gauss_mat(g, n, m, 0.7).map(|x| x.abs());
+        let pk = gauss_mat(g, n, m, 0.7).map(|x| x.abs());
+        let v = gauss_mat(g, n, dv, 1.0);
+        let d_out = gauss_mat(g, n, dv, 1.0);
+        let kern = lln::tensor::KernelDispatch::Auto;
+        let what = format!("n={n} m={m} dv={dv} chunk={chunk} kl={key_len:?}");
+
+        let base = att::linear_attention_causal_dispatch(&pq, &pk, &v, key_len, chunk, 2, kern);
+        for &t in &[1usize, 3, 4, 7] {
+            let out = att::linear_attention_causal_dispatch(&pq, &pk, &v, key_len, chunk, t, kern);
+            prop_assert(
+                out.data() == base.data(),
+                format!("causal recurrence not bitwise across threads t={t} {what}"),
+            )?;
+        }
+
+        for causal in [true, false] {
+            let spec = AttnSpec { causal, key_len, scale: None };
+            let out = att::linear_attention_spec(&pq, &pk, &v, &spec, chunk, 1);
+            let (sdq, sdk, sdv) = att::grad::linear_attention_spec_bwd(&pq, &pk, &v, &spec, &out, &d_out);
+            let (bdq, bdk, bdv) = att::grad::linear_attention_spec_bwd_par(
+                &pq, &pk, &v, &spec, &out, &d_out, chunk, 2,
+            );
+            for &t in &[3usize, 5] {
+                let (dq, dk, dvm) = att::grad::linear_attention_spec_bwd_par(
+                    &pq, &pk, &v, &spec, &out, &d_out, chunk, t,
+                );
+                prop_assert(
+                    dq.data() == bdq.data() && dk.data() == bdk.data() && dvm.data() == bdv.data(),
+                    format!("pooled linear bwd not bitwise across threads t={t} causal={causal} {what}"),
+                )?;
+            }
+            assert_close(&bdq, &sdq, 5e-4, &format!("pooled linear bwd dq causal={causal} {what}"))?;
+            assert_close(&bdk, &sdk, 5e-4, &format!("pooled linear bwd dk causal={causal} {what}"))?;
+            assert_close(&bdv, &sdv, 5e-4, &format!("pooled linear bwd dv causal={causal} {what}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compute_pool_survives_concurrent_hammering() {
+    // Several coordinator-style threads hammer the shared pool with
+    // pooled kernels and training fwd/bwd steps at once.  Every caller
+    // must get exactly its own task's bitwise result back (no cross-task
+    // contamination) and the whole thing must drain (no deadlock —
+    // callers participate in stealing while they wait).
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let failures = AtomicUsize::new(0);
+    let spec = AttnSpec { causal: true, key_len: None, scale: None };
+    std::thread::scope(|s| {
+        for worker in 0..4u64 {
+            let failures = &failures;
+            let spec = &spec;
+            s.spawn(move || {
+                let mut rng = lln::rng::Pcg64::seed(0xC0FFEE ^ worker);
+                for round in 0..6usize {
+                    let n = 64 + (worker as usize * 7 + round) % 17;
+                    let d = 4 + (worker as usize + round) % 9;
+                    let a = Mat::gaussian(n, d, 1.0, &mut rng);
+                    let b = Mat::gaussian(d, n, 1.0, &mut rng);
+                    let expect = a.matmul(&b);
+                    if a.par_matmul(&b, 4).data() != expect.data() {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let q = Mat::gaussian(24, d, 0.8, &mut rng);
+                    let k = Mat::gaussian(24, d, 0.8, &mut rng);
+                    let v = Mat::gaussian(24, d, 1.0, &mut rng);
+                    let d_out = Mat::gaussian(24, d, 1.0, &mut rng);
+                    let (o, rm, rs) =
+                        att::grad::fused_softmax_attention_spec_fwd_train(&q, &k, &v, spec, 8);
+                    let (o2, rm2, rs2) = att::grad::fused_softmax_attention_spec_fwd_train_par(
+                        &q, &k, &v, spec, 8, 3,
+                    );
+                    if o2.data() != o.data() || rm2 != rm || rs2 != rs {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let (dq, _, _) = att::grad::fused_softmax_attention_spec_bwd(
+                        &q, &k, &v, spec, &o, &rm, &rs, &d_out, 8,
+                    );
+                    let (dq2, _, _) = att::grad::fused_softmax_attention_spec_bwd_par(
+                        &q, &k, &v, spec, &o, &rm, &rs, &d_out, 8, 3,
+                    );
+                    if dq2.data() != dq.data() {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(failures.load(Ordering::Relaxed), 0, "cross-task contamination under load");
+    let t = lln::util::compute_pool::telemetry();
+    assert!(t.spawns_avoided > 0, "the pooled kernels above must have scheduled tasks");
+}
