@@ -153,6 +153,21 @@ pub enum AttnCache {
     Linear { phi_q: Mat, phi_k: Mat, out: Mat },
     /// Quadratic kernel: per-row denominators + the forward output.
     Quadratic { den: Vec<f32>, out: Mat },
+    /// Block-diagonal softmax tiles: tile-concatenated per-row online
+    /// stats + the tile forward output.
+    BlockDiag { row_max: Vec<f32>, row_sum: Vec<f32>, out: Mat },
+    /// LLN+Diag hybrid: the linear half's feature maps and output plus
+    /// the diagonal half's tile stats and output (the published forward
+    /// is their average).  When the tile does not divide N the backend
+    /// degrades to a plain `Linear` cache instead, mirroring `forward`.
+    LlnDiag {
+        phi_q: Mat,
+        phi_k: Mat,
+        long_out: Mat,
+        row_max: Vec<f32>,
+        row_sum: Vec<f32>,
+        diag_out: Mat,
+    },
 }
 
 /// Input-side gradients of one attention forward, as returned by
@@ -239,9 +254,9 @@ pub trait AttentionBackend: Send + Sync {
     /// Training forward: like [`forward`](Self::forward) but also
     /// returns the [`AttnCache`] its [`backward`](Self::backward)
     /// needs.  Returns `Err` — never panics — for methods with no
-    /// native backward yet (Nystrom/Linformer structurally, plus the
-    /// composite/projection methods): the native trainer surfaces the
-    /// message instead of killing a training run, mirroring
+    /// native backward (Nystrom/Linformer, whose mixing has no
+    /// recompute-light cache): the native trainer surfaces the message
+    /// instead of killing a training run, mirroring
     /// [`begin_decode`](Self::begin_decode).
     fn forward_train(
         &self,
@@ -253,7 +268,7 @@ pub trait AttentionBackend: Send + Sync {
         let _ = (q, k, v, spec);
         Err(format!(
             "{} attention has no native backward pass; train it through AOT artifacts, or pick \
-             one of softmax/lln/elu/relu/quadratic",
+             one of softmax/lln/lln_diag/elu/relu/quadratic/performer/blockdiag",
             self.name()
         ))
     }
@@ -274,7 +289,7 @@ pub trait AttentionBackend: Send + Sync {
         let _ = (q, k, v, spec, cache, d_out);
         Err(format!(
             "{} attention has no native backward pass; train it through AOT artifacts, or pick \
-             one of softmax/lln/elu/relu/quadratic",
+             one of softmax/lln/lln_diag/elu/relu/quadratic/performer/blockdiag",
             self.name()
         ))
     }
@@ -627,6 +642,105 @@ impl AttentionBackend for LlnDiagBackend {
         }
         out
     }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let phi_q = lln_features(q, self.0.alpha);
+        let phi_k = lln_features(k, self.0.beta);
+        let long_out = linear_attention_spec_dispatch(
+            &phi_q,
+            &phi_k,
+            v,
+            spec,
+            self.0.chunk,
+            self.0.threads,
+            self.0.kernel,
+        );
+        if !self.tile_divides(q.rows()) {
+            // Same degrade as `forward`: pure long-range LLN, so the
+            // backward is exactly the LLN chain on a Linear cache.
+            return Ok((long_out.clone(), AttnCache::Linear { phi_q, phi_k, out: long_out }));
+        }
+        let (diag_out, row_max, row_sum) = grad::blockdiag_attention_spec_fwd_train_par(
+            q,
+            k,
+            v,
+            spec,
+            self.0.block,
+            self.0.tile,
+            self.0.threads,
+        );
+        let mut out = long_out.clone();
+        for (o, s) in out.data_mut().iter_mut().zip(diag_out.data()) {
+            *o = 0.5 * (*o + s);
+        }
+        Ok((out, AttnCache::LlnDiag { phi_q, phi_k, long_out, row_max, row_sum, diag_out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let (alpha, beta) = (self.0.alpha, self.0.beta);
+        let (chunk, threads) = (self.0.chunk, self.0.threads);
+        match cache {
+            // Tile didn't divide N at forward time: the published
+            // output was the pure LLN half, so its backward is too.
+            AttnCache::Linear { .. } => linear_backward(
+                Method::LlnDiag,
+                v,
+                spec,
+                cache,
+                d_out,
+                chunk,
+                threads,
+                |phi_q, phi_k, dpq, dpk| {
+                    let (dq, dalpha) = grad::lln_feature_bwd(q, phi_q, dpq, alpha);
+                    let (dk, dbeta) = grad::lln_feature_bwd(k, phi_k, dpk, beta);
+                    (dq, dk, dalpha, dbeta)
+                },
+            ),
+            AttnCache::LlnDiag { phi_q, phi_k, long_out, row_max, row_sum, diag_out } => {
+                // out = 0.5·(long + diag): each half sees half the
+                // cotangent, and the input grads add.
+                let half = d_out.scale(0.5);
+                let (d_phi_q, d_phi_k, dv_long) = grad::linear_attention_spec_bwd_par(
+                    phi_q, phi_k, v, spec, long_out, &half, chunk, threads,
+                );
+                let (dq_long, dalpha) = grad::lln_feature_bwd(q, phi_q, &d_phi_q, alpha);
+                let (dk_long, dbeta) = grad::lln_feature_bwd(k, phi_k, &d_phi_k, beta);
+                let (dq_diag, dk_diag, dv_diag) = grad::blockdiag_attention_spec_bwd_par(
+                    q,
+                    k,
+                    v,
+                    spec,
+                    diag_out,
+                    row_max,
+                    row_sum,
+                    &half,
+                    self.0.block,
+                    self.0.tile,
+                    threads,
+                );
+                Ok(AttnGrads {
+                    dq: dq_long.add(&dq_diag),
+                    dk: dk_long.add(&dk_diag),
+                    dv: dv_long.add(&dv_diag),
+                    dalpha,
+                    dbeta,
+                })
+            }
+            _ => Err(wrong_cache(Method::LlnDiag)),
+        }
+    }
 }
 
 struct EluBackend(BackendParams);
@@ -921,6 +1035,56 @@ impl AttentionBackend for PerformerBackend {
         prefix.push(&lift(k), v);
         prefix.read(&lift(q))
     }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        let proj = self.proj(q.cols());
+        let phi_q = performer_features(q, proj.as_ref());
+        let phi_k = performer_features(k, proj.as_ref());
+        let out = linear_attention_spec_dispatch(
+            &phi_q,
+            &phi_k,
+            v,
+            spec,
+            self.p.chunk,
+            self.p.threads,
+            self.p.kernel,
+        );
+        Ok((out.clone(), AttnCache::Linear { phi_q, phi_k, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let proj = self.proj(q.cols());
+        let (chunk, threads) = (self.p.chunk, self.p.threads);
+        linear_backward(
+            Method::Performer,
+            v,
+            spec,
+            cache,
+            d_out,
+            chunk,
+            threads,
+            |phi_q, phi_k, dpq, dpk| {
+                // The FAVOR+ projection is a fixed (seeded) operand, not
+                // a parameter: only q/k receive gradients through the
+                // clamped-exp feature lift.
+                let dq = grad::performer_feature_bwd(q, phi_q, dpq, proj.as_ref());
+                let dk = grad::performer_feature_bwd(k, phi_k, dpk, proj.as_ref());
+                (dq, dk, 0.0, 0.0)
+            },
+        )
+    }
 }
 
 struct NystromBackend(BackendParams);
@@ -1005,6 +1169,61 @@ impl AttentionBackend for BlockDiagBackend {
             }
             _ => wrong_state(Method::BlockDiag),
         }
+    }
+    fn forward_train(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+    ) -> Result<(Mat, AttnCache), String> {
+        if self.0.block == 0 || q.rows() % self.0.block != 0 {
+            // The inference kernel asserts this; training surfaces it
+            // as a per-run Err instead of a panic.
+            return Err(format!(
+                "blockdiag training requires the tile ({}) to divide the sequence length ({}); \
+                 set [compute] block accordingly",
+                self.0.block,
+                q.rows()
+            ));
+        }
+        let (out, row_max, row_sum) = grad::blockdiag_attention_spec_fwd_train_par(
+            q,
+            k,
+            v,
+            spec,
+            self.0.block,
+            self.0.tile,
+            self.0.threads,
+        );
+        Ok((out.clone(), AttnCache::BlockDiag { row_max, row_sum, out }))
+    }
+    fn backward(
+        &self,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        spec: &AttnSpec,
+        cache: &AttnCache,
+        d_out: &Mat,
+    ) -> Result<AttnGrads, String> {
+        let AttnCache::BlockDiag { row_max, row_sum, out } = cache else {
+            return Err(wrong_cache(Method::BlockDiag));
+        };
+        let (dq, dk, dv) = grad::blockdiag_attention_spec_bwd_par(
+            q,
+            k,
+            v,
+            spec,
+            out,
+            row_max,
+            row_sum,
+            d_out,
+            self.0.block,
+            self.0.tile,
+            self.0.threads,
+        );
+        Ok(AttnGrads { dq, dk, dv, dalpha: 0.0, dbeta: 0.0 })
     }
 }
 
@@ -1436,8 +1655,22 @@ mod tests {
     fn forward_train_matches_inference_forward() {
         let (q, k, v) = probe(48, 16, 30);
         for spec in [FULL, AttnSpec::CAUSAL, AttnSpec::causal_padded(20)] {
-            for m in [Method::Softmax, Method::Lln, Method::Elu, Method::Relu, Method::Quadratic] {
-                let bk = backend_for(m, BackendParams { alpha: 1.2, beta: 1.2, ..Default::default() });
+            for m in [
+                Method::Softmax,
+                Method::Lln,
+                Method::LlnDiag,
+                Method::Elu,
+                Method::Relu,
+                Method::Quadratic,
+                Method::Performer,
+                Method::BlockDiag,
+            ] {
+                // block = 16 divides n = 48 so the tile-structured
+                // methods run their full hybrid/tiled training path.
+                let bk = backend_for(
+                    m,
+                    BackendParams { alpha: 1.2, beta: 1.2, block: 16, ..Default::default() },
+                );
                 let (out, _cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
                 let fwd = bk.forward(&q, &k, &v, &spec);
                 let err = out.max_abs_diff(&fwd);
@@ -1451,8 +1684,20 @@ mod tests {
         let (q, k, v) = probe(32, 12, 31);
         let mut rng = Pcg64::seed(32);
         let d_out = Mat::gaussian(32, 12, 1.0, &mut rng);
-        for m in [Method::Softmax, Method::Lln, Method::Elu, Method::Relu, Method::Quadratic] {
-            let bk = backend_for(m, BackendParams { alpha: 1.1, beta: 0.9, ..Default::default() });
+        for m in [
+            Method::Softmax,
+            Method::Lln,
+            Method::LlnDiag,
+            Method::Elu,
+            Method::Relu,
+            Method::Quadratic,
+            Method::Performer,
+            Method::BlockDiag,
+        ] {
+            let bk = backend_for(
+                m,
+                BackendParams { alpha: 1.1, beta: 0.9, block: 16, ..Default::default() },
+            );
             let (_, cache) = bk.forward_train(&q, &k, &v, &AttnSpec::CAUSAL).unwrap();
             let g = bk.backward(&q, &k, &v, &AttnSpec::CAUSAL, &cache, &d_out).unwrap();
             assert_eq!(g.dq.shape(), q.shape(), "{m:?}");
@@ -1461,7 +1706,7 @@ mod tests {
             for mat in [&g.dq, &g.dk, &g.dv] {
                 assert!(mat.data().iter().all(|x| x.is_finite()), "{m:?}");
             }
-            if m == Method::Lln {
+            if matches!(m, Method::Lln | Method::LlnDiag) {
                 assert!(g.dalpha != 0.0 && g.dbeta != 0.0, "lln exponents must receive grads");
             } else {
                 assert_eq!((g.dalpha, g.dbeta), (0.0, 0.0), "{m:?}");
@@ -1472,10 +1717,37 @@ mod tests {
     #[test]
     fn untrainable_methods_refuse_forward_train_as_err() {
         let (q, k, v) = probe(32, 16, 33);
-        for m in [Method::Nystrom, Method::Linformer, Method::LlnDiag, Method::Performer, Method::BlockDiag] {
+        for m in [Method::Nystrom, Method::Linformer] {
             let err = default_backend(m).forward_train(&q, &k, &v, &FULL).unwrap_err();
             assert!(err.contains("backward"), "{m:?}: {err}");
         }
+    }
+
+    #[test]
+    fn blockdiag_train_requires_dividing_tile_and_lln_diag_degrades() {
+        // BlockDiag: a tile that does not divide N is a clean Err (the
+        // inference kernel would assert), never a panic.
+        let (q, k, v) = probe(48, 16, 35);
+        let bd = default_backend(Method::BlockDiag); // block = 64, 48 % 64 != 0
+        let err = bd.forward_train(&q, &k, &v, &FULL).unwrap_err();
+        assert!(err.contains("divide"), "{err}");
+        // LLN+Diag under the same shape degrades to the pure-LLN path
+        // (mirroring `forward`), so training still proceeds: its grads
+        // match the plain LLN backend's exactly.
+        let mut rng = Pcg64::seed(36);
+        let d_out = Mat::gaussian(48, 16, 1.0, &mut rng);
+        let params = BackendParams { alpha: 1.1, beta: 0.9, ..Default::default() };
+        let hybrid = backend_for(Method::LlnDiag, params);
+        let plain = backend_for(Method::Lln, params);
+        let (out_h, cache_h) = hybrid.forward_train(&q, &k, &v, &FULL).unwrap();
+        let (out_p, cache_p) = plain.forward_train(&q, &k, &v, &FULL).unwrap();
+        assert_eq!(out_h.data(), out_p.data(), "degraded hybrid must be pure LLN");
+        let gh = hybrid.backward(&q, &k, &v, &FULL, &cache_h, &d_out).unwrap();
+        let gp = plain.backward(&q, &k, &v, &FULL, &cache_p, &d_out).unwrap();
+        assert_eq!(gh.dq.data(), gp.dq.data());
+        assert_eq!(gh.dk.data(), gp.dk.data());
+        assert_eq!(gh.dv.data(), gp.dv.data());
+        assert_eq!((gh.dalpha, gh.dbeta), (gp.dalpha, gp.dbeta));
     }
 
     #[test]

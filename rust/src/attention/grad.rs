@@ -1515,6 +1515,347 @@ pub fn fused_quadratic_attention_spec_bwd_par(
     (dq, dk, dv_g)
 }
 
+// ---------------------------------------------------------------------------
+// Performer: projected-feature chain rule
+// ---------------------------------------------------------------------------
+
+/// Chain rule through the Performer feature map
+/// ([`performer_features`](super::performer_features)):
+/// `φ(x)_ij = m^{-1/2}·cexp(u_ij − ‖x_i·d^{-1/4}‖²/2)` with
+/// `u = (x·d^{-1/4})·Ω`.  The projection `Ω` is a fixed random matrix
+/// (never trained), so only `dx` comes back:
+///
+/// ```text
+/// du_ij  = dφ_ij·φ_ij      (cexp' = cexp inside the clamp, 0 at saturation)
+/// dsq_i  = −Σ_j du_ij
+/// dx_i   = d^{-1/4}·(du_i·Ωᵀ + dsq_i·x_i·d^{-1/4})
+/// ```
+pub fn performer_feature_bwd(x: &Mat, phi: &Mat, d_phi: &Mat, proj: &Mat) -> Mat {
+    let (n, d) = x.shape();
+    let m = proj.cols();
+    assert_eq!(proj.rows(), d, "projection rows must match the head dim");
+    assert_eq!(phi.shape(), (n, m), "x/phi shape mismatch");
+    assert_eq!(d_phi.shape(), (n, m), "x/d_phi shape mismatch");
+    let dscale = 1.0 / (d as f32).powf(0.25);
+    let xs = x.scale(dscale);
+    // Recompute the clamp arguments u_ij − sq_i to gate saturation.
+    let u = xs.matmul(proj);
+    let mut du = Mat::zeros(n, m);
+    let mut dsq = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sq = 0.0f32;
+        for &a in xs.row(i) {
+            sq += 0.5 * a * a;
+        }
+        let (urow, prow, dprow) = (u.row(i), phi.row(i), d_phi.row(i));
+        let durow = du.row_mut(i);
+        for j in 0..m {
+            if (urow[j] - sq).abs() < EXP_CLAMP {
+                let g = dprow[j] * prow[j];
+                durow[j] = g;
+                dsq[i] -= g;
+            }
+        }
+    }
+    let mut dx = du.matmul_t(proj);
+    for i in 0..n {
+        let g = dsq[i];
+        for (o, &xv) in dx.row_mut(i).iter_mut().zip(xs.row(i)) {
+            *o = (*o + g * xv) * dscale;
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Block-diagonal tiles: per-tile fused softmax recompute fwd/bwd
+// ---------------------------------------------------------------------------
+
+/// Copy rows `[start, start+len)` of `m` into a fresh matrix (the
+/// per-tile operand views for the block-diagonal kernels).
+fn slice_rows(m: &Mat, start: usize, len: usize) -> Mat {
+    let c = m.cols();
+    Mat::from_vec(len, c, m.data()[start * c..(start + len) * c].to_vec())
+}
+
+/// The global [`AttnSpec`] restricted to the diagonal tile at row/key
+/// offset `b0`: keys shift down by `b0` (global
+/// `row_limit(b0+i) − b0` equals the tile-local `row_limit(i)` for the
+/// causal and `key_len` masks alike), and the scale is pinned to the
+/// resolved global value so a tile can never re-derive it from a
+/// different width.
+fn tile_spec(spec: &AttnSpec, b0: usize, d: usize) -> AttnSpec {
+    AttnSpec {
+        causal: spec.causal,
+        key_len: spec.key_len.map(|kl| kl.saturating_sub(b0)),
+        scale: Some(spec.resolve_scale(d)),
+    }
+}
+
+/// One diagonal tile of the block-diagonal training forward: the fused
+/// softmax training forward on the tile's row slice under its local
+/// spec, written into the caller's per-tile output/stat windows.
+#[allow(clippy::too_many_arguments)]
+fn blockdiag_tile_fwd(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    b0: usize,
+    block: usize,
+    tile: usize,
+    o_c: &mut [f32],
+    m_c: &mut [f32],
+    l_c: &mut [f32],
+) {
+    let qt = slice_rows(q, b0, block);
+    let kt = slice_rows(k, b0, block);
+    let vt = slice_rows(v, b0, block);
+    let ts = tile_spec(spec, b0, q.cols());
+    let (ot, mt, lt) = fused_softmax_attention_spec_fwd_train(&qt, &kt, &vt, &ts, tile);
+    o_c.copy_from_slice(ot.data());
+    m_c.copy_from_slice(&mt);
+    l_c.copy_from_slice(&lt);
+}
+
+/// Training forward of
+/// [`blockdiag_attention_spec`](super::blockdiag_attention_spec): each
+/// diagonal `block`×`block` softmax tile runs the fused training
+/// forward under its tile-local spec (values agree with the inference
+/// kernel to streaming tolerance), and the per-row online stats are
+/// concatenated in tile order — `(out, row_max, row_sum)` — so the
+/// backward can reuse the flash-style recompute tile by tile.
+/// Requires `block` to divide `n` (the inference kernel's contract).
+pub fn blockdiag_attention_spec_fwd_train(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    block: usize,
+    tile: usize,
+) -> (Mat, Vec<f32>, Vec<f32>) {
+    blockdiag_attention_spec_fwd_train_par(q, k, v, spec, block, tile, 1)
+}
+
+/// [`blockdiag_attention_spec_fwd_train`] with the diagonal tiles
+/// spread across `threads` compute-pool tasks (0 = auto).  Tiles are
+/// fully independent (disjoint row ranges, serial math inside), so the
+/// result is bitwise identical at any thread count.
+pub fn blockdiag_attention_spec_fwd_train_par(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    block: usize,
+    tile: usize,
+    threads: usize,
+) -> (Mat, Vec<f32>, Vec<f32>) {
+    let (n, d) = q.shape();
+    assert!(block > 0 && n % block == 0, "N must divide the block size");
+    assert_eq!(k.shape(), (n, d), "blockdiag requires aligned q/k");
+    assert_eq!(v.rows(), n, "key/value row mismatch");
+    let dv = v.cols();
+    let mut out = Mat::zeros(n, dv);
+    let mut row_max = vec![f32::NEG_INFINITY; n];
+    let mut row_sum = vec![0.0f32; n];
+    if n == 0 || dv == 0 {
+        return (out, row_max, row_sum);
+    }
+    let n_tiles = n / block;
+    let t = crate::tensor::resolve_threads(threads).min(n_tiles);
+    if t <= 1 {
+        for ti in 0..n_tiles {
+            let b0 = ti * block;
+            blockdiag_tile_fwd(
+                q,
+                k,
+                v,
+                spec,
+                b0,
+                block,
+                tile,
+                &mut out.data_mut()[b0 * dv..(b0 + block) * dv],
+                &mut row_max[b0..b0 + block],
+                &mut row_sum[b0..b0 + block],
+            );
+        }
+        return (out, row_max, row_sum);
+    }
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tiles);
+        let mut o_rest = out.data_mut();
+        let mut m_rest = row_max.as_mut_slice();
+        let mut l_rest = row_sum.as_mut_slice();
+        for ti in 0..n_tiles {
+            let (o_c, o_t) = std::mem::take(&mut o_rest).split_at_mut(block * dv);
+            o_rest = o_t;
+            let (m_c, m_t) = std::mem::take(&mut m_rest).split_at_mut(block);
+            m_rest = m_t;
+            let (l_c, l_t) = std::mem::take(&mut l_rest).split_at_mut(block);
+            l_rest = l_t;
+            tasks.push(Box::new(move || {
+                blockdiag_tile_fwd(q, k, v, spec, ti * block, block, tile, o_c, m_c, l_c);
+            }));
+        }
+        crate::util::compute_pool::scope(tasks);
+    }
+    (out, row_max, row_sum)
+}
+
+/// One diagonal tile of the block-diagonal backward: the fused softmax
+/// recompute backward on the tile's slices, written into the caller's
+/// per-tile `dq`/`dk`/`dv` windows.
+#[allow(clippy::too_many_arguments)]
+fn blockdiag_tile_bwd(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    row_max: &[f32],
+    row_sum: &[f32],
+    d_out: &Mat,
+    b0: usize,
+    block: usize,
+    tile: usize,
+    dq_c: &mut [f32],
+    dk_c: &mut [f32],
+    dv_c: &mut [f32],
+) {
+    let qt = slice_rows(q, b0, block);
+    let kt = slice_rows(k, b0, block);
+    let vt = slice_rows(v, b0, block);
+    let ot = slice_rows(out, b0, block);
+    let dot = slice_rows(d_out, b0, block);
+    let ts = tile_spec(spec, b0, q.cols());
+    let (dqt, dkt, dvt) = fused_softmax_attention_spec_bwd(
+        &qt,
+        &kt,
+        &vt,
+        &ts,
+        &ot,
+        &row_max[b0..b0 + block],
+        &row_sum[b0..b0 + block],
+        &dot,
+        tile,
+    );
+    dq_c.copy_from_slice(dqt.data());
+    dk_c.copy_from_slice(dkt.data());
+    dv_c.copy_from_slice(dvt.data());
+}
+
+/// Backward of [`blockdiag_attention_spec_fwd_train`]: per diagonal
+/// tile, the flash-style recompute backward under the tile-local spec;
+/// `(dq, dk, dv)` assemble from the tiles' disjoint row ranges.  Fully
+/// masked rows (`row_sum == 0`) contribute nothing, exactly like the
+/// fused softmax backward they delegate to.
+#[allow(clippy::too_many_arguments)]
+pub fn blockdiag_attention_spec_bwd(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    row_max: &[f32],
+    row_sum: &[f32],
+    d_out: &Mat,
+    block: usize,
+    tile: usize,
+) -> (Mat, Mat, Mat) {
+    blockdiag_attention_spec_bwd_par(q, k, v, spec, out, row_max, row_sum, d_out, block, tile, 1)
+}
+
+/// [`blockdiag_attention_spec_bwd`] with the diagonal tiles spread
+/// across `threads` compute-pool tasks (0 = auto) — bitwise identical
+/// at any thread count (tiles write disjoint gradient rows).
+#[allow(clippy::too_many_arguments)]
+pub fn blockdiag_attention_spec_bwd_par(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    spec: &AttnSpec,
+    out: &Mat,
+    row_max: &[f32],
+    row_sum: &[f32],
+    d_out: &Mat,
+    block: usize,
+    tile: usize,
+    threads: usize,
+) -> (Mat, Mat, Mat) {
+    let (n, d) = q.shape();
+    assert!(block > 0 && n % block == 0, "N must divide the block size");
+    assert_eq!(k.shape(), (n, d), "blockdiag requires aligned q/k");
+    assert_eq!(v.rows(), n, "key/value row mismatch");
+    assert_eq!(out.shape(), d_out.shape(), "out/d_out shape mismatch");
+    assert!(row_max.len() >= n && row_sum.len() >= n, "saved stats too short");
+    let dv = v.cols();
+    let mut dq = Mat::zeros(n, d);
+    let mut dk = Mat::zeros(n, d);
+    let mut dv_g = Mat::zeros(n, dv);
+    if n == 0 || dv == 0 {
+        return (dq, dk, dv_g);
+    }
+    let n_tiles = n / block;
+    let t = crate::tensor::resolve_threads(threads).min(n_tiles);
+    if t <= 1 {
+        for ti in 0..n_tiles {
+            let b0 = ti * block;
+            let (dq_f, dk_f, dv_f) = (dq.data_mut(), dk.data_mut(), dv_g.data_mut());
+            blockdiag_tile_bwd(
+                q,
+                k,
+                v,
+                spec,
+                out,
+                row_max,
+                row_sum,
+                d_out,
+                b0,
+                block,
+                tile,
+                &mut dq_f[b0 * d..(b0 + block) * d],
+                &mut dk_f[b0 * d..(b0 + block) * d],
+                &mut dv_f[b0 * dv..(b0 + block) * dv],
+            );
+        }
+        return (dq, dk, dv_g);
+    }
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tiles);
+        let mut dq_rest = dq.data_mut();
+        let mut dk_rest = dk.data_mut();
+        let mut dv_rest = dv_g.data_mut();
+        for ti in 0..n_tiles {
+            let (dq_c, dq_t) = std::mem::take(&mut dq_rest).split_at_mut(block * d);
+            dq_rest = dq_t;
+            let (dk_c, dk_t) = std::mem::take(&mut dk_rest).split_at_mut(block * d);
+            dk_rest = dk_t;
+            let (dv_c, dv_t) = std::mem::take(&mut dv_rest).split_at_mut(block * dv);
+            dv_rest = dv_t;
+            tasks.push(Box::new(move || {
+                blockdiag_tile_bwd(
+                    q,
+                    k,
+                    v,
+                    spec,
+                    out,
+                    row_max,
+                    row_sum,
+                    d_out,
+                    ti * block,
+                    block,
+                    tile,
+                    dq_c,
+                    dk_c,
+                    dv_c,
+                );
+            }));
+        }
+        crate::util::compute_pool::scope(tasks);
+    }
+    (dq, dk, dv_g)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1631,6 +1972,77 @@ mod tests {
         assert_eq!(dq.shape(), (0, 4));
         assert_eq!(dk.shape(), (3, 4));
         assert_eq!(dv.shape(), (3, 2));
+    }
+
+    #[test]
+    fn blockdiag_fwd_train_matches_inference_kernel_under_specs() {
+        let (q, k, v) = probe(48, 12, 8);
+        for spec in [
+            AttnSpec::FULL,
+            AttnSpec::CAUSAL,
+            AttnSpec::causal_padded(20),
+            AttnSpec::padded(30),
+            AttnSpec { scale: Some(0.3), ..AttnSpec::FULL },
+        ] {
+            let reference = crate::attention::blockdiag_attention_spec(&q, &k, &v, 16, &spec);
+            let (out, m, l) = blockdiag_attention_spec_fwd_train(&q, &k, &v, &spec, 16, 0);
+            let err = out.max_abs_diff(&reference);
+            assert!(err < 1e-5, "{spec:?}: {err}");
+            assert_eq!(m.len(), 48);
+            assert_eq!(l.len(), 48);
+            // Pooled path: bitwise identical (disjoint tiles).
+            let (out_p, m_p, l_p) =
+                blockdiag_attention_spec_fwd_train_par(&q, &k, &v, &spec, 16, 0, 4);
+            assert_eq!(out.data(), out_p.data());
+            assert_eq!(m, m_p);
+            assert_eq!(l, l_p);
+        }
+    }
+
+    #[test]
+    fn blockdiag_backward_is_blockdiagonal_and_thread_invariant() {
+        let (q, k, v) = probe(32, 8, 9);
+        let mut rng = Pcg64::seed(10);
+        let d_out = Mat::gaussian(32, 8, 1.0, &mut rng);
+        for spec in [AttnSpec::FULL, AttnSpec::CAUSAL, AttnSpec::causal_padded(13)] {
+            let (out, m, l) = blockdiag_attention_spec_fwd_train(&q, &k, &v, &spec, 8, 0);
+            let (dq, dk, dv) =
+                blockdiag_attention_spec_bwd(&q, &k, &v, &spec, &out, &m, &l, &d_out, 8, 0);
+            assert!(dq.data().iter().all(|x| x.is_finite()));
+            // Key rows masked dead by key_len get exact-zero gradients.
+            if let Some(kl) = spec.key_len {
+                for j in kl..32 {
+                    assert!(dk.row(j).iter().all(|&x| x == 0.0), "{spec:?} dk row {j}");
+                    assert!(dv.row(j).iter().all(|&x| x == 0.0), "{spec:?} dv row {j}");
+                }
+            }
+            let (dq_p, dk_p, dv_p) = blockdiag_attention_spec_bwd_par(
+                &q, &k, &v, &spec, &out, &m, &l, &d_out, 8, 0, 4,
+            );
+            assert_eq!(dq.data(), dq_p.data());
+            assert_eq!(dk.data(), dk_p.data());
+            assert_eq!(dv.data(), dv_p.data());
+        }
+    }
+
+    #[test]
+    fn performer_feature_chain_rule_saturates_to_zero() {
+        use crate::attention::kernels::{performer_features, performer_projection};
+        let proj = performer_projection(4, 6, 7);
+        let mut rng = Pcg64::seed(11);
+        let x = Mat::gaussian(5, 4, 0.8, &mut rng);
+        let phi = performer_features(&x, &proj);
+        let d_phi = Mat::gaussian(5, 6, 1.0, &mut rng);
+        let dx = performer_feature_bwd(&x, &phi, &d_phi, &proj);
+        assert_eq!(dx.shape(), (5, 4));
+        assert!(dx.data().iter().all(|g| g.is_finite()));
+        // A saturating input (huge norm drives every clamp argument out
+        // of range) gets an exact-zero gradient.
+        let hot = Mat::from_vec(1, 4, vec![50.0, -50.0, 50.0, -50.0]);
+        let phi_hot = performer_features(&hot, &proj);
+        let d_hot = Mat::from_vec(1, 6, vec![1.0; 6]);
+        let dx_hot = performer_feature_bwd(&hot, &phi_hot, &d_hot, &proj);
+        assert!(dx_hot.data().iter().all(|&g| g == 0.0), "{:?}", dx_hot.data());
     }
 
     #[test]

@@ -230,6 +230,14 @@ const SPEEDUP_PAIRS: &[(&str, &str)] = &[
     ("matmul_t_spec", "matmul_t_gen"),
     ("softmax_decode_spec", "softmax_decode_gen"),
     ("lln_prefix_spec", "lln_prefix_gen"),
+    // Multi-head backward vs single-head at the same n: 4 bands of d/4
+    // do ~d/4-width dots over the same n² pairs, so ≈ 1.0x is healthy.
+    ("softmax_fused_bwd_heads", "softmax_fused_bwd"),
+    // Data-parallel native train step at 2/4 shards vs 1: the gradient
+    // all-reduce is fixed-order, so these quote pure pool scaling on a
+    // bitwise-identical step (≈ 1.0x on a single-core runner).
+    ("train_step_dp2", "train_step_dp1"),
+    ("train_step_dp4", "train_step_dp1"),
 ];
 
 /// The PR-1 scalar-dot baseline is only timed up to this n — it is the
@@ -637,6 +645,46 @@ pub fn run_kernel_bench(
                 })
                 .clone();
             push(&mut records, "softmax_fused_bwd_par", n, &r);
+
+            // Multi-head flavor of the same backward: 4 heads, each a
+            // fused recompute backward over its own d/4 column band —
+            // the per-(seq, head) unit the native multi-head attention
+            // op's backward executes.
+            const HEADS: usize = 4;
+            if d % HEADS == 0 {
+                let dh = d / HEADS;
+                let col_band = |m: &Mat, h: usize| {
+                    let mut out = Mat::zeros(m.rows(), dh);
+                    for i in 0..m.rows() {
+                        out.row_mut(i).copy_from_slice(&m.row(i)[h * dh..(h + 1) * dh]);
+                    }
+                    out
+                };
+                let slices: Vec<_> = (0..HEADS)
+                    .map(|h| {
+                        let (qh, kh, vh, dh_out) =
+                            (col_band(&q, h), col_band(&k, h), col_band(&v, h), col_band(&d_out, h));
+                        let (oh, rmh, rsh) =
+                            crate::attention::grad::fused_softmax_attention_spec_fwd_train(
+                                &qh, &kh, &vh, &FULL, params.tile,
+                            );
+                        (qh, kh, vh, dh_out, oh, rmh, rsh)
+                    })
+                    .collect();
+                let r = b
+                    .run(&format!("softmax_fused_bwd_heads n={n} (x{HEADS} heads)"), 1.0, || {
+                        let mut acc = 0.0f32;
+                        for (qh, kh, vh, dh_out, oh, rmh, rsh) in &slices {
+                            let (dqh, _, _) = crate::attention::grad::fused_softmax_attention_spec_bwd(
+                                qh, kh, vh, &FULL, oh, rmh, rsh, dh_out, params.tile,
+                            );
+                            acc += dqh.data()[0];
+                        }
+                        acc
+                    })
+                    .clone();
+                push(&mut records, "softmax_fused_bwd_heads", n, &r);
+            }
         }
         {
             let pq = crate::attention::lln_features(&q, 2.2);
@@ -678,6 +726,40 @@ pub fn run_kernel_bench(
             .run(&format!("par_matmul_small n={sn}"), 1.0, || a.par_matmul(&bm, params.threads))
             .clone();
         push(&mut records, "par_matmul_small", sn, &r);
+    }
+
+    // End-to-end native train-step rows at 1/2/4 data-parallel shards
+    // (fixed tiny shape, softmax attention): the dp2/dp4-vs-dp1 pairs
+    // quote the gradient-sharding speedup the PR-9 compute pool buys.
+    // Per-shard math is scheduling-independent, so every row optimizes
+    // the same bitwise step.
+    {
+        use crate::training::native::{NativeShape, NativeStep, TrainStep};
+        let shape = NativeShape {
+            batch: 4,
+            seqlen: 64,
+            d_model: 32,
+            heads: 2,
+            layers: 2,
+            ff: 64,
+            vocab: 1024,
+            seed: 0xD9,
+        };
+        let mut corpus = crate::data::Corpus::new(shape.vocab, 0xD9);
+        let batch = corpus.mlm_batch(shape.batch, shape.seqlen, 0.15);
+        for (name, dp) in
+            [("train_step_dp1", 1usize), ("train_step_dp2", 2), ("train_step_dp4", 4)]
+        {
+            let mut step = NativeStep::new(crate::attention::Method::Softmax, shape)
+                .expect("bench native step");
+            step.set_data_parallel(dp);
+            let r = b
+                .run(&format!("{name} b={} n={}", shape.batch, shape.seqlen), 1.0, || {
+                    step.step(1e-3, &batch).expect("bench train step").loss
+                })
+                .clone();
+            push(&mut records, name, shape.seqlen, &r);
+        }
     }
 
     // Decode-state footprint per storage precision: a real KvCache fed
@@ -806,6 +888,7 @@ mod tests {
             "matmul_t_blocked",
             "softmax_fused_bwd",
             "softmax_fused_bwd_par",
+            "softmax_fused_bwd_heads",
             "lln_bwd",
             "lln_bwd_par",
             "matmul_t_spec",
@@ -842,6 +925,11 @@ mod tests {
         // Pooled-backward pairs ride the same run.
         assert!(report.speedup("softmax_fused_bwd_par", "softmax_fused_bwd", 64).is_some());
         assert!(report.speedup("lln_bwd_par", "lln_bwd", 64).is_some());
+        // Multi-head backward rides the same n as the single-head row.
+        assert!(report.speedup("softmax_fused_bwd_heads", "softmax_fused_bwd", 64).is_some());
+        // Data-parallel train-step rows live at their own fixed n=64.
+        assert!(report.speedup("train_step_dp2", "train_step_dp1", 64).is_some());
+        assert!(report.speedup("train_step_dp4", "train_step_dp1", 64).is_some());
         // The small-matmul fallback pair lives at its own fixed n.
         assert!(report.mean_ns("matmul_small", 48).is_some());
         assert!(report.mean_ns("par_matmul_small", 48).is_some());

@@ -205,6 +205,19 @@ pub struct TrainConfig {
     /// exist (`lln train --native`).  With no artifacts directory the
     /// native path is picked automatically regardless of this flag.
     pub native: bool,
+    /// Attention heads for the native trainer (0 = the model size's
+    /// default; must divide d_model).  The artifact path ignores this
+    /// — its head count is baked into the AOT graph.
+    pub heads: usize,
+    /// Gradient-checkpointing segments for the native trainer
+    /// (0/1 = off).  Loss and gradients are bitwise-identical to the
+    /// unsegmented run; peak tape memory shrinks to the largest
+    /// segment.
+    pub checkpoint_segments: usize,
+    /// Data-parallel sequence shards on the compute pool for the
+    /// native trainer (0 = serial).  Fixed-order all-reduce keeps
+    /// results bitwise across shard and worker counts.
+    pub data_parallel: usize,
 }
 
 impl Default for TrainConfig {
@@ -221,6 +234,9 @@ impl Default for TrainConfig {
             batch: 0,
             seqlen: 0,
             native: false,
+            heads: 0,
+            checkpoint_segments: 0,
+            data_parallel: 0,
         }
     }
 }
@@ -240,6 +256,9 @@ impl TrainConfig {
             batch: t.usize_or("train.batch", d.batch),
             seqlen: t.usize_or("train.seqlen", d.seqlen),
             native: t.bool_or("train.native", d.native),
+            heads: t.usize_or("train.heads", d.heads),
+            checkpoint_segments: t.usize_or("train.checkpoint_segments", d.checkpoint_segments),
+            data_parallel: t.usize_or("train.data_parallel", d.data_parallel),
         }
     }
 
@@ -671,14 +690,21 @@ method = lln_diag
 
     #[test]
     fn train_config_native_knobs_parse() {
-        // Defaults: artifact path, auto batch/seqlen.
+        // Defaults: artifact path, auto batch/seqlen, no heads/ckpt/dp
+        // overrides.
         let d = TrainConfig::default();
         assert!(!d.native);
         assert_eq!((d.batch, d.seqlen), (0, 0));
-        let t = ConfigTable::parse("[train]\nnative = true\nbatch = 2\nseqlen = 32").unwrap();
+        assert_eq!((d.heads, d.checkpoint_segments, d.data_parallel), (0, 0, 0));
+        let t = ConfigTable::parse(
+            "[train]\nnative = true\nbatch = 2\nseqlen = 32\nheads = 4\n\
+             checkpoint_segments = 2\ndata_parallel = 2",
+        )
+        .unwrap();
         let tc = TrainConfig::from_table(&t);
         assert!(tc.native);
         assert_eq!((tc.batch, tc.seqlen), (2, 32));
+        assert_eq!((tc.heads, tc.checkpoint_segments, tc.data_parallel), (4, 2, 2));
     }
 
     #[test]

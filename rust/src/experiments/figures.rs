@@ -47,7 +47,11 @@ pub fn run_fig2(args: &Args) -> Result<()> {
         for (label, pts) in &curves {
             let mut row = vec![label.to_string()];
             for p in pts {
-                let v = if metric.starts_with("entropy") { p.entropy } else { p.spectral_gap };
+                let v = if metric.starts_with("entropy") {
+                    p.entropy
+                } else {
+                    p.spectral_gap
+                };
                 row.push(format!("{v:.3}"));
             }
             rows.push(row);
@@ -60,12 +64,22 @@ pub fn run_fig2(args: &Args) -> Result<()> {
     }
 
     // Shape check the paper claims: only matched LLN tracks softmax.
-    let dev = |a: &[crate::analysis::ConcentrationPoint], b: &[crate::analysis::ConcentrationPoint]| {
-        a.iter().zip(b).map(|(x, y)| (x.entropy - y.entropy).abs()).sum::<f64>() / a.len() as f64
+    use crate::analysis::ConcentrationPoint;
+    let dev = |a: &[ConcentrationPoint], b: &[ConcentrationPoint]| {
+        let mut total = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            total += (x.entropy - y.entropy).abs();
+        }
+        total / a.len() as f64
     };
     let sm = &curves[0].1;
-    println!("mean |entropy - softmax|:  lln+mm={:.3}  lln={:.3}  elu={:.3}  relu={:.3}",
-        dev(&curves[1].1, sm), dev(&curves[2].1, sm), dev(&curves[3].1, sm), dev(&curves[4].1, sm));
+    println!(
+        "mean |entropy - softmax|:  lln+mm={:.3}  lln={:.3}  elu={:.3}  relu={:.3}",
+        dev(&curves[1].1, sm),
+        dev(&curves[2].1, sm),
+        dev(&curves[3].1, sm),
+        dev(&curves[4].1, sm)
+    );
 
     let rows: Vec<String> = curves
         .iter()
@@ -99,10 +113,16 @@ pub fn run_fig5(args: &Args) -> Result<()> {
         ]);
         csv.push(format!(
             "{sq},{},{},{},{}",
-            c.theory_sigma2, c.measured_sigma2, c.theory_mu, c.measured_mu
+            c.theory_sigma2,
+            c.measured_sigma2,
+            c.theory_mu,
+            c.measured_mu
         ));
     }
-    print_table(&["sigma_q=sigma_k", "sigma2 theory", "sigma2 measured", "mu theory", "mu measured"], &rows);
+    print_table(
+        &["sigma_q=sigma_k", "sigma2 theory", "sigma2 measured", "mu theory", "mu measured"],
+        &rows,
+    );
 
     println!("\n== Fig 5b: LLN variance before/after moment matching ==");
     let mut rows = Vec::new();
@@ -191,12 +211,14 @@ pub fn run_fig7(args: &Args) -> Result<()> {
     render("lln unmatched", &study.lln_unmatched);
     println!(
         "\nKS distance to SA:  matched = {:.4},  unmatched = {:.4}  (lower = closer)",
-        study.ks_matched, study.ks_unmatched
+        study.ks_matched,
+        study.ks_unmatched
     );
 
     let mut csv = Vec::new();
     let centers = study.sa.bin_centers();
-    let (dsa, dm, du) = (study.sa.density(), study.lln_matched.density(), study.lln_unmatched.density());
+    let (dsa, dm, du) =
+        (study.sa.density(), study.lln_matched.density(), study.lln_unmatched.density());
     for i in 0..centers.len() {
         csv.push(format!("{},{},{},{}", centers[i], dsa[i], dm[i], du[i]));
     }

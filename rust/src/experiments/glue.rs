@@ -1,13 +1,22 @@
 //! Table 1 (GLUE-like accuracy across methods) and Fig 10 (fixed
 //! alpha/beta ablation).
+//!
+//! Both the GLUE-like and LRA-lite harnesses run artifact-free: with
+//! no `artifacts/` directory (or under `--native`) classification
+//! trains through [`NativeStep`] as a single-position MLM — the CLS
+//! slot predicts the class id — mirroring
+//! [`experiments::pretrain::build_step`](crate::experiments::pretrain::build_step)'s
+//! degraded mode.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::maybe_write_csv;
 use crate::cli::Args;
 use crate::data::tasks::{GlueGen, GlueTask};
-use crate::runtime::{artifacts_dir, Engine, HostTensor};
+use crate::data::MlmBatch;
+use crate::runtime::{artifacts_available, artifacts_dir, Engine, HostTensor};
 use crate::training::driver::{accuracy_from_logits, TrainDriver};
+use crate::training::native::{NativeShape, NativeStep, TrainStep};
 use crate::util::print_table;
 
 /// Train a classification artifact on a generator and return
@@ -30,7 +39,11 @@ pub fn train_and_eval_cls(
         let (tokens, labels, b, n) = train_gen();
         // Linear warmup over the first 10%.
         let warm = (steps / 10).max(1);
-        let lr_t = if step < warm { lr * (step + 1) as f64 / warm as f64 } else { lr };
+        let lr_t = if step < warm {
+            lr * (step + 1) as f64 / warm as f64
+        } else {
+            lr
+        };
         let out = driver.step(
             engine,
             lr_t,
@@ -55,6 +68,96 @@ pub fn train_and_eval_cls(
     Ok((correct_weighted / total as f64, max_gnorm, last_loss))
 }
 
+/// A classification batch recast as single-position MLM: position 0
+/// (the CLS slot) carries the class id with weight 1.0; every other
+/// position carries zero loss weight.
+fn cls_as_mlm(tokens: &[i32], labels: &[i32], b: usize, n: usize) -> MlmBatch {
+    let mut mlm_labels = vec![0i32; b * n];
+    let mut weights = vec![0.0f32; b * n];
+    for (s, &label) in labels.iter().enumerate() {
+        mlm_labels[s * n] = label;
+        weights[s * n] = 1.0;
+    }
+    MlmBatch { tokens: tokens.to_vec(), labels: mlm_labels, weights, batch: b }
+}
+
+/// `true` when `method` cannot train natively (artifact-only mixing) —
+/// the degraded mode skips it with a note instead of failing the table.
+pub fn native_untrainable(method: &str) -> bool {
+    matches!(
+        crate::attention::Method::parse(method),
+        Some(crate::attention::Method::Nystrom) | Some(crate::attention::Method::Linformer)
+    )
+}
+
+/// Native (artifact-free) counterpart of [`train_and_eval_cls`]: a
+/// [`NativeStep`] encoder trained on the CLS-as-MLM recast, evaluated
+/// by arg-maxing the class-id slice of the CLS position's vocab
+/// logits.  Same return shape: (accuracy, max grad norm, final loss).
+#[allow(clippy::too_many_arguments)]
+pub fn train_and_eval_cls_native(
+    method: &str,
+    train_gen: &mut dyn FnMut() -> (Vec<i32>, Vec<i32>, usize, usize),
+    eval_gen: &mut dyn FnMut() -> (Vec<i32>, Vec<i32>, usize, usize),
+    steps: usize,
+    eval_batches: usize,
+    lr: f64,
+    vocab: usize,
+    num_classes: usize,
+) -> Result<(f64, f64, f32)> {
+    let m = crate::attention::Method::parse(method)
+        .ok_or_else(|| anyhow!("unknown attention method {method:?}"))?;
+    let mut stepper: Option<NativeStep> = None;
+    let mut max_gnorm = 0.0f64;
+    let mut last_loss = f32::NAN;
+    for s in 0..steps {
+        let (tokens, labels, b, n) = train_gen();
+        if stepper.is_none() {
+            // Shape follows the first batch; a deliberately small
+            // encoder — this is the degraded smoke path, not a tuned
+            // reproduction run.
+            let shape = NativeShape {
+                batch: b,
+                seqlen: n,
+                d_model: 32,
+                heads: 2,
+                layers: 2,
+                ff: 64,
+                vocab,
+                seed: 7,
+            };
+            stepper = Some(NativeStep::new(m, shape)?);
+        }
+        let stepper = stepper.as_mut().expect("native step built");
+        let batch = cls_as_mlm(&tokens, &labels, b, n);
+        let warm = (steps / 10).max(1);
+        let lr_t = if s < warm {
+            lr * (s + 1) as f64 / warm as f64
+        } else {
+            lr
+        };
+        let out = stepper.step(lr_t, &batch)?;
+        max_gnorm = max_gnorm.max(out.grad_norm as f64);
+        last_loss = out.loss;
+    }
+    let stepper = stepper.ok_or_else(|| anyhow!("native classification ran zero steps"))?;
+    let mut correct_weighted = 0.0;
+    let mut total = 0usize;
+    for _ in 0..eval_batches {
+        let (tokens, labels, b, n) = eval_gen();
+        let logits = stepper.eval_logits(&tokens, b)?;
+        // Row s·n is sequence s's CLS position; classify over the
+        // class-id prefix of the vocab head.
+        let mut cls_logits = Vec::with_capacity(b * num_classes);
+        for s in 0..b {
+            cls_logits.extend_from_slice(&logits.row(s * n)[..num_classes]);
+        }
+        correct_weighted += accuracy_from_logits(&cls_logits, &labels, num_classes) * b as f64;
+        total += b;
+    }
+    Ok((correct_weighted / total.max(1) as f64, max_gnorm, last_loss))
+}
+
 const TABLE1_METHODS: &[&str] = &["softmax", "lln", "lln_diag", "elu", "performer", "nystrom"];
 
 pub fn run_table1(args: &Args) -> Result<()> {
@@ -63,14 +166,24 @@ pub fn run_table1(args: &Args) -> Result<()> {
     let eval_batches = args.get_usize("eval-batches", 12)?;
     let lr = args.get_f64("lr", 1e-3)?;
     let methods = args.get_list("methods", &TABLE1_METHODS.join(","));
-    let mut engine = Engine::new(&dir)?;
+    let native = args.get_bool("native") || !artifacts_available(&dir);
+    let mut engine = if native {
+        None
+    } else {
+        Some(Engine::new(&dir)?)
+    };
 
-    println!("== Table 1: accuracy on the GLUE-like synthetic suite ==");
+    let tag = if native { " [native]" } else { "" };
+    println!("== Table 1: accuracy on the GLUE-like synthetic suite{tag} ==");
     println!("   ({} train steps/task, batch 16 x 128 tokens; chance = 33%/50%)\n", steps);
 
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     for method in &methods {
+        if native && native_untrainable(method) {
+            eprintln!("   [{method}] skipped: no native backward (artifact-only method)");
+            continue;
+        }
         let artifact = format!("train_glue_{method}");
         let mut accs = Vec::new();
         for task in GlueTask::ALL {
@@ -84,10 +197,29 @@ pub fn run_table1(args: &Args) -> Result<()> {
                 let b = eg.batch(16);
                 (b.tokens, b.labels, 16usize, 128usize)
             };
-            let (acc, _gn, _loss) = train_and_eval_cls(
-                &mut engine, &dir, &artifact, &mut train_fn, &mut eval_fn,
-                steps, eval_batches, lr, 4,
-            )?;
+            let (acc, _gn, _loss) = match engine.as_mut() {
+                Some(engine) => train_and_eval_cls(
+                    engine,
+                    &dir,
+                    &artifact,
+                    &mut train_fn,
+                    &mut eval_fn,
+                    steps,
+                    eval_batches,
+                    lr,
+                    4,
+                )?,
+                None => train_and_eval_cls_native(
+                    method,
+                    &mut train_fn,
+                    &mut eval_fn,
+                    steps,
+                    eval_batches,
+                    lr,
+                    512,
+                    4,
+                )?,
+            };
             accs.push(acc);
             eprintln!("   [{method}] {}: {:.1}%", task.name(), acc * 100.0);
         }
@@ -97,7 +229,12 @@ pub fn run_table1(args: &Args) -> Result<()> {
         row.push(format!("{:.1}", avg * 100.0));
         csv.push(format!(
             "{method},{}",
-            accs.iter().chain(std::iter::once(&avg)).map(|a| format!("{:.3}", a * 100.0)).collect::<Vec<_>>().join(",")
+            accs
+                .iter()
+                .chain(std::iter::once(&avg))
+                .map(|a| format!("{:.3}", a * 100.0))
+                .collect::<Vec<_>>()
+                .join(",")
         ));
         rows.push(row);
     }

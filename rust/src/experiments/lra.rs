@@ -1,13 +1,19 @@
 //! Tables 4 + 5: LRA-lite — training time/memory per task (Table 4) and
 //! task score (Table 5) for SA vs the linear-attention class.
+//!
+//! Artifact-free degraded mode: with no `artifacts/` directory (or
+//! under `--native`), each method trains through the native
+//! [`NativeStep`](crate::training::native::NativeStep) classifier
+//! instead of erroring out (methods with no native backward are
+//! skipped with a note).
 
 use anyhow::Result;
 
-use super::glue::train_and_eval_cls;
+use super::glue::{native_untrainable, train_and_eval_cls, train_and_eval_cls_native};
 use super::maybe_write_csv;
 use crate::cli::Args;
-use crate::data::lra::{LraGen, LraTask};
-use crate::runtime::{artifacts_dir, Engine};
+use crate::data::lra::{LraGen, LraTask, LRA_VOCAB};
+use crate::runtime::{artifacts_available, artifacts_dir, Engine};
 use crate::util::{current_rss_mb, print_table, Stopwatch};
 
 const METHODS: [&str; 4] = ["softmax", "lln_diag", "performer", "nystrom"];
@@ -18,14 +24,24 @@ pub fn run_lra(args: &Args) -> Result<()> {
     let eval_batches = args.get_usize("eval-batches", 15)?;
     let lr = args.get_f64("lr", 1.5e-3)?;
     let methods = args.get_list("methods", &METHODS.join(","));
-    let mut engine = Engine::new(&dir)?;
+    let native = args.get_bool("native") || !artifacts_available(&dir);
+    let mut engine = if native {
+        None
+    } else {
+        Some(Engine::new(&dir)?)
+    };
 
-    println!("== Tables 4+5: LRA-lite (N=512, {steps} steps/task, batch 4) ==\n");
+    let tag = if native { " [native]" } else { "" };
+    println!("== Tables 4+5: LRA-lite (N=512, {steps} steps/task, batch 4){tag} ==\n");
 
     let mut score_rows = Vec::new();
     let mut time_rows = Vec::new();
     let mut csv = Vec::new();
     for method in &methods {
+        if native && native_untrainable(method) {
+            eprintln!("   [{method}] skipped: no native backward (artifact-only method)");
+            continue;
+        }
         let artifact = format!("train_lra_{method}");
         let mut scores = Vec::new();
         let mut times = Vec::new();
@@ -43,10 +59,29 @@ pub fn run_lra(args: &Args) -> Result<()> {
             };
             let rss0 = current_rss_mb();
             let sw = Stopwatch::start();
-            let (acc, _gn, _loss) = train_and_eval_cls(
-                &mut engine, &dir, &artifact, &mut train_fn, &mut eval_fn,
-                steps, eval_batches, lr, 10,
-            )?;
+            let (acc, _gn, _loss) = match engine.as_mut() {
+                Some(engine) => train_and_eval_cls(
+                    engine,
+                    &dir,
+                    &artifact,
+                    &mut train_fn,
+                    &mut eval_fn,
+                    steps,
+                    eval_batches,
+                    lr,
+                    10,
+                )?,
+                None => train_and_eval_cls_native(
+                    method,
+                    &mut train_fn,
+                    &mut eval_fn,
+                    steps,
+                    eval_batches,
+                    lr,
+                    LRA_VOCAB,
+                    10,
+                )?,
+            };
             let total = sw.elapsed_secs();
             let mem = (current_rss_mb() - rss0).max(0.0);
             scores.push(acc);
@@ -54,7 +89,10 @@ pub fn run_lra(args: &Args) -> Result<()> {
             mems.push(mem);
             eprintln!(
                 "   [{method}] {}: {:.1}%  ({:.1}s, +{:.0} MB)",
-                task.name(), acc * 100.0, total, mem
+                task.name(),
+                acc * 100.0,
+                total,
+                mem
             );
             csv.push(format!("{method},{},{},{},{}", task.name(), acc * 100.0, total, mem));
         }

@@ -51,7 +51,11 @@ pub fn run(name: &str, args: &Args) -> Result<()> {
         "serve" => serve_bench::run_serve(args),
         other => bail!(
             "unknown experiment {other:?}; available: {}",
-            EXPERIMENTS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+            EXPERIMENTS
+                .iter()
+                .map(|(n, _)| *n)
+                .collect::<Vec<_>>()
+                .join(", ")
         ),
     }
 }

@@ -53,8 +53,14 @@ pub fn build_step(
     if cfg.seqlen != 0 {
         shape.seqlen = cfg.seqlen;
     }
+    if cfg.heads != 0 {
+        shape.heads = cfg.heads;
+    }
     shape.seed = cfg.seed;
-    Ok(Box::new(NativeStep::new(m, shape)?))
+    let mut step = NativeStep::new(m, shape)?;
+    step.set_checkpoint_segments(cfg.checkpoint_segments);
+    step.set_data_parallel(cfg.data_parallel);
+    Ok(Box::new(step))
 }
 
 /// Train one method's MLM model for `steps`; returns full telemetry.
@@ -98,6 +104,26 @@ pub fn pretrain(
         if alpha > 0.0 {
             alpha_series.push((out.step, alpha));
         }
+        // Per-head dilution telemetry (native path only): the mean and
+        // max attention entropy over all (layer, head) slots, plus the
+        // step's peak live tape — checkpointing visibly shrinks it.
+        let mut extra = Vec::new();
+        if out.peak_bytes > 0 {
+            extra.push(("peak_bytes".to_string(), out.peak_bytes as f64));
+        }
+        let head_ents: Vec<f64> = out
+            .head_stats
+            .iter()
+            .flatten()
+            .map(|h| h[0] as f64)
+            .filter(|e| e.is_finite())
+            .collect();
+        if !head_ents.is_empty() {
+            let mean = head_ents.iter().sum::<f64>() / head_ents.len() as f64;
+            let max = head_ents.iter().cloned().fold(f64::MIN, f64::max);
+            extra.push(("head_entropy_mean".to_string(), mean));
+            extra.push(("head_entropy_max".to_string(), max));
+        }
         log.log(Record {
             step: out.step,
             loss: out.loss,
@@ -105,7 +131,7 @@ pub fn pretrain(
             lr,
             alpha: (alpha > 0.0).then_some(alpha),
             beta: (beta > 0.0).then_some(beta),
-            extra: vec![],
+            extra,
         })?;
         if (step + 1) % cfg.eval_every.max(1) == 0 || step + 1 == steps {
             eval_losses.push((step + 1, step_exec.eval_loss(&eval_batch)?));
@@ -117,7 +143,11 @@ pub fn pretrain(
                 out.loss,
                 out.grad_norm,
                 lr,
-                if alpha > 0.0 { format!("  alpha {alpha:.2}") } else { String::new() }
+                if alpha > 0.0 {
+                    format!("  alpha {alpha:.2}")
+                } else {
+                    String::new()
+                }
             );
         }
     }
@@ -139,7 +169,11 @@ pub fn run_fig8(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
-    let tag = if native || !artifacts_available(&dir) { " [native]" } else { "" };
+    let tag = if native || !artifacts_available(&dir) {
+        " [native]"
+    } else {
+        ""
+    };
     println!("== Fig 8: MLM pretraining on the synthetic corpus ({steps} steps){tag} ==\n");
     let mut results = Vec::new();
     for method in &methods {
@@ -153,7 +187,12 @@ pub fn run_fig8(args: &Args) -> Result<()> {
     println!("\n-- training loss curves --");
     for r in &results {
         let series: Vec<f64> = r.log.history.iter().map(|x| x.loss as f64).collect();
-        println!("{:>10} {}  final {:.3}", r.method, sparkline(&series, 60), r.log.final_loss().unwrap_or(f32::NAN));
+        println!(
+            "{:>10} {}  final {:.3}",
+            r.method,
+            sparkline(&series, 60),
+            r.log.final_loss().unwrap_or(f32::NAN)
+        );
     }
 
     println!("\n-- held-out eval loss --");

@@ -57,7 +57,11 @@ fn run_table2_native(args: &Args, iters: usize) -> Result<()> {
         let mut mrow = vec![name.to_string()];
         for &n in &NS {
             let gb = model_memory_gb(method, n);
-            mrow.push(if gb > 40.0 { "OOM".into() } else { format!("{gb:.1}") });
+            mrow.push(if gb > 40.0 {
+                "OOM".into()
+            } else {
+                format!("{gb:.1}")
+            });
             if !method.is_linear() && n > 4096 {
                 trow.push("OOM*".into());
                 csv.push(format!("{name},{n},oom,{gb:.2}"));
@@ -72,7 +76,11 @@ fn run_table2_native(args: &Args, iters: usize) -> Result<()> {
                 crate::bench::black_box(bk.forward(&q, &k, &v, &AttnSpec::FULL));
             }
             let secs = sw.elapsed_secs() / iters as f64;
-            trow.push(if secs < 1.0 { format!("{:.0}ms", secs * 1e3) } else { format!("{secs:.2}s") });
+            trow.push(if secs < 1.0 {
+                format!("{:.0}ms", secs * 1e3)
+            } else {
+                format!("{secs:.2}s")
+            });
             csv.push(format!("{name},{n},{secs:.5},{gb:.2}"));
         }
         time_rows.push(trow);
@@ -115,7 +123,11 @@ pub fn run_table2(args: &Args) -> Result<()> {
         for &n in &NS {
             // Memory column (analytic; OOM past the paper's 40 GB card).
             let gb = model_memory_gb(method, n);
-            mrow.push(if gb > 40.0 { "OOM".into() } else { format!("{gb:.1}") });
+            mrow.push(if gb > 40.0 {
+                "OOM".into()
+            } else {
+                format!("{gb:.1}")
+            });
 
             // Time column (measured; softmax artifacts stop at 4096).
             let artifact = format!("attn_{name}_n{n}");

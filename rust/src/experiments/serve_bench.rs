@@ -37,8 +37,11 @@ pub fn run_serve(args: &Args) -> Result<()> {
     // Causal (decoder-mask) traffic: --causal masks every request,
     // --causal-frac mixes a fraction into the stream.
     let causal_all = args.get_bool("causal");
-    let causal_frac =
-        if causal_all { 1.0 } else { args.get_f64("causal-frac", 0.0)?.clamp(0.0, 1.0) };
+    let causal_frac = if causal_all {
+        1.0
+    } else {
+        args.get_f64("causal-frac", 0.0)?.clamp(0.0, 1.0)
+    };
     // Streaming decode sessions: --sessions opens N concurrent
     // token-by-token sessions per method and streams --decode-tokens
     // through each, co-batched with the prefill traffic's buckets.
@@ -75,7 +78,9 @@ pub fn run_serve(args: &Args) -> Result<()> {
     if !artifacts_available(&dir) {
         println!("(artifacts absent: serving via the native AttentionBackend encoder)\n");
     } else if force_native {
-        println!("(causal/decode traffic requested: serving via the native AttentionBackend encoder)\n");
+        println!(
+            "(causal/decode traffic requested: serving via the native AttentionBackend encoder)\n"
+        );
     }
     let mut class_rows = Vec::new();
     let mut summary_rows = Vec::new();

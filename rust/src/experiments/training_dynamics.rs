@@ -60,7 +60,11 @@ pub fn run_fig1(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 120)?;
     let probe_every = args.get_usize("probe-every", 30)?;
     let method = args.get_or("method", "softmax").to_string();
-    let cfg = TrainConfig { lr: args.get_f64("lr", 5e-4)?, warmup: steps / 10, ..Default::default() };
+    let cfg = TrainConfig {
+        lr: args.get_f64("lr", 5e-4)?,
+        warmup: steps / 10,
+        ..Default::default()
+    };
     let mut engine = Engine::new(&dir)?;
 
     let train_artifact = format!("train_mlm_{method}");
@@ -79,13 +83,23 @@ pub fn run_fig1(args: &Args) -> Result<()> {
     let mut csv = Vec::new();
     let mut checkpoints: Vec<(usize, Vec<LayerDynamics>)> = Vec::new();
 
-    let probe = |driver: &TrainDriver, engine: &mut Engine, step: usize, csv: &mut Vec<String>| -> Result<Vec<LayerDynamics>> {
+    #[allow(clippy::too_many_arguments)]
+    fn probe(
+        driver: &TrainDriver,
+        engine: &mut Engine,
+        probe_artifact: &str,
+        probe_tokens: &[i32],
+        n: usize,
+        n_layers: usize,
+        step: usize,
+        csv: &mut Vec<String>,
+    ) -> Result<Vec<LayerDynamics>> {
         // probe inputs: p:* + tokens
         let mut inputs = driver.params().to_literals()?;
         inputs.push(
-            HostTensor::I32 { shape: vec![2, n], data: probe_tokens.clone() }.to_literal()?,
+            HostTensor::I32 { shape: vec![2, n], data: probe_tokens.to_vec() }.to_literal()?,
         );
-        let outs = engine.execute_literals(&probe_artifact, &inputs)?;
+        let outs = engine.execute_literals(probe_artifact, &inputs)?;
         let mats_flat = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
         let stats = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
         let mats: Vec<Mat> = (0..n_layers)
@@ -98,13 +112,28 @@ pub fn run_fig1(args: &Args) -> Result<()> {
         for d in &dyns {
             csv.push(format!(
                 "{step},{},{:.4},{:.4},{:.4}",
-                d.layer, d.temperature, d.entropy, d.spectral_gap
+                d.layer,
+                d.temperature,
+                d.entropy,
+                d.spectral_gap
             ));
         }
         Ok(dyns)
-    };
+    }
 
-    checkpoints.push((0, probe(&driver, &mut engine, 0, &mut csv)?));
+    checkpoints.push((
+        0,
+        probe(
+            &driver,
+            &mut engine,
+            &probe_artifact,
+            &probe_tokens,
+            n,
+            n_layers,
+            0,
+            &mut csv,
+        )?,
+    ));
     for step in 0..steps {
         let b = corpus.mlm_batch(8, n, 0.15);
         driver.step(
@@ -118,7 +147,19 @@ pub fn run_fig1(args: &Args) -> Result<()> {
         )?;
         if (step + 1) % probe_every == 0 || step + 1 == steps {
             eprintln!("   probe @ step {}", step + 1);
-            checkpoints.push((step + 1, probe(&driver, &mut engine, step + 1, &mut csv)?));
+            checkpoints.push((
+                step + 1,
+                probe(
+                    &driver,
+                    &mut engine,
+                    &probe_artifact,
+                    &probe_tokens,
+                    n,
+                    n_layers,
+                    step + 1,
+                    &mut csv,
+                )?,
+            ));
         }
     }
 
@@ -129,15 +170,24 @@ pub fn run_fig1(args: &Args) -> Result<()> {
 
 /// Fig 1 without artifacts: train a [`NativeStep`] and probe each
 /// layer's dense attention matrix from the live forward activations.
+/// With `--heads > 1` the probe additionally reads every head's own
+/// attention matrix ([`NativeStep::probe_heads`]) and reports per-head
+/// entropy — the head-dilution view of fig. 1.
 fn run_fig1_native(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 60)?;
     let probe_every = args.get_usize("probe-every", 20)?;
     let method_name = args.get_or("method", "softmax").to_string();
     let method = crate::attention::Method::parse(&method_name)
         .ok_or_else(|| anyhow!("unknown attention method {method_name:?}"))?;
-    let cfg = TrainConfig { lr: args.get_f64("lr", 3e-3)?, warmup: steps / 10, ..Default::default() };
+    let cfg = TrainConfig {
+        lr: args.get_f64("lr", 3e-3)?,
+        warmup: steps / 10,
+        ..Default::default()
+    };
     let mut shape = NativeShape::for_size("tinymlm");
     shape.seed = args.get_usize("seed", 0)? as u64;
+    shape.heads = args.get_usize("heads", shape.heads)?.max(1);
+    let heads = shape.heads;
     let mut stepper = NativeStep::new(method, shape)?;
     let (b, n) = stepper.batch_shape();
     let n_layers = shape.layers;
@@ -145,35 +195,83 @@ fn run_fig1_native(args: &Args) -> Result<()> {
     let probe_tokens: Vec<i32> = corpus.mlm_batch(1, n, 0.0).labels; // unmasked text
 
     println!("== Fig 1 (native): attention dynamics during {method_name} MLM training ==");
-    println!("   probing every {probe_every} steps; {n_layers} layers, N={n}\n");
+    println!("   probing every {probe_every} steps; {n_layers} layers x {heads} heads, N={n}\n");
 
     let mut csv = Vec::new();
     let mut checkpoints: Vec<(usize, Vec<LayerDynamics>)> = Vec::new();
-    let probe = |stepper: &NativeStep, step: usize, csv: &mut Vec<String>| -> Result<Vec<LayerDynamics>> {
-        let probed = stepper.probe_layers(&probe_tokens)?;
+    // Per-checkpoint (step, (L, H) entropy grid) for the head table.
+    let mut head_checkpoints: Vec<(usize, Vec<Vec<f64>>)> = Vec::new();
+    fn probe(
+        stepper: &NativeStep,
+        probe_tokens: &[i32],
+        step: usize,
+        csv: &mut Vec<String>,
+        head_checkpoints: &mut Vec<(usize, Vec<Vec<f64>>)>,
+    ) -> Result<Vec<LayerDynamics>> {
+        let probed = stepper.probe_layers(probe_tokens)?;
         let mats: Vec<Mat> = probed.iter().map(|(m, _)| m.clone()).collect();
         let sigmas: Vec<(f64, f64)> = probed.iter().map(|(_, s)| *s).collect();
         let dyns = layer_dynamics(&mats, &sigmas);
         for d in &dyns {
             csv.push(format!(
                 "{step},{},{:.4},{:.4},{:.4}",
-                d.layer, d.temperature, d.entropy, d.spectral_gap
+                d.layer,
+                d.temperature,
+                d.entropy,
+                d.spectral_gap
             ));
         }
+        if stepper.shape().heads > 1 {
+            let grid: Vec<Vec<f64>> = stepper
+                .probe_heads(probe_tokens)?
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|(m, _)| crate::stats::attention_entropy_nats(m))
+                        .collect()
+                })
+                .collect();
+            head_checkpoints.push((step, grid));
+        }
         Ok(dyns)
-    };
+    }
 
-    checkpoints.push((0, probe(&stepper, 0, &mut csv)?));
+    checkpoints.push((
+        0,
+        probe(&stepper, &probe_tokens, 0, &mut csv, &mut head_checkpoints)?,
+    ));
     for step in 0..steps {
         let batch = corpus.mlm_batch(b, n, 0.15);
         stepper.step(cfg.lr_at(step), &batch)?;
         if (step + 1) % probe_every == 0 || step + 1 == steps {
             eprintln!("   probe @ step {}", step + 1);
-            checkpoints.push((step + 1, probe(&stepper, step + 1, &mut csv)?));
+            checkpoints.push((
+                step + 1,
+                probe(&stepper, &probe_tokens, step + 1, &mut csv, &mut head_checkpoints)?,
+            ));
         }
     }
 
     print_dynamics_tables(&checkpoints, n_layers);
+    if !head_checkpoints.is_empty() {
+        println!("\n-- per-head attention entropy [nats] over training --");
+        let mut rows = Vec::new();
+        for l in 0..n_layers {
+            for h in 0..heads {
+                let mut row = vec![format!("layer {l} head {h}")];
+                for (_, grid) in &head_checkpoints {
+                    row.push(format!("{:.3}", grid[l][h]));
+                }
+                rows.push(row);
+            }
+        }
+        let mut headers = vec!["".to_string()];
+        headers.extend(head_checkpoints.iter().map(|(s, _)| format!("step {s}")));
+        let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        print_table(&hrefs, &rows);
+        println!("\nheads that stay near ln(N) are diluted (attend ~uniformly); spread");
+        println!("between heads of one layer is the specialization signal.");
+    }
     maybe_write_csv(args, "fig1", "step,layer,temperature,entropy,spectral_gap", &csv)?;
     Ok(())
 }

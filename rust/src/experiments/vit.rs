@@ -30,7 +30,11 @@ pub fn run_table3(args: &Args) -> Result<()> {
         for step in 0..steps {
             let b = gen.batch(16);
             let warm = (steps / 10).max(1);
-            let lr_t = if step < warm { lr * (step + 1) as f64 / warm as f64 } else { lr };
+            let lr_t = if step < warm {
+                lr * (step + 1) as f64 / warm as f64
+            } else {
+                lr
+            };
             driver.step(
                 &mut engine,
                 lr_t,

@@ -40,6 +40,7 @@ fn cli() -> Cli {
                         flag("log-every", "log interval (fig8)", None),
                         flag("probe-every", "probe interval (fig1)", None),
                         flag("size", "mlm | tinymlm model size (fig8)", None),
+                        flag("heads", "native-path attention heads (fig1)", None),
                         flag("requests", "request count (serve)", None),
                         flag("rate", "offered request rate /s (serve)", None),
                         flag("long-frac", "fraction of long requests (serve)", None),
@@ -62,6 +63,9 @@ fn cli() -> Cli {
                         flag("log-every", "log interval (default 10)", None),
                         flag("batch", "native-path batch override (0 = model default)", None),
                         flag("seq", "native-path seqlen override (0 = model default)", None),
+                        flag("heads", "native-path attention heads (0 = model default)", None),
+                        flag("checkpoint-segments", "native-path gradient-checkpointing segments (0 = off)", None),
+                        flag("data-parallel", "native-path data-parallel shards on the compute pool (0 = serial)", None),
                         flag("config", "TOML file with a [train] section (CLI flags override it)", None),
                         flag("checkpoint", "path to write final params", None),
                         switch("native", "backprop through the native backends even when artifacts exist"),
@@ -197,6 +201,11 @@ fn cmd_train(args: &lln::cli::Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
         batch: args.get_usize("batch", f.map(|c| c.batch).unwrap_or(0))?,
         seqlen: args.get_usize("seq", f.map(|c| c.seqlen).unwrap_or(0))?,
+        heads: args.get_usize("heads", f.map(|c| c.heads).unwrap_or(0))?,
+        checkpoint_segments: args
+            .get_usize("checkpoint-segments", f.map(|c| c.checkpoint_segments).unwrap_or(0))?,
+        data_parallel: args
+            .get_usize("data-parallel", f.map(|c| c.data_parallel).unwrap_or(0))?,
         ..Default::default()
     };
     let log_path = args

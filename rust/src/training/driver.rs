@@ -23,6 +23,14 @@ pub struct StepTelemetry {
     /// (L, 4): [alpha, beta, sigma_q, sigma_k] per layer (zeros for
     /// non-LLN methods).
     pub layer_stats: Vec<[f32; 4]>,
+    /// (L, H, 3): [attention entropy (nats), sigma_q, sigma_k] per
+    /// layer per head, probed on the batch's first sequence — the
+    /// dilution diagnostic.  Empty for the AOT driver, which has no
+    /// per-head readout.
+    pub head_stats: Vec<Vec<[f32; 3]>>,
+    /// Largest autograd tape held live during the step, in bytes
+    /// (gradient checkpointing shrinks this).  0 for the AOT driver.
+    pub peak_bytes: usize,
 }
 
 /// Owns model/optimizer state for one train artifact.
@@ -103,7 +111,12 @@ impl TrainDriver {
 
     /// Execute one optimizer step.  `data` must match the artifact's
     /// trailing data tensors (tokens/labels/... in manifest order).
-    pub fn step(&mut self, engine: &mut Engine, lr: f64, data: &[HostTensor]) -> Result<StepTelemetry> {
+    pub fn step(
+        &mut self,
+        engine: &mut Engine,
+        lr: f64,
+        data: &[HostTensor],
+    ) -> Result<StepTelemetry> {
         if data.len() != self.data_inputs.len() {
             bail!(
                 "{}: {} data tensors, manifest wants {} ({:?})",
@@ -115,7 +128,13 @@ impl TrainDriver {
         }
         for (t, spec) in data.iter().zip(&self.data_inputs) {
             if t.len() != spec.elements() {
-                bail!("{}: data {} has {} elems, wants {:?}", self.artifact, spec.name, t.len(), spec.shape);
+                bail!(
+                    "{}: data {} has {} elems, wants {:?}",
+                    self.artifact,
+                    spec.name,
+                    t.len(),
+                    spec.shape
+                );
             }
         }
         let mut inputs = Vec::with_capacity(3 * self.n_params + 2 + data.len());
@@ -155,7 +174,14 @@ impl TrainDriver {
         if !loss.is_finite() {
             bail!("{}: non-finite loss at step {}", self.artifact, self.step);
         }
-        Ok(StepTelemetry { step: self.step, loss, grad_norm, layer_stats })
+        Ok(StepTelemetry {
+            step: self.step,
+            loss,
+            grad_norm,
+            layer_stats,
+            head_stats: Vec::new(),
+            peak_bytes: 0,
+        })
     }
 
     /// Run the matching eval artifact (train_ -> eval_ naming convention)

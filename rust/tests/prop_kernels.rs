@@ -1263,6 +1263,238 @@ fn quadratic_backward_matches_f64_finite_differences() {
     }
 }
 
+/// f64 reference loss for block-diagonal softmax attention: each
+/// diagonal `block`×`block` tile is softmax attention under the
+/// tile-local spec (keys shifted by the tile offset, scale pinned to
+/// the global resolved value) — the same tiling as
+/// `blockdiag_attention_spec_fwd_train`.
+#[allow(clippy::too_many_arguments)]
+fn blockdiag_loss_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    w: &[f64],
+    n: usize,
+    d: usize,
+    dv: usize,
+    block: usize,
+    spec: &AttnSpec,
+) -> f64 {
+    let scale = spec.resolve_scale(d) as f64;
+    let mut loss = 0.0f64;
+    for b0 in (0..n).step_by(block) {
+        let ts = AttnSpec {
+            causal: spec.causal,
+            key_len: spec.key_len.map(|kl| kl.saturating_sub(b0)),
+            scale: spec.scale,
+        };
+        loss += softmax_loss_f64(
+            &q[b0 * d..(b0 + block) * d],
+            &k[b0 * d..(b0 + block) * d],
+            &v[b0 * dv..(b0 + block) * dv],
+            &w[b0 * dv..(b0 + block) * dv],
+            block,
+            block,
+            d,
+            dv,
+            scale,
+            &ts,
+        );
+    }
+    loss
+}
+
+/// f64 reference loss for Performer (FAVOR+) attention: the positive
+/// feature lift φ(x) = m^{-1/2}·exp(clamp(proj·x̃ − ‖x̃‖²/2)) with
+/// x̃ = x/d^{1/4} (row-coupled, so it cannot ride `linear_loss_f64`'s
+/// per-element maps), then linearized attention with EPS = 1e-6.
+#[allow(clippy::too_many_arguments)]
+fn performer_loss_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    w: &[f64],
+    n: usize,
+    d: usize,
+    dv: usize,
+    proj: &Mat,
+    spec: &AttnSpec,
+) -> f64 {
+    const EPS: f64 = 1e-6;
+    let m = proj.cols();
+    let fscale = 1.0 / (m as f64).sqrt();
+    let dscale = 1.0 / (d as f64).powf(0.25);
+    let lift = |x: &[f64]| -> Vec<f64> {
+        let mut out = vec![0.0f64; n * m];
+        for i in 0..n {
+            let xs: Vec<f64> = x[i * d..(i + 1) * d].iter().map(|&a| a * dscale).collect();
+            let sq: f64 = xs.iter().map(|&a| a * a).sum::<f64>() * 0.5;
+            for j in 0..m {
+                let u: f64 = xs
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &a)| a * proj.get(t, j) as f64)
+                    .sum();
+                out[i * m + j] = fscale * cexp64(u - sq);
+            }
+        }
+        out
+    };
+    let pq = lift(q);
+    let pk = lift(k);
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        let lim = spec.row_limit(i, n);
+        let mut den = EPS;
+        let mut num = vec![0.0f64; dv];
+        for j in 0..lim {
+            let dot: f64 = pq[i * m..(i + 1) * m]
+                .iter()
+                .zip(&pk[j * m..(j + 1) * m])
+                .map(|(a, b)| a * b)
+                .sum();
+            den += dot;
+            for (o, &vv) in num.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
+                *o += dot * vv;
+            }
+        }
+        for t in 0..dv {
+            loss += w[i * dv + t] * num[t] / den;
+        }
+    }
+    loss
+}
+
+#[test]
+fn lln_diag_backward_matches_f64_finite_differences_including_alpha_beta() {
+    // The hybrid out = 0.5·(long LLN + block-diagonal softmax): both
+    // halves' chain rules must survive the 0.5 cotangent split.
+    let (n, d, dv, block) = (8usize, 5usize, 4usize, 4usize);
+    let (alpha, beta) = (1.2f32, 0.9f32);
+    let mut rng = lln::rng::Pcg64::seed(0xFD05);
+    let q = Mat::gaussian(n, d, 0.6, &mut rng);
+    let k = Mat::gaussian(n, d, 0.6, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = backend_for(
+            Method::LlnDiag,
+            BackendParams { alpha, beta, block, threads: 1, chunk: 3, ..Default::default() },
+        );
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let (a64, b64) = (alpha as f64, beta as f64);
+        let loss = |qx: &[f64], kx: &[f64], vx: &[f64], a: f64, b: f64| {
+            let long = linear_loss_f64(qx, kx, vx, &wf, n, d, dv, &spec, &|x| cexp64(a * x), &|x| {
+                cexp64(b * x)
+            });
+            let short = blockdiag_loss_f64(qx, kx, vx, &wf, n, d, dv, block, &spec);
+            0.5 * (long + short)
+        };
+        let fd_q = central_diff(&mut qf.clone(), |x| loss(x, &kf, &vf, a64, b64), h);
+        let fd_k = central_diff(&mut kf.clone(), |x| loss(&qf, x, &vf, a64, b64), h);
+        let fd_v = central_diff(&mut vf.clone(), |x| loss(&qf, &kf, x, a64, b64), h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "lln_diag {spec:?} {name}: rel err {err}");
+        }
+        // dα / dβ flow only through the long half (the diagonal tiles
+        // are plain softmax), but the FD of the hybrid sees that too.
+        let mut ab = vec![a64, b64];
+        let fd_ab = central_diff(&mut ab, |x| loss(&qf, &kf, &vf, x[0], x[1]), h);
+        let err_a = grad_rel_err(&[g.dalpha], &fd_ab[..1]);
+        let err_b = grad_rel_err(&[g.dbeta], &fd_ab[1..]);
+        assert!(err_a < 1e-3, "lln_diag {spec:?} dalpha: rel err {err_a}");
+        assert!(err_b < 1e-3, "lln_diag {spec:?} dbeta: rel err {err_b}");
+    }
+}
+
+#[test]
+fn performer_backward_matches_f64_finite_differences() {
+    let (n, d, dv) = (8usize, 5usize, 4usize);
+    let mut rng = lln::rng::Pcg64::seed(0xFD06);
+    let q = Mat::gaussian(n, d, 0.6, &mut rng);
+    let k = Mat::gaussian(n, d, 0.6, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    // Same deterministic FAVOR+ projection the backend builds for
+    // (d, features=0 → m=d, seed=7 default).
+    let proj = att::performer_projection(d, d, 7);
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = backend_for(
+            Method::Performer,
+            BackendParams { threads: 1, chunk: 3, ..Default::default() },
+        );
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let fd_q = central_diff(&mut qf.clone(), |x| {
+            performer_loss_f64(x, &kf, &vf, &wf, n, d, dv, &proj, &spec)
+        }, h);
+        let fd_k = central_diff(&mut kf.clone(), |x| {
+            performer_loss_f64(&qf, x, &vf, &wf, n, d, dv, &proj, &spec)
+        }, h);
+        let fd_v = central_diff(&mut vf.clone(), |x| {
+            performer_loss_f64(&qf, &kf, x, &wf, n, d, dv, &proj, &spec)
+        }, h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "performer {spec:?} {name}: rel err {err}");
+        }
+        // The projection is a fixed operand, not a parameter.
+        assert_eq!(g.dalpha, 0.0);
+        assert_eq!(g.dbeta, 0.0);
+    }
+}
+
+#[test]
+fn blockdiag_backward_matches_f64_finite_differences() {
+    let (n, d, dv, block) = (8usize, 5usize, 4usize, 4usize);
+    let mut rng = lln::rng::Pcg64::seed(0xFD07);
+    let q = Mat::gaussian(n, d, 0.7, &mut rng);
+    let k = Mat::gaussian(n, d, 0.7, &mut rng);
+    let v = Mat::gaussian(n, dv, 0.9, &mut rng);
+    let w = Mat::gaussian(n, dv, 1.0, &mut rng);
+    let h = 1e-4;
+    for spec in gradcheck_specs(n) {
+        let bk = backend_for(
+            Method::BlockDiag,
+            BackendParams { block, threads: 1, ..Default::default() },
+        );
+        let (_, cache) = bk.forward_train(&q, &k, &v, &spec).unwrap();
+        let g = bk.backward(&q, &k, &v, &spec, &cache, &w).unwrap();
+        let (qf, kf, vf, wf) = (to_f64(&q), to_f64(&k), to_f64(&v), to_f64(&w));
+        let fd_q = central_diff(&mut qf.clone(), |x| {
+            blockdiag_loss_f64(x, &kf, &vf, &wf, n, d, dv, block, &spec)
+        }, h);
+        let fd_k = central_diff(&mut kf.clone(), |x| {
+            blockdiag_loss_f64(&qf, x, &vf, &wf, n, d, dv, block, &spec)
+        }, h);
+        let fd_v = central_diff(&mut vf.clone(), |x| {
+            blockdiag_loss_f64(&qf, &kf, x, &wf, n, d, dv, block, &spec)
+        }, h);
+        for (name, an, fd) in [
+            ("dq", g.dq.data(), &fd_q),
+            ("dk", g.dk.data(), &fd_k),
+            ("dv", g.dv.data(), &fd_v),
+        ] {
+            let err = grad_rel_err(an, fd);
+            assert!(err < 1e-3, "blockdiag {spec:?} {name}: rel err {err}");
+        }
+    }
+}
+
 #[test]
 fn fused_softmax_backward_matches_dense_masked_backward() {
     // The fused O(n·tile) recompute backward vs the dense masked
